@@ -1,0 +1,43 @@
+//! Ablation: RAS `thr` sensitivity (the paper fixes 120% and defers a
+//! sweep to future work — §IV-B.1) and context-switch overhead κ.
+
+mod common;
+
+use vmcd::scenarios::{random, run_scenario};
+use vmcd::vmcd::scheduler::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let base_cfg = common::config();
+    let bank = common::bank(&base_cfg);
+    let seeds = common::seeds();
+
+    println!("=== ablation: RAS threshold thr (random scenario, SR=1) ===");
+    println!("{:<8} {:>10} {:>12}", "thr", "perf", "core-hours");
+    for thr in [0.8, 1.0, 1.2, 1.5, 2.0] {
+        let mut cfg = base_cfg.clone();
+        cfg.sched.ras_threshold = thr;
+        let (mut perf, mut hours) = (0.0, 0.0);
+        for &seed in &seeds {
+            let spec = random::build(cfg.host.cores, 1.0, seed);
+            let r = run_scenario(&cfg, &spec, Policy::Ras, &bank)?;
+            perf += r.avg_perf;
+            hours += r.core_hours;
+        }
+        let n = seeds.len() as f64;
+        println!("{:<8} {:>10.3} {:>12.3}", thr, perf / n, hours / n);
+    }
+    println!("(higher thr = more aggressive consolidation: fewer hours, lower perf)");
+
+    println!("\n=== ablation: context-switch overhead κ (random, SR=1.5, IAS) ===");
+    println!("{:<8} {:>10} {:>12}", "kappa", "perf", "core-hours");
+    for kappa in [0.0, 0.005, 0.02, 0.05, 0.10] {
+        let mut cfg = base_cfg.clone();
+        cfg.host.ctx_switch_overhead = kappa;
+        // Re-profile: κ changes the S matrix the scheduler sees.
+        let bank_k = vmcd::profiling::ProfileBank::generate(&cfg);
+        let spec = random::build(cfg.host.cores, 1.5, seeds[0]);
+        let r = run_scenario(&cfg, &spec, Policy::Ias, &bank_k)?;
+        println!("{:<8} {:>10.3} {:>12.3}", kappa, r.avg_perf, r.core_hours);
+    }
+    Ok(())
+}

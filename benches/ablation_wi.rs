@@ -1,0 +1,54 @@
+//! Ablation: the IAS WI formula (paper Eq. 3, motivated in §IV-B.2).
+//!
+//! Compares IAS built on (Σ+Π)/2 against sum-only and product-only
+//! estimators across the random scenario. The paper argues the mean avoids
+//! both the sum's overestimation (spreads too much, wasting cores) and the
+//! product's underestimation (packs insensitive workloads too deep).
+
+mod common;
+
+use vmcd::scenarios::{random, runner::run_scenario_with_backend};
+use vmcd::vmcd::scheduler::{scoring::WiMode, NativeScoring, Policy};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let seeds = common::seeds();
+
+    println!("=== ablation: IAS WI formula (random scenario) ===");
+    println!(
+        "{:<6} {:<14} {:>10} {:>12}",
+        "SR", "wi-formula", "perf", "core-hours"
+    );
+    for sr in [1.0, 1.5, 2.0] {
+        for (label, mode) in [
+            ("mean(Σ,Π)", WiMode::MeanSumProd),
+            ("sum-only", WiMode::SumOnly),
+            ("prod-only", WiMode::ProdOnly),
+        ] {
+            let mut perf_sum = 0.0;
+            let mut hours_sum = 0.0;
+            for &seed in &seeds {
+                let spec = random::build(cfg.host.cores, sr, seed);
+                let backend = Box::new(NativeScoring::with_wi_mode(mode));
+                let r =
+                    run_scenario_with_backend(&cfg, &spec, Policy::Ias, &bank, backend)?;
+                perf_sum += r.avg_perf;
+                hours_sum += r.core_hours;
+            }
+            let n = seeds.len() as f64;
+            println!(
+                "{:<6} {:<14} {:>10.3} {:>12.3}",
+                sr,
+                label,
+                perf_sum / n,
+                hours_sum / n
+            );
+        }
+    }
+    println!(
+        "\nexpected shape: sum-only uses the most cores (overestimates WI);\n\
+         prod-only packs deepest and degrades perf; mean(Σ,Π) sits between."
+    );
+    Ok(())
+}

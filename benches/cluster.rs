@@ -1,0 +1,50 @@
+//! Extension bench: local-VMCd vs global-migration consolidation across a
+//! cluster, swept over per-host subscription ratio (paper §VI future
+//! work; DESIGN.md §7).
+
+mod common;
+
+use vmcd::bench::Bench;
+use vmcd::cluster::{ClusterSim, ClusterSpec, Strategy};
+use vmcd::scenarios::random;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let hosts = 3;
+
+    println!(
+        "{:<8} {:<18} {:>7} {:>12} {:>12} {:>11}",
+        "SR/host", "strategy", "perf", "core-hours", "host-hours", "migrations"
+    );
+    for sr in [0.6, 1.2, 1.8, 2.4] {
+        let scen = random::build(hosts * cfg.host.cores, sr, 42);
+        for strategy in [Strategy::LocalVmcd, Strategy::GlobalMigration] {
+            let spec = ClusterSpec::new(hosts, strategy);
+            let r = ClusterSim::new(spec, &scen, &bank).run(&bank, scen.min_duration)?;
+            println!(
+                "{:<8} {:<18} {:>7.3} {:>12.3} {:>12.3} {:>5} ({} failed)",
+                sr,
+                strategy.name(),
+                r.avg_perf,
+                r.core_hours,
+                r.host_hours,
+                r.migrations_started,
+                r.migrations_failed
+            );
+        }
+    }
+
+    let mut b = Bench::new();
+    b.section("cluster simulation wall time (3 hosts, SR 1.2)");
+    let scen = random::build(hosts * cfg.host.cores, 1.2, 42);
+    for strategy in [Strategy::LocalVmcd, Strategy::GlobalMigration] {
+        b.run(&format!("cluster/{}", strategy.name()), || {
+            let spec = ClusterSpec::new(hosts, strategy);
+            ClusterSim::new(spec, &scen, &bank)
+                .run(&bank, scen.min_duration)
+                .unwrap();
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,31 @@
+#![allow(dead_code)]
+
+//! Shared setup for the figure benches.
+
+use vmcd::config::Config;
+use vmcd::profiling::ProfileBank;
+
+/// Quick-mode seeds (VMCD_BENCH_QUICK=1 uses one seed, else three).
+pub fn seeds() -> Vec<u64> {
+    if std::env::var("VMCD_BENCH_QUICK").as_deref() == Ok("1") {
+        vec![42]
+    } else {
+        vec![42, 43, 44]
+    }
+}
+
+/// Benchmark config: the paper's testbed, deterministic noise seed.
+pub fn config() -> Config {
+    Config::default()
+}
+
+/// The shared profile bank (cached to disk so repeated bench runs skip the
+/// profiling phase).
+pub fn bank(cfg: &Config) -> ProfileBank {
+    ProfileBank::load_or_generate(cfg, Some("results/profiles.json"))
+}
+
+/// Output directory for CSV mirrors.
+pub fn out_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from("results")
+}

@@ -1,0 +1,33 @@
+//! Fig. 2 — random scenario: workloads' performance and CPU time consumed
+//! for RRS / CAS / RAS / IAS at SR ∈ {0.5, 1, 1.5, 2} (paper §V-C.1).
+//!
+//! Prints the regenerated figure rows (perf + CPU time vs RRS) and times
+//! one full scenario simulation per policy.
+
+mod common;
+
+use vmcd::bench::Bench;
+use vmcd::report;
+use vmcd::scenarios::{random, run_scenario};
+use vmcd::vmcd::scheduler::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let seeds = common::seeds();
+
+    let fig = report::fig2(&cfg, &bank, &seeds)?;
+    println!("{}", fig.render());
+    fig.write_csv(&common::out_dir())?;
+
+    // Micro: wall time of one full SR=1 scenario per policy.
+    let mut b = Bench::new();
+    b.section("fig2: end-to-end scenario simulation time (SR=1)");
+    let spec = random::build(cfg.host.cores, 1.0, seeds[0]);
+    for policy in Policy::ALL {
+        b.run(&format!("simulate/random-sr1/{}", policy.name()), || {
+            run_scenario(&cfg, &spec, policy, &bank).unwrap();
+        });
+    }
+    Ok(())
+}

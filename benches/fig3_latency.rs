@@ -1,0 +1,29 @@
+//! Fig. 3 — latency-critical heavy scenario: performance and CPU time for
+//! each scheduler at SR ∈ {0.5, 1, 1.5, 2} (paper §V-C.2).
+
+mod common;
+
+use vmcd::bench::Bench;
+use vmcd::report;
+use vmcd::scenarios::{latency, run_scenario};
+use vmcd::vmcd::scheduler::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let seeds = common::seeds();
+
+    let fig = report::fig3(&cfg, &bank, &seeds)?;
+    println!("{}", fig.render());
+    fig.write_csv(&common::out_dir())?;
+
+    let mut b = Bench::new();
+    b.section("fig3: end-to-end scenario simulation time (SR=2)");
+    let spec = latency::build(cfg.host.cores, 2.0, seeds[0]);
+    for policy in Policy::ALL {
+        b.run(&format!("simulate/latency-sr2/{}", policy.name()), || {
+            run_scenario(&cfg, &spec, policy, &bank).unwrap();
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Fig. 4 — time series of CPU consumption for the 6-job-batch dynamic
+//! scenario (paper §V-C.3). RRS reserves the whole server for the entire
+//! run; the dynamic schedulers track the active-batch envelope.
+
+mod common;
+
+use vmcd::bench::Bench;
+use vmcd::report;
+use vmcd::scenarios::{dynamic, run_scenario};
+use vmcd::vmcd::scheduler::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let seeds = common::seeds();
+
+    let fig = report::fig45(&cfg, &bank, 6, seeds[0])?;
+    println!("{}", fig.render());
+    fig.write_csv(&common::out_dir())?;
+
+    let mut b = Bench::new();
+    b.section("fig4: dynamic-6 scenario simulation time");
+    let spec = dynamic::build(6, seeds[0]);
+    for policy in Policy::ALL {
+        b.run(&format!("simulate/dynamic6/{}", policy.name()), || {
+            run_scenario(&cfg, &spec, policy, &bank).unwrap();
+        });
+    }
+    Ok(())
+}

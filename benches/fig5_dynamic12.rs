@@ -1,0 +1,29 @@
+//! Fig. 5 — time series of CPU consumption for the 12-job-batch dynamic
+//! scenario (paper §V-C.3).
+
+mod common;
+
+use vmcd::bench::Bench;
+use vmcd::report;
+use vmcd::scenarios::{dynamic, run_scenario};
+use vmcd::vmcd::scheduler::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let seeds = common::seeds();
+
+    let fig = report::fig45(&cfg, &bank, 12, seeds[0])?;
+    println!("{}", fig.render());
+    fig.write_csv(&common::out_dir())?;
+
+    let mut b = Bench::new();
+    b.section("fig5: dynamic-12 scenario simulation time");
+    let spec = dynamic::build(12, seeds[0]);
+    for policy in Policy::ALL {
+        b.run(&format!("simulate/dynamic12/{}", policy.name()), || {
+            run_scenario(&cfg, &spec, policy, &bank).unwrap();
+        });
+    }
+    Ok(())
+}

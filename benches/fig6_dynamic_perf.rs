@@ -1,0 +1,18 @@
+//! Fig. 6 — performance of workloads for the job batches of the dynamic
+//! scenario (paper §V-C.3): RAS best, IAS close behind with fewer cores,
+//! CAS worst of the dynamic policies.
+
+mod common;
+
+use vmcd::report;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let seeds = common::seeds();
+
+    let fig = report::fig6(&cfg, &bank, &seeds)?;
+    println!("{}", fig.render());
+    fig.write_csv(&common::out_dir())?;
+    Ok(())
+}

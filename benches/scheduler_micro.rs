@@ -1,0 +1,56 @@
+//! Scheduler micro-benchmarks: latency of one `SelectPinning` decision per
+//! policy at increasing host occupancy, and of a full Alg. 1 re-pin cycle.
+//!
+//! DESIGN.md §Perf target: ≤ 10 µs per native placement decision — VMCd
+//! runs every 30 s, so the scheduler must be nowhere near the bottleneck.
+
+mod common;
+
+use vmcd::bench::Bench;
+use vmcd::util::rng::Rng;
+use vmcd::vmcd::scheduler::{self, PlacementState, Policy};
+use vmcd::workloads::ALL_CLASSES;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let mut b = Bench::new();
+    b.opts.measure_iters = 50;
+
+    for occupancy in [0usize, 12, 24, 48] {
+        b.section(&format!("select_pinning with {occupancy} resident VMs"));
+        for policy in Policy::ALL {
+            let mut sched = scheduler::build(policy, &bank, 1.2, None);
+            let mut rng = Rng::new(7);
+            let mut state = PlacementState::new(cfg.host.cores, false);
+            for _ in 0..occupancy {
+                let core = rng.below(cfg.host.cores);
+                state.place(core, *rng.pick(&ALL_CLASSES));
+            }
+            let mut class_rng = Rng::new(11);
+            b.run(
+                &format!("select/{}/occ{}", policy.name(), occupancy),
+                || {
+                    let class = *class_rng.pick(&ALL_CLASSES);
+                    std::hint::black_box(sched.select_pinning(&state, class));
+                },
+            );
+        }
+    }
+
+    b.section("full re-pin cycle (24 running VMs, RAS)");
+    {
+        let mut sched = scheduler::build(Policy::Ras, &bank, 1.2, None);
+        let mut rng = Rng::new(3);
+        let classes: Vec<_> = (0..24).map(|_| *rng.pick(&ALL_CLASSES)).collect();
+        b.run("cycle/ras/24vms", || {
+            let mut state = PlacementState::new(cfg.host.cores, true);
+            for &class in &classes {
+                let core = sched.select_pinning(&state, class);
+                state.place(core, class);
+            }
+            std::hint::black_box(state.placed());
+        });
+    }
+    Ok(())
+}

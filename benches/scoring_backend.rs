@@ -1,0 +1,60 @@
+//! Native vs XLA scoring-backend comparison: per-call latency of the fused
+//! all-cores score, and end-to-end scenario agreement.
+//!
+//! The XLA backend runs the AOT-compiled Pallas kernel through PJRT; the
+//! native backend is plain Rust. Decisions must be identical; the bench
+//! quantifies the dispatch overhead a PJRT hop costs at this problem size.
+
+mod common;
+
+use vmcd::bench::Bench;
+use vmcd::runtime::{Runtime, XlaScoring};
+use vmcd::util::rng::Rng;
+use vmcd::vmcd::scheduler::{NativeScoring, PlacementState, ScoringBackend};
+use vmcd::workloads::ALL_CLASSES;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let mut b = Bench::new();
+    b.opts.measure_iters = 30;
+
+    let mut native = NativeScoring::new();
+    let rt = match Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("XLA runtime unavailable ({e}); run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let mut xla = XlaScoring::new(rt)?;
+
+    for occupancy in [6usize, 24, 48] {
+        b.section(&format!("score all cores, {occupancy} resident VMs"));
+        let mut rng = Rng::new(42);
+        let mut state = PlacementState::new(cfg.host.cores, false);
+        for _ in 0..occupancy {
+            let core = rng.below(cfg.host.cores);
+            state.place(core, *rng.pick(&ALL_CLASSES));
+        }
+        let cand = ALL_CLASSES[occupancy % ALL_CLASSES.len()];
+
+        b.run(&format!("score/native/occ{occupancy}"), || {
+            std::hint::black_box(native.score(&state, cand, &bank, 1.2, false));
+        });
+        b.run(&format!("score/xla/occ{occupancy}"), || {
+            std::hint::black_box(xla.score(&state, cand, &bank, 1.2, false));
+        });
+
+        // Agreement check while we are here.
+        let a = native.score(&state, cand, &bank, 1.2, false);
+        let x = xla.score(&state, cand, &bank, 1.2, false);
+        for core in 0..cfg.host.cores {
+            assert!((a.ol_after[core] - x.ol_after[core]).abs() < 1e-3);
+            assert!((a.ic_after[core] - x.ic_after[core]).abs() < 1e-3);
+        }
+    }
+    println!("\nagreement: native and XLA backends match on all sampled states");
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! The dynamic scenario (§V-C.3 / Figs. 4-6): 24 resident VMs activating
+//! in 6- or 12-job batches. Shows the CPU-consumption time series — RRS
+//! reserves the whole server continuously; the dynamic schedulers track
+//! the active-batch envelope by consolidating idle VMs onto core 0.
+//!
+//! ```sh
+//! cargo run --release --example dynamic_scenario [-- --batch 6]
+//! ```
+
+use vmcd::config::Config;
+use vmcd::profiling::ProfileBank;
+use vmcd::report;
+use vmcd::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let batch = args.opt_usize("batch", 6)?;
+    let cfg = Config::default();
+    let bank = ProfileBank::generate(&cfg);
+
+    let fig = report::fig45(&cfg, &bank, batch, cfg.sim.seed)?;
+    println!("{}", fig.render());
+    fig.write_csv(std::path::Path::new("results"))?;
+
+    let fig6 = report::fig6(&cfg, &bank, &[cfg.sim.seed])?;
+    println!("{}", fig6.render());
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: profile the workload catalog, run one scenario under IAS,
+//! and print the paper's two headline metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use vmcd::config::Config;
+use vmcd::profiling::ProfileBank;
+use vmcd::report;
+use vmcd::scenarios::{random, run_scenario};
+use vmcd::vmcd::scheduler::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+
+    // 1. Offline profiling phase (paper §IV-A): isolated + pairwise
+    //    co-pinned runs produce the S (slowdown) and U (utilisation)
+    //    matrices the schedulers consume.
+    println!("profiling the workload catalog (isolated + pairwise co-runs)…");
+    let bank = ProfileBank::generate(&cfg);
+    println!(
+        "  {} classes; mean pairwise slowdown (Eq. 5 IAS threshold): {:.3}\n",
+        bank.n(),
+        bank.mean_slowdown()
+    );
+
+    // 2. One random scenario (paper §V-C.1) at SR = 1 under each policy.
+    println!("random scenario, SR = 1.0 (12 VMs on the 12-core host):");
+    let spec = random::build(cfg.host.cores, 1.0, cfg.sim.seed);
+    let mut rrs_baseline = None;
+    for policy in Policy::ALL {
+        let r = run_scenario(&cfg, &spec, policy, &bank)?;
+        let (perf_note, hours_note) = match &rrs_baseline {
+            None => ("".to_string(), "".to_string()),
+            Some(base) => {
+                let b: &vmcd::scenarios::ScenarioResult = base;
+                (
+                    format!(" ({:+.1}% vs RRS)", (r.perf_vs(b) - 1.0) * 100.0),
+                    format!(" ({:+.1}% vs RRS)", -r.cpu_saving_vs(b) * 100.0),
+                )
+            }
+        };
+        println!(
+            "  {:<4} perf {:.3}{:<18} CPU time {:.3} core-h{}",
+            policy.name(),
+            r.avg_perf,
+            perf_note,
+            r.core_hours,
+            hours_note
+        );
+        if policy == Policy::Rrs {
+            rrs_baseline = Some(r);
+        }
+    }
+
+    // 3. Table I: the perf-counter → memory-bandwidth path.
+    println!("\n{}", report::table1(&cfg)?);
+    Ok(())
+}

@@ -1,0 +1,2 @@
+# Build-time-only package: JAX model + Pallas kernels + AOT lowering.
+# Nothing in here is imported at runtime — rust loads artifacts/*.hlo.txt.

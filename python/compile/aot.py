@@ -1,0 +1,72 @@
+# AOT lowering: JAX model -> HLO *text* artifacts for the rust runtime.
+#
+# HLO text (NOT lowered.compiler_ir("hlo") protos / .serialize()) is the
+# interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+# instruction ids which xla_extension 0.5.1 (what the published `xla` 0.1.6
+# crate links) rejects with `proto.id() <= INT_MAX`. The HLO text parser
+# reassigns ids, so text round-trips cleanly. See /opt/xla-example.
+#
+# Usage: python -m compile.aot --out-dir ../artifacts
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, in_specs) in model.specs().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_shapes, tuple):
+            out_shapes = (out_shapes,)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in in_specs
+            ],
+            "outputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in out_shapes
+            ],
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    existing = {}
+    if args.only and os.path.exists(man_path):
+        with open(man_path) as f:
+            existing = json.load(f)
+    existing.update(manifest)
+    with open(man_path, "w") as f:
+        json.dump(existing, f, indent=2, sort_keys=True)
+    print(f"manifest -> {man_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+# Import the submodules (not the entry-point functions) so module names and
+# function names don't shadow each other: use kernels.score.score(...), etc.
+from . import blackscholes, jacobi, ref, score  # noqa: F401

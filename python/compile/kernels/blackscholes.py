@@ -1,0 +1,80 @@
+# L1 Pallas kernel: Black-Scholes closed-form option pricing.
+#
+# This is the arithmetic core of the paper's CPU-intensive workload class
+# (PARSEC `blackscholes`, §V-B): a FLOP-bound, embarrassingly-parallel sweep
+# over a batch of European options. The rust host simulator executes this
+# kernel through PJRT when a `Blackscholes` VM runs in real-compute mode, so
+# the "VM" burns genuine compute through the full three-layer stack.
+#
+# TPU mapping (DESIGN.md §Hardware-Adaptation): pure element-wise VPU work,
+# no MXU. The batch is tiled into BLOCK-sized lanes-aligned chunks; each grid
+# step streams one block HBM->VMEM (5 inputs + 2 outputs, BLOCK=2048 f32
+# => 56 KiB VMEM per step).
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_OPTIONS = 65536  # compiled batch size — see runtime/artifacts.rs
+BLOCK = 2048
+
+_INV_SQRT2 = 0.7071067811865476
+
+
+def _erf(x):
+    """Abramowitz & Stegun 7.1.26 polynomial erf (|err| < 1.5e-7).
+
+    jax.lax.erf lowers to the `erf` HLO opcode, which the pinned
+    xla_extension 0.5.1 text parser predates — this expansion lowers to
+    plain mul/exp/select ops that round-trip through HLO text.
+    """
+    a1, a2, a3, a4, a5 = (
+        0.254829592,
+        -0.284496736,
+        1.421413741,
+        -1.453152027,
+        1.061405429,
+    )
+    p = 0.3275911
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    poly = t * (a1 + t * (a2 + t * (a3 + t * (a4 + t * a5))))
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def _ncdf(x):
+    return 0.5 * (1.0 + _erf(x * _INV_SQRT2))
+
+
+def _bs_kernel(spot_ref, strike_ref, ttm_ref, rate_ref, vol_ref,
+               call_ref, put_ref):
+    s = spot_ref[...]
+    k = strike_ref[...]
+    t = ttm_ref[...]
+    r = rate_ref[...]
+    v = vol_ref[...]
+
+    sqrt_t = jnp.sqrt(t)
+    vst = v * sqrt_t
+    d1 = (jnp.log(s / k) + (r + 0.5 * v * v) * t) / vst
+    d2 = d1 - vst
+    disc = k * jnp.exp(-r * t)
+
+    call_ref[...] = s * _ncdf(d1) - disc * _ncdf(d2)
+    put_ref[...] = disc * _ncdf(-d2) - s * _ncdf(-d1)
+
+
+def blackscholes(spot, strike, ttm, rate, vol):
+    """Price a batch of European options. Returns (call, put), f32[N]."""
+    n = spot.shape[0]
+    assert n % BLOCK == 0, f"batch {n} must be a multiple of {BLOCK}"
+    blk = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    out = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        _bs_kernel,
+        grid=(n // BLOCK,),
+        in_specs=[blk] * 5,
+        out_specs=(blk, blk),
+        out_shape=(out, out),
+        interpret=True,
+    )(spot, strike, ttm, rate, vol)

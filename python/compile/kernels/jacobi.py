@@ -1,0 +1,62 @@
+# L1 Pallas kernel: 2-D 5-point Jacobi sweep (PolyBench/C `jacobi-2d`).
+#
+# The paper's CPU + memory-bandwidth-intensive HPC workload class (§V-B).
+# One call performs one sweep: interior points become the 5-point average
+# (0.2 coefficient as in PolyBench), boundary rows/cols are held fixed.
+#
+# TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is tiled into
+# row slabs; the halo exchange a CUDA version would do through shared
+# memory is expressed through three overlapping BlockSpecs on the *same*
+# input operand (previous / current / next slab), so each grid step keeps
+# only 3*BH rows + 1 output slab in VMEM (BH=32, W=256 f32 => 128 KiB).
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+H = 256  # compiled grid height — see runtime/artifacts.rs
+W = 256  # compiled grid width
+BH = 32  # rows per slab
+_NBLK = H // BH
+
+
+def _jacobi_kernel(prev_ref, cur_ref, nxt_ref, out_ref):
+    i = pl.program_id(0)
+    prev = prev_ref[...]  # slab i-1 (clamped at the top edge)
+    cur = cur_ref[...]    # slab i
+    nxt = nxt_ref[...]    # slab i+1 (clamped at the bottom edge)
+
+    # Assemble the haloed slab: last row of prev, cur, first row of nxt.
+    # At the clamped edges the halo rows are wrong, but those output rows
+    # are boundary rows and get overwritten by `cur` below.
+    slab = jnp.concatenate([prev[-1:, :], cur, nxt[:1, :]], axis=0)
+
+    up = slab[:-2, :]
+    down = slab[2:, :]
+    left = jnp.concatenate([cur[:, :1], cur[:, :-1]], axis=1)
+    right = jnp.concatenate([cur[:, 1:], cur[:, -1:]], axis=1)
+    res = 0.2 * (cur + up + down + left + right)
+
+    # Boundary condition: global first/last rows and first/last columns
+    # keep their original values.
+    grow = i * BH + jax.lax.broadcasted_iota(jnp.int32, (BH, W), 0)
+    gcol = jax.lax.broadcasted_iota(jnp.int32, (BH, W), 1)
+    border = (grow == 0) | (grow == H - 1) | (gcol == 0) | (gcol == W - 1)
+    out_ref[...] = jnp.where(border, cur, res)
+
+
+def jacobi_sweep(grid):
+    """One Jacobi sweep over an f32[H, W] grid."""
+    assert grid.shape == (H, W), grid.shape
+    slab = lambda im: pl.BlockSpec((BH, W), im)
+    return pl.pallas_call(
+        _jacobi_kernel,
+        grid=(_NBLK,),
+        in_specs=[
+            slab(lambda i: (jnp.maximum(i - 1, 0), 0)),
+            slab(lambda i: (i, 0)),
+            slab(lambda i: (jnp.minimum(i + 1, _NBLK - 1), 0)),
+        ],
+        out_specs=slab(lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), jnp.float32),
+        interpret=True,
+    )(grid, grid, grid)

@@ -1,0 +1,104 @@
+# Pure-numpy correctness oracles for the Pallas kernels.
+#
+# Deliberately written as naive, loop-heavy numpy — an independent code path
+# from the vectorised kernels, so agreement is meaningful.
+import math
+
+import numpy as np
+
+
+def score_ref(assign, u, s, cand_u, s_vc, s_cv, thr):
+    """Naive per-core reference for kernels/score.py.
+
+    assign: f32[C,V] one-hot; u: f32[V,M]; s: f32[V,V]; cand_u: f32[1,M];
+    s_vc, s_cv: f32[1,V]; thr: f32[1,1].
+    Returns (ol_before, ol_after, ic_before, ic_after), each f32[C,1].
+    """
+    eps = 1e-6
+    s = np.maximum(np.asarray(s, np.float64), eps)
+    s_vc = np.maximum(np.asarray(s_vc, np.float64).ravel(), eps)
+    s_cv = np.maximum(np.asarray(s_cv, np.float64).ravel(), eps)
+    u = np.asarray(u, np.float64)
+    cand_u = np.asarray(cand_u, np.float64).ravel()
+    thr = float(np.asarray(thr).ravel()[0])
+    c_n, v_n = assign.shape
+
+    ol_b = np.zeros((c_n, 1))
+    ol_a = np.zeros((c_n, 1))
+    ic_b = np.zeros((c_n, 1))
+    ic_a = np.zeros((c_n, 1))
+
+    def wi(i, others, with_cand):
+        """Paper Eq. 3 for resident VM i with co-runner set `others`."""
+        ssum, sprod = 0.0, 1.0
+        for j in others:
+            if j == i:
+                continue
+            ssum += s[i, j]
+            sprod *= s[i, j]
+        if with_cand:
+            ssum += s_vc[i]
+            sprod *= s_vc[i]
+        return 0.5 * (ssum + sprod)
+
+    for c in range(c_n):
+        members = [v for v in range(v_n) if assign[c, v] > 0.5]
+        # RAS overload (Eq. 2)
+        for m in range(u.shape[1]):
+            load = sum(u[v, m] for v in members)
+            ol_b[c] += max(0.0, load - thr)
+            ol_a[c] += max(0.0, load + cand_u[m] - thr)
+        # IAS interference (Eq. 3 + 4)
+        ic_b[c] = max((wi(i, members, False) for i in members), default=0.0)
+        cs, cp = 0.0, 1.0
+        for j in members:
+            cs += s_cv[j]
+            cp *= s_cv[j]
+        wi_cand = 0.5 * (cs + cp)
+        ic_a[c] = max(
+            max((wi(i, members, True) for i in members), default=0.0), wi_cand
+        )
+    return (
+        ol_b.astype(np.float32),
+        ol_a.astype(np.float32),
+        ic_b.astype(np.float32),
+        ic_a.astype(np.float32),
+    )
+
+
+def blackscholes_ref(spot, strike, ttm, rate, vol):
+    """Scalar-loop reference for kernels/blackscholes.py."""
+    n = len(spot)
+    call = np.zeros(n)
+    put = np.zeros(n)
+    for i in range(n):
+        s, k, t, r, v = (
+            float(spot[i]),
+            float(strike[i]),
+            float(ttm[i]),
+            float(rate[i]),
+            float(vol[i]),
+        )
+        st = math.sqrt(t)
+        d1 = (math.log(s / k) + (r + 0.5 * v * v) * t) / (v * st)
+        d2 = d1 - v * st
+        ncdf = lambda x: 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+        disc = k * math.exp(-r * t)
+        call[i] = s * ncdf(d1) - disc * ncdf(d2)
+        put[i] = disc * ncdf(-d2) - s * ncdf(-d1)
+    return call.astype(np.float32), put.astype(np.float32)
+
+
+def jacobi_ref(grid, sweeps=1):
+    """Loop reference for kernels/jacobi.py (PolyBench jacobi-2d)."""
+    a = np.asarray(grid, np.float64).copy()
+    h, w = a.shape
+    for _ in range(sweeps):
+        b = a.copy()
+        for i in range(1, h - 1):
+            for j in range(1, w - 1):
+                b[i, j] = 0.2 * (
+                    a[i, j] + a[i - 1, j] + a[i + 1, j] + a[i, j - 1] + a[i, j + 1]
+                )
+        a = b
+    return a.astype(np.float32)

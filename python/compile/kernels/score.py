@@ -1,0 +1,110 @@
+# L1 Pallas kernel: fused scheduler scoring for RAS + IAS.
+#
+# Given the current vCPU->core assignment, the utilisation matrix U
+# (paper §IV-A) and the pairwise-slowdown matrix S (paper Eq. 1), compute
+# for EVERY core in one call:
+#   * ol_before[c], ol_after[c] — the RAS core-overload metric (paper Eq. 2)
+#     without / with a candidate workload added to core c,
+#   * ic_before[c], ic_after[c] — the IAS core interference (paper Eq. 3+4)
+#     without / with the candidate.
+#
+# The rust coordinator pads its live state to the fixed compiled shapes
+# (C_MAX cores, V_MAX resident VMs, M_METRICS resources). Padding is inert:
+# padded VMs have assign==0 rows, S==1 (log S == 0) so they contribute
+# nothing to any sum/product; padded metric columns carry zero utilisation.
+#
+# TPU mapping note (DESIGN.md §Hardware-Adaptation): the heavy ops are two
+# [C,V]x[V,V] matmuls — MXU-shaped work. Everything fits in one VMEM-resident
+# block (32x64 + 64x64 f32 ~= 25 KiB), so no grid is needed; the kernel is a
+# single fused block.
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Compiled shapes — keep in sync with rust/src/runtime/artifacts.rs.
+C_MAX = 32  # physical cores
+V_MAX = 64  # resident VMs
+M_METRICS = 4  # CPU, DiskIO, NetIO, MemBW (paper §III)
+
+_EPS = 1e-6
+
+
+def _score_kernel(
+    assign_ref,  # f32[C, V]  one-hot: vm v pinned on core c
+    u_ref,       # f32[V, M]  per-VM utilisation profile (fraction of host)
+    s_ref,       # f32[V, V]  pairwise slowdown S[i, j] (>= _EPS)
+    cand_u_ref,  # f32[1, M]  candidate workload utilisation
+    s_vc_ref,    # f32[1, V]  slowdown of resident VM i when co-run w/ cand
+    s_cv_ref,    # f32[1, V]  slowdown of cand when co-run w/ resident VM j
+    thr_ref,     # f32[1, 1]  RAS threshold (paper: 1.2)
+    ol_b_ref,    # f32[C, 1] out
+    ol_a_ref,    # f32[C, 1] out
+    ic_b_ref,    # f32[C, 1] out
+    ic_a_ref,    # f32[C, 1] out
+):
+    assign = assign_ref[...]
+    u = u_ref[...]
+    s = jnp.maximum(s_ref[...], _EPS)
+    cand_u = cand_u_ref[...]
+    s_vc = jnp.maximum(s_vc_ref[...], _EPS)
+    s_cv = jnp.maximum(s_cv_ref[...], _EPS)
+    thr = thr_ref[0, 0]
+
+    # ---- RAS overload (Eq. 2): per-core composite load beyond `thr`. ----
+    core_u = jnp.dot(assign, u, preferred_element_type=jnp.float32)  # [C,M]
+    ol_b_ref[...] = jnp.sum(jnp.maximum(core_u - thr, 0.0), axis=1, keepdims=True)
+    ol_a_ref[...] = jnp.sum(
+        jnp.maximum(core_u + cand_u - thr, 0.0), axis=1, keepdims=True
+    )
+
+    # ---- IAS interference (Eq. 3): WI_i = (sum_{j!=i} S[i,j]
+    #                                         + prod_{j!=i} S[i,j]) / 2 ----
+    # rs[c, i] = sum_{j on c} S[i, j]; subtract the self term S[i, i] so the
+    # sum runs over co-runners only (see the worked example in §IV-B.2 of
+    # the paper: 3 co-runners with S == 1 must yield WI == 2).
+    logs = jnp.log(s)
+    v = assign.shape[1]
+    eye = (
+        jax.lax.broadcasted_iota(jnp.int32, (v, v), 0)
+        == jax.lax.broadcasted_iota(jnp.int32, (v, v), 1)
+    )
+    sdiag = jnp.sum(jnp.where(eye, s, 0.0), axis=1)[None, :]       # [1,V]
+    logsdiag = jnp.sum(jnp.where(eye, logs, 0.0), axis=1)[None, :]
+
+    rs = jnp.dot(assign, s.T, preferred_element_type=jnp.float32)     # [C,V]
+    lp = jnp.dot(assign, logs.T, preferred_element_type=jnp.float32)  # [C,V]
+    active = assign > 0.5
+
+    # Subtract the self term unconditionally; rows where vm i is inactive on
+    # core c are masked out before the max, so the garbage there is inert.
+    rs_ex = rs - sdiag
+    lp_ex = lp - logsdiag
+    wi_b = 0.5 * (rs_ex + jnp.exp(lp_ex))
+    ic_b_ref[...] = jnp.max(
+        jnp.where(active, wi_b, 0.0), axis=1, keepdims=True
+    )
+
+    # After adding the candidate to core c: every resident VM on c gains one
+    # co-runner (the candidate), and the candidate itself gets a WI.
+    wi_a_exist = 0.5 * (rs_ex + s_vc + jnp.exp(lp_ex + jnp.log(s_vc)))
+    rs_cand = jnp.sum(assign * s_cv, axis=1, keepdims=True)            # [C,1]
+    lp_cand = jnp.sum(assign * jnp.log(s_cv), axis=1, keepdims=True)
+    wi_cand = 0.5 * (rs_cand + jnp.exp(lp_cand))
+    ic_a_ref[...] = jnp.maximum(
+        jnp.max(jnp.where(active, wi_a_exist, 0.0), axis=1, keepdims=True),
+        wi_cand,
+    )
+
+
+def score(assign, u, s, cand_u, s_vc, s_cv, thr):
+    """Fused RAS+IAS scoring over all cores.
+
+    Returns (ol_before, ol_after, ic_before, ic_after), each f32[C, 1].
+    """
+    c = assign.shape[0]
+    out = jax.ShapeDtypeStruct((c, 1), jnp.float32)
+    return pl.pallas_call(
+        _score_kernel,
+        out_shape=(out, out, out, out),
+        interpret=True,
+    )(assign, u, s, cand_u, s_vc, s_cv, thr)

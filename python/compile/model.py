@@ -1,0 +1,74 @@
+# L2: JAX compute graphs lowered to the artifacts the rust runtime executes.
+#
+# Three entry points, each calling an L1 Pallas kernel:
+#   * score_fn        — fused RAS/IAS scheduler scoring over all cores
+#                       (the VMCd decision hot path, paper Eq. 2-4).
+#   * blackscholes_fn — the CPU-intensive workload class's real compute.
+#   * jacobi_fn       — the membw-intensive workload class's real compute;
+#                       SWEEPS_PER_CALL sweeps fused in one executable via
+#                       lax.fori_loop so the rust side pays one dispatch for
+#                       a whole simulation quantum.
+#
+# Everything here is shape-static: the rust runtime pads its live state to
+# these shapes (see rust/src/runtime/artifacts.rs).
+import jax
+import jax.numpy as jnp
+
+from .kernels import blackscholes as _bs
+from .kernels import jacobi as _jacobi
+from .kernels import score as _score
+
+SWEEPS_PER_CALL = 10
+
+
+def score_fn(assign, u, s, cand_u, s_vc, s_cv, thr):
+    """Returns (ol_before, ol_after, ic_before, ic_after), f32[C,1] each."""
+    return _score.score(assign, u, s, cand_u, s_vc, s_cv, thr)
+
+
+def blackscholes_fn(spot, strike, ttm, rate, vol):
+    """Returns (call, put) prices plus a checksum used by the host simulator
+    as the unit-of-work receipt."""
+    call, put = _bs.blackscholes(spot, strike, ttm, rate, vol)
+    checksum = jnp.sum(call) + jnp.sum(put)
+    return call, put, checksum.reshape(1)
+
+
+def jacobi_fn(grid):
+    """SWEEPS_PER_CALL Jacobi sweeps; returns (grid', residual-norm[1])."""
+    def body(_, g):
+        return _jacobi.jacobi_sweep(g)
+
+    out = jax.lax.fori_loop(0, SWEEPS_PER_CALL, body, grid)
+    resid = jnp.sqrt(jnp.sum((out - grid) ** 2)).reshape(1)
+    return out, resid
+
+
+def specs():
+    """ShapeDtypeStructs for each entry point, keyed by artifact name."""
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    c, v, m = _score.C_MAX, _score.V_MAX, _score.M_METRICS
+    n = _bs.N_OPTIONS
+    return {
+        "score": (
+            score_fn,
+            (
+                sd((c, v), f32),   # assign
+                sd((v, m), f32),   # U
+                sd((v, v), f32),   # S
+                sd((1, m), f32),   # cand_u
+                sd((1, v), f32),   # s_vc
+                sd((1, v), f32),   # s_cv
+                sd((1, 1), f32),   # thr
+            ),
+        ),
+        "blackscholes": (
+            blackscholes_fn,
+            tuple(sd((n,), f32) for _ in range(5)),
+        ),
+        "jacobi": (
+            jacobi_fn,
+            (sd((_jacobi.H, _jacobi.W), f32),),
+        ),
+    }

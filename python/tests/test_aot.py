@@ -1,0 +1,68 @@
+# AOT pipeline: HLO text is parseable-era, manifest is consistent with the
+# compiled shapes the rust runtime hardcodes.
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+PYDIR = os.path.dirname(HERE)
+REPO = os.path.dirname(PYDIR)
+ARTIFACTS = os.path.join(REPO, "artifacts")
+
+
+def ensure_artifacts():
+    if not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")):
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", ARTIFACTS],
+            cwd=PYDIR,
+            check=True,
+        )
+
+
+class TestManifest:
+    def test_manifest_lists_all_artifacts_with_hashes(self):
+        ensure_artifacts()
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            man = json.load(f)
+        assert set(man) >= {"score", "blackscholes", "jacobi"}
+        for name, entry in man.items():
+            path = os.path.join(ARTIFACTS, entry["file"])
+            assert os.path.exists(path), name
+            assert len(entry["sha256"]) == 64
+            assert entry["inputs"] and entry["outputs"]
+
+    def test_shapes_match_rust_runtime_constants(self):
+        # Mirror of rust/src/runtime/mod.rs::shapes — a drift here breaks
+        # the rust runtime's padding logic.
+        ensure_artifacts()
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["score"]["inputs"][0]["shape"] == [32, 64]
+        assert man["score"]["inputs"][1]["shape"] == [64, 4]
+        assert len(man["score"]["outputs"]) == 4
+        assert man["blackscholes"]["inputs"][0]["shape"] == [65536]
+        assert man["jacobi"]["inputs"][0]["shape"] == [256, 256]
+
+
+class TestHloText:
+    def test_hlo_is_text_and_free_of_new_opcodes(self):
+        """xla_extension 0.5.1's parser predates several opcodes (erf,
+        topk, …); the lowered text must avoid the ones we know break."""
+        ensure_artifacts()
+        for name in ["score", "blackscholes", "jacobi"]:
+            with open(os.path.join(ARTIFACTS, f"{name}.hlo.txt")) as f:
+                text = f.read()
+            assert text.startswith("HloModule"), name
+            for opcode in [" erf(", " topk(", " tan("]:
+                assert opcode not in text, f"{name} uses unparseable {opcode!r}"
+
+    def test_entry_computation_returns_tuple(self):
+        # aot.py lowers with return_tuple=True; the rust side unpacks with
+        # to_tuple().
+        ensure_artifacts()
+        with open(os.path.join(ARTIFACTS, "score.hlo.txt")) as f:
+            text = f.read()
+        assert "ENTRY" in text
+        root_line = [l for l in text.splitlines() if "ROOT" in l]
+        assert any("tuple" in l for l in root_line), "entry must return a tuple"

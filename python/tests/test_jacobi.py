@@ -1,0 +1,69 @@
+# Pallas Jacobi stencil (haloed row-slab tiling) vs the loop oracle.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import jacobi as jc
+from compile.kernels import ref
+
+
+def run_sweep(grid):
+    import jax.numpy as jnp
+
+    return np.asarray(jc.jacobi_sweep(jnp.asarray(grid, jnp.float32)))
+
+
+class TestJacobi:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_one_sweep_matches_oracle(self, seed):
+        rng = np.random.default_rng(seed)
+        grid = rng.uniform(-1.0, 1.0, (jc.H, jc.W)).astype(np.float32)
+        got = run_sweep(grid)
+        # Loop oracle on the full 256x256 grid is slow; check the halo-critical
+        # rows exactly: slab boundaries (BH-1, BH, BH+1) and global borders.
+        want = ref.jacobi_ref(grid[: 3 * jc.BH + 2, :], sweeps=1)
+        rows = [0, 1, jc.BH - 1, jc.BH, jc.BH + 1, 2 * jc.BH - 1, 2 * jc.BH]
+        np.testing.assert_allclose(
+            got[rows, :], want[rows, :], rtol=1e-5, atol=1e-5
+        )
+
+    def test_boundary_rows_and_cols_fixed(self):
+        rng = np.random.default_rng(1)
+        grid = rng.uniform(-1.0, 1.0, (jc.H, jc.W)).astype(np.float32)
+        got = run_sweep(grid)
+        np.testing.assert_array_equal(got[0, :], grid[0, :])
+        np.testing.assert_array_equal(got[-1, :], grid[-1, :])
+        np.testing.assert_array_equal(got[:, 0], grid[:, 0])
+        np.testing.assert_array_equal(got[:, -1], grid[:, -1])
+
+    def test_constant_grid_is_fixed_point(self):
+        grid = np.full((jc.H, jc.W), 0.7, np.float32)
+        got = run_sweep(grid)
+        np.testing.assert_allclose(got, grid, rtol=1e-6)
+
+    def test_smoothing_contracts_towards_mean(self):
+        """A Jacobi sweep is an averaging operator: the interior range
+        must shrink monotonically."""
+        rng = np.random.default_rng(2)
+        grid = rng.uniform(-1.0, 1.0, (jc.H, jc.W)).astype(np.float32)
+        # Zero boundary so the interior relaxes toward 0.
+        grid[0, :] = grid[-1, :] = grid[:, 0] = grid[:, -1] = 0.0
+        cur = grid
+        prev_amp = np.abs(cur[1:-1, 1:-1]).max()
+        for _ in range(3):
+            cur = run_sweep(cur)
+            amp = np.abs(cur[1:-1, 1:-1]).max()
+            assert amp <= prev_amp + 1e-6
+            prev_amp = amp
+
+    def test_interior_five_point_average(self):
+        """Point-check the stencil arithmetic away from any slab edge."""
+        rng = np.random.default_rng(4)
+        grid = rng.uniform(0.0, 1.0, (jc.H, jc.W)).astype(np.float32)
+        got = run_sweep(grid)
+        i, j = 100, 37
+        want = 0.2 * (
+            grid[i, j] + grid[i - 1, j] + grid[i + 1, j] + grid[i, j - 1] + grid[i, j + 1]
+        )
+        assert got[i, j] == pytest.approx(want, rel=1e-5)

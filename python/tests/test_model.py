@@ -1,0 +1,95 @@
+# L2 model graphs: shapes, fused-sweep semantics, spec table consistency.
+import numpy as np
+
+from compile import model
+from compile.kernels import jacobi as jc
+from compile.kernels import ref, score
+
+
+class TestSpecs:
+    def test_specs_cover_all_artifacts(self):
+        specs = model.specs()
+        assert set(specs) == {"score", "blackscholes", "jacobi"}
+
+    def test_score_spec_shapes(self):
+        _, ins = model.specs()["score"]
+        c, v, m = score.C_MAX, score.V_MAX, score.M_METRICS
+        assert [tuple(s.shape) for s in ins] == [
+            (c, v), (v, m), (v, v), (1, m), (1, v), (1, v), (1, 1)
+        ]
+        assert all(str(s.dtype) == "float32" for s in ins)
+
+    def test_eval_shape_matches_runtime_expectations(self):
+        import jax
+
+        for name, (fn, ins) in model.specs().items():
+            outs = jax.eval_shape(fn, *ins)
+            if not isinstance(outs, tuple):
+                outs = (outs,)
+            assert len(outs) >= 1, name
+            for o in outs:
+                assert str(o.dtype) == "float32", name
+
+
+class TestJacobiModel:
+    def test_fused_sweeps_equal_repeated_single_sweeps(self):
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(0)
+        grid = rng.uniform(-1, 1, (jc.H, jc.W)).astype(np.float32)
+        out, resid = model.jacobi_fn(jnp.asarray(grid))
+        # Reference: apply the single-sweep kernel SWEEPS_PER_CALL times.
+        cur = jnp.asarray(grid)
+        for _ in range(model.SWEEPS_PER_CALL):
+            cur = jc.jacobi_sweep(cur)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(cur), rtol=1e-5, atol=1e-5)
+        assert resid.shape == (1,)
+        assert float(resid[0]) > 0.0
+
+    def test_residual_decreases_across_calls(self):
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(1)
+        grid = jnp.asarray(rng.uniform(-1, 1, (jc.H, jc.W)).astype(np.float32))
+        out1, r1 = model.jacobi_fn(grid)
+        _, r2 = model.jacobi_fn(out1)
+        assert float(r2[0]) < float(r1[0])
+
+
+class TestBlackscholesModel:
+    def test_checksum_is_sum_of_prices(self):
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(2)
+        n = 65536
+        args = [
+            jnp.asarray(rng.uniform(lo, hi, n).astype(np.float32))
+            for lo, hi in [(5, 200), (5, 200), (0.05, 3), (0, 0.1), (0.05, 0.9)]
+        ]
+        call, put, checksum = model.blackscholes_fn(*args)
+        expect = float(np.sum(np.asarray(call)) + np.sum(np.asarray(put)))
+        assert abs(float(checksum[0]) - expect) / abs(expect) < 1e-5
+
+
+class TestScoreModel:
+    def test_score_fn_delegates_to_kernel(self):
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(3)
+        c, v, m = 8, 8, score.M_METRICS
+        assign = np.zeros((c, v), np.float32)
+        for j in range(v):
+            assign[rng.integers(0, c), j] = 1.0
+        args_np = (
+            assign,
+            rng.uniform(0, 0.9, (v, m)).astype(np.float32),
+            rng.uniform(0.9, 2.5, (v, v)).astype(np.float32),
+            rng.uniform(0, 0.9, (1, m)).astype(np.float32),
+            rng.uniform(0.9, 2.5, (1, v)).astype(np.float32),
+            rng.uniform(0.9, 2.5, (1, v)).astype(np.float32),
+            np.array([[1.2]], np.float32),
+        )
+        got = model.score_fn(*[jnp.asarray(a) for a in args_np])
+        want = ref.score_ref(*args_np)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), w, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,159 @@
+# Pallas scoring kernel vs the naive numpy oracle (ref.score_ref).
+#
+# The scoring kernel is the VMCd decision hot path; these tests pin down the
+# paper's Eq. 2 (RAS overload), Eq. 3 (WI) and Eq. 4 (core interference)
+# semantics, including the worked example from §IV-B.2.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, score
+
+
+def run_kernel(assign, u, s, cand_u, s_vc, s_cv, thr):
+    import jax.numpy as jnp
+
+    args = [jnp.asarray(a, jnp.float32) for a in (assign, u, s, cand_u, s_vc, s_cv, thr)]
+    return [np.asarray(o) for o in score.score(*args)]
+
+
+def pad_case(assign, u, s, cand_u, s_vc, s_cv, thr, c_max=8, v_max=8):
+    """Embed a small case into padded matrices the way rust does."""
+    c, v = assign.shape
+    m = u.shape[1]
+    a_p = np.zeros((c_max, v_max), np.float32)
+    a_p[:c, :v] = assign
+    u_p = np.zeros((v_max, m), np.float32)
+    u_p[:v] = u
+    s_p = np.ones((v_max, v_max), np.float32)
+    s_p[:v, :v] = s
+    vc_p = np.ones((1, v_max), np.float32)
+    vc_p[0, :v] = s_vc
+    cv_p = np.ones((1, v_max), np.float32)
+    cv_p[0, :v] = s_cv
+    return a_p, u_p, s_p, cand_u, vc_p, cv_p, thr
+
+
+class TestPaperSemantics:
+    def test_worked_example_from_paper(self):
+        """§IV-B.2: candidate with S == 1 vs 3 residents must get WI == 2
+        (sum-only would say 3, product-only would say 1)."""
+        assign = np.zeros((2, 4), np.float32)
+        assign[0, :3] = 1.0  # three residents on core 0
+        u = np.full((4, 4), 0.1, np.float32)
+        s = np.ones((4, 4), np.float32)
+        cand_u = np.full((1, 4), 0.1, np.float32)
+        s_vc = np.ones((1, 4), np.float32)
+        s_cv = np.ones((1, 4), np.float32)
+        thr = np.array([[1.2]], np.float32)
+        _, _, _, ic_a = run_kernel(assign, u, s, cand_u, s_vc, s_cv, thr)
+        assert ic_a[0, 0] == pytest.approx(2.0, abs=1e-5)
+        # Empty core: the candidate alone has WI = (0 + 1)/2 = 0.5.
+        assert ic_a[1, 0] == pytest.approx(0.5, abs=1e-5)
+
+    def test_overload_zero_below_threshold(self):
+        assign = np.zeros((2, 2), np.float32)
+        assign[0, 0] = 1.0
+        u = np.array([[0.5, 0.1, 0.0, 0.2], [0.3, 0.0, 0.0, 0.1]], np.float32)
+        cand_u = np.array([[0.3, 0.0, 0.0, 0.1]], np.float32)
+        s = np.ones((2, 2), np.float32)
+        ones = np.ones((1, 2), np.float32)
+        thr = np.array([[1.2]], np.float32)
+        ol_b, ol_a, _, _ = run_kernel(assign, u, s, cand_u, ones, ones, thr)
+        assert ol_b[0, 0] == pytest.approx(0.0)
+        assert ol_a[0, 0] == pytest.approx(0.0)  # 0.8 CPU still under 1.2
+
+    def test_overload_counts_every_saturated_metric(self):
+        """Eq. 2 sums the beyond-threshold load over all M resources."""
+        assign = np.zeros((1, 2), np.float32)
+        assign[0, :] = 1.0
+        u = np.array(
+            [[0.9, 0.9, 0.0, 0.0], [0.9, 0.9, 0.0, 0.0]], np.float32
+        )
+        cand_u = np.zeros((1, 4), np.float32)
+        s = np.ones((2, 2), np.float32)
+        ones = np.ones((1, 2), np.float32)
+        thr = np.array([[1.2]], np.float32)
+        ol_b, _, _, _ = run_kernel(assign, u, s, cand_u, ones, ones, thr)
+        # CPU: 1.8 - 1.2 = 0.6 over; DiskIO: same. Total 1.2.
+        assert ol_b[0, 0] == pytest.approx(1.2, abs=1e-5)
+
+    def test_interference_is_max_over_workloads(self):
+        """Eq. 4: I_c is the WORST workload's WI, not the mean."""
+        assign = np.zeros((1, 3), np.float32)
+        assign[0, :] = 1.0
+        u = np.full((3, 4), 0.1, np.float32)
+        # vm0 suffers 3.0 slowdown with vm1; everything else is 1.0
+        s = np.ones((3, 3), np.float32)
+        s[0, 1] = 3.0
+        cand_u = np.zeros((1, 4), np.float32)
+        ones = np.ones((1, 3), np.float32)
+        thr = np.array([[1.2]], np.float32)
+        _, _, ic_b, _ = run_kernel(assign, u, s, cand_u, ones, ones, thr)
+        # WI_0 = ((3.0 + 1.0) + 3.0*1.0)/2 = 3.5 — the max.
+        assert ic_b[0, 0] == pytest.approx(3.5, abs=1e-5)
+
+
+class TestVsOracle:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(1, 6),   # cores
+        st.integers(1, 8),   # vms
+        st.integers(0, 2**31 - 1),
+    )
+    def test_random_states_match_oracle(self, c, v, seed):
+        rng = np.random.default_rng(seed)
+        assign = np.zeros((c, v), np.float32)
+        for j in range(v):
+            if rng.random() < 0.8:  # some VMs not yet placed
+                assign[rng.integers(0, c), j] = 1.0
+        u = rng.uniform(0.0, 0.9, (v, 4)).astype(np.float32)
+        s = rng.uniform(0.8, 3.0, (v, v)).astype(np.float32)
+        cand_u = rng.uniform(0.0, 0.9, (1, 4)).astype(np.float32)
+        s_vc = rng.uniform(0.8, 3.0, (1, v)).astype(np.float32)
+        s_cv = rng.uniform(0.8, 3.0, (1, v)).astype(np.float32)
+        thr = np.array([[1.2]], np.float32)
+
+        got = run_kernel(assign, u, s, cand_u, s_vc, s_cv, thr)
+        want = ref.score_ref(assign, u, s, cand_u, s_vc, s_cv, thr)
+        for g, w, name in zip(got, want, ["ol_b", "ol_a", "ic_b", "ic_a"]):
+            np.testing.assert_allclose(g, w, rtol=2e-4, atol=2e-4, err_msg=name)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_padding_is_inert(self, seed):
+        """Padded rows (assign=0, S=1) must not change any score."""
+        rng = np.random.default_rng(seed)
+        c, v = 3, 4
+        assign = np.zeros((c, v), np.float32)
+        for j in range(v):
+            assign[rng.integers(0, c), j] = 1.0
+        u = rng.uniform(0.0, 0.9, (v, 4)).astype(np.float32)
+        s = rng.uniform(0.8, 3.0, (v, v)).astype(np.float32)
+        cand_u = rng.uniform(0.0, 0.9, (1, 4)).astype(np.float32)
+        s_vc = rng.uniform(0.8, 3.0, (1, v)).astype(np.float32)
+        s_cv = rng.uniform(0.8, 3.0, (1, v)).astype(np.float32)
+        thr = np.array([[1.2]], np.float32)
+
+        small = run_kernel(assign, u, s, cand_u, s_vc, s_cv, thr)
+        padded = run_kernel(*pad_case(assign, u, s, cand_u, s_vc, s_cv, thr))
+        for g, w in zip(padded, small):
+            np.testing.assert_allclose(g[:c], w, rtol=2e-4, atol=2e-4)
+
+    def test_full_compiled_shape(self):
+        """Exercise the exact (C_MAX, V_MAX) shape rust compiles against."""
+        rng = np.random.default_rng(7)
+        c, v, m = score.C_MAX, score.V_MAX, score.M_METRICS
+        assign = np.zeros((c, v), np.float32)
+        for j in range(40):
+            assign[rng.integers(0, c), j] = 1.0
+        u = rng.uniform(0.0, 0.9, (v, m)).astype(np.float32)
+        s = rng.uniform(0.8, 3.0, (v, v)).astype(np.float32)
+        cand_u = rng.uniform(0.0, 0.9, (1, m)).astype(np.float32)
+        s_vc = rng.uniform(0.8, 3.0, (1, v)).astype(np.float32)
+        s_cv = rng.uniform(0.8, 3.0, (1, v)).astype(np.float32)
+        thr = np.array([[1.2]], np.float32)
+        got = run_kernel(assign, u, s, cand_u, s_vc, s_cv, thr)
+        want = ref.score_ref(assign, u, s, cand_u, s_vc, s_cv, thr)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=5e-3, atol=5e-3)

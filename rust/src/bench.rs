@@ -1,0 +1,152 @@
+//! First-party benchmark harness (criterion is not in the offline crate
+//! set). Provides warmup + timed iterations + summary statistics and a
+//! stable text output format shared by all `benches/*.rs` targets.
+//!
+//! Each paper-figure bench is a `harness = false` binary that uses
+//! [`Bench`] for micro timings and prints the regenerated figure rows.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Configuration for one measured function.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: u32,
+    pub measure_iters: u32,
+    /// Hard cap on total measurement time.
+    pub max_total: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup_iters: 3,
+            measure_iters: 20,
+            max_total: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Result of a measured function.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    /// Per-iteration wall time in seconds.
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.secs.mean() * 1e3
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.secs.median() * 1e3
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.secs.percentile(95.0) * 1e3
+    }
+
+    /// One-line human summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} ms/iter (p50 {:>9.3}, p95 {:>9.3}, n={})",
+            self.name,
+            self.mean_ms(),
+            self.p50_ms(),
+            self.p95_ms(),
+            self.iters
+        )
+    }
+}
+
+/// The harness.
+pub struct Bench {
+    pub opts: BenchOpts,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // Honour quick-mode for CI: VMCD_BENCH_QUICK=1 shrinks iterations.
+        let mut opts = BenchOpts::default();
+        if std::env::var("VMCD_BENCH_QUICK").as_deref() == Ok("1") {
+            opts.warmup_iters = 1;
+            opts.measure_iters = 3;
+        }
+        Bench {
+            opts,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f` (called once per iteration).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.opts.warmup_iters {
+            f();
+        }
+        let mut secs = Summary::new();
+        let started = Instant::now();
+        let mut iters = 0;
+        for _ in 0..self.opts.measure_iters {
+            let t0 = Instant::now();
+            f();
+            secs.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+            if started.elapsed() > self.opts.max_total {
+                break;
+            }
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            secs,
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print a header for a bench group.
+    pub fn section(&self, title: &str) {
+        println!("\n=== {title} ===");
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new();
+        b.opts.warmup_iters = 1;
+        b.opts.measure_iters = 5;
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.secs.mean() >= 0.0);
+        assert!(acc > 0 || acc == 0); // keep acc alive
+    }
+
+    #[test]
+    fn result_line_formats() {
+        let mut b = Bench::new();
+        b.opts.warmup_iters = 0;
+        b.opts.measure_iters = 2;
+        let r = b.run("fmt", || {});
+        assert!(r.line().contains("fmt"));
+    }
+}

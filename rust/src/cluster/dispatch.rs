@@ -1,0 +1,86 @@
+//! Arrival dispatch: which host receives a new VM.
+//!
+//! The paper assumes "the datacenter management system assigns a set of
+//! VMs to a server" (§IV-B); these are the standard assignment policies
+//! such a system uses.
+
+use crate::util::rng::Rng;
+
+/// Host-selection policy for arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatcher {
+    /// Cycle over hosts.
+    RoundRobin,
+    /// Host with the fewest resident VMs.
+    LeastLoaded,
+    /// Uniformly random host.
+    Random,
+}
+
+impl Dispatcher {
+    /// Pick a host given per-host resident-VM counts.
+    pub fn pick(
+        self,
+        residents: &[usize],
+        rr_state: &mut usize,
+        rng: &mut Rng,
+    ) -> usize {
+        assert!(!residents.is_empty());
+        match self {
+            Dispatcher::RoundRobin => {
+                let h = *rr_state % residents.len();
+                *rr_state += 1;
+                h
+            }
+            Dispatcher::LeastLoaded => residents
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &n)| n)
+                .map(|(h, _)| h)
+                .unwrap(),
+            Dispatcher::Random => rng.below(residents.len()),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dispatcher::RoundRobin => "round-robin",
+            Dispatcher::LeastLoaded => "least-loaded",
+            Dispatcher::Random => "random",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut rr = 0;
+        let mut rng = Rng::new(1);
+        let counts = vec![0, 0, 0];
+        let picks: Vec<usize> = (0..5)
+            .map(|_| Dispatcher::RoundRobin.pick(&counts, &mut rr, &mut rng))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_empty_host() {
+        let mut rr = 0;
+        let mut rng = Rng::new(1);
+        let h = Dispatcher::LeastLoaded.pick(&[3, 0, 2], &mut rr, &mut rng);
+        assert_eq!(h, 1);
+    }
+
+    #[test]
+    fn random_stays_in_range() {
+        let mut rr = 0;
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let h = Dispatcher::Random.pick(&[1, 1, 1, 1], &mut rr, &mut rng);
+            assert!(h < 4);
+        }
+    }
+}

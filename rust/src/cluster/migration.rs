@@ -1,0 +1,112 @@
+//! Live-migration cost model.
+//!
+//! §III: migration-based global consolidation is "technically unreliable
+//! and proportionately more expensive in terms of migration time and
+//! resource usage" when the infrastructure is oversubscribed. The model
+//! captures exactly those two costs:
+//!
+//! * **downtime** — the VM makes no progress for `downtime` seconds
+//!   (stop-and-copy window);
+//! * **transfer load** — for `transfer_secs` seconds both the source and
+//!   destination hosts carry extra NetIO (`transfer_net` of host
+//!   capacity), contending with resident workloads;
+//! * **failure** — under a loaded destination the migration aborts with
+//!   probability `failure_prob` (pre-copy never converges), wasting the
+//!   transfer load without moving the VM.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct MigrationModel {
+    /// VM stall, seconds (stop-and-copy).
+    pub downtime: f64,
+    /// Duration of the pre-copy transfer, seconds.
+    pub transfer_secs: f64,
+    /// Extra NetIO on both hosts during transfer (fraction of capacity).
+    pub transfer_net: f64,
+    /// Probability a migration to a busy destination aborts.
+    pub failure_prob: f64,
+}
+
+impl Default for MigrationModel {
+    fn default() -> Self {
+        MigrationModel {
+            downtime: 3.0,
+            transfer_secs: 20.0,
+            transfer_net: 0.30,
+            failure_prob: 0.15,
+        }
+    }
+}
+
+/// An in-flight migration.
+#[derive(Debug, Clone)]
+pub struct Migration {
+    pub vm_index: usize,
+    pub from_host: usize,
+    pub to_host: usize,
+    /// Remaining transfer seconds.
+    pub remaining: f64,
+    /// Whether this migration will abort at the end of transfer.
+    pub doomed: bool,
+}
+
+impl MigrationModel {
+    /// Start a migration; destination business decides the failure draw.
+    pub fn start(
+        &self,
+        vm_index: usize,
+        from_host: usize,
+        to_host: usize,
+        dest_busy_fraction: f64,
+        rng: &mut Rng,
+    ) -> Migration {
+        // Failure risk scales with how busy the destination already is —
+        // the paper's "unreliable when the infrastructure is
+        // oversubscribed".
+        let p = self.failure_prob * dest_busy_fraction.clamp(0.0, 1.0) * 2.0;
+        Migration {
+            vm_index,
+            from_host,
+            to_host,
+            remaining: self.transfer_secs,
+            doomed: rng.chance(p.min(0.9)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_destination_rarely_fails() {
+        let m = MigrationModel::default();
+        let mut rng = Rng::new(1);
+        let doomed = (0..1000)
+            .filter(|_| m.start(0, 0, 1, 0.0, &mut rng).doomed)
+            .count();
+        assert_eq!(doomed, 0, "zero-busy destination must never abort");
+    }
+
+    #[test]
+    fn saturated_destination_fails_often() {
+        let m = MigrationModel::default();
+        let mut rng = Rng::new(2);
+        let doomed = (0..1000)
+            .filter(|_| m.start(0, 0, 1, 1.0, &mut rng).doomed)
+            .count();
+        // p = 0.30 at full business.
+        assert!((200..400).contains(&doomed), "{doomed}");
+    }
+
+    #[test]
+    fn migration_carries_transfer_state() {
+        let m = MigrationModel::default();
+        let mut rng = Rng::new(3);
+        let mig = m.start(7, 2, 5, 0.5, &mut rng);
+        assert_eq!(mig.vm_index, 7);
+        assert_eq!((mig.from_host, mig.to_host), (2, 5));
+        assert_eq!(mig.remaining, m.transfer_secs);
+    }
+}

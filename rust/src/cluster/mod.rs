@@ -1,0 +1,27 @@
+//! Cluster layer — the paper's named future work (§VI: "further explore
+//! local vs global consolidation approaches … pit our approach against
+//! infrastructure-scale schedulers") and its §III argument that
+//! migration-based global consolidation "fails when the infrastructure as
+//! a whole is oversubscribed".
+//!
+//! Two cluster-level strategies over N simulated hosts:
+//!
+//! * **Local** ([`Strategy::LocalVmcd`]): a thin dispatcher assigns each
+//!   arriving VM to a host (least-resident-VMs); from then on every host's
+//!   own VMCd daemon (any per-host policy) does all optimisation by
+//!   re-pinning locally. No migrations, no global knowledge.
+//! * **Global** ([`Strategy::GlobalMigration`]): a centralized scheduler
+//!   with full cluster knowledge periodically reshuffles VMs *across*
+//!   hosts (live migration) to pack them onto the fewest hosts, at the
+//!   cost the paper identifies: each migration stalls the VM for a
+//!   downtime window and burns network on both ends. Within a host it
+//!   pins round-robin (the centralized schedulers the paper contrasts
+//!   with do not micro-manage pinning).
+
+pub mod dispatch;
+pub mod migration;
+pub mod sim;
+
+pub use dispatch::Dispatcher;
+pub use migration::MigrationModel;
+pub use sim::{ClusterResult, ClusterSim, ClusterSpec, Strategy};

@@ -1,0 +1,482 @@
+//! The cluster simulator: N hosts in lockstep, one dispatcher, and either
+//! per-host VMCd daemons (local strategy) or a centralized
+//! migration-based consolidator (global strategy).
+
+use super::dispatch::Dispatcher;
+use super::migration::{Migration, MigrationModel};
+use crate::config::Config;
+use crate::hostsim::{SimEngine, Vm, VmId, VmState};
+use crate::profiling::ProfileBank;
+use crate::scenarios::ScenarioSpec;
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::vmcd::scheduler::{self, Policy};
+use crate::vmcd::Daemon;
+use crate::workloads::catalog::spec_of;
+use crate::workloads::WorkloadKind;
+use anyhow::Result;
+
+/// Cluster-level consolidation strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Dispatch at arrival; each host's own VMCd daemon optimises locally
+    /// by re-pinning. No migrations (the paper's approach).
+    LocalVmcd,
+    /// Centralized scheduler with global knowledge: periodic reshuffle
+    /// packs VMs onto the fewest hosts via live migration; hosts pin
+    /// round-robin internally (the §III strawman the paper argues against
+    /// under oversubscription).
+    GlobalMigration,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::LocalVmcd => "local-vmcd",
+            Strategy::GlobalMigration => "global-migration",
+        }
+    }
+}
+
+/// Cluster experiment description.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub hosts: usize,
+    pub cfg: Config,
+    pub strategy: Strategy,
+    pub dispatcher: Dispatcher,
+    /// Per-host daemon policy for [`Strategy::LocalVmcd`].
+    pub local_policy: Policy,
+    pub migration: MigrationModel,
+    /// Global reshuffle period, seconds.
+    pub global_interval: f64,
+    /// Max concurrent migrations per reshuffle.
+    pub max_migrations: usize,
+}
+
+impl ClusterSpec {
+    pub fn new(hosts: usize, strategy: Strategy) -> ClusterSpec {
+        ClusterSpec {
+            hosts,
+            cfg: Config::default(),
+            strategy,
+            dispatcher: Dispatcher::LeastLoaded,
+            local_policy: Policy::Ias,
+            migration: MigrationModel::default(),
+            global_interval: 120.0,
+            max_migrations: 4,
+        }
+    }
+}
+
+/// Cluster run summary.
+#[derive(Debug, Clone)]
+pub struct ClusterResult {
+    pub strategy: Strategy,
+    pub avg_perf: f64,
+    /// Σ per-host busy-core hours.
+    pub core_hours: f64,
+    /// Σ hours each host spent powered (≥ 1 busy core) — what global
+    /// consolidation optimises by draining hosts.
+    pub host_hours: f64,
+    pub migrations_started: u64,
+    pub migrations_failed: u64,
+    pub completion_time: f64,
+}
+
+struct HostSlot {
+    engine: SimEngine,
+    daemon: Option<Daemon>,
+    /// Round-robin core cursor for the global strategy's in-host pinning.
+    rr_core: usize,
+    /// Host-powered integral (seconds).
+    powered_seconds: f64,
+}
+
+/// One pending (not yet arrived) VM.
+struct Pending {
+    vm: Vm,
+}
+
+pub struct ClusterSim {
+    spec: ClusterSpec,
+    hosts: Vec<HostSlot>,
+    pending: Vec<Pending>,
+    migrations: Vec<Migration>,
+    rng: Rng,
+    rr_dispatch: usize,
+    last_reshuffle: f64,
+    t: f64,
+    migrations_started: u64,
+    migrations_failed: u64,
+}
+
+impl ClusterSim {
+    /// Build from a scenario spec: `scenario.vms` arrive cluster-wide and
+    /// are dispatched to hosts on arrival.
+    pub fn new(spec: ClusterSpec, scenario: &ScenarioSpec, bank: &ProfileBank) -> ClusterSim {
+        let mut hosts = Vec::with_capacity(spec.hosts);
+        for _ in 0..spec.hosts {
+            let engine = SimEngine::new(spec.cfg.clone(), Vec::new());
+            let daemon = match spec.strategy {
+                Strategy::LocalVmcd => {
+                    let sched = scheduler::build(
+                        spec.local_policy,
+                        bank,
+                        spec.cfg.sched.ras_threshold,
+                        spec.cfg.sched.ias_threshold,
+                    );
+                    Some(Daemon::new(spec.cfg.sched.clone(), sched))
+                }
+                Strategy::GlobalMigration => None,
+            };
+            hosts.push(HostSlot {
+                engine,
+                daemon,
+                rr_core: 0,
+                powered_seconds: 0.0,
+            });
+        }
+        let pending = scenario
+            .vms
+            .iter()
+            .enumerate()
+            .map(|(i, t)| Pending {
+                vm: Vm::new(VmId(i as u32), t.class, t.arrival, t.activity.clone()),
+            })
+            .collect();
+        let rng = Rng::new(spec.cfg.sim.seed ^ 0xC1_05_7E_12);
+        ClusterSim {
+            spec,
+            hosts,
+            pending,
+            migrations: Vec::new(),
+            rng,
+            rr_dispatch: 0,
+            last_reshuffle: 0.0,
+            t: 0.0,
+            migrations_started: 0,
+            migrations_failed: 0,
+        }
+    }
+
+    fn dispatch_arrivals(&mut self) -> Result<()> {
+        let due: Vec<usize> = self
+            .pending
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.vm.arrival <= self.t)
+            .map(|(i, _)| i)
+            .collect();
+        for &i in due.iter().rev() {
+            let mut p = self.pending.remove(i);
+            let residents: Vec<usize> =
+                self.hosts.iter().map(|h| h.engine.vms.len()).collect();
+            let host = self
+                .spec
+                .dispatcher
+                .pick(&residents, &mut self.rr_dispatch, &mut self.rng);
+            p.vm.state = VmState::Running;
+            p.vm.started = Some(self.t);
+            let id = p.vm.id;
+            let slot = &mut self.hosts[host];
+            slot.engine.insert_vm(p.vm);
+            match &mut slot.daemon {
+                Some(daemon) => daemon.on_arrival(&mut slot.engine, id)?,
+                None => {
+                    let core = slot.rr_core % self.spec.cfg.host.cores;
+                    slot.rr_core += 1;
+                    use crate::hostsim::Hypervisor;
+                    slot.engine.pin_vcpu(id, core)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The centralized consolidator: estimate each host's CPU load from
+    /// profiles, drain the least-loaded non-empty host into the others if
+    /// they have headroom.
+    fn global_reshuffle(&mut self, bank: &ProfileBank) {
+        let cores = self.spec.cfg.host.cores as f64;
+        let cap = cores * self.spec.cfg.sched.ras_threshold;
+        let load = |slot: &HostSlot| -> f64 {
+            slot.engine
+                .vms
+                .iter()
+                .filter(|vm| vm.state == VmState::Running)
+                .map(|vm| bank.u[vm.class.index()][0])
+                .sum()
+        };
+        let loads: Vec<f64> = self.hosts.iter().map(load).collect();
+        let counts: Vec<usize> = self
+            .hosts
+            .iter()
+            .map(|h| {
+                h.engine
+                    .vms
+                    .iter()
+                    .filter(|vm| vm.state == VmState::Running)
+                    .count()
+            })
+            .collect();
+
+        // Drain candidate: the least-loaded host with any residents.
+        let Some(src) = (0..self.hosts.len())
+            .filter(|&h| counts[h] > 0)
+            .min_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+        else {
+            return;
+        };
+        // Only drain if the rest of the cluster can absorb it.
+        let spare: f64 = (0..self.hosts.len())
+            .filter(|&h| h != src)
+            .map(|h| (cap - loads[h]).max(0.0))
+            .sum();
+        if spare < loads[src] || counts[src] == 0 {
+            return;
+        }
+
+        let vm_ids: Vec<VmId> = self.hosts[src]
+            .engine
+            .vms
+            .iter()
+            .filter(|vm| vm.state == VmState::Running)
+            .map(|vm| vm.id)
+            .take(self.spec.max_migrations)
+            .collect();
+        for id in vm_ids {
+            if self.migrations.len() >= self.spec.max_migrations {
+                break;
+            }
+            // Destination: most-loaded host that still fits the VM (pack).
+            let vm_load = {
+                let vm = self.hosts[src]
+                    .engine
+                    .vms
+                    .iter()
+                    .find(|vm| vm.id == id)
+                    .unwrap();
+                bank.u[vm.class.index()][0]
+            };
+            let Some(dst) = (0..self.hosts.len())
+                .filter(|&h| h != src)
+                .filter(|&h| load(&self.hosts[h]) + vm_load <= cap)
+                .max_by(|&a, &b| {
+                    load(&self.hosts[a])
+                        .partial_cmp(&load(&self.hosts[b]))
+                        .unwrap()
+                })
+            else {
+                continue;
+            };
+            let dest_busy = load(&self.hosts[dst]) / cores;
+            let mig = self.spec.migration.start(
+                id.0 as usize,
+                src,
+                dst,
+                dest_busy,
+                &mut self.rng,
+            );
+            // Transfer load on both ends for the whole window.
+            self.hosts[src].engine.external_net_load += self.spec.migration.transfer_net;
+            self.hosts[dst].engine.external_net_load += self.spec.migration.transfer_net;
+            self.migrations.push(mig);
+            self.migrations_started += 1;
+        }
+    }
+
+    fn advance_migrations(&mut self, dt: f64) {
+        let mut finished = Vec::new();
+        for (i, m) in self.migrations.iter_mut().enumerate() {
+            m.remaining -= dt;
+            if m.remaining <= 0.0 {
+                finished.push(i);
+            }
+        }
+        for &i in finished.iter().rev() {
+            let m = self.migrations.remove(i);
+            self.hosts[m.from_host].engine.external_net_load -=
+                self.spec.migration.transfer_net;
+            self.hosts[m.to_host].engine.external_net_load -=
+                self.spec.migration.transfer_net;
+            let id = VmId(m.vm_index as u32);
+            if m.doomed {
+                self.migrations_failed += 1;
+                continue; // pre-copy never converged; VM stays.
+            }
+            // Stop-and-copy: move the VM, pause it for the downtime.
+            if let Some(mut vm) = self.hosts[m.from_host].engine.remove_vm(id) {
+                if vm.state == VmState::Running {
+                    vm.paused_until = self.t + self.spec.migration.downtime;
+                }
+                let dst = &mut self.hosts[m.to_host];
+                let core = dst.rr_core % self.spec.cfg.host.cores;
+                dst.rr_core += 1;
+                vm.pinned = Some(core);
+                dst.engine.insert_vm(vm);
+            }
+        }
+    }
+
+    /// Run to completion; returns the cluster summary.
+    pub fn run(mut self, bank: &ProfileBank, min_duration: f64) -> Result<ClusterResult> {
+        let dt = self.spec.cfg.sim.dt;
+        let max_time = self.spec.cfg.sim.max_time;
+        loop {
+            self.dispatch_arrivals()?;
+
+            if self.spec.strategy == Strategy::GlobalMigration
+                && self.t - self.last_reshuffle >= self.spec.global_interval
+            {
+                self.last_reshuffle = self.t;
+                self.global_reshuffle(bank);
+            }
+            self.advance_migrations(dt);
+
+            for slot in &mut self.hosts {
+                if let Some(daemon) = &mut slot.daemon {
+                    daemon.maybe_cycle(&mut slot.engine)?;
+                }
+                slot.engine.step();
+                if slot.engine.ledger.busy_series.points.last().map(|p| p.1 > 0.0)
+                    == Some(true)
+                {
+                    slot.powered_seconds += dt;
+                }
+            }
+            self.t += dt;
+
+            let batch_done = self.hosts.iter().all(|slot| slot.engine.all_batch_done())
+                && self.pending.is_empty();
+            if (batch_done && self.t >= min_duration) || self.t >= max_time {
+                break;
+            }
+        }
+
+        let mut perfs = Vec::new();
+        let mut core_hours = 0.0;
+        let mut host_hours = 0.0;
+        for slot in &self.hosts {
+            core_hours += slot.engine.ledger.core_hours();
+            host_hours += slot.powered_seconds / 3600.0;
+            for vm in &slot.engine.vms {
+                if vm.state == VmState::NotArrived {
+                    continue;
+                }
+                if let Some(p) = vm.normalized_perf() {
+                    perfs.push(p);
+                } else if vm.spec.perf.kind == WorkloadKind::Batch {
+                    if let Some(start) = vm.work_started {
+                        let elapsed = self.t - start;
+                        if elapsed > 0.0 {
+                            perfs.push((vm.work_done / elapsed).clamp(0.0, 1.0));
+                        }
+                    }
+                }
+            }
+        }
+        // Sanity: every spec'd class is consistent (defensive, cheap).
+        debug_assert!(self.hosts.iter().all(|slot| {
+            slot.engine
+                .vms
+                .iter()
+                .all(|vm| spec_of(vm.class).class == vm.class)
+        }));
+        Ok(ClusterResult {
+            strategy: self.spec.strategy,
+            avg_perf: mean(&perfs),
+            core_hours,
+            host_hours,
+            migrations_started: self.migrations_started,
+            migrations_failed: self.migrations_failed,
+            completion_time: self.t,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::random;
+    use crate::testkit;
+
+    fn cluster_scenario(hosts: usize, sr: f64, seed: u64) -> ScenarioSpec {
+        // SR is per-host: hosts × cores × sr VMs cluster-wide.
+        random::build(hosts * 12, sr, seed)
+    }
+
+    #[test]
+    fn local_strategy_runs_and_consolidates() {
+        let bank = testkit::shared_bank();
+        let mut spec = ClusterSpec::new(3, Strategy::LocalVmcd);
+        spec.cfg = testkit::quiet_config();
+        let scen = cluster_scenario(3, 0.75, 42);
+        let sim = ClusterSim::new(spec, &scen, bank);
+        let r = sim.run(bank, scen.min_duration).unwrap();
+        assert_eq!(r.migrations_started, 0, "local strategy never migrates");
+        assert!(r.avg_perf > 0.6, "perf {}", r.avg_perf);
+        assert!(r.core_hours > 0.0);
+        assert!(r.host_hours > 0.0);
+    }
+
+    #[test]
+    fn global_strategy_migrates_and_pays_for_it() {
+        let bank = testkit::shared_bank();
+        let mut spec = ClusterSpec::new(3, Strategy::GlobalMigration);
+        spec.cfg = testkit::quiet_config();
+        let scen = cluster_scenario(3, 0.75, 42);
+        let sim = ClusterSim::new(spec, &scen, bank);
+        let r = sim.run(bank, scen.min_duration).unwrap();
+        assert!(r.migrations_started > 0, "global strategy must migrate");
+    }
+
+    #[test]
+    fn local_beats_global_when_cluster_is_oversubscribed() {
+        // The paper's §III argument: with the whole infrastructure
+        // oversubscribed, migrations are unreliable and expensive, so the
+        // local approach preserves performance better.
+        let bank = testkit::shared_bank();
+        let scen = cluster_scenario(3, 1.8, 42);
+
+        let mut lspec = ClusterSpec::new(3, Strategy::LocalVmcd);
+        lspec.cfg = testkit::quiet_config();
+        let local = ClusterSim::new(lspec, &scen, bank)
+            .run(bank, scen.min_duration)
+            .unwrap();
+
+        let mut gspec = ClusterSpec::new(3, Strategy::GlobalMigration);
+        gspec.cfg = testkit::quiet_config();
+        let global = ClusterSim::new(gspec, &scen, bank)
+            .run(bank, scen.min_duration)
+            .unwrap();
+
+        assert!(
+            local.avg_perf >= global.avg_perf - 0.02,
+            "local {:.3} must not lose to global {:.3} under oversubscription",
+            local.avg_perf,
+            global.avg_perf
+        );
+    }
+
+    #[test]
+    fn dispatcher_balances_residents() {
+        let bank = testkit::shared_bank();
+        let mut spec = ClusterSpec::new(4, Strategy::LocalVmcd);
+        spec.cfg = testkit::quiet_config();
+        let scen = cluster_scenario(4, 0.5, 7);
+        let mut sim = ClusterSim::new(spec, &scen, bank);
+        // Step past all arrivals.
+        for _ in 0..(30 * scen.vms.len() + 10) {
+            sim.dispatch_arrivals().unwrap();
+            for slot in &mut sim.hosts {
+                slot.engine.step();
+            }
+            sim.t += 1.0;
+        }
+        let counts: Vec<usize> = sim.hosts.iter().map(|h| h.engine.vms.len()).collect();
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max - min <= 1, "least-loaded must balance: {counts:?}");
+    }
+}

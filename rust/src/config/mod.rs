@@ -1,0 +1,324 @@
+//! Configuration system: host spec, scheduler parameters, simulation
+//! parameters. JSON-loadable with code defaults matching the paper's
+//! testbed (§V-A: two Xeon X5650 sockets, 12 cores, shared LLC per socket,
+//! 1 Gb NIC) and the paper's scheduler constants (thr = 120%, IAS threshold
+//! ≈ 1.5, 2.5% idle detection).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Physical host description (the simulated testbed).
+#[derive(Debug, Clone)]
+pub struct HostSpec {
+    /// Number of physical cores (paper: 12).
+    pub cores: usize,
+    /// Number of sockets (paper: 2 × six-core).
+    pub sockets: usize,
+    /// Memory bandwidth capacity per socket, in demand units (a VM's membw
+    /// demand is a fraction of this).
+    pub membw_per_socket: f64,
+    /// Host-wide disk I/O capacity in demand units.
+    pub disk_capacity: f64,
+    /// Host-wide network capacity in demand units (the paper's 1 Gb port).
+    pub net_capacity: f64,
+    /// SMT (hyperthreading) capacity of one core when ≥ 2 vCPUs share it:
+    /// effective work retired per second (X5650 is 2-way SMT; 1.25 is a
+    /// typical SMT yield). A lone vCPU is still capped at 1.0.
+    pub smt_yield: f64,
+    /// Per-extra-co-runner context-switch progress penalty κ (time-sharing
+    /// cost of stacking k vCPUs on one core: factor 1 − κ(k−1)).
+    pub ctx_switch_overhead: f64,
+    /// Multiplier on κ for latency-critical VMs (they additionally pay
+    /// scheduling delay, §II).
+    pub lc_ctx_multiplier: f64,
+    /// Scheduling-delay coefficient δ for latency-critical VMs: requests
+    /// arriving while a co-runner occupies the core wait for a scheduling
+    /// quantum, inflating latency by ≈ 1 + δ·Σ co-runner CPU utilisation
+    /// (the queueing/scheduling-delay effect of Leverich & Kozyrakis that
+    /// the paper's §II discussion singles out). This is what makes blind
+    /// co-location of latency-critical VMs with CPU hogs expensive — and
+    /// what IAS learns to avoid through the S matrix.
+    pub lc_sched_delay: f64,
+    /// Socket-level (shared LLC) coupling: fraction of the pairwise
+    /// interference factor applied to same-socket, different-core pairs.
+    pub socket_coupling: f64,
+    /// Power model: watts per active (unparked) core.
+    pub watts_per_core: f64,
+    /// Power model: idle watts per socket (uncore, fixed).
+    pub watts_socket_idle: f64,
+}
+
+impl Default for HostSpec {
+    fn default() -> Self {
+        HostSpec {
+            cores: 12,
+            sockets: 2,
+            membw_per_socket: 1.5,
+            disk_capacity: 1.0,
+            net_capacity: 1.0,
+            smt_yield: 1.25,
+            ctx_switch_overhead: 0.005,
+            lc_ctx_multiplier: 2.0,
+            lc_sched_delay: 0.5,
+            socket_coupling: 0.25,
+            watts_per_core: 15.0,
+            watts_socket_idle: 20.0,
+        }
+    }
+}
+
+impl HostSpec {
+    pub fn cores_per_socket(&self) -> usize {
+        self.cores / self.sockets
+    }
+
+    pub fn socket_of(&self, core: usize) -> usize {
+        core / self.cores_per_socket()
+    }
+}
+
+/// Scheduler parameters (§IV-B).
+#[derive(Debug, Clone)]
+pub struct SchedParams {
+    /// RAS resource-utilisation threshold `thr` (paper: 120%).
+    pub ras_threshold: f64,
+    /// IAS interference threshold; `None` derives it from the profiled S
+    /// matrix via Eq. 5 (paper lands at 1.5).
+    pub ias_threshold: Option<f64>,
+    /// Scheduler re-pin interval in seconds (Alg. 1 `timeInterval`).
+    pub interval: f64,
+    /// Idle detection: a workload whose CPU usage over the last monitoring
+    /// window is below this is idle (paper: 2.5%).
+    pub idle_cpu_threshold: f64,
+    /// Monitoring window length in seconds for idle detection.
+    pub monitor_window: f64,
+}
+
+impl Default for SchedParams {
+    fn default() -> Self {
+        SchedParams {
+            ras_threshold: 1.2,
+            ias_threshold: None,
+            interval: 30.0,
+            idle_cpu_threshold: 0.025,
+            monitor_window: 10.0,
+        }
+    }
+}
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    /// Virtual-time tick, seconds.
+    pub dt: f64,
+    /// Hard wall on simulated time, seconds.
+    pub max_time: f64,
+    /// Master seed; every stochastic stream forks from it.
+    pub seed: u64,
+    /// Relative noise on per-tick demands (monitoring jitter).
+    pub demand_noise: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            dt: 1.0,
+            max_time: 7200.0,
+            seed: 42,
+            demand_noise: 0.03,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub host: HostSpec,
+    pub sched: SchedParams,
+    pub sim: SimParams,
+}
+
+impl Config {
+    /// Load from a JSON file; absent fields keep their defaults.
+    pub fn load(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        Config::from_json(&json)
+    }
+
+    pub fn from_json(json: &Json) -> Result<Config> {
+        let mut cfg = Config::default();
+        if let Some(h) = json.get("host") {
+            read_usize(h, "cores", &mut cfg.host.cores);
+            read_usize(h, "sockets", &mut cfg.host.sockets);
+            read_f64(h, "membw_per_socket", &mut cfg.host.membw_per_socket);
+            read_f64(h, "disk_capacity", &mut cfg.host.disk_capacity);
+            read_f64(h, "net_capacity", &mut cfg.host.net_capacity);
+            read_f64(h, "smt_yield", &mut cfg.host.smt_yield);
+            read_f64(h, "ctx_switch_overhead", &mut cfg.host.ctx_switch_overhead);
+            read_f64(h, "lc_ctx_multiplier", &mut cfg.host.lc_ctx_multiplier);
+            read_f64(h, "lc_sched_delay", &mut cfg.host.lc_sched_delay);
+            read_f64(h, "socket_coupling", &mut cfg.host.socket_coupling);
+            read_f64(h, "watts_per_core", &mut cfg.host.watts_per_core);
+            read_f64(h, "watts_socket_idle", &mut cfg.host.watts_socket_idle);
+        }
+        if let Some(s) = json.get("sched") {
+            read_f64(s, "ras_threshold", &mut cfg.sched.ras_threshold);
+            if let Some(v) = s.get("ias_threshold").and_then(Json::as_f64) {
+                cfg.sched.ias_threshold = Some(v);
+            }
+            read_f64(s, "interval", &mut cfg.sched.interval);
+            read_f64(s, "idle_cpu_threshold", &mut cfg.sched.idle_cpu_threshold);
+            read_f64(s, "monitor_window", &mut cfg.sched.monitor_window);
+        }
+        if let Some(s) = json.get("sim") {
+            read_f64(s, "dt", &mut cfg.sim.dt);
+            read_f64(s, "max_time", &mut cfg.sim.max_time);
+            if let Some(v) = s.get("seed").and_then(Json::as_f64) {
+                cfg.sim.seed = v as u64;
+            }
+            read_f64(s, "demand_noise", &mut cfg.sim.demand_noise);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.host.cores >= 2, "need at least 2 cores");
+        anyhow::ensure!(self.host.sockets >= 1, "need at least 1 socket");
+        anyhow::ensure!(
+            self.host.cores % self.host.sockets == 0,
+            "cores ({}) must divide evenly into sockets ({})",
+            self.host.cores,
+            self.host.sockets
+        );
+        anyhow::ensure!(
+            (0.0..0.5).contains(&self.host.ctx_switch_overhead),
+            "ctx_switch_overhead out of range"
+        );
+        anyhow::ensure!(self.sched.ras_threshold > 0.0, "ras_threshold must be > 0");
+        anyhow::ensure!(self.sim.dt > 0.0, "dt must be > 0");
+        anyhow::ensure!(
+            self.sched.interval >= self.sim.dt,
+            "scheduler interval below simulation tick"
+        );
+        Ok(())
+    }
+
+    /// Serialize (for experiment records).
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            (
+                "host",
+                Json::from_pairs(vec![
+                    ("cores", Json::Num(self.host.cores as f64)),
+                    ("sockets", Json::Num(self.host.sockets as f64)),
+                    ("membw_per_socket", Json::Num(self.host.membw_per_socket)),
+                    ("disk_capacity", Json::Num(self.host.disk_capacity)),
+                    ("net_capacity", Json::Num(self.host.net_capacity)),
+                    ("smt_yield", Json::Num(self.host.smt_yield)),
+                    ("ctx_switch_overhead", Json::Num(self.host.ctx_switch_overhead)),
+                    ("lc_ctx_multiplier", Json::Num(self.host.lc_ctx_multiplier)),
+                    ("lc_sched_delay", Json::Num(self.host.lc_sched_delay)),
+                    ("socket_coupling", Json::Num(self.host.socket_coupling)),
+                    ("watts_per_core", Json::Num(self.host.watts_per_core)),
+                    ("watts_socket_idle", Json::Num(self.host.watts_socket_idle)),
+                ]),
+            ),
+            (
+                "sched",
+                Json::from_pairs(vec![
+                    ("ras_threshold", Json::Num(self.sched.ras_threshold)),
+                    (
+                        "ias_threshold",
+                        self.sched
+                            .ias_threshold
+                            .map(Json::Num)
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("interval", Json::Num(self.sched.interval)),
+                    ("idle_cpu_threshold", Json::Num(self.sched.idle_cpu_threshold)),
+                    ("monitor_window", Json::Num(self.sched.monitor_window)),
+                ]),
+            ),
+            (
+                "sim",
+                Json::from_pairs(vec![
+                    ("dt", Json::Num(self.sim.dt)),
+                    ("max_time", Json::Num(self.sim.max_time)),
+                    ("seed", Json::Num(self.sim.seed as f64)),
+                    ("demand_noise", Json::Num(self.sim.demand_noise)),
+                ]),
+            ),
+        ])
+    }
+}
+
+fn read_f64(json: &Json, key: &str, slot: &mut f64) {
+    if let Some(v) = json.get(key).and_then(Json::as_f64) {
+        *slot = v;
+    }
+}
+
+fn read_usize(json: &Json, key: &str, slot: &mut usize) {
+    if let Some(v) = json.get(key).and_then(Json::as_usize) {
+        *slot = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let c = Config::default();
+        assert_eq!(c.host.cores, 12);
+        assert_eq!(c.host.sockets, 2);
+        assert_eq!(c.host.cores_per_socket(), 6);
+        assert_eq!(c.sched.ras_threshold, 1.2); // thr = 120%
+        assert_eq!(c.sched.idle_cpu_threshold, 0.025); // 2.5%
+        assert!(c.sched.ias_threshold.is_none()); // Eq. 5, derived
+    }
+
+    #[test]
+    fn socket_mapping() {
+        let h = HostSpec::default();
+        assert_eq!(h.socket_of(0), 0);
+        assert_eq!(h.socket_of(5), 0);
+        assert_eq!(h.socket_of(6), 1);
+        assert_eq!(h.socket_of(11), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = Config::default();
+        c.host.cores = 24;
+        c.host.sockets = 4;
+        c.sched.ias_threshold = Some(1.7);
+        c.sim.seed = 99;
+        let j = c.to_json();
+        let back = Config::from_json(&j).unwrap();
+        assert_eq!(back.host.cores, 24);
+        assert_eq!(back.host.sockets, 4);
+        assert_eq!(back.sched.ias_threshold, Some(1.7));
+        assert_eq!(back.sim.seed, 99);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"sched": {"ras_threshold": 1.4}}"#).unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.sched.ras_threshold, 1.4);
+        assert_eq!(c.host.cores, 12);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let j = Json::parse(r#"{"host": {"cores": 13, "sockets": 2}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+        let j2 = Json::parse(r#"{"sim": {"dt": 0}}"#).unwrap();
+        assert!(Config::from_json(&j2).is_err());
+    }
+}

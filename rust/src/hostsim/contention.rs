@@ -1,0 +1,147 @@
+//! Pure contention arithmetic: CPU proportional sharing, context-switch
+//! penalties, capacity throttling, interference composition.
+//!
+//! Kept as standalone functions so the physics is unit-testable without an
+//! engine instance, and so the profiling tests can assert the S matrix's
+//! provenance.
+
+/// Proportional-share CPU allocation on one core. `demands[i]` is vCPU i's
+/// CPU demand in (0, 1]; returns each vCPU's awarded share. If the core is
+/// undersubscribed everyone gets their demand; otherwise shares scale
+/// proportionally (CFS-like) against the core's effective capacity.
+///
+/// `smt_yield` models simultaneous multithreading: with ≥ 2 runnable vCPUs
+/// a hyperthreaded core retires more than one thread's worth of work (the
+/// paper's Xeon X5650 is 2-way SMT — this is what makes its thr = 120%
+/// consolidation threshold cheap in practice). A single vCPU is capped at
+/// 1.0 (it runs one thread).
+pub fn cpu_shares(demands: &[f64], smt_yield: f64) -> Vec<f64> {
+    let total: f64 = demands.iter().sum();
+    let capacity = if demands.len() >= 2 { smt_yield.max(1.0) } else { 1.0 };
+    if total <= capacity {
+        demands.to_vec()
+    } else {
+        demands.iter().map(|d| d * capacity / total).collect()
+    }
+}
+
+/// Context-switch progress penalty for a vCPU sharing its core with
+/// `co_runners` other *active* vCPUs: factor `1 − κ_eff · co_runners`,
+/// floored at 0.5 (a pathological stack of VMs cannot reverse progress).
+/// Latency-critical workloads pay `lc_multiplier × κ` — the scheduling
+/// delay cost the paper discusses via Leverich & Kozyrakis (§II).
+pub fn ctx_penalty(co_runners: usize, kappa: f64, lc: bool, lc_multiplier: f64) -> f64 {
+    let k_eff = if lc { kappa * lc_multiplier } else { kappa };
+    (1.0 - k_eff * co_runners as f64).max(0.5)
+}
+
+/// Capacity throttle for one shared resource: given the total demand and
+/// the capacity, the fraction of its demand each consumer achieves.
+pub fn capacity_throttle(total_demand: f64, capacity: f64) -> f64 {
+    if total_demand <= capacity || total_demand <= 0.0 {
+        1.0
+    } else {
+        capacity / total_demand
+    }
+}
+
+/// How strongly a throttled resource impacts a particular VM: a VM barely
+/// touching the resource is barely affected. `demand` is the VM's own
+/// demand on the resource; full exposure above `saturation_demand`.
+pub fn throttle_impact(throttle: f64, demand: f64, saturation_demand: f64) -> f64 {
+    let exposure = (demand / saturation_demand).min(1.0);
+    1.0 - exposure * (1.0 - throttle)
+}
+
+/// Compose pairwise interference factors for VM `i` against each same-core
+/// co-runner (`full` factors) and each same-socket/other-core neighbour
+/// (`coupled` factors scaled by `socket_coupling`). Factors are ≥ 1
+/// multipliers on the VM's slowdown, composed multiplicatively.
+pub fn interference_slowdown(full: &[f64], coupled: &[f64], socket_coupling: f64) -> f64 {
+    let mut slow = 1.0;
+    for &f in full {
+        slow *= f;
+    }
+    for &f in coupled {
+        // Scale the *excess* over 1.0 by the coupling strength.
+        slow *= 1.0 + socket_coupling * (f - 1.0);
+    }
+    slow
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    #[test]
+    fn shares_undersubscribed_pass_through() {
+        assert_eq!(cpu_shares(&[0.3, 0.4], 1.25), vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn shares_oversubscribed_proportional_to_smt_capacity() {
+        let s = cpu_shares(&[0.9, 0.9], 1.25);
+        assert!(close(s[0], 0.625, 1e-12));
+        assert!(close(s[1], 0.625, 1e-12));
+        let s = cpu_shares(&[1.0, 0.5], 1.25);
+        assert!(close(s.iter().sum::<f64>(), 1.25, 1e-12));
+        assert!(close(s[0] / s[1], 2.0, 1e-12)); // proportionality kept
+    }
+
+    #[test]
+    fn single_vcpu_cannot_exceed_one_thread() {
+        // SMT capacity only exists with >= 2 runnable vCPUs.
+        let s = cpu_shares(&[0.95], 1.25);
+        assert_eq!(s, vec![0.95]);
+    }
+
+    #[test]
+    fn smt_soaks_mild_oversubscription() {
+        // Total demand 1.15 < 1.25: nobody is throttled (the paper's
+        // thr=120% co-location "without significant degradation").
+        let s = cpu_shares(&[0.55, 0.45, 0.15], 1.25);
+        assert_eq!(s, vec![0.55, 0.45, 0.15]);
+    }
+
+    #[test]
+    fn ctx_penalty_scales_with_corunners() {
+        assert_eq!(ctx_penalty(0, 0.025, false, 2.0), 1.0);
+        assert!(close(ctx_penalty(1, 0.025, false, 2.0), 0.975, 1e-12));
+        assert!(close(ctx_penalty(1, 0.025, true, 2.0), 0.95, 1e-12));
+        // Floor kicks in for absurd stacking.
+        assert_eq!(ctx_penalty(100, 0.025, false, 2.0), 0.5);
+    }
+
+    #[test]
+    fn throttle_only_over_capacity() {
+        assert_eq!(capacity_throttle(0.8, 1.0), 1.0);
+        assert!(close(capacity_throttle(2.0, 1.0), 0.5, 1e-12));
+        assert_eq!(capacity_throttle(0.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn light_users_shrug_off_throttles() {
+        // 50% throttle, but the VM uses 1% of the resource.
+        let impact = throttle_impact(0.5, 0.01, 0.2);
+        assert!(impact > 0.97, "{impact}");
+        // A heavy user takes the full hit.
+        let impact = throttle_impact(0.5, 0.5, 0.2);
+        assert!(close(impact, 0.5, 1e-12));
+    }
+
+    #[test]
+    fn interference_composes_multiplicatively() {
+        let slow = interference_slowdown(&[1.2, 1.1], &[], 0.25);
+        assert!(close(slow, 1.32, 1e-12));
+    }
+
+    #[test]
+    fn socket_coupling_attenuates() {
+        // Same factor via socket coupling at 0.25 strength: 1 + 0.25*0.2.
+        let slow = interference_slowdown(&[], &[1.2], 0.25);
+        assert!(close(slow, 1.05, 1e-12));
+        // No coupling -> no effect.
+        assert!(close(interference_slowdown(&[], &[1.5], 0.0), 1.0, 1e-12));
+    }
+}

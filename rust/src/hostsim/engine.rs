@@ -1,0 +1,592 @@
+//! The simulation engine: advances virtual time, applies the contention
+//! physics, accounts CPU time / energy / performance, and exposes the
+//! [`Hypervisor`] control surface to VMCd.
+
+use super::contention::{
+    capacity_throttle, cpu_shares, ctx_penalty, throttle_impact,
+};
+use super::counters::{self, PerfCounters};
+use super::hypervisor::{DomainStats, Hypervisor};
+use super::vm::{Vm, VmId, VmState};
+use crate::config::Config;
+use crate::metrics::Ledger;
+use crate::util::rng::Rng;
+use crate::workloads::catalog::pair_factor;
+use crate::workloads::{WorkloadKind, NUM_METRICS};
+use anyhow::Result;
+
+/// Demand level above which a VM is considered fully exposed to a
+/// throttled shared resource (see `contention::throttle_impact`).
+const SATURATION_DEMAND: f64 = 0.2;
+
+/// Background CPU share threshold deciding whether a pinned VM keeps its
+/// core busy (unparked). Idle VMs' background noise (1–2%) exceeds this, so
+/// a core holding only idle VMs is still powered — which is exactly why the
+/// schedulers consolidate idle VMs onto core 0.
+const BUSY_CPU_FLOOR: f64 = 0.005;
+
+/// The simulated host.
+pub struct SimEngine {
+    pub cfg: Config,
+    pub vms: Vec<Vm>,
+    /// Virtual time, seconds.
+    pub t: f64,
+    pub ledger: Ledger,
+    /// Extra host-wide NetIO demand injected by external activity (live
+    /// migrations in the cluster layer).
+    pub external_net_load: f64,
+    rng: Rng,
+    /// Ticks per monitoring window (idle detection).
+    window_ticks: usize,
+}
+
+impl SimEngine {
+    pub fn new(cfg: Config, vms: Vec<Vm>) -> SimEngine {
+        let window_ticks = (cfg.sched.monitor_window / cfg.sim.dt).round().max(1.0) as usize;
+        let rng = Rng::new(cfg.sim.seed ^ 0xE6E6_5146_1A5C_0FFA);
+        SimEngine {
+            cfg,
+            vms,
+            t: 0.0,
+            ledger: Ledger::new(),
+            external_net_load: 0.0,
+            rng,
+            window_ticks,
+        }
+    }
+
+    /// Remove a VM (cluster live migration). Returns the VM state intact.
+    pub fn remove_vm(&mut self, id: VmId) -> Option<Vm> {
+        let idx = self.idx(id)?;
+        Some(self.vms.remove(idx))
+    }
+
+    /// Insert a VM arriving from another host (cluster live migration).
+    pub fn insert_vm(&mut self, vm: Vm) {
+        debug_assert!(
+            self.idx(vm.id).is_none(),
+            "duplicate VmId {:?} on host",
+            vm.id
+        );
+        self.vms.push(vm);
+    }
+
+    /// Index of a VM by id.
+    fn idx(&self, id: VmId) -> Option<usize> {
+        self.vms.iter().position(|vm| vm.id == id)
+    }
+
+    /// VMs that arrived at or before `t` and become resident now. Returns
+    /// the newly-arrived ids (the driver hands them to the daemon for
+    /// initial placement).
+    pub fn process_arrivals(&mut self) -> Vec<VmId> {
+        let t = self.t;
+        let mut arrived = Vec::new();
+        for vm in &mut self.vms {
+            if vm.state == VmState::NotArrived && vm.arrival <= t {
+                vm.state = VmState::Running;
+                vm.started = Some(t);
+                arrived.push(vm.id);
+            }
+        }
+        arrived
+    }
+
+    /// All batch jobs finished?
+    pub fn all_batch_done(&self) -> bool {
+        self.vms.iter().all(|vm| {
+            vm.spec.perf.kind != WorkloadKind::Batch || vm.state == VmState::Finished
+        })
+    }
+
+    /// Any VM not yet arrived?
+    pub fn arrivals_pending(&self) -> bool {
+        self.vms.iter().any(|vm| vm.state == VmState::NotArrived)
+    }
+
+    /// Advance one tick: apply contention, progress workloads, account.
+    pub fn step(&mut self) {
+        let dt = self.cfg.sim.dt;
+        let cores = self.cfg.host.cores;
+        let noise = self.cfg.sim.demand_noise;
+
+        // ---- gather per-core active sets and their noisy demands ----
+        // (indices into self.vms)
+        let mut core_active: Vec<Vec<usize>> = vec![Vec::new(); cores];
+        let mut core_has_resident: Vec<bool> = vec![false; cores];
+        let mut demands: Vec<[f64; NUM_METRICS]> = vec![[0.0; NUM_METRICS]; self.vms.len()];
+        let mut active_flags = vec![false; self.vms.len()];
+
+        for i in 0..self.vms.len() {
+            let vm = &self.vms[i];
+            if vm.state != VmState::Running {
+                continue;
+            }
+            let Some(core) = vm.pinned else { continue };
+            if core >= cores {
+                continue;
+            }
+            core_has_resident[core] = true;
+            let active = vm.is_active(self.t);
+            active_flags[i] = active;
+            if active {
+                let mut d = vm.spec.demand;
+                if noise > 0.0 {
+                    for slot in d.iter_mut() {
+                        if *slot > 0.0 {
+                            let jitter = self.rng.normal_with(1.0, noise);
+                            *slot = (*slot * jitter).clamp(0.0, 1.0);
+                        }
+                    }
+                }
+                demands[i] = d;
+                core_active[core].push(i);
+            }
+        }
+
+        // ---- CPU shares per core ----
+        let mut share = vec![0.0f64; self.vms.len()];
+        for members in core_active.iter() {
+            if members.is_empty() {
+                continue;
+            }
+            let d: Vec<f64> = members.iter().map(|&i| demands[i][0]).collect();
+            let s = cpu_shares(&d, self.cfg.host.smt_yield);
+            for (pos, &i) in members.iter().enumerate() {
+                share[i] = s[pos];
+            }
+        }
+
+        // ---- shared-resource totals and throttles ----
+        let sockets = self.cfg.host.sockets;
+        let mut socket_membw = vec![0.0f64; sockets];
+        let mut disk_total = 0.0;
+        let mut net_total = 0.0;
+        for (core, members) in core_active.iter().enumerate() {
+            let sk = self.cfg.host.socket_of(core);
+            for &i in members {
+                // I/O and membw track the share of CPU the VM actually got
+                // (a starved VM issues fewer requests).
+                let cpu_ratio = if demands[i][0] > 0.0 {
+                    (share[i] / demands[i][0]).min(1.0)
+                } else {
+                    1.0
+                };
+                disk_total += demands[i][1] * cpu_ratio;
+                net_total += demands[i][2] * cpu_ratio;
+                socket_membw[sk] += demands[i][3] * cpu_ratio;
+            }
+        }
+        let f_disk = capacity_throttle(disk_total, self.cfg.host.disk_capacity);
+        let f_net = capacity_throttle(
+            net_total + self.external_net_load,
+            self.cfg.host.net_capacity,
+        );
+        let f_mem: Vec<f64> = socket_membw
+            .iter()
+            .map(|&d| capacity_throttle(d, self.cfg.host.membw_per_socket))
+            .collect();
+
+        // ---- per-VM progress ----
+        let kappa = self.cfg.host.ctx_switch_overhead;
+        let lc_mult = self.cfg.host.lc_ctx_multiplier;
+        let coupling = self.cfg.host.socket_coupling;
+        let mut progress = vec![0.0f64; self.vms.len()];
+        let mut membw_used = vec![0.0f64; self.vms.len()];
+
+        for (core, members) in core_active.iter().enumerate() {
+            if members.is_empty() {
+                continue;
+            }
+            let sk = self.cfg.host.socket_of(core);
+            for &i in members {
+                let vm = &self.vms[i];
+                let lc = vm.spec.perf.kind == WorkloadKind::LatencyCritical;
+                let co = members.len() - 1;
+                let ctx = ctx_penalty(co, kappa, lc, lc_mult);
+
+                // Scheduling delay for latency-critical VMs: requests queue
+                // behind co-runner bursts (Leverich & Kozyrakis, §II).
+                // Long-quantum co-runners (batch hogs) hurt far more than
+                // quickly-yielding services — weight co-runner CPU by the
+                // class's scheduling-quantum length.
+                let sched_delay = if lc {
+                    let co_pressure: f64 = members
+                        .iter()
+                        .filter(|&&j| j != i)
+                        .map(|&j| demands[j][0] * self.vms[j].spec.quantum)
+                        .sum();
+                    1.0 / (1.0 + self.cfg.host.lc_sched_delay * co_pressure)
+                } else {
+                    1.0
+                };
+
+                // Pairwise interference, composed inline (hot path: no
+                // per-VM allocation). Same-core co-runners at full
+                // strength; same-socket neighbours attenuated by the LLC
+                // coupling factor — semantics identical to
+                // `contention::interference_slowdown`.
+                let mut interf = 1.0;
+                for &j in members {
+                    if j != i {
+                        interf *= pair_factor(&vm.spec, &self.vms[j].spec);
+                    }
+                }
+                for (c2, m2) in core_active.iter().enumerate() {
+                    if c2 == core || self.cfg.host.socket_of(c2) != sk {
+                        continue;
+                    }
+                    for &j in m2 {
+                        let pf = pair_factor(&vm.spec, &self.vms[j].spec);
+                        interf *= 1.0 + coupling * (pf - 1.0);
+                    }
+                }
+
+                let cpu_ratio = if demands[i][0] > 0.0 {
+                    (share[i] / demands[i][0]).min(1.0)
+                } else {
+                    1.0
+                };
+                let t_disk = throttle_impact(f_disk, demands[i][1], SATURATION_DEMAND);
+                let t_net = throttle_impact(f_net, demands[i][2], SATURATION_DEMAND);
+                let t_mem = throttle_impact(f_mem[sk], demands[i][3], SATURATION_DEMAND);
+                let io_factor = t_disk.min(t_net).min(t_mem);
+
+                let p = (cpu_ratio * ctx * sched_delay * io_factor / interf).clamp(0.0, 1.0);
+                progress[i] = p;
+                membw_used[i] = demands[i][3] * cpu_ratio * f_mem[sk];
+            }
+        }
+
+        // ---- apply progress, accounting, counters ----
+        let window_ticks = self.window_ticks;
+        let t_now = self.t;
+        for i in 0..self.vms.len() {
+            let idle_cpu = self.vms[i].spec.idle_cpu;
+            let vm = &mut self.vms[i];
+            if vm.state != VmState::Running {
+                continue;
+            }
+            let active = active_flags[i];
+            let cpu_used = if active { share[i] } else { idle_cpu };
+            vm.record_cpu(cpu_used, window_ticks);
+            vm.cpu_seconds += cpu_used * dt;
+            vm.last_util = if active {
+                [
+                    cpu_used,
+                    demands[i][1],
+                    demands[i][2],
+                    membw_used[i],
+                ]
+            } else {
+                [idle_cpu, 0.0, 0.0, 0.0]
+            };
+
+            let inc = counters::synthesize(vm.last_util[3], dt);
+            vm.ctr_mem_reads += inc.mem_reads;
+            vm.ctr_mem_writes += inc.mem_writes;
+            vm.ctr_offcore += inc.offcore;
+
+            if !active {
+                continue;
+            }
+            match vm.spec.perf.kind {
+                WorkloadKind::Batch => {
+                    if vm.work_started.is_none() {
+                        vm.work_started = Some(t_now);
+                    }
+                    vm.work_done += progress[i] * dt;
+                    if vm.work_done >= vm.spec.perf.work_units {
+                        vm.state = VmState::Finished;
+                        vm.finished = Some(t_now + dt);
+                    }
+                }
+                _ => {
+                    vm.perf_sum += vm.spec.perf.tick_performance(progress[i]);
+                    vm.perf_ticks += 1;
+                }
+            }
+        }
+
+        // ---- busy-core accounting (the CPU-time-consumed metric) ----
+        let mut busy = 0usize;
+        for core in 0..cores {
+            let has_loaded_vm = self.vms.iter().any(|vm| {
+                vm.state == VmState::Running
+                    && vm.pinned == Some(core)
+                    && (if vm.is_active(t_now) {
+                        true
+                    } else {
+                        vm.spec.idle_cpu > BUSY_CPU_FLOOR
+                    })
+            });
+            if has_loaded_vm && core_has_resident[core] {
+                busy += 1;
+            }
+        }
+        self.ledger.record_tick(t_now, busy, dt, &self.cfg.host);
+
+        self.t += dt;
+    }
+
+    /// Snapshot of currently-busy core count (for tests).
+    pub fn busy_cores(&self) -> usize {
+        let cores = self.cfg.host.cores;
+        (0..cores)
+            .filter(|&core| {
+                self.vms.iter().any(|vm| {
+                    vm.state == VmState::Running && vm.pinned == Some(core)
+                })
+            })
+            .count()
+    }
+}
+
+impl Hypervisor for SimEngine {
+    fn now(&self) -> f64 {
+        self.t
+    }
+
+    fn host_spec(&self) -> &crate::config::HostSpec {
+        &self.cfg.host
+    }
+
+    fn list_domains(&self) -> Vec<VmId> {
+        self.vms
+            .iter()
+            .filter(|vm| vm.state == VmState::Running)
+            .map(|vm| vm.id)
+            .collect()
+    }
+
+    fn domain_stats(&self, id: VmId) -> Option<DomainStats> {
+        let vm = self.vms.iter().find(|vm| vm.id == id)?;
+        if vm.state != VmState::Running {
+            return None;
+        }
+        Some(DomainStats {
+            id: vm.id,
+            class: vm.class,
+            pinned: vm.pinned,
+            cpu_window_avg: vm.cpu_window_avg(),
+            util: vm.last_util,
+            counters: PerfCounters {
+                mem_reads: vm.ctr_mem_reads,
+                mem_writes: vm.ctr_mem_writes,
+                offcore: vm.ctr_offcore,
+            },
+            running: true,
+        })
+    }
+
+    fn pin_vcpu(&mut self, id: VmId, core: usize) -> Result<()> {
+        anyhow::ensure!(
+            core < self.cfg.host.cores,
+            "core {core} out of range (host has {})",
+            self.cfg.host.cores
+        );
+        let idx = self
+            .idx(id)
+            .ok_or_else(|| anyhow::anyhow!("unknown vm {id:?}"))?;
+        anyhow::ensure!(
+            self.vms[idx].state == VmState::Running,
+            "vm {id:?} is not resident"
+        );
+        if self.vms[idx].pinned != Some(core) {
+            self.vms[idx].pinned = Some(core);
+            self.ledger.repin_count += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostsim::vm::ActivityModel;
+    use crate::workloads::WorkloadClass;
+
+    fn quiet_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.sim.demand_noise = 0.0;
+        cfg
+    }
+
+    fn running_vm(id: u32, class: WorkloadClass, core: usize) -> Vm {
+        let mut vm = Vm::new(VmId(id), class, 0.0, ActivityModel::AlwaysOn);
+        vm.state = VmState::Running;
+        vm.started = Some(0.0);
+        vm.pinned = Some(core);
+        vm
+    }
+
+    #[test]
+    fn isolated_batch_runs_at_full_speed() {
+        let cfg = quiet_cfg();
+        let vm = running_vm(0, WorkloadClass::Blackscholes, 0);
+        let work = vm.spec.perf.work_units;
+        let mut eng = SimEngine::new(cfg, vec![vm]);
+        let mut steps = 0;
+        while eng.vms[0].state == VmState::Running && steps < 10_000 {
+            eng.step();
+            steps += 1;
+        }
+        assert_eq!(eng.vms[0].state, VmState::Finished);
+        let perf = eng.vms[0].normalized_perf().unwrap();
+        assert!(perf > 0.99, "isolated perf {perf}");
+        assert!((eng.vms[0].finished.unwrap() - work).abs() <= 2.0);
+    }
+
+    #[test]
+    fn copinned_cpu_hogs_halve() {
+        let cfg = quiet_cfg();
+        let a = running_vm(0, WorkloadClass::Blackscholes, 3);
+        let b = running_vm(1, WorkloadClass::Blackscholes, 3);
+        let mut eng = SimEngine::new(cfg, vec![a, b]);
+        for _ in 0..10 {
+            eng.step();
+        }
+        // Two 0.95-demand VMs share one SMT core: each progresses at
+        // ~1.25/1.9 ≈ 0.66 (2-way SMT soaks part of the oversubscription).
+        let p0 = eng.vms[0].work_done / eng.t;
+        assert!(p0 < 0.70, "progress {p0}");
+        assert!(p0 > 0.55, "progress {p0}");
+    }
+
+    #[test]
+    fn separate_cores_no_cpu_contention() {
+        let cfg = quiet_cfg();
+        let a = running_vm(0, WorkloadClass::Blackscholes, 0);
+        let b = running_vm(1, WorkloadClass::Blackscholes, 1);
+        let mut eng = SimEngine::new(cfg, vec![a, b]);
+        for _ in 0..10 {
+            eng.step();
+        }
+        let p0 = eng.vms[0].work_done / eng.t;
+        assert!(p0 > 0.95, "progress {p0}");
+    }
+
+    #[test]
+    fn jacobi_pair_same_socket_interferes_more_than_cross_socket() {
+        let cfg = quiet_cfg();
+        // Same socket (cores 0,1) vs cross socket (cores 0,6).
+        let mut same = SimEngine::new(
+            cfg.clone(),
+            vec![
+                running_vm(0, WorkloadClass::Jacobi, 0),
+                running_vm(1, WorkloadClass::Jacobi, 1),
+            ],
+        );
+        let mut cross = SimEngine::new(
+            cfg,
+            vec![
+                running_vm(0, WorkloadClass::Jacobi, 0),
+                running_vm(1, WorkloadClass::Jacobi, 6),
+            ],
+        );
+        for _ in 0..50 {
+            same.step();
+            cross.step();
+        }
+        assert!(
+            same.vms[0].work_done < cross.vms[0].work_done,
+            "same-socket membw contention must hurt: same {} cross {}",
+            same.vms[0].work_done,
+            cross.vms[0].work_done
+        );
+    }
+
+    #[test]
+    fn idle_vm_stays_under_idle_threshold() {
+        let cfg = quiet_cfg();
+        let mut vm = Vm::new(
+            VmId(0),
+            WorkloadClass::LampLight,
+            0.0,
+            ActivityModel::Windows(vec![]), // never active
+        );
+        vm.state = VmState::Running;
+        vm.pinned = Some(0);
+        let mut eng = SimEngine::new(cfg, vec![vm]);
+        for _ in 0..20 {
+            eng.step();
+        }
+        assert!(eng.vms[0].cpu_window_avg() < 0.025);
+    }
+
+    #[test]
+    fn busy_core_accounting_counts_idle_parking() {
+        let cfg = quiet_cfg();
+        // One active on core 1, one idle parked on core 0.
+        let active = running_vm(0, WorkloadClass::Blackscholes, 1);
+        let mut idle = Vm::new(
+            VmId(1),
+            WorkloadClass::LampLight,
+            0.0,
+            ActivityModel::Windows(vec![]),
+        );
+        idle.state = VmState::Running;
+        idle.pinned = Some(0);
+        let mut eng = SimEngine::new(cfg, vec![active, idle]);
+        eng.step();
+        // Both cores count: core 1 runs work, core 0 is held by the idle VM.
+        let (_, busy) = eng.ledger.busy_series.points[0];
+        assert_eq!(busy, 2.0);
+    }
+
+    #[test]
+    fn arrivals_by_time() {
+        let cfg = quiet_cfg();
+        let mut vm = Vm::new(VmId(0), WorkloadClass::Hadoop, 30.0, ActivityModel::AlwaysOn);
+        vm.state = VmState::NotArrived;
+        let mut eng = SimEngine::new(cfg, vec![vm]);
+        assert!(eng.process_arrivals().is_empty());
+        for _ in 0..31 {
+            eng.step();
+        }
+        let arrived = eng.process_arrivals();
+        assert_eq!(arrived, vec![VmId(0)]);
+        assert_eq!(eng.vms[0].state, VmState::Running);
+    }
+
+    #[test]
+    fn hypervisor_surface() {
+        let cfg = quiet_cfg();
+        let vm = running_vm(0, WorkloadClass::Hadoop, 2);
+        let mut eng = SimEngine::new(cfg, vec![vm]);
+        eng.step();
+        let doms = eng.list_domains();
+        assert_eq!(doms.len(), 1);
+        let stats = eng.domain_stats(doms[0]).unwrap();
+        assert_eq!(stats.pinned, Some(2));
+        assert!(stats.util[0] > 0.4, "cpu util {}", stats.util[0]);
+        assert!(stats.counters.mem_reads > 0);
+        // Re-pin through the control surface.
+        eng.pin_vcpu(VmId(0), 5).unwrap();
+        assert_eq!(eng.vms[0].pinned, Some(5));
+        assert_eq!(eng.ledger.repin_count, 1);
+        assert!(eng.pin_vcpu(VmId(0), 99).is_err());
+        assert!(eng.pin_vcpu(VmId(7), 0).is_err());
+    }
+
+    #[test]
+    fn lamp_copinned_with_hog_degrades_latency() {
+        let cfg = quiet_cfg();
+        let lamp = running_vm(0, WorkloadClass::LampHeavy, 0);
+        let hog = running_vm(1, WorkloadClass::Blackscholes, 0);
+        let mut eng = SimEngine::new(cfg, vec![lamp, hog]);
+        for _ in 0..30 {
+            eng.step();
+        }
+        let perf = eng.vms[0].normalized_perf().unwrap();
+        assert!(perf < 0.75, "lamp should suffer: {perf}");
+        // And isolated it would not.
+        let cfg2 = quiet_cfg();
+        let lamp2 = running_vm(0, WorkloadClass::LampHeavy, 0);
+        let mut eng2 = SimEngine::new(cfg2, vec![lamp2]);
+        for _ in 0..30 {
+            eng2.step();
+        }
+        assert!(eng2.vms[0].normalized_perf().unwrap() > 0.99);
+    }
+}

@@ -1,0 +1,138 @@
+//! Failure injection: a hypervisor wrapper that makes a configurable
+//! fraction of control-plane calls fail, for robustness testing.
+//!
+//! Real libvirt calls fail transiently (domain busy, timeout, migration in
+//! progress); VMCd must tolerate that without aborting its scheduling
+//! cycle or corrupting its placement bookkeeping.
+
+use super::hypervisor::{DomainStats, Hypervisor};
+use super::vm::VmId;
+use crate::config::HostSpec;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Wraps a hypervisor; every `pin_vcpu` fails with probability
+/// `pin_failure_prob` (deterministic per seed).
+pub struct FlakyHypervisor<H: Hypervisor> {
+    pub inner: H,
+    pub pin_failure_prob: f64,
+    rng: Rng,
+    pub injected_failures: u64,
+}
+
+impl<H: Hypervisor> FlakyHypervisor<H> {
+    pub fn new(inner: H, pin_failure_prob: f64, seed: u64) -> Self {
+        FlakyHypervisor {
+            inner,
+            pin_failure_prob,
+            rng: Rng::new(seed ^ 0xF1A4),
+            injected_failures: 0,
+        }
+    }
+}
+
+impl<H: Hypervisor> Hypervisor for FlakyHypervisor<H> {
+    fn now(&self) -> f64 {
+        self.inner.now()
+    }
+
+    fn host_spec(&self) -> &HostSpec {
+        self.inner.host_spec()
+    }
+
+    fn list_domains(&self) -> Vec<VmId> {
+        self.inner.list_domains()
+    }
+
+    fn domain_stats(&self, id: VmId) -> Option<DomainStats> {
+        self.inner.domain_stats(id)
+    }
+
+    fn pin_vcpu(&mut self, id: VmId, core: usize) -> Result<()> {
+        if self.rng.chance(self.pin_failure_prob) {
+            self.injected_failures += 1;
+            anyhow::bail!("injected transient failure pinning {id:?} -> core {core}");
+        }
+        self.inner.pin_vcpu(id, core)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostsim::{ActivityModel, SimEngine, Vm, VmState};
+    use crate::testkit;
+    use crate::vmcd::scheduler::{self, Policy};
+    use crate::vmcd::Daemon;
+    use crate::workloads::WorkloadClass;
+
+    fn engine(n: u32) -> SimEngine {
+        let cfg = testkit::quiet_config();
+        let vms = (0..n)
+            .map(|i| {
+                let class = if i % 2 == 0 {
+                    WorkloadClass::Blackscholes
+                } else {
+                    WorkloadClass::LampLight
+                };
+                let mut vm = Vm::new(VmId(i), class, 0.0, ActivityModel::AlwaysOn);
+                vm.state = VmState::Running;
+                vm.started = Some(0.0);
+                vm.pinned = Some(i as usize % 12);
+                vm
+            })
+            .collect();
+        SimEngine::new(cfg, vms)
+    }
+
+    #[test]
+    fn injects_the_requested_failure_rate() {
+        let mut flaky = FlakyHypervisor::new(engine(1), 0.5, 7);
+        let mut fails = 0;
+        for i in 0..200 {
+            if flaky.pin_vcpu(VmId(0), i % 12).is_err() {
+                fails += 1;
+            }
+        }
+        assert!((60..140).contains(&fails), "{fails}");
+        assert_eq!(flaky.injected_failures, fails);
+    }
+
+    #[test]
+    fn daemon_survives_flaky_actuation() {
+        // 30% of pins fail; the daemon must keep cycling, never abort, and
+        // the host must keep making progress.
+        let cfg = testkit::quiet_config();
+        let bank = testkit::shared_bank();
+        let sched = scheduler::build(Policy::Ias, bank, cfg.sched.ras_threshold, None);
+        let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+        let mut flaky = FlakyHypervisor::new(engine(8), 0.3, 11);
+
+        for _ in 0..200 {
+            daemon.maybe_cycle(&mut flaky).unwrap(); // must never Err
+            flaky.inner.step();
+        }
+        assert!(daemon.cycles >= 6);
+        assert!(daemon.pin_failures > 0, "no failures were exercised");
+        assert!(flaky.injected_failures > 0);
+        // Work still progressed on every batch VM.
+        for vm in &flaky.inner.vms {
+            if vm.class == WorkloadClass::Blackscholes {
+                assert!(
+                    vm.work_done > 0.0 || vm.state == VmState::Finished,
+                    "{:?} starved",
+                    vm.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_probability_is_transparent() {
+        let mut flaky = FlakyHypervisor::new(engine(2), 0.0, 3);
+        for i in 0..50 {
+            flaky.pin_vcpu(VmId(0), i % 12).unwrap();
+        }
+        assert_eq!(flaky.injected_failures, 0);
+    }
+}

@@ -1,0 +1,52 @@
+//! The hypervisor control surface — the simulated stand-in for libvirt.
+//!
+//! VMCd (the monitor, actuator and schedulers) is written entirely against
+//! this trait, mirroring the libvirt API calls the paper's daemon makes
+//! (§III): domain enumeration, per-domain resource statistics (plus the
+//! perf-counter window for memory bandwidth, Table I), and vCPU pinning.
+//! `SimEngine` implements it; a real libvirt binding could implement it
+//! identically.
+
+use super::counters::PerfCounters;
+use super::vm::VmId;
+use crate::config::HostSpec;
+use crate::workloads::{MetricVec, WorkloadClass};
+use anyhow::Result;
+
+/// Per-domain statistics as the monitor sees them.
+#[derive(Debug, Clone)]
+pub struct DomainStats {
+    pub id: VmId,
+    /// The workload tag the user supplied (paper §IV-A: workloads are
+    /// tagged with their profile class; tagging is external to VMCd).
+    pub class: WorkloadClass,
+    pub pinned: Option<usize>,
+    /// Mean CPU usage over the monitoring window — the idle-detection
+    /// input (< 2.5% ⇒ idle).
+    pub cpu_window_avg: f64,
+    /// Instantaneous measured utilisation [CPU, DiskIO, NetIO, MemBW].
+    /// The MemBW entry is *derived from the counters* by the monitor, not
+    /// read directly (see `counters`).
+    pub util: MetricVec,
+    /// Cumulative perf counters for this domain.
+    pub counters: PerfCounters,
+    pub running: bool,
+}
+
+/// The control surface VMCd drives.
+pub trait Hypervisor {
+    /// Current host time (seconds).
+    fn now(&self) -> f64;
+
+    /// The physical host description.
+    fn host_spec(&self) -> &HostSpec;
+
+    /// Enumerate resident (arrived, unfinished) domains.
+    fn list_domains(&self) -> Vec<VmId>;
+
+    /// Statistics for one domain; `None` if it does not exist or has left.
+    fn domain_stats(&self, id: VmId) -> Option<DomainStats>;
+
+    /// Pin a domain's vCPU to a physical core.
+    fn pin_vcpu(&mut self, id: VmId, core: usize) -> Result<()>;
+}

@@ -1,0 +1,37 @@
+//! Discrete-event simulator of the paper's testbed.
+//!
+//! Substitutes (DESIGN.md §2) for the hardware the paper measured on — a
+//! 2-socket / 12-core Xeon X5650 host running single-vCPU KVM VMs — which
+//! is not available here. The simulator reproduces exactly the interface
+//! VMCd observes and manipulates:
+//!
+//! * the **control surface** ([`Hypervisor`]): list domains, read per-domain
+//!   stats (CPU / DiskIO / NetIO plus the perf-counter-derived memory
+//!   bandwidth of Table I), pin vCPUs — mirroring the libvirt + perf calls
+//!   of the paper's VM Monitor and VM Actuator;
+//! * the **contention physics** that make scheduling decisions matter:
+//!   proportional-share CPU time-slicing with context-switch overhead,
+//!   per-socket memory-bandwidth capacity, host-wide disk/network capacity,
+//!   and pairwise micro-architectural interference (what the offline
+//!   profiling phase measures into matrix S).
+//!
+//! The engine advances in fixed virtual-time ticks (default 1 s). Nothing
+//! here depends on wall-clock time; every run is deterministic given the
+//! config seed.
+
+pub mod contention;
+pub mod counters;
+pub mod engine;
+pub mod faults;
+pub mod hypervisor;
+pub mod vm;
+
+pub use engine::SimEngine;
+pub use faults::FlakyHypervisor;
+pub use hypervisor::{DomainStats, Hypervisor};
+pub use vm::{ActivityModel, Vm, VmId, VmState};
+
+pub use crate::config::HostSpec;
+
+/// Convenience alias: the simulated host is just the engine.
+pub type Host = SimEngine;

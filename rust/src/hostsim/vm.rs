@@ -1,0 +1,264 @@
+//! Simulated virtual machines: lifecycle, activity phases, accounting.
+
+use crate::workloads::{catalog::spec_of, ClassSpec, WorkloadClass, WorkloadKind};
+
+/// Opaque VM identifier (stable across the run).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VmId(pub u32);
+
+/// Lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VmState {
+    /// Scheduled to arrive later (random scenario: 30 s inter-arrival).
+    NotArrived,
+    /// Resident on the host.
+    Running,
+    /// Batch job completed; no longer consumes resources.
+    Finished,
+}
+
+/// Activity phases — drives the idle/running distinction the paper's
+/// dynamic scenario exercises (§V-C.3: VMs "become active in 12- or 6-job
+/// batches"; §III: idle = CPU below 2.5% over the last window).
+#[derive(Debug, Clone)]
+pub enum ActivityModel {
+    /// Active from arrival to completion / scenario end.
+    AlwaysOn,
+    /// Periodic duty cycle (web service with busy/quiet periods).
+    OnOff { period: f64, duty: f64, phase: f64 },
+    /// Explicit active windows `(start, end)` in scenario time — used by
+    /// the dynamic scenario's activation batches.
+    Windows(Vec<(f64, f64)>),
+}
+
+impl ActivityModel {
+    /// Is the workload in an active phase at time `t`?
+    pub fn is_active(&self, t: f64) -> bool {
+        match self {
+            ActivityModel::AlwaysOn => true,
+            ActivityModel::OnOff { period, duty, phase } => {
+                let pos = (t + phase).rem_euclid(*period) / period;
+                pos < *duty
+            }
+            ActivityModel::Windows(ws) => ws.iter().any(|&(s, e)| t >= s && t < e),
+        }
+    }
+}
+
+/// A simulated single-vCPU VM (the paper assumes one virtual core per VM,
+/// §V-A).
+#[derive(Debug, Clone)]
+pub struct Vm {
+    pub id: VmId,
+    pub class: WorkloadClass,
+    pub spec: ClassSpec,
+    pub arrival: f64,
+    pub activity: ActivityModel,
+    pub state: VmState,
+    /// Physical core this VM's vCPU is pinned on (None until first placed).
+    pub pinned: Option<usize>,
+    /// Migration stop-and-copy window: the VM makes no progress while
+    /// `t < paused_until` (cluster layer).
+    pub paused_until: f64,
+
+    // ---- progress / performance accounting ----
+    /// Batch: accumulated work (seconds at full speed).
+    pub work_done: f64,
+    pub started: Option<f64>,
+    /// First instant the workload was actually active (batch jobs in the
+    /// dynamic scenario are placed early but activate later; performance
+    /// is measured from activation).
+    pub work_started: Option<f64>,
+    pub finished: Option<f64>,
+    /// Service classes: sum of per-tick normalized performance samples
+    /// (active ticks only).
+    pub perf_sum: f64,
+    pub perf_ticks: u64,
+    /// CPU seconds actually consumed.
+    pub cpu_seconds: f64,
+
+    // ---- monitoring window (for the 2.5% idle detection) ----
+    recent_cpu: Vec<f64>,
+    recent_pos: usize,
+    recent_len: usize,
+
+    // ---- synthetic perf counters (Table I substitution) ----
+    pub ctr_mem_reads: u64,
+    pub ctr_mem_writes: u64,
+    pub ctr_offcore: u64,
+
+    /// Last tick's measured utilisation (what the hypervisor reports).
+    pub last_util: [f64; 4],
+}
+
+impl Vm {
+    pub fn new(id: VmId, class: WorkloadClass, arrival: f64, activity: ActivityModel) -> Vm {
+        Vm {
+            id,
+            class,
+            spec: spec_of(class),
+            arrival,
+            activity,
+            state: VmState::NotArrived,
+            pinned: None,
+            paused_until: 0.0,
+            work_done: 0.0,
+            started: None,
+            work_started: None,
+            finished: None,
+            perf_sum: 0.0,
+            perf_ticks: 0,
+            cpu_seconds: 0.0,
+            recent_cpu: Vec::new(),
+            recent_pos: 0,
+            recent_len: 0,
+            ctr_mem_reads: 0,
+            ctr_mem_writes: 0,
+            ctr_offcore: 0,
+            last_util: [0.0; 4],
+        }
+    }
+
+    /// Is the VM demanding resources at time `t`? Batch jobs are active
+    /// until complete; services follow their activity model.
+    pub fn is_active(&self, t: f64) -> bool {
+        if self.state != VmState::Running {
+            return false;
+        }
+        if t < self.paused_until {
+            return false;
+        }
+        match self.spec.perf.kind {
+            // Batch jobs additionally respect their activation window (the
+            // dynamic scenario places VMs early and activates them in
+            // batches, §V-C.3).
+            WorkloadKind::Batch => {
+                self.work_done < self.spec.perf.work_units && self.activity.is_active(t)
+            }
+            _ => self.activity.is_active(t),
+        }
+    }
+
+    /// Record this tick's CPU usage into the monitoring ring buffer.
+    pub fn record_cpu(&mut self, usage: f64, window_ticks: usize) {
+        if self.recent_cpu.len() != window_ticks {
+            self.recent_cpu.resize(window_ticks, usage);
+            self.recent_pos = 0;
+            self.recent_len = self.recent_cpu.len().min(self.recent_len.max(1));
+        }
+        self.recent_cpu[self.recent_pos] = usage;
+        self.recent_pos = (self.recent_pos + 1) % window_ticks;
+        self.recent_len = (self.recent_len + 1).min(window_ticks);
+    }
+
+    /// Average CPU usage over the monitoring window — the quantity the
+    /// paper's idle detection compares against 2.5%.
+    pub fn cpu_window_avg(&self) -> f64 {
+        if self.recent_len == 0 {
+            return 0.0;
+        }
+        self.recent_cpu.iter().take(self.recent_len).sum::<f64>() / self.recent_len as f64
+    }
+
+    /// Final normalized performance of the VM (1.0 = isolated speed).
+    pub fn normalized_perf(&self) -> Option<f64> {
+        match self.spec.perf.kind {
+            WorkloadKind::Batch => {
+                let end = self.finished?;
+                let start = self.work_started.or(self.started)?;
+                let elapsed = end - start;
+                if elapsed <= 0.0 {
+                    return None;
+                }
+                Some((self.spec.perf.work_units / elapsed).min(1.0))
+            }
+            _ => {
+                if self.perf_ticks == 0 {
+                    return None;
+                }
+                Some(self.perf_sum / self.perf_ticks as f64)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mkvm(class: WorkloadClass) -> Vm {
+        Vm::new(VmId(0), class, 0.0, ActivityModel::AlwaysOn)
+    }
+
+    #[test]
+    fn onoff_duty_cycle() {
+        let m = ActivityModel::OnOff {
+            period: 100.0,
+            duty: 0.3,
+            phase: 0.0,
+        };
+        assert!(m.is_active(0.0));
+        assert!(m.is_active(29.9));
+        assert!(!m.is_active(30.1));
+        assert!(!m.is_active(99.0));
+        assert!(m.is_active(100.5)); // wraps
+    }
+
+    #[test]
+    fn windows_model() {
+        let m = ActivityModel::Windows(vec![(10.0, 20.0), (50.0, 60.0)]);
+        assert!(!m.is_active(5.0));
+        assert!(m.is_active(15.0));
+        assert!(!m.is_active(30.0));
+        assert!(m.is_active(55.0));
+        assert!(!m.is_active(60.0)); // end-exclusive
+    }
+
+    #[test]
+    fn batch_active_until_work_done() {
+        let mut vm = mkvm(WorkloadClass::Blackscholes);
+        vm.state = VmState::Running;
+        assert!(vm.is_active(0.0));
+        vm.work_done = vm.spec.perf.work_units;
+        assert!(!vm.is_active(0.0));
+    }
+
+    #[test]
+    fn not_arrived_is_inactive() {
+        let vm = mkvm(WorkloadClass::LampLight);
+        assert_eq!(vm.state, VmState::NotArrived);
+        assert!(!vm.is_active(0.0));
+    }
+
+    #[test]
+    fn cpu_window_average() {
+        let mut vm = mkvm(WorkloadClass::LampLight);
+        for _ in 0..5 {
+            vm.record_cpu(0.10, 10);
+        }
+        assert!((vm.cpu_window_avg() - 0.10).abs() < 1e-12);
+        for _ in 0..10 {
+            vm.record_cpu(0.02, 10);
+        }
+        // Window fully refreshed with idle samples.
+        assert!(vm.cpu_window_avg() < 0.025);
+    }
+
+    #[test]
+    fn batch_normalized_perf_from_times() {
+        let mut vm = mkvm(WorkloadClass::Blackscholes);
+        vm.started = Some(0.0);
+        vm.work_started = Some(0.0);
+        vm.finished = Some(vm.spec.perf.work_units * 2.0); // ran at half speed
+        let perf = vm.normalized_perf().unwrap();
+        assert!((perf - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn service_normalized_perf_is_sample_mean() {
+        let mut vm = mkvm(WorkloadClass::LampHeavy);
+        vm.perf_sum = 4.5;
+        vm.perf_ticks = 5;
+        assert!((vm.normalized_perf().unwrap() - 0.9).abs() < 1e-12);
+    }
+}

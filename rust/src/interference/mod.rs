@@ -1,0 +1,133 @@
+//! The paper's scheduling mathematics, as pure functions.
+//!
+//! * [`core_overload`] — Eq. 2: the RAS composite-load-beyond-threshold
+//!   metric for one core.
+//! * [`workload_interference`] — Eq. 3: WI, the estimated slowdown of one
+//!   workload from its co-runners (mean of sum and product of pairwise
+//!   slowdowns).
+//! * [`core_interference`] — Eq. 4: I_c, the worst WI on the core.
+//! * [`ias_threshold`] — Eq. 5: the IAS acceptance threshold ≈ mean of S.
+//!
+//! These are the native scoring backend; `runtime::scoring` provides an
+//! XLA-executed equivalent (the AOT-compiled Pallas kernel) and the test
+//! suite asserts the two agree.
+
+use crate::workloads::{MetricVec, NUM_METRICS};
+
+/// Eq. 2 — core overload. `loads` are the utilisation vectors of the VMs
+/// pinned on the core; `thr` is the resource-utilisation threshold (the
+/// paper uses 120%).
+///
+/// `OL_c = Σ_j max(0, Σ_i U_c[i][j] − thr)`
+pub fn core_overload(loads: &[MetricVec], thr: f64) -> f64 {
+    let mut total = 0.0;
+    for j in 0..NUM_METRICS {
+        let composite: f64 = loads.iter().map(|u| u[j]).sum();
+        total += (composite - thr).max(0.0);
+    }
+    total
+}
+
+/// Eq. 2 restricted to the CPU metric — what the CAS reference scheduler
+/// uses (§IV-B.1: "taking into account only one metric, the CPU
+/// utilization").
+pub fn cpu_overload(loads: &[MetricVec], thr: f64) -> f64 {
+    let composite: f64 = loads.iter().map(|u| u[0]).sum();
+    (composite - thr).max(0.0)
+}
+
+/// Eq. 3 — workload interference for workload `i` on a core.
+///
+/// `slowdowns` holds the pairwise slowdown S[i][j] of workload `i` against
+/// each *co-runner* j (self excluded — see the worked example in §IV-B.2:
+/// a candidate with S = 1 against three residents must score (3 + 1)/2 = 2).
+///
+/// `WI = (Σ_j S[i][j] + Π_j S[i][j]) / 2`
+pub fn workload_interference(slowdowns: &[f64]) -> f64 {
+    let sum: f64 = slowdowns.iter().sum();
+    let prod: f64 = slowdowns.iter().product();
+    0.5 * (sum + prod)
+}
+
+/// Eq. 4 — core interference: the worst (maximum) WI among the workloads on
+/// the core. `wi` are per-workload interference values; an empty core has
+/// interference 0.
+pub fn core_interference(wi: &[f64]) -> f64 {
+    wi.iter().copied().fold(0.0, f64::max)
+}
+
+/// Eq. 5 — the IAS threshold: the mean entry of the pairwise slowdown
+/// matrix S ("close to the average slowdown of a pair of random
+/// co-scheduled workloads"). The paper selects 1.5 on its testbed.
+pub fn ias_threshold(s: &[Vec<f64>]) -> f64 {
+    let n = s.len();
+    if n == 0 {
+        return 1.5;
+    }
+    let total: f64 = s.iter().flat_map(|row| row.iter()).sum();
+    total / (n * n) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    #[test]
+    fn overload_zero_when_under_threshold() {
+        let loads = [[0.5, 0.1, 0.1, 0.1], [0.5, 0.1, 0.1, 0.1]];
+        assert_eq!(core_overload(&loads, 1.2), 0.0);
+    }
+
+    #[test]
+    fn overload_sums_over_metrics() {
+        // CPU composite 1.8 (0.6 over), DiskIO composite 1.5 (0.3 over).
+        let loads = [[0.9, 0.75, 0.0, 0.0], [0.9, 0.75, 0.0, 0.0]];
+        assert!(close(core_overload(&loads, 1.2), 0.9, 1e-12));
+    }
+
+    #[test]
+    fn cpu_overload_ignores_other_metrics() {
+        let loads = [[0.5, 9.0, 9.0, 9.0]];
+        assert_eq!(cpu_overload(&loads, 1.2), 0.0);
+        let loads2 = [[1.5, 0.0, 0.0, 0.0]];
+        assert!(close(cpu_overload(&loads2, 1.2), 0.3, 1e-12));
+    }
+
+    #[test]
+    fn paper_worked_example() {
+        // §IV-B.2: new job with S = 1 against three residents -> WI = 2.
+        assert!(close(workload_interference(&[1.0, 1.0, 1.0]), 2.0, 1e-12));
+        // Sum-only would say 3; product-only would say 1.
+    }
+
+    #[test]
+    fn wi_alone_is_half() {
+        // No co-runners: (0 + empty product 1)/2 = 0.5.
+        assert!(close(workload_interference(&[]), 0.5, 1e-12));
+    }
+
+    #[test]
+    fn wi_product_penalises_heavy_pairs() {
+        // Sub-linear slowdowns: product contributes less than the sum.
+        let light = workload_interference(&[1.2, 1.2]);
+        assert!(close(light, 0.5 * (2.4 + 1.44), 1e-12));
+        // Past 2.0 the product term grows exponentially (paper §IV-B.2).
+        let heavy = workload_interference(&[2.5, 2.5]);
+        assert!(close(heavy, 0.5 * (5.0 + 6.25), 1e-12));
+        assert!(heavy / light > 2.5);
+    }
+
+    #[test]
+    fn core_interference_is_max() {
+        assert!(close(core_interference(&[0.5, 2.0, 1.1]), 2.0, 1e-12));
+        assert_eq!(core_interference(&[]), 0.0);
+    }
+
+    #[test]
+    fn threshold_is_matrix_mean() {
+        let s = vec![vec![1.0, 2.0], vec![1.0, 2.0]];
+        assert!(close(ias_threshold(&s), 1.5, 1e-12));
+        assert!(close(ias_threshold(&[]), 1.5, 1e-12)); // fallback
+    }
+}

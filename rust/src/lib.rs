@@ -1,0 +1,56 @@
+//! # vmcd — resource- and interference-aware VM scheduling
+//!
+//! Reproduction of *"Improving virtual host efficiency through resource and
+//! interference aware scheduling"* (Angelou et al., 2016): a per-host
+//! coordinator daemon (VMCd) that dynamically re-pins VM vCPUs onto physical
+//! cores to consolidate work (saving CPU-hours / energy) while avoiding
+//! co-locating workloads that interfere.
+//!
+//! ## Layout
+//!
+//! * [`hostsim`] — discrete-event simulator of the paper's testbed (the
+//!   2-socket / 12-core Xeon host, KVM VMs, shared-resource contention).
+//!   Substitutes for the real hardware per DESIGN.md §2.
+//! * [`workloads`] — the paper's workload classes (PARSEC blackscholes,
+//!   Hadoop terasort, PolyBench jacobi, LAMP web serving, CloudSuite media
+//!   streaming) as demand/performance models.
+//! * [`interference`] — the paper's equations: core overload (Eq. 2),
+//!   workload interference WI (Eq. 3), core interference (Eq. 4),
+//!   IAS threshold (Eq. 5).
+//! * [`profiling`] — the offline phase (§IV-A): isolated + pairwise co-run
+//!   measurements producing the S (slowdown) and U (utilisation) matrices.
+//! * [`vmcd`] — the daemon: monitor, actuator, and the four schedulers
+//!   (RRS baseline, CAS, RAS, IAS).
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`): the XLA scoring backend and the real-compute
+//!   workload kernels. Python is never on this path.
+//! * [`scenarios`] — the paper's three evaluation scenarios (§V-C).
+//! * [`metrics`] / [`report`] — CPU-hours ledger, normalized performance,
+//!   time series, and the figure/table regeneration.
+//! * [`util`] — first-party RNG / JSON / stats / CLI (the build is offline;
+//!   see DESIGN.md §6).
+//! * [`bench`] — the benchmark harness used by `benches/` (criterion is not
+//!   available offline; this provides warmup/iteration/percentile logic).
+//! * [`testkit`] — seeded property-testing mini-framework used by unit and
+//!   integration tests (proptest substitute).
+
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod hostsim;
+pub mod interference;
+pub mod metrics;
+pub mod profiling;
+pub mod report;
+pub mod runtime;
+pub mod scenarios;
+pub mod testkit;
+pub mod util;
+pub mod vmcd;
+pub mod workloads;
+
+pub use config::Config;
+pub use hostsim::{Host, HostSpec, SimEngine};
+pub use profiling::ProfileBank;
+pub use scenarios::{ScenarioKind, ScenarioResult};
+pub use vmcd::scheduler::{Policy, Scheduler};

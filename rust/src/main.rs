@@ -1,0 +1,399 @@
+//! `vmcd` — CLI for the VM-coordinator reproduction.
+//!
+//! Subcommands:
+//! * `profile [--out FILE]` — run the offline profiling phase (§IV-A),
+//!   print the S/U matrices, optionally cache them as JSON.
+//! * `run --scenario NAME --policy P [--sr X] [--seed N] [--xla]` — run one
+//!   scenario under one policy and print the summary.
+//! * `report fig2|fig3|fig4|fig5|fig6|table1|all [--seeds N] [--out DIR]` —
+//!   regenerate the paper's figures (ASCII + CSV).
+//! * `validate` — assert the native and XLA scoring backends agree on a
+//!   randomized placement battery.
+//! * `daemon [--policy P] [--ticks N] [--ms-per-tick M]` — run the daemon
+//!   loop against a simulated host in paced wall-clock time, printing
+//!   monitor snapshots (a demo of the Alg. 1 loop).
+
+use anyhow::{Context, Result};
+use vmcd::config::Config;
+use vmcd::hostsim::Hypervisor;
+use vmcd::profiling::ProfileBank;
+use vmcd::report;
+use vmcd::scenarios::{self, ScenarioKind};
+use vmcd::util::cli::Args;
+use vmcd::util::logger;
+use vmcd::vmcd::scheduler::Policy;
+
+fn main() {
+    logger::init();
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    if let Some(seed) = args.opt("seed") {
+        cfg.sim.seed = seed.parse().context("--seed expects an integer")?;
+    }
+    if let Some(thr) = args.opt("ras-threshold") {
+        cfg.sched.ras_threshold = thr.parse().context("--ras-threshold")?;
+    }
+    if let Some(thr) = args.opt("ias-threshold") {
+        cfg.sched.ias_threshold = Some(thr.parse().context("--ias-threshold")?);
+    }
+    Ok(cfg)
+}
+
+fn bank_for(cfg: &Config, args: &Args) -> ProfileBank {
+    ProfileBank::load_or_generate(cfg, args.opt("profiles"))
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "profile" => cmd_profile(args),
+        "run" => cmd_run(args),
+        "report" => cmd_report(args),
+        "validate" => cmd_validate(args),
+        "daemon" => cmd_daemon(args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `vmcd help`)"),
+    }
+}
+
+const HELP: &str = "\
+vmcd — resource- and interference-aware VM scheduling (Angelou et al. 2016)
+
+USAGE:
+  vmcd profile   [--out FILE] [--config FILE]
+  vmcd run       --scenario random|latency|dynamic6|dynamic12 --policy rrs|cas|ras|ias
+                 [--sr X] [--seed N] [--xla] [--profiles FILE]
+  vmcd report    fig2|fig3|fig4|fig5|fig6|table1|all [--seeds N] [--out DIR]
+  vmcd validate  [--cases N]
+  vmcd daemon    [--policy P] [--ticks N] [--ms-per-tick M]
+";
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    log::info!("running offline profiling phase (isolated + pairwise co-runs)");
+    let bank = ProfileBank::generate(&cfg);
+    let names: Vec<&str> = bank.classes.iter().map(|c| c.name()).collect();
+
+    let mut rows = Vec::new();
+    for (i, name) in names.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        for j in 0..bank.n() {
+            row.push(format!("{:.2}", bank.s[i][j]));
+        }
+        rows.push(row);
+    }
+    let mut headers: Vec<&str> = vec!["S (row=wl, col=co-runner)"];
+    headers.extend(names.iter());
+    println!("{}", report::render_table(&headers, &rows));
+
+    let mut urows = Vec::new();
+    for (i, name) in names.iter().enumerate() {
+        urows.push(vec![
+            name.to_string(),
+            format!("{:.3}", bank.u[i][0]),
+            format!("{:.3}", bank.u[i][1]),
+            format!("{:.3}", bank.u[i][2]),
+            format!("{:.3}", bank.u[i][3]),
+        ]);
+    }
+    println!(
+        "{}",
+        report::render_table(&["U", "cpu", "diskio", "netio", "membw"], &urows)
+    );
+    println!(
+        "mean pairwise slowdown (Eq. 5 threshold): {:.3}",
+        bank.mean_slowdown()
+    );
+
+    if let Some(path) = args.opt("out") {
+        bank.save(path)?;
+        println!("profile bank written to {path}");
+    }
+    Ok(())
+}
+
+fn build_spec(cfg: &Config, kind: ScenarioKind, sr: f64, seed: u64) -> scenarios::ScenarioSpec {
+    match kind {
+        ScenarioKind::Random => scenarios::random::build(cfg.host.cores, sr, seed),
+        ScenarioKind::LatencyHeavy => scenarios::latency::build(cfg.host.cores, sr, seed),
+        ScenarioKind::Dynamic6 => scenarios::dynamic::build(6, seed),
+        ScenarioKind::Dynamic12 => scenarios::dynamic::build(12, seed),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let kind = ScenarioKind::from_name(&args.opt_or("scenario", "random"))
+        .context("unknown --scenario")?;
+    let policy =
+        Policy::from_name(&args.opt_or("policy", "ias")).context("unknown --policy")?;
+    let sr = args.opt_f64("sr", 1.0)?;
+    let seed = args.opt_u64("seed", cfg.sim.seed)?;
+    let bank = bank_for(&cfg, args);
+    let spec = build_spec(&cfg, kind, sr, seed);
+
+    log::info!(
+        "scenario {} ({} VMs) under {}",
+        spec.name,
+        spec.vms.len(),
+        policy.name()
+    );
+    let result = if args.flag("xla") {
+        let rt = vmcd::runtime::Runtime::new()?;
+        let backend = Box::new(vmcd::runtime::XlaScoring::new(rt)?);
+        scenarios::runner::run_scenario_with_backend(&cfg, &spec, policy, &bank, backend)?
+    } else {
+        scenarios::run_scenario(&cfg, &spec, policy, &bank)?
+    };
+
+    println!("scenario        : {}", result.scenario);
+    println!("policy          : {}", result.policy.name());
+    println!("VMs             : {}", spec.vms.len());
+    println!("avg performance : {:.3} (1.0 = isolated)", result.avg_perf);
+    println!("core-hours      : {:.3}", result.core_hours);
+    println!("energy          : {:.1} Wh", result.energy_wh);
+    println!("completed at    : {:.0} s", result.completion_time);
+    println!("re-pins         : {}", result.repin_count);
+    println!("sched cycles    : {}", result.sched_cycles);
+    println!("per-class performance:");
+    for (class, perf) in &result.per_class_perf {
+        println!("  {:<14} {:.3}", class.name(), perf);
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let nseeds = args.opt_usize("seeds", 3)?;
+    let seeds: Vec<u64> = (0..nseeds as u64).map(|i| cfg.sim.seed + i).collect();
+    let out_dir = args.opt_or("out", "results");
+    let out = std::path::Path::new(&out_dir);
+    let bank = bank_for(&cfg, args);
+
+    let mut figures = Vec::new();
+    match which {
+        "fig2" => figures.push(report::fig2(&cfg, &bank, &seeds)?),
+        "fig3" => figures.push(report::fig3(&cfg, &bank, &seeds)?),
+        "fig4" => figures.push(report::fig45(&cfg, &bank, 6, seeds[0])?),
+        "fig5" => figures.push(report::fig45(&cfg, &bank, 12, seeds[0])?),
+        "fig6" => figures.push(report::fig6(&cfg, &bank, &seeds)?),
+        "table1" => {
+            println!("{}", report::table1(&cfg)?);
+            return Ok(());
+        }
+        "all" => {
+            figures.push(report::fig2(&cfg, &bank, &seeds)?);
+            figures.push(report::fig3(&cfg, &bank, &seeds)?);
+            figures.push(report::fig45(&cfg, &bank, 6, seeds[0])?);
+            figures.push(report::fig45(&cfg, &bank, 12, seeds[0])?);
+            figures.push(report::fig6(&cfg, &bank, &seeds)?);
+            println!("{}", report::table1(&cfg)?);
+        }
+        other => anyhow::bail!("unknown report '{other}'"),
+    }
+    for fig in &figures {
+        println!("{}", fig.render());
+        fig.write_csv(out)?;
+    }
+    println!("CSV mirrors under {out_dir}/");
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    use vmcd::util::rng::Rng;
+    use vmcd::vmcd::scheduler::{NativeScoring, PlacementState, ScoringBackend};
+    use vmcd::workloads::ALL_CLASSES;
+
+    let cfg = load_config(args)?;
+    let cases = args.opt_usize("cases", 50)?;
+    let bank = bank_for(&cfg, args);
+    let rt = vmcd::runtime::Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut xla = vmcd::runtime::XlaScoring::new(rt)?;
+    let mut native = NativeScoring::new();
+    let mut rng = Rng::new(cfg.sim.seed);
+
+    let mut max_err = 0.0f64;
+    for case in 0..cases {
+        let mut state = PlacementState::new(cfg.host.cores, rng.chance(0.3));
+        let nvms = rng.below(20);
+        for _ in 0..nvms {
+            let core = rng.below(cfg.host.cores);
+            state.place(core, *rng.pick(&ALL_CLASSES));
+        }
+        let cand = *rng.pick(&ALL_CLASSES);
+        let cpu_only = rng.chance(0.5);
+        let a = xla.score(&state, cand, &bank, cfg.sched.ras_threshold, cpu_only);
+        let b = native.score(&state, cand, &bank, cfg.sched.ras_threshold, cpu_only);
+        for core in 0..cfg.host.cores {
+            for (x, y, what) in [
+                (a.ol_before[core], b.ol_before[core], "ol_before"),
+                (a.ol_after[core], b.ol_after[core], "ol_after"),
+                (a.ic_before[core], b.ic_before[core], "ic_before"),
+                (a.ic_after[core], b.ic_after[core], "ic_after"),
+            ] {
+                let err = (x - y).abs();
+                max_err = max_err.max(err);
+                anyhow::ensure!(
+                    err < 1e-3,
+                    "case {case}: {what}[{core}] xla={x} native={y}"
+                );
+            }
+        }
+    }
+    println!(
+        "validate OK: {cases} randomized placements, max |xla - native| = {max_err:.2e}"
+    );
+    Ok(())
+}
+
+/// Minimal HTTP status endpoint (std TcpListener; tokio is not in the
+/// offline crate set): GET anything -> JSON snapshot of the daemon state.
+fn spawn_status_server(
+    addr: &str,
+    status: std::sync::Arc<std::sync::Mutex<String>>,
+) -> Result<()> {
+    use std::io::{Read, Write};
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding status server on {addr}"))?;
+    log::info!("status server listening on http://{addr}/status");
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { continue };
+            let mut buf = [0u8; 1024];
+            let _ = stream.read(&mut buf); // drain the request line
+            let body = status.lock().map(|s| s.clone()).unwrap_or_default();
+            let resp = format!(
+                "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                body.len(),
+                body
+            );
+            let _ = stream.write_all(resp.as_bytes());
+        }
+    });
+    Ok(())
+}
+
+fn cmd_daemon(args: &Args) -> Result<()> {
+    use vmcd::vmcd::Daemon;
+
+    let cfg = load_config(args)?;
+    let policy =
+        Policy::from_name(&args.opt_or("policy", "ras")).context("unknown --policy")?;
+    let ticks = args.opt_usize("ticks", 300)?;
+    let ms = args.opt_u64("ms-per-tick", 5)?;
+    let bank = bank_for(&cfg, args);
+    let spec = scenarios::random::build(cfg.host.cores, 1.5, cfg.sim.seed);
+
+    let vms: Vec<vmcd::hostsim::Vm> = spec
+        .vms
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            vmcd::hostsim::Vm::new(
+                vmcd::hostsim::VmId(i as u32),
+                t.class,
+                t.arrival,
+                t.activity.clone(),
+            )
+        })
+        .collect();
+    let sched = vmcd::vmcd::scheduler::build(
+        policy,
+        &bank,
+        cfg.sched.ras_threshold,
+        cfg.sched.ias_threshold,
+    );
+    let mut engine = vmcd::hostsim::SimEngine::new(cfg.clone(), vms);
+    let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+
+    // Optional HTTP status endpoint: `--listen 127.0.0.1:7070`.
+    let status = std::sync::Arc::new(std::sync::Mutex::new(String::from("{}")));
+    if let Some(addr) = args.opt("listen") {
+        spawn_status_server(addr, status.clone())?;
+    }
+
+    log::info!(
+        "daemon demo: {} policy, {} VMs, {} ticks at {} ms/tick",
+        policy.name(),
+        spec.vms.len(),
+        ticks,
+        ms
+    );
+    for tick in 0..ticks {
+        for id in engine.process_arrivals() {
+            daemon.on_arrival(&mut engine, id)?;
+            log::info!("t={:>5.0}s arrival {:?}", engine.t, id);
+        }
+        if daemon.maybe_cycle(&mut engine)? {
+            let busy = engine.busy_cores();
+            log::info!(
+                "t={:>5.0}s cycle {}: {} resident, {} busy cores, {} re-pins so far",
+                engine.t,
+                daemon.cycles,
+                engine.list_domains().len(),
+                busy,
+                engine.ledger.repin_count
+            );
+            let snapshot = vmcd::util::json::Json::from_pairs(vec![
+                ("t", vmcd::util::json::Json::Num(engine.t)),
+                ("policy", vmcd::util::json::Json::Str(policy.name().into())),
+                (
+                    "resident",
+                    vmcd::util::json::Json::Num(engine.list_domains().len() as f64),
+                ),
+                ("busy_cores", vmcd::util::json::Json::Num(busy as f64)),
+                (
+                    "repins",
+                    vmcd::util::json::Json::Num(engine.ledger.repin_count as f64),
+                ),
+                ("cycles", vmcd::util::json::Json::Num(daemon.cycles as f64)),
+                (
+                    "pin_failures",
+                    vmcd::util::json::Json::Num(daemon.pin_failures as f64),
+                ),
+                (
+                    "core_hours",
+                    vmcd::util::json::Json::Num(engine.ledger.core_hours()),
+                ),
+            ]);
+            if let Ok(mut s) = status.lock() {
+                *s = snapshot.dump();
+            }
+        }
+        engine.step();
+        if ms > 0 && tick % 10 == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms * 10));
+        }
+    }
+    println!(
+        "daemon demo done: {:.3} core-hours, {} re-pins, {} cycles",
+        engine.ledger.core_hours(),
+        engine.ledger.repin_count,
+        daemon.cycles
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! CSV / JSON export of metric series and scenario summaries.
+
+use super::timeseries::TimeSeries;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Write a time series as a two-column CSV.
+pub fn write_csv(path: &Path, header: &str, ts: &TimeSeries) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "{header}")?;
+    for (t, v) in &ts.points {
+        writeln!(f, "{t},{v}")?;
+    }
+    Ok(())
+}
+
+/// Write several aligned series as one CSV: column 0 is time from the first
+/// series, later columns are values (series must share timestamps).
+pub fn write_multi_csv(path: &Path, labels: &[&str], series: &[&TimeSeries]) -> Result<()> {
+    anyhow::ensure!(labels.len() == series.len(), "labels/series mismatch");
+    anyhow::ensure!(!series.is_empty(), "no series");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "t,{}", labels.join(","))?;
+    let n = series.iter().map(|s| s.points.len()).min().unwrap_or(0);
+    for i in 0..n {
+        let t = series[0].points[i].0;
+        let vals: Vec<String> = series
+            .iter()
+            .map(|s| format!("{}", s.points[i].1))
+            .collect();
+        writeln!(f, "{t},{}", vals.join(","))?;
+    }
+    Ok(())
+}
+
+/// Write a JSON document.
+pub fn write_json(path: &Path, json: &Json) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, json.pretty()).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_by_eye() {
+        let dir = std::env::temp_dir().join("vmcd_export_test");
+        let path = dir.join("ts.csv");
+        let mut ts = TimeSeries::new();
+        ts.push(0.0, 12.0);
+        ts.push(1.0, 11.0);
+        write_csv(&path, "t,busy", &ts).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("t,busy\n0,12\n"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multi_csv_alignment() {
+        let dir = std::env::temp_dir().join("vmcd_export_multi");
+        let path = dir.join("multi.csv");
+        let mut a = TimeSeries::new();
+        let mut b = TimeSeries::new();
+        for i in 0..5 {
+            a.push(i as f64, 1.0);
+            b.push(i as f64, 2.0);
+        }
+        write_multi_csv(&path, &["rrs", "ias"], &[&a, &b]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("t,rrs,ias\n"));
+        assert_eq!(text.lines().count(), 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

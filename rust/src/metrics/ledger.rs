@@ -1,0 +1,74 @@
+//! The accounting ledger the engine fills in as virtual time advances.
+
+use super::timeseries::TimeSeries;
+use crate::config::HostSpec;
+
+/// Run-long accounting: busy-core integral (the paper's "CPU time
+/// consumed"), energy from the power model, and the busy-core time series
+/// (Figures 4/5).
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    /// ∫ busy_cores dt — core-seconds.
+    pub core_busy_seconds: f64,
+    /// ∫ P dt with P = sockets·P_idle + busy·P_core — joules.
+    pub energy_joules: f64,
+    /// (t, busy cores) sampled every tick.
+    pub busy_series: TimeSeries,
+    /// Number of vCPU re-pin operations the actuator performed.
+    pub repin_count: u64,
+    /// Number of scheduler cycles executed.
+    pub sched_cycles: u64,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one tick: `busy` cores active for `dt` seconds.
+    pub fn record_tick(&mut self, t: f64, busy: usize, dt: f64, host: &HostSpec) {
+        self.core_busy_seconds += busy as f64 * dt;
+        let power = host.sockets as f64 * host.watts_socket_idle
+            + busy as f64 * host.watts_per_core;
+        self.energy_joules += power * dt;
+        self.busy_series.push(t, busy as f64);
+    }
+
+    /// The paper's figures report CPU time in core-hours.
+    pub fn core_hours(&self) -> f64 {
+        self.core_busy_seconds / 3600.0
+    }
+
+    pub fn energy_wh(&self) -> f64 {
+        self.energy_joules / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    #[test]
+    fn tick_accounting() {
+        let host = HostSpec::default();
+        let mut led = Ledger::new();
+        led.record_tick(0.0, 6, 1.0, &host);
+        led.record_tick(1.0, 4, 1.0, &host);
+        assert!(close(led.core_busy_seconds, 10.0, 1e-12));
+        // power: 2*20 + busy*15
+        let expect = (40.0 + 90.0) + (40.0 + 60.0);
+        assert!(close(led.energy_joules, expect, 1e-9));
+        assert_eq!(led.busy_series.len(), 2);
+    }
+
+    #[test]
+    fn core_hours_conversion() {
+        let host = HostSpec::default();
+        let mut led = Ledger::new();
+        for i in 0..3600 {
+            led.record_tick(i as f64, 2, 1.0, &host);
+        }
+        assert!(close(led.core_hours(), 2.0, 1e-9));
+    }
+}

@@ -1,0 +1,17 @@
+//! Metrics: CPU-time ledger, power/energy model, time series, scenario
+//! summaries and exports.
+//!
+//! The paper's two headline quantities (Figures 2-6) are:
+//! * **CPU time consumed** — the integral over time of busy (unparked)
+//!   cores: a core is busy while at least one resident VM is pinned to it
+//!   and not consolidated away; parked cores drop to their lowest power
+//!   state (§IV-B: "save cores so as to … allow the cores to revert to
+//!   their lowest power state").
+//! * **average workload performance** relative to isolated execution.
+
+pub mod export;
+pub mod ledger;
+pub mod timeseries;
+
+pub use ledger::Ledger;
+pub use timeseries::TimeSeries;

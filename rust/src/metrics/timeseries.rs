@@ -1,0 +1,100 @@
+//! Sampled time series (t, value) — used for the Fig. 4/5 CPU-consumption
+//! traces.
+
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl TimeSeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Integral by left Riemann sum (points must be time-ordered).
+    pub fn integral(&self) -> f64 {
+        let mut total = 0.0;
+        for w in self.points.windows(2) {
+            total += w[0].1 * (w[1].0 - w[0].0);
+        }
+        total
+    }
+
+    /// Mean value weighted by interval length.
+    pub fn time_mean(&self) -> f64 {
+        let span = match (self.points.first(), self.points.last()) {
+            (Some(a), Some(b)) if b.0 > a.0 => b.0 - a.0,
+            _ => return f64::NAN,
+        };
+        self.integral() / span
+    }
+
+    pub fn max(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.1)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Downsample to at most `n` points (for plotting/reporting).
+    pub fn downsample(&self, n: usize) -> TimeSeries {
+        if self.points.len() <= n || n == 0 {
+            return self.clone();
+        }
+        let stride = self.points.len() as f64 / n as f64;
+        let mut out = TimeSeries::new();
+        let mut i = 0.0;
+        while (i as usize) < self.points.len() {
+            out.points.push(self.points[i as usize]);
+            i += stride;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    #[test]
+    fn integral_left_riemann() {
+        let mut ts = TimeSeries::new();
+        ts.push(0.0, 2.0);
+        ts.push(1.0, 4.0);
+        ts.push(3.0, 0.0);
+        // 2*1 + 4*2 = 10
+        assert!(close(ts.integral(), 10.0, 1e-12));
+        assert!(close(ts.time_mean(), 10.0 / 3.0, 1e-12));
+    }
+
+    #[test]
+    fn empty_and_single_point() {
+        let ts = TimeSeries::new();
+        assert_eq!(ts.integral(), 0.0);
+        assert!(ts.time_mean().is_nan());
+    }
+
+    #[test]
+    fn downsample_keeps_bounds() {
+        let mut ts = TimeSeries::new();
+        for i in 0..1000 {
+            ts.push(i as f64, (i * 2) as f64);
+        }
+        let d = ts.downsample(100);
+        assert!(d.len() <= 101);
+        assert_eq!(d.points[0], (0.0, 0.0));
+    }
+}

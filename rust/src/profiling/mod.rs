@@ -1,0 +1,336 @@
+//! The offline profiling phase (paper §IV-A).
+//!
+//! Each workload class is run (a) isolated — yielding its utilisation row
+//! in matrix **U** — and (b) co-pinned on the same core with every other
+//! class — yielding the pairwise slowdown matrix **S** (Eq. 1:
+//! `S_ij = P(ψ_i, ψ_j) / P(ψ_i)` with P the class's own performance
+//! metric). The schedulers receive only these profiles; they never see the
+//! simulator's internal interference constants, mirroring how the paper's
+//! scheduler only sees measured profiles of the real hardware.
+
+use crate::config::Config;
+use crate::hostsim::{ActivityModel, SimEngine, Vm, VmId, VmState};
+use crate::util::json::Json;
+use crate::workloads::{WorkloadClass, ALL_CLASSES, NUM_METRICS};
+use anyhow::{Context, Result};
+
+/// How long each profiling co-run executes (virtual seconds). Long enough
+/// to wash out monitoring-window transients.
+const PROFILE_DURATION: f64 = 240.0;
+
+/// The S and U matrices plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct ProfileBank {
+    /// Class order for the matrix indices.
+    pub classes: Vec<WorkloadClass>,
+    /// `s[i][j]` — slowdown of class i when co-pinned with class j (≥ ~1).
+    pub s: Vec<Vec<f64>>,
+    /// `u[i]` — utilisation vector of class i in isolation.
+    pub u: Vec<[f64; NUM_METRICS]>,
+}
+
+impl ProfileBank {
+    /// Run the full profiling phase under the given config.
+    pub fn generate(cfg: &Config) -> ProfileBank {
+        let n = ALL_CLASSES.len();
+        let mut s = vec![vec![1.0; n]; n];
+        let mut u = vec![[0.0; NUM_METRICS]; n];
+        let mut iso_perf = vec![1.0; n];
+
+        // Isolated runs: utilisation row + isolated performance baseline.
+        for (i, &class) in ALL_CLASSES.iter().enumerate() {
+            let (perf, util) = run_isolated(cfg, class);
+            iso_perf[i] = perf;
+            u[i] = util;
+        }
+
+        // Pairwise co-pinned runs.
+        for (i, &a) in ALL_CLASSES.iter().enumerate() {
+            for (j, &b) in ALL_CLASSES.iter().enumerate() {
+                let perf_a = run_copinned(cfg, a, b);
+                // Eq. 1: slowdown of i with j, relative to isolated.
+                s[i][j] = (iso_perf[i] / perf_a.max(1e-6)).max(1.0);
+            }
+        }
+
+        ProfileBank {
+            classes: ALL_CLASSES.to_vec(),
+            s,
+            u,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Slowdown of `a` when co-pinned with `b`.
+    pub fn slowdown(&self, a: WorkloadClass, b: WorkloadClass) -> f64 {
+        self.s[a.index()][b.index()]
+    }
+
+    /// Isolated utilisation vector of `a`.
+    pub fn utilization(&self, a: WorkloadClass) -> [f64; NUM_METRICS] {
+        self.u[a.index()]
+    }
+
+    /// Eq. 5 — mean of S, the derived IAS threshold.
+    pub fn mean_slowdown(&self) -> f64 {
+        crate::interference::ias_threshold(&self.s)
+    }
+
+    // ---- persistence ----
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            (
+                "classes",
+                Json::Arr(
+                    self.classes
+                        .iter()
+                        .map(|c| Json::Str(c.name().to_string()))
+                        .collect(),
+                ),
+            ),
+            (
+                "s",
+                Json::Arr(self.s.iter().map(|row| Json::num_array(row)).collect()),
+            ),
+            (
+                "u",
+                Json::Arr(self.u.iter().map(|row| Json::num_array(row)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> Result<ProfileBank> {
+        let classes: Vec<WorkloadClass> = json
+            .field("classes")?
+            .as_arr()
+            .context("classes must be an array")?
+            .iter()
+            .map(|v| {
+                let name = v.as_str().context("class name must be a string")?;
+                WorkloadClass::from_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown class '{name}'"))
+            })
+            .collect::<Result<_>>()?;
+        let s: Vec<Vec<f64>> = json
+            .field("s")?
+            .as_arr()
+            .context("s must be an array")?
+            .iter()
+            .map(|row| row.to_f64_vec())
+            .collect::<Result<_>>()?;
+        let u_rows: Vec<Vec<f64>> = json
+            .field("u")?
+            .as_arr()
+            .context("u must be an array")?
+            .iter()
+            .map(|row| row.to_f64_vec())
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(s.len() == classes.len(), "S shape mismatch");
+        anyhow::ensure!(u_rows.len() == classes.len(), "U shape mismatch");
+        let mut u = Vec::with_capacity(u_rows.len());
+        for row in u_rows {
+            anyhow::ensure!(row.len() == NUM_METRICS, "U row width");
+            u.push([row[0], row[1], row[2], row[3]]);
+        }
+        Ok(ProfileBank { classes, s, u })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing profile bank {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<ProfileBank> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading profile bank {path}"))?;
+        let json = Json::parse(&text).context("parsing profile bank")?;
+        ProfileBank::from_json(&json)
+    }
+
+    /// Load from disk if present, else generate (and cache when a path is
+    /// given).
+    pub fn load_or_generate(cfg: &Config, cache: Option<&str>) -> ProfileBank {
+        if let Some(path) = cache {
+            if let Ok(bank) = ProfileBank::load(path) {
+                return bank;
+            }
+        }
+        let bank = ProfileBank::generate(cfg);
+        if let Some(path) = cache {
+            let _ = bank.save(path);
+        }
+        bank
+    }
+}
+
+/// Profiling-mode config: deterministic (no demand noise) and quiet.
+fn profiling_cfg(cfg: &Config) -> Config {
+    let mut c = cfg.clone();
+    c.sim.demand_noise = 0.0;
+    c
+}
+
+fn fresh_vm(id: u32, class: WorkloadClass, core: usize) -> Vm {
+    let mut vm = Vm::new(VmId(id), class, 0.0, ActivityModel::AlwaysOn);
+    vm.state = VmState::Running;
+    vm.started = Some(0.0);
+    vm.pinned = Some(core);
+    vm
+}
+
+/// Run one class isolated; return (normalized perf, measured utilisation).
+fn run_isolated(cfg: &Config, class: WorkloadClass) -> (f64, [f64; NUM_METRICS]) {
+    let cfg = profiling_cfg(cfg);
+    let vm = fresh_vm(0, class, 0);
+    let mut eng = SimEngine::new(cfg, vec![vm]);
+    let mut util_acc = [0.0f64; NUM_METRICS];
+    let mut ticks = 0usize;
+    while eng.t < PROFILE_DURATION {
+        eng.step();
+        if eng.vms[0].state != VmState::Running {
+            break;
+        }
+        for r in 0..NUM_METRICS {
+            util_acc[r] += eng.vms[0].last_util[r];
+        }
+        ticks += 1;
+    }
+    let mut util = [0.0; NUM_METRICS];
+    if ticks > 0 {
+        for r in 0..NUM_METRICS {
+            util[r] = util_acc[r] / ticks as f64;
+        }
+    }
+    (measured_perf(&eng, 0), util)
+}
+
+/// Run class `a` co-pinned with class `b` on the same core; return a's
+/// normalized performance.
+fn run_copinned(cfg: &Config, a: WorkloadClass, b: WorkloadClass) -> f64 {
+    let cfg = profiling_cfg(cfg);
+    let va = fresh_vm(0, a, 0);
+    let vb = fresh_vm(1, b, 0);
+    let mut eng = SimEngine::new(cfg, vec![va, vb]);
+    while eng.t < PROFILE_DURATION && eng.vms[0].state == VmState::Running {
+        eng.step();
+    }
+    measured_perf(&eng, 0)
+}
+
+/// Performance of vm `idx`: completed batch → run-time ratio; otherwise
+/// average per-tick normalized performance; still-running batch → average
+/// progress rate.
+fn measured_perf(eng: &SimEngine, idx: usize) -> f64 {
+    let vm = &eng.vms[idx];
+    if let Some(p) = vm.normalized_perf() {
+        return p;
+    }
+    // Batch that did not finish inside the profiling window: use the
+    // average progress rate so far.
+    let elapsed = eng.t - vm.started.unwrap_or(0.0);
+    if elapsed > 0.0 {
+        (vm.work_done / elapsed).clamp(1e-6, 1.0)
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.sim.demand_noise = 0.0;
+        cfg
+    }
+
+    #[test]
+    fn bank_shapes_and_bounds() {
+        let bank = ProfileBank::generate(&small_cfg());
+        let n = ALL_CLASSES.len();
+        assert_eq!(bank.s.len(), n);
+        assert_eq!(bank.u.len(), n);
+        for row in &bank.s {
+            assert_eq!(row.len(), n);
+            for &x in row {
+                assert!((1.0..6.0).contains(&x), "slowdown {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_hogs_slow_each_other_down_on_copin() {
+        // Two 0.95-CPU VMs on one 2-way-SMT core: ~1.9/1.25 ≈ 1.55×
+        // slowdown each (the SMT yield soaks part of the 2× a non-SMT
+        // core would show).
+        let bank = ProfileBank::generate(&small_cfg());
+        let s = bank.slowdown(WorkloadClass::Blackscholes, WorkloadClass::Blackscholes);
+        assert!((1.4..1.8).contains(&s), "BS|BS slowdown {s}");
+    }
+
+    #[test]
+    fn light_pairs_barely_interfere() {
+        let bank = ProfileBank::generate(&small_cfg());
+        let s = bank.slowdown(WorkloadClass::LampLight, WorkloadClass::StreamLow);
+        assert!(s < 1.2, "light pair slowdown {s}");
+    }
+
+    #[test]
+    fn jacobi_jacobi_worse_than_blackscholes_jacobi_for_jacobi() {
+        let bank = ProfileBank::generate(&small_cfg());
+        let jj = bank.slowdown(WorkloadClass::Jacobi, WorkloadClass::Jacobi);
+        let jb = bank.slowdown(WorkloadClass::Jacobi, WorkloadClass::Blackscholes);
+        assert!(
+            jj > jb,
+            "membw interference must add on top of CPU sharing: jj={jj} jb={jb}"
+        );
+    }
+
+    #[test]
+    fn mean_slowdown_threshold_separates_light_from_heavy() {
+        // Eq. 5: the threshold is the mean of S. The paper lands at 1.5 on
+        // its testbed; our calibrated catalog has more near-1.0 service
+        // pairs, so the mean sits lower — what matters for IAS behaviour
+        // is that it separates light pairs (below) from heavy ones (above).
+        let bank = ProfileBank::generate(&small_cfg());
+        let m = bank.mean_slowdown();
+        assert!((1.05..1.6).contains(&m), "mean slowdown {m}");
+        let light = bank.slowdown(WorkloadClass::LampLight, WorkloadClass::StreamLow);
+        let heavy = bank.slowdown(WorkloadClass::Jacobi, WorkloadClass::Jacobi);
+        assert!(light < m, "light pair {light} must sit below the mean {m}");
+        assert!(heavy > m, "heavy pair {heavy} must sit above the mean {m}");
+    }
+
+    #[test]
+    fn utilization_rows_match_catalog_demands() {
+        let bank = ProfileBank::generate(&small_cfg());
+        for &class in &ALL_CLASSES {
+            let u = bank.utilization(class);
+            let d = crate::workloads::catalog::spec_of(class).demand;
+            // CPU and IO utilisation in isolation ≈ demand (no contention).
+            assert!((u[0] - d[0]).abs() < 0.05, "{class:?} cpu {u:?} vs {d:?}");
+            assert!((u[2] - d[2]).abs() < 0.05, "{class:?} net");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let bank = ProfileBank::generate(&small_cfg());
+        let json = bank.to_json();
+        let back = ProfileBank::from_json(&json).unwrap();
+        assert_eq!(back.classes, bank.classes);
+        for i in 0..bank.n() {
+            for j in 0..bank.n() {
+                assert!((back.s[i][j] - bank.s[i][j]).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,356 @@
+//! The paper's figures as runnable experiments.
+//!
+//! Every function regenerates one figure's data by running the relevant
+//! scenario(s) under all four schedulers; rows report performance and CPU
+//! time normalised to the RRS baseline, matching how the paper presents
+//! results. Multiple seeds are averaged for the bar figures.
+
+use super::table::{render_table, sparkline};
+use crate::config::Config;
+use crate::metrics::export;
+use crate::profiling::ProfileBank;
+use crate::scenarios::{dynamic, latency, random, run_scenario, ScenarioResult};
+use crate::util::stats::mean;
+use crate::vmcd::scheduler::Policy;
+use anyhow::Result;
+use std::path::Path;
+
+/// One figure row: a (policy, SR) cell.
+#[derive(Debug, Clone)]
+pub struct FigureRow {
+    pub policy: Policy,
+    pub sr: f64,
+    /// Mean normalized performance (1.0 = isolated).
+    pub perf: f64,
+    /// Performance relative to RRS at the same SR.
+    pub perf_vs_rrs: f64,
+    /// Core-hours consumed.
+    pub core_hours: f64,
+    /// CPU-time saving vs RRS (positive = fewer core-hours).
+    pub cpu_saving_vs_rrs: f64,
+}
+
+/// A rendered figure.
+#[derive(Debug, Clone)]
+pub struct FigureData {
+    pub id: &'static str,
+    pub title: String,
+    pub rows: Vec<FigureRow>,
+    /// Fig. 4/5 time-series payload: (policy, series) pairs.
+    pub series: Vec<(Policy, crate::metrics::TimeSeries)>,
+}
+
+impl FigureData {
+    pub fn render(&self) -> String {
+        let mut out = format!("{} — {}\n", self.id, self.title);
+        if !self.rows.is_empty() {
+            let rows: Vec<Vec<String>> = self
+                .rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        format!("{}", r.sr),
+                        r.policy.name().to_string(),
+                        format!("{:.3}", r.perf),
+                        format!("{:+.1}%", (r.perf_vs_rrs - 1.0) * 100.0),
+                        format!("{:.3}", r.core_hours),
+                        format!("{:+.1}%", -r.cpu_saving_vs_rrs * 100.0),
+                    ]
+                })
+                .collect();
+            out.push_str(&render_table(
+                &[
+                    "SR",
+                    "policy",
+                    "perf",
+                    "perf vs RRS",
+                    "core-hours",
+                    "CPU time vs RRS",
+                ],
+                &rows,
+            ));
+        }
+        for (policy, ts) in &self.series {
+            let values: Vec<f64> = ts.points.iter().map(|p| p.1).collect();
+            out.push_str(&format!(
+                "{:<4} busy cores over time: {}\n",
+                policy.name(),
+                sparkline(&values, 72)
+            ));
+        }
+        out
+    }
+
+    /// Write CSV mirrors under `dir`.
+    pub fn write_csv(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        if !self.rows.is_empty() {
+            let mut text = String::from("sr,policy,perf,perf_vs_rrs,core_hours,cpu_saving_vs_rrs\n");
+            for r in &self.rows {
+                text.push_str(&format!(
+                    "{},{},{},{},{},{}\n",
+                    r.sr, r.policy.name(), r.perf, r.perf_vs_rrs, r.core_hours, r.cpu_saving_vs_rrs
+                ));
+            }
+            std::fs::write(dir.join(format!("{}.csv", self.id)), text)?;
+        }
+        if !self.series.is_empty() {
+            let labels: Vec<&str> = self.series.iter().map(|(p, _)| p.name()).collect();
+            let refs: Vec<&crate::metrics::TimeSeries> =
+                self.series.iter().map(|(_, s)| s).collect();
+            export::write_multi_csv(
+                &dir.join(format!("{}_timeseries.csv", self.id)),
+                &labels,
+                &refs,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Average figure rows across seeds for one scenario builder.
+fn bar_figure<F>(
+    id: &'static str,
+    title: String,
+    cfg: &Config,
+    bank: &ProfileBank,
+    srs: &[f64],
+    seeds: &[u64],
+    build: F,
+) -> Result<FigureData>
+where
+    F: Fn(usize, f64, u64) -> crate::scenarios::ScenarioSpec,
+{
+    let mut rows = Vec::new();
+    for &sr in srs {
+        // policy -> per-seed results
+        let mut per_policy: Vec<(Policy, Vec<ScenarioResult>)> =
+            Policy::ALL.iter().map(|&p| (p, Vec::new())).collect();
+        for &seed in seeds {
+            let spec = build(cfg.host.cores, sr, seed);
+            for (policy, acc) in per_policy.iter_mut() {
+                acc.push(run_scenario(cfg, &spec, *policy, bank)?);
+            }
+        }
+        let rrs_perf = mean(
+            &per_policy[0].1.iter().map(|r| r.avg_perf).collect::<Vec<_>>(),
+        );
+        let rrs_hours = mean(
+            &per_policy[0]
+                .1
+                .iter()
+                .map(|r| r.core_hours)
+                .collect::<Vec<_>>(),
+        );
+        for (policy, results) in &per_policy {
+            let perf = mean(&results.iter().map(|r| r.avg_perf).collect::<Vec<_>>());
+            let hours = mean(&results.iter().map(|r| r.core_hours).collect::<Vec<_>>());
+            rows.push(FigureRow {
+                policy: *policy,
+                sr,
+                perf,
+                perf_vs_rrs: perf / rrs_perf,
+                core_hours: hours,
+                cpu_saving_vs_rrs: 1.0 - hours / rrs_hours,
+            });
+        }
+    }
+    Ok(FigureData {
+        id,
+        title,
+        rows,
+        series: Vec::new(),
+    })
+}
+
+/// Fig. 2 — random scenario, SR ∈ {0.5, 1, 1.5, 2}.
+pub fn fig2(cfg: &Config, bank: &ProfileBank, seeds: &[u64]) -> Result<FigureData> {
+    bar_figure(
+        "fig2",
+        "Random scenario: performance and CPU time per scheduler".into(),
+        cfg,
+        bank,
+        &[0.5, 1.0, 1.5, 2.0],
+        seeds,
+        random::build,
+    )
+}
+
+/// Fig. 3 — latency-critical heavy scenario.
+pub fn fig3(cfg: &Config, bank: &ProfileBank, seeds: &[u64]) -> Result<FigureData> {
+    bar_figure(
+        "fig3",
+        "Latency-critical heavy scenario: performance and CPU time".into(),
+        cfg,
+        bank,
+        &[0.5, 1.0, 1.5, 2.0],
+        seeds,
+        latency::build,
+    )
+}
+
+/// Figs. 4/5 — dynamic scenario CPU-consumption time series
+/// (`batch = 6` → Fig. 4, `batch = 12` → Fig. 5).
+pub fn fig45(
+    cfg: &Config,
+    bank: &ProfileBank,
+    batch: usize,
+    seed: u64,
+) -> Result<FigureData> {
+    let id: &'static str = if batch == 6 { "fig4" } else { "fig5" };
+    let spec = dynamic::build(batch, seed);
+    let mut series = Vec::new();
+    let mut rows = Vec::new();
+    let mut rrs_ref: Option<ScenarioResult> = None;
+    for policy in Policy::ALL {
+        let r = run_scenario(cfg, &spec, policy, bank)?;
+        series.push((policy, r.busy_series.clone()));
+        if policy == Policy::Rrs {
+            rrs_ref = Some(r.clone());
+        }
+        let base = rrs_ref.as_ref().unwrap();
+        rows.push(FigureRow {
+            policy,
+            sr: spec.sr,
+            perf: r.avg_perf,
+            perf_vs_rrs: r.avg_perf / base.avg_perf,
+            core_hours: r.core_hours,
+            cpu_saving_vs_rrs: 1.0 - r.core_hours / base.core_hours,
+        });
+    }
+    Ok(FigureData {
+        id,
+        title: format!(
+            "Dynamic scenario ({batch}-job batches): CPU consumption over time"
+        ),
+        rows,
+        series,
+    })
+}
+
+/// Fig. 6 — workload performance in the dynamic scenario (both batchings
+/// averaged over seeds).
+pub fn fig6(cfg: &Config, bank: &ProfileBank, seeds: &[u64]) -> Result<FigureData> {
+    let mut rows = Vec::new();
+    for batch in [6usize, 12] {
+        let mut per_policy: Vec<(Policy, Vec<ScenarioResult>)> =
+            Policy::ALL.iter().map(|&p| (p, Vec::new())).collect();
+        for &seed in seeds {
+            let spec = dynamic::build(batch, seed);
+            for (policy, acc) in per_policy.iter_mut() {
+                acc.push(run_scenario(cfg, &spec, *policy, bank)?);
+            }
+        }
+        let rrs_perf = mean(
+            &per_policy[0].1.iter().map(|r| r.avg_perf).collect::<Vec<_>>(),
+        );
+        let rrs_hours = mean(
+            &per_policy[0]
+                .1
+                .iter()
+                .map(|r| r.core_hours)
+                .collect::<Vec<_>>(),
+        );
+        for (policy, results) in &per_policy {
+            let perf = mean(&results.iter().map(|r| r.avg_perf).collect::<Vec<_>>());
+            let hours = mean(&results.iter().map(|r| r.core_hours).collect::<Vec<_>>());
+            rows.push(FigureRow {
+                policy: *policy,
+                sr: (dynamic::TOTAL_VMS / batch) as f64, // group count as x
+                perf,
+                perf_vs_rrs: perf / rrs_perf,
+                core_hours: hours,
+                cpu_saving_vs_rrs: 1.0 - hours / rrs_hours,
+            });
+        }
+    }
+    Ok(FigureData {
+        id: "fig6",
+        title: "Dynamic scenario: workload performance per scheduler \
+                (SR column = number of activation groups)"
+            .into(),
+        rows,
+        series: Vec::new(),
+    })
+}
+
+/// Table I — demonstrate the perf-counter → memory-bandwidth path: run a
+/// jacobi VM, read the synthesized counters through the monitor, verify
+/// the reconstructed bandwidth matches the profile.
+pub fn table1(cfg: &Config) -> Result<String> {
+    use crate::hostsim::{ActivityModel, Hypervisor, SimEngine, Vm, VmId, VmState};
+    use crate::vmcd::Monitor;
+    use crate::workloads::WorkloadClass;
+
+    let mut quiet = cfg.clone();
+    quiet.sim.demand_noise = 0.0;
+    let mut vm = Vm::new(VmId(0), WorkloadClass::Jacobi, 0.0, ActivityModel::AlwaysOn);
+    vm.state = VmState::Running;
+    vm.started = Some(0.0);
+    vm.pinned = Some(0);
+    let mut eng = SimEngine::new(quiet, vec![vm]);
+    let mut mon = Monitor::new(0.025);
+    eng.step();
+    mon.poll(&eng);
+    for _ in 0..30 {
+        eng.step();
+    }
+    let snap = mon.poll(&eng);
+    let d = &snap.domains[0];
+    let stats = eng.domain_stats(VmId(0)).unwrap();
+
+    let rows = vec![
+        vec![
+            "UNC_QMC_NORMAL_READS".into(),
+            "Memory Reads".into(),
+            format!("{}", stats.counters.mem_reads),
+        ],
+        vec![
+            "UNC_QMC_NORMAL_WRITES".into(),
+            "Memory Writes".into(),
+            format!("{}", stats.counters.mem_writes),
+        ],
+        vec![
+            "OFFCORE_RESPONSE".into(),
+            "Requests serviced by DRAM".into(),
+            format!("{}", stats.counters.offcore),
+        ],
+    ];
+    let mut out = String::from("Table I — performance counters (synthesized; 31 s jacobi run)\n");
+    out.push_str(&render_table(&["Hardware Event", "Description", "Count"], &rows));
+    out.push_str(&format!(
+        "monitor-reconstructed MemBW: {:.3} of socket (profile demand {:.3})\n",
+        d.util[3],
+        crate::workloads::catalog::spec_of(crate::workloads::WorkloadClass::Jacobi).demand[3]
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn fig45_structure() {
+        let cfg = testkit::quiet_config();
+        let bank = testkit::shared_bank();
+        let f = fig45(&cfg, bank, 12, 5).unwrap();
+        assert_eq!(f.id, "fig5");
+        assert_eq!(f.series.len(), 4);
+        assert_eq!(f.rows.len(), 4);
+        // RRS holds all 12 cores from t=0 in the dynamic scenario.
+        let rrs = &f.series[0].1;
+        assert!(rrs.max() >= 12.0 - 1e-9, "rrs max {}", rrs.max());
+        let render = f.render();
+        assert!(render.contains("busy cores over time"));
+    }
+
+    #[test]
+    fn table1_renders_counters() {
+        let cfg = testkit::quiet_config();
+        let t = table1(&cfg).unwrap();
+        assert!(t.contains("UNC_QMC_NORMAL_READS"));
+        assert!(t.contains("OFFCORE_RESPONSE"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Figure / table regeneration: runs the paper's experiments and renders
+//! the same rows the paper reports (plus CSV mirrors under `results/`).
+//!
+//! Each `figN` function is used both by the CLI (`vmcd report figN`) and
+//! by the corresponding bench target.
+
+pub mod figures;
+pub mod table;
+
+pub use figures::{fig2, fig3, fig45, fig6, table1, FigureData, FigureRow};
+pub use table::render_table;

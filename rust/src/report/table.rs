@@ -1,0 +1,97 @@
+//! ASCII table rendering for figure reports.
+
+/// Render rows as a fixed-width ASCII table. `headers` defines column
+/// count; each row must match.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncols, "row width mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in &widths {
+            out.push('+');
+            for _ in 0..w + 2 {
+                out.push('-');
+            }
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    out.push('|');
+    for (h, w) in headers.iter().zip(&widths) {
+        out.push_str(&format!(" {h:<w$} |"));
+    }
+    out.push('\n');
+    sep(&mut out);
+    for row in rows {
+        out.push('|');
+        for (cell, w) in row.iter().zip(&widths) {
+            out.push_str(&format!(" {cell:<w$} |"));
+        }
+        out.push('\n');
+    }
+    sep(&mut out);
+    out
+}
+
+/// A crude terminal sparkline for time series (Figs. 4/5).
+pub fn sparkline(values: &[f64], width: usize) -> String {
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() {
+        return String::new();
+    }
+    let max = values.iter().copied().fold(f64::MIN, f64::max).max(1e-12);
+    let stride = (values.len() as f64 / width as f64).max(1.0);
+    let mut out = String::new();
+    let mut i = 0.0;
+    while (i as usize) < values.len() && out.chars().count() < width {
+        let v = values[i as usize];
+        let lvl = ((v / max) * 7.0).round().clamp(0.0, 7.0) as usize;
+        out.push(GLYPHS[lvl]);
+        i += stride;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_and_aligns() {
+        let t = render_table(
+            &["policy", "perf"],
+            &[
+                vec!["rrs".into(), "1.00".into()],
+                vec!["ias".into(), "0.93".into()],
+            ],
+        );
+        assert!(t.contains("| policy | perf |"));
+        assert!(t.contains("| ias    | 0.93 |"));
+        // sep, header, sep, 2 rows, sep
+        assert_eq!(t.lines().count(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_row_panics() {
+        render_table(&["a", "b"], &[vec!["x".into()]]);
+    }
+
+    #[test]
+    fn sparkline_scales() {
+        let s = sparkline(&[0.0, 0.5, 1.0], 3);
+        assert_eq!(s.chars().count(), 3);
+        assert!(s.ends_with('█'));
+    }
+
+    #[test]
+    fn sparkline_empty() {
+        assert_eq!(sparkline(&[], 10), "");
+    }
+}

@@ -1,0 +1,179 @@
+//! Artifact discovery: locate `artifacts/` and parse `manifest.json`
+//! (written by `python -m compile.aot`).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Input/output signature entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact (an AOT-lowered jitted function).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+/// Locate the artifacts directory: `$VMCD_ARTIFACTS`, else `./artifacts`,
+/// else walking up from the current directory (so tests and examples work
+/// from any cwd inside the repo).
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("VMCD_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        anyhow::ensure!(p.join("manifest.json").exists(), "no manifest in $VMCD_ARTIFACTS");
+        return Ok(p);
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            anyhow::bail!(
+                "artifacts/manifest.json not found — run `make artifacts` first \
+                 (or set VMCD_ARTIFACTS)"
+            );
+        }
+    }
+}
+
+impl Manifest {
+    /// Load the manifest from the default location.
+    pub fn discover() -> Result<Manifest> {
+        Manifest::load(&artifacts_dir()?)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let obj = json
+            .as_obj()
+            .context("manifest must be a json object")?;
+        let mut entries = Vec::new();
+        for (name, entry) in obj {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                entry
+                    .field(key)?
+                    .as_arr()
+                    .context("spec list")?
+                    .iter()
+                    .map(|spec| {
+                        Ok(TensorSpec {
+                            shape: spec
+                                .field("shape")?
+                                .to_f64_vec()?
+                                .into_iter()
+                                .map(|x| x as usize)
+                                .collect(),
+                            dtype: spec
+                                .field("dtype")?
+                                .as_str()
+                                .context("dtype string")?
+                                .to_string(),
+                        })
+                    })
+                    .collect()
+            };
+            entries.push(ArtifactEntry {
+                name: name.clone(),
+                file: dir.join(
+                    entry
+                        .field("file")?
+                        .as_str()
+                        .context("file must be a string")?,
+                ),
+                sha256: entry
+                    .get("sha256")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().is_ok()
+    }
+
+    #[test]
+    fn manifest_parses_and_matches_compiled_shapes() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::discover().unwrap();
+        let score = m.entry("score").unwrap();
+        assert_eq!(score.inputs.len(), 7);
+        assert_eq!(
+            score.inputs[0].shape,
+            vec![super::super::shapes::C_MAX, super::super::shapes::V_MAX]
+        );
+        assert_eq!(score.outputs.len(), 4);
+        assert!(score.file.exists());
+
+        let bs = m.entry("blackscholes").unwrap();
+        assert_eq!(bs.inputs.len(), 5);
+        assert_eq!(bs.inputs[0].shape, vec![super::super::shapes::N_OPTIONS]);
+
+        let jc = m.entry("jacobi").unwrap();
+        assert_eq!(
+            jc.inputs[0].shape,
+            vec![
+                super::super::shapes::JACOBI_H,
+                super::super::shapes::JACOBI_W
+            ]
+        );
+        assert!(m.entry("nonexistent").is_err());
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec {
+            shape: vec![32, 64],
+            dtype: "float32".into(),
+        };
+        assert_eq!(t.elements(), 2048);
+    }
+}

@@ -1,0 +1,132 @@
+//! Real-compute workload kernels: the paper's CPU-intensive benchmarks
+//! (PARSEC Black-Scholes, PolyBench Jacobi) executed for real through the
+//! compiled Pallas kernels.
+//!
+//! In real-compute mode (the `e2e_full_stack` example) a simulated VM of
+//! class `Blackscholes` or `Jacobi` actually burns compute through PJRT:
+//! each scheduling quantum executes kernel batches, so the whole
+//! three-layer stack (rust → XLA → Pallas HLO) is exercised end-to-end.
+
+use super::shapes::{JACOBI_H, JACOBI_W, N_OPTIONS};
+use super::Runtime;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// A Black-Scholes work unit: one PJRT call pricing `N_OPTIONS` options.
+pub struct BlackscholesWork {
+    spot: Vec<f32>,
+    strike: Vec<f32>,
+    ttm: Vec<f32>,
+    rate: Vec<f32>,
+    vol: Vec<f32>,
+    /// Checksum of the last batch (the unit-of-work receipt).
+    pub last_checksum: f64,
+    pub batches_done: u64,
+}
+
+impl BlackscholesWork {
+    pub fn new(seed: u64) -> BlackscholesWork {
+        let mut rng = Rng::new(seed);
+        let n = N_OPTIONS;
+        let gen = |rng: &mut Rng, lo: f64, hi: f64| -> Vec<f32> {
+            (0..n).map(|_| rng.range(lo, hi) as f32).collect()
+        };
+        BlackscholesWork {
+            spot: gen(&mut rng, 5.0, 200.0),
+            strike: gen(&mut rng, 5.0, 200.0),
+            ttm: gen(&mut rng, 0.05, 3.0),
+            rate: gen(&mut rng, 0.0, 0.1),
+            vol: gen(&mut rng, 0.05, 0.9),
+            last_checksum: 0.0,
+            batches_done: 0,
+        }
+    }
+
+    /// Execute one batch; returns the checksum (finite ⇒ kernel healthy).
+    pub fn run_batch(&mut self, rt: &mut Runtime) -> Result<f64> {
+        let outs = rt.execute_f32(
+            "blackscholes",
+            &[&self.spot, &self.strike, &self.ttm, &self.rate, &self.vol],
+        )?;
+        // outputs: call[n], put[n], checksum[1]
+        let checksum = outs[2][0] as f64;
+        anyhow::ensure!(checksum.is_finite(), "blackscholes checksum NaN/inf");
+        self.last_checksum = checksum;
+        self.batches_done += 1;
+        Ok(checksum)
+    }
+}
+
+/// A Jacobi work unit: a persistent grid relaxed by `SWEEPS_PER_CALL`
+/// sweeps per PJRT call.
+pub struct JacobiWork {
+    grid: Vec<f32>,
+    pub last_residual: f64,
+    pub sweeps_done: u64,
+}
+
+impl JacobiWork {
+    pub fn new(seed: u64) -> JacobiWork {
+        let mut rng = Rng::new(seed);
+        let grid = (0..JACOBI_H * JACOBI_W)
+            .map(|_| rng.range(-1.0, 1.0) as f32)
+            .collect();
+        JacobiWork {
+            grid,
+            last_residual: f64::INFINITY,
+            sweeps_done: 0,
+        }
+    }
+
+    /// Execute one call (10 fused sweeps); the grid persists across calls.
+    pub fn run_batch(&mut self, rt: &mut Runtime) -> Result<f64> {
+        let outs = rt.execute_f32("jacobi", &[&self.grid])?;
+        self.grid = outs[0].clone();
+        let resid = outs[1][0] as f64;
+        anyhow::ensure!(resid.is_finite(), "jacobi residual NaN/inf");
+        self.last_residual = resid;
+        self.sweeps_done += super::shapes::JACOBI_SWEEPS_PER_CALL as u64;
+        Ok(resid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        match Runtime::new() {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!("skipping compute test: {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn blackscholes_batches_produce_stable_checksum() {
+        let Some(mut rt) = runtime() else { return };
+        let mut work = BlackscholesWork::new(7);
+        let c1 = work.run_batch(&mut rt).unwrap();
+        let c2 = work.run_batch(&mut rt).unwrap();
+        // Same inputs -> same checksum up to reduction-order jitter (the
+        // XLA CPU backend may parallelise the sum).
+        let rel = (c1 - c2).abs() / c1.abs().max(1.0);
+        assert!(rel < 1e-5, "checksums diverge: {c1} vs {c2}");
+        assert!(c1 > 0.0, "sum of option prices must be positive: {c1}");
+        assert_eq!(work.batches_done, 2);
+    }
+
+    #[test]
+    fn jacobi_residual_decreases() {
+        let Some(mut rt) = runtime() else { return };
+        let mut work = JacobiWork::new(3);
+        let r1 = work.run_batch(&mut rt).unwrap();
+        let r2 = work.run_batch(&mut rt).unwrap();
+        let r3 = work.run_batch(&mut rt).unwrap();
+        assert!(r2 < r1, "relaxation must converge: {r1} -> {r2}");
+        assert!(r3 < r2, "{r2} -> {r3}");
+        assert_eq!(work.sweeps_done, 30);
+    }
+}

@@ -1,0 +1,36 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them from the Rust hot path. Python is never involved at runtime.
+//!
+//! * [`artifacts`] — manifest parsing + artifact path resolution.
+//! * [`pjrt`] — the PJRT CPU client wrapper with an executable cache.
+//! * [`scoring`] — the XLA scoring backend (the fused Pallas kernel that
+//!   evaluates RAS overload + IAS interference for all cores in one call).
+//! * [`compute`] — the real-compute workload kernels (Black-Scholes,
+//!   Jacobi) the e2e example runs inside simulated VMs.
+
+pub mod artifacts;
+pub mod compute;
+pub mod pjrt;
+pub mod scoring;
+
+pub use artifacts::Manifest;
+pub use pjrt::Runtime;
+pub use scoring::XlaScoring;
+
+/// Compiled shapes — MUST match python/compile/kernels/*.py.
+pub mod shapes {
+    /// score.py C_MAX.
+    pub const C_MAX: usize = 32;
+    /// score.py V_MAX.
+    pub const V_MAX: usize = 64;
+    /// score.py M_METRICS.
+    pub const M_METRICS: usize = 4;
+    /// blackscholes.py N_OPTIONS.
+    pub const N_OPTIONS: usize = 65536;
+    /// jacobi.py H, W.
+    pub const JACOBI_H: usize = 256;
+    pub const JACOBI_W: usize = 256;
+    /// model.py SWEEPS_PER_CALL.
+    pub const JACOBI_SWEEPS_PER_CALL: usize = 10;
+}

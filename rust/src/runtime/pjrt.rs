@@ -1,0 +1,150 @@
+//! The PJRT CPU client wrapper: compile-once, execute-many.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+//! and python/compile/aot.py).
+
+use super::artifacts::Manifest;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// A loaded PJRT runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Execution counters for reporting.
+    pub executions: u64,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over the discovered artifacts.
+    pub fn new() -> Result<Runtime> {
+        let manifest = Manifest::discover()?;
+        Runtime::with_manifest(manifest)
+    }
+
+    pub fn with_manifest(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: BTreeMap::new(),
+            executions: 0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.entry(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Inputs are f32 literals matching the manifest
+    /// signature; the output tuple is unpacked into a `Vec<Literal>`.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.prepare(name)?;
+        let entry = self.manifest.entry(name)?;
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "artifact '{name}' expects {} inputs, got {}",
+            entry.inputs.len(),
+            inputs.len()
+        );
+        let exe = self.cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        self.executions += 1;
+        // aot.py lowers with return_tuple=True: unpack.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == entry.outputs.len(),
+            "artifact '{name}' returned {} outputs, manifest says {}",
+            parts.len(),
+            entry.outputs.len()
+        );
+        Ok(parts)
+    }
+
+    /// Execute with f32 slices in/out (convenience over raw literals).
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self.manifest.entry(name)?.clone();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            let spec = &entry.inputs[i];
+            anyhow::ensure!(
+                data.len() == spec.elements(),
+                "input {i} of '{name}': {} elements, expected {}",
+                data.len(),
+                spec.elements()
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let outs = self.execute(name, &literals)?;
+        outs.into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        match Runtime::new() {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!("skipping pjrt test: {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn client_boots_and_compiles_score() {
+        let Some(mut rt) = runtime() else { return };
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        rt.prepare("score").unwrap();
+        // Second prepare is a cache hit (no error, no recompile).
+        rt.prepare("score").unwrap();
+    }
+
+    #[test]
+    fn input_arity_checked() {
+        let Some(mut rt) = runtime() else { return };
+        let bad = rt.execute("score", &[]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn execute_f32_validates_lengths() {
+        let Some(mut rt) = runtime() else { return };
+        let short = [0.0f32; 3];
+        let res = rt.execute_f32("jacobi", &[&short]);
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! The XLA scoring backend: the VMCd decision hot path executed as the
+//! AOT-compiled fused Pallas kernel (python/compile/kernels/score.py).
+//!
+//! One PJRT call evaluates, for every core simultaneously, the RAS overload
+//! (Eq. 2) before/after placing the candidate and the IAS core interference
+//! (Eq. 3+4) before/after. Live state is padded to the compiled
+//! (C_MAX × V_MAX) shapes; padding is inert by construction (assign rows 0,
+//! S entries 1).
+
+use super::shapes::{C_MAX, M_METRICS, V_MAX};
+use super::Runtime;
+use crate::profiling::ProfileBank;
+use crate::vmcd::scheduler::{PlacementState, Scores, ScoringBackend};
+use crate::workloads::WorkloadClass;
+
+pub struct XlaScoring {
+    rt: Runtime,
+    /// Pre-allocated input buffers (avoid per-call allocation).
+    assign: Vec<f32>,
+    u: Vec<f32>,
+    s: Vec<f32>,
+    cand_u: Vec<f32>,
+    s_vc: Vec<f32>,
+    s_cv: Vec<f32>,
+    thr: Vec<f32>,
+}
+
+impl XlaScoring {
+    pub fn new(mut rt: Runtime) -> anyhow::Result<XlaScoring> {
+        rt.prepare("score")?;
+        Ok(XlaScoring {
+            rt,
+            assign: vec![0.0; C_MAX * V_MAX],
+            u: vec![0.0; V_MAX * M_METRICS],
+            s: vec![1.0; V_MAX * V_MAX],
+            cand_u: vec![0.0; M_METRICS],
+            s_vc: vec![1.0; V_MAX],
+            s_cv: vec![1.0; V_MAX],
+            thr: vec![1.2],
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl ScoringBackend for XlaScoring {
+    fn score(
+        &mut self,
+        state: &PlacementState,
+        cand: WorkloadClass,
+        bank: &ProfileBank,
+        thr: f64,
+        cpu_only: bool,
+    ) -> Scores {
+        let ncores = state.cores.len();
+        assert!(ncores <= C_MAX, "host has more cores than the compiled kernel");
+
+        // Collect placed VM slots: (core, class index).
+        let mut slots: Vec<(usize, usize)> = Vec::new();
+        for (core, members) in state.cores.iter().enumerate() {
+            for &class_idx in members {
+                slots.push((core, class_idx));
+            }
+        }
+        assert!(
+            slots.len() <= V_MAX,
+            "more resident VMs ({}) than the compiled kernel supports ({V_MAX})",
+            slots.len()
+        );
+
+        // ---- fill padded buffers ----
+        self.assign.iter_mut().for_each(|x| *x = 0.0);
+        self.u.iter_mut().for_each(|x| *x = 0.0);
+        self.s.iter_mut().for_each(|x| *x = 1.0);
+        self.s_vc.iter_mut().for_each(|x| *x = 1.0);
+        self.s_cv.iter_mut().for_each(|x| *x = 1.0);
+
+        let ci = cand.index();
+        for (v, &(core, class_idx)) in slots.iter().enumerate() {
+            self.assign[core * V_MAX + v] = 1.0;
+            for m in 0..M_METRICS {
+                let val = if cpu_only && m != 0 {
+                    0.0
+                } else {
+                    bank.u[class_idx][m] as f32
+                };
+                self.u[v * M_METRICS + m] = val;
+            }
+            for (v2, &(_, class2)) in slots.iter().enumerate() {
+                self.s[v * V_MAX + v2] = bank.s[class_idx][class2] as f32;
+            }
+            self.s_vc[v] = bank.s[class_idx][ci] as f32;
+            self.s_cv[v] = bank.s[ci][class_idx] as f32;
+        }
+        for m in 0..M_METRICS {
+            self.cand_u[m] = if cpu_only && m != 0 {
+                0.0
+            } else {
+                bank.u[ci][m] as f32
+            };
+        }
+        self.thr[0] = thr as f32;
+
+        // ---- one fused PJRT call ----
+        let outs = self
+            .rt
+            .execute_f32(
+                "score",
+                &[
+                    &self.assign,
+                    &self.u,
+                    &self.s,
+                    &self.cand_u,
+                    &self.s_vc,
+                    &self.s_cv,
+                    &self.thr,
+                ],
+            )
+            .expect("score kernel execution failed");
+
+        let take = |v: &Vec<f32>| -> Vec<f64> {
+            v.iter().take(ncores).map(|&x| x as f64).collect()
+        };
+        Scores {
+            ol_before: take(&outs[0]),
+            ol_after: take(&outs[1]),
+            ic_before: take(&outs[2]),
+            ic_after: take(&outs[3]),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::vmcd::scheduler::NativeScoring;
+    use crate::workloads::WorkloadClass::*;
+
+    fn setup() -> Option<(XlaScoring, ProfileBank)> {
+        let rt = match Runtime::new() {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("skipping xla scoring test: {e}");
+                return None;
+            }
+        };
+        let xs = XlaScoring::new(rt).unwrap();
+        let mut cfg = Config::default();
+        cfg.sim.demand_noise = 0.0;
+        Some((xs, ProfileBank::generate(&cfg)))
+    }
+
+    #[test]
+    fn xla_matches_native_backend() {
+        let Some((mut xla, bank)) = setup() else { return };
+        let mut native = NativeScoring::new();
+
+        let mut state = PlacementState::new(12, false);
+        state.place(0, Blackscholes);
+        state.place(0, StreamLow);
+        state.place(1, Jacobi);
+        state.place(3, LampHeavy);
+        state.place(3, LampLight);
+
+        for cand in [Jacobi, LampLight, StreamHigh, Hadoop] {
+            for cpu_only in [false, true] {
+                let a = xla.score(&state, cand, &bank, 1.2, cpu_only);
+                let b = native.score(&state, cand, &bank, 1.2, cpu_only);
+                for core in 0..12 {
+                    assert!(
+                        (a.ol_before[core] - b.ol_before[core]).abs() < 1e-4,
+                        "ol_before[{core}] {cand:?}: xla {} native {}",
+                        a.ol_before[core],
+                        b.ol_before[core]
+                    );
+                    assert!(
+                        (a.ol_after[core] - b.ol_after[core]).abs() < 1e-4,
+                        "ol_after[{core}] {cand:?}"
+                    );
+                    assert!(
+                        (a.ic_before[core] - b.ic_before[core]).abs() < 1e-3,
+                        "ic_before[{core}] {cand:?}: xla {} native {}",
+                        a.ic_before[core],
+                        b.ic_before[core]
+                    );
+                    assert!(
+                        (a.ic_after[core] - b.ic_after[core]).abs() < 1e-3,
+                        "ic_after[{core}] {cand:?}: xla {} native {}",
+                        a.ic_after[core],
+                        b.ic_after[core]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_state_scores() {
+        let Some((mut xla, bank)) = setup() else { return };
+        let state = PlacementState::new(12, false);
+        let s = xla.score(&state, Blackscholes, &bank, 1.2, false);
+        assert_eq!(s.ol_before.len(), 12);
+        for core in 0..12 {
+            assert!(s.ol_before[core].abs() < 1e-6);
+            assert!((s.ic_after[core] - 0.5).abs() < 1e-4); // candidate alone
+        }
+    }
+}

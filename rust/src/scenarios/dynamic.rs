@@ -1,0 +1,107 @@
+//! The dynamic scenario (§V-C.3, Figs. 4-6).
+//!
+//! "24 random VMs are placed in the server where they become active in
+//! 12- or 6-job batches." All VMs are resident from t = 0 (RRS therefore
+//! reserves the whole server for the entire run — the Fig. 4/5 flat line);
+//! group g activates at g·PHASE seconds. Batch jobs, once activated, run
+//! to completion; services go idle again at the end of their group's
+//! phase, which is what the dynamic schedulers exploit.
+
+use super::spec::{ScenarioSpec, VmTemplate};
+use crate::hostsim::ActivityModel;
+use crate::util::rng::Rng;
+use crate::workloads::ALL_CLASSES;
+
+/// Phase length between activation batches (seconds).
+pub const PHASE: f64 = 420.0;
+
+/// Total VMs in the scenario (paper: 24).
+pub const TOTAL_VMS: usize = 24;
+
+/// Build the dynamic scenario with `batch_size` ∈ {6, 12}.
+pub fn build(batch_size: usize, seed: u64) -> ScenarioSpec {
+    assert!(
+        TOTAL_VMS % batch_size == 0,
+        "batch size must divide {TOTAL_VMS}"
+    );
+    let mut rng = Rng::new(seed ^ 0x5EED_0003);
+    let groups = TOTAL_VMS / batch_size;
+
+    let mut vms = Vec::with_capacity(TOTAL_VMS);
+    for g in 0..groups {
+        let start = g as f64 * PHASE;
+        for _ in 0..batch_size {
+            let class = *rng.pick(&ALL_CLASSES);
+            let kind = crate::workloads::catalog::spec_of(class).perf.kind;
+            let activity = match kind {
+                // Batch: activate at the group phase, run to completion.
+                crate::workloads::WorkloadKind::Batch => {
+                    ActivityModel::Windows(vec![(start, f64::INFINITY)])
+                }
+                // Services: active only during their group's phase.
+                _ => ActivityModel::Windows(vec![(start, start + PHASE)]),
+            };
+            vms.push(VmTemplate {
+                class,
+                arrival: 0.0,
+                activity,
+            });
+        }
+    }
+    ScenarioSpec {
+        name: format!("dynamic-{batch_size}"),
+        sr: TOTAL_VMS as f64 / 12.0,
+        vms,
+        min_duration: groups as f64 * PHASE,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::WorkloadKind;
+
+    #[test]
+    fn twenty_four_vms_resident_from_t0() {
+        for bs in [6, 12] {
+            let spec = build(bs, 1);
+            assert_eq!(spec.vms.len(), 24);
+            assert!(spec.vms.iter().all(|vm| vm.arrival == 0.0));
+        }
+    }
+
+    #[test]
+    fn groups_activate_in_phases() {
+        let spec = build(6, 2);
+        for (i, vm) in spec.vms.iter().enumerate() {
+            let group = i / 6;
+            let expected_start = group as f64 * PHASE;
+            match &vm.activity {
+                ActivityModel::Windows(ws) => {
+                    assert_eq!(ws[0].0, expected_start, "vm {i}");
+                }
+                other => panic!("vm {i}: unexpected activity {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn services_deactivate_batch_jobs_run_out() {
+        let spec = build(12, 3);
+        for vm in &spec.vms {
+            let kind = crate::workloads::catalog::spec_of(vm.class).perf.kind;
+            if let ActivityModel::Windows(ws) = &vm.activity {
+                match kind {
+                    WorkloadKind::Batch => assert!(ws[0].1.is_infinite()),
+                    _ => assert!((ws[0].1 - ws[0].0 - PHASE).abs() < 1e-9),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bad_batch_size_panics() {
+        let result = std::panic::catch_unwind(|| build(7, 1));
+        assert!(result.is_err());
+    }
+}

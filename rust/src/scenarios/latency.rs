@@ -1,0 +1,115 @@
+//! The latency-critical heavy scenario (§V-C.2, Fig. 3).
+//!
+//! "A large number of latency-critical but low load applications and a
+//! small number of batch and media streaming workloads."
+
+use super::spec::{ScenarioSpec, VmTemplate};
+use crate::hostsim::ActivityModel;
+use crate::util::rng::Rng;
+use crate::workloads::arrivals::ArrivalProcess;
+use crate::workloads::WorkloadClass;
+
+/// Composition: ~65% lamp-light, ~10% lamp-heavy, ~15% low/med streaming,
+/// ~10% batch.
+pub fn build(cores: usize, sr: f64, seed: u64) -> ScenarioSpec {
+    let mut rng = Rng::new(seed ^ 0x5EED_0002);
+    let n = ((cores as f64) * sr).round().max(1.0) as usize;
+    let arrivals = ArrivalProcess::Uniform { gap: 30.0 }.times(n, &mut rng);
+
+    let mut vms = Vec::with_capacity(n);
+    for &arrival in arrivals.iter() {
+        let dice = rng.uniform();
+        let class = if dice < 0.65 {
+            WorkloadClass::LampLight
+        } else if dice < 0.75 {
+            WorkloadClass::LampHeavy
+        } else if dice < 0.83 {
+            WorkloadClass::StreamLow
+        } else if dice < 0.90 {
+            WorkloadClass::StreamMed
+        } else if dice < 0.94 {
+            WorkloadClass::Blackscholes
+        } else if dice < 0.97 {
+            WorkloadClass::Hadoop
+        } else {
+            WorkloadClass::Jacobi
+        };
+        let kind = crate::workloads::catalog::spec_of(class).perf.kind;
+        let activity = match kind {
+            crate::workloads::WorkloadKind::Batch => ActivityModel::AlwaysOn,
+            _ => {
+                // Low-load services: longer quiet periods than the random
+                // scenario (duty 50–85%).
+                let period = rng.range(150.0, 360.0);
+                let duty = rng.range(0.5, 0.85);
+                let phase = rng.range(0.0, period);
+                ActivityModel::OnOff {
+                    period,
+                    duty,
+                    phase,
+                }
+            }
+        };
+        vms.push(VmTemplate {
+            class,
+            arrival,
+            activity,
+        });
+    }
+    ScenarioSpec {
+        name: format!("latency-sr{sr}"),
+        sr,
+        vms,
+        min_duration: 900.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::WorkloadKind;
+
+    #[test]
+    fn latency_dominates_composition() {
+        let spec = build(12, 2.0, 11);
+        let lc = spec
+            .vms
+            .iter()
+            .filter(|vm| {
+                crate::workloads::catalog::spec_of(vm.class).perf.kind
+                    == WorkloadKind::LatencyCritical
+            })
+            .count();
+        assert!(
+            lc * 2 > spec.vms.len(),
+            "latency-critical should dominate: {lc}/{}",
+            spec.vms.len()
+        );
+    }
+
+    #[test]
+    fn has_some_batch_and_streaming() {
+        // Across a few seeds, the composition must include the minority
+        // classes (the paper keeps "a small number" of them).
+        let mut batch = 0;
+        let mut streaming = 0;
+        for seed in 0..8 {
+            let spec = build(12, 2.0, seed);
+            for vm in &spec.vms {
+                match crate::workloads::catalog::spec_of(vm.class).perf.kind {
+                    WorkloadKind::Batch => batch += 1,
+                    WorkloadKind::Streaming => streaming += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert!(batch > 0, "no batch VMs in any seed");
+        assert!(streaming > 0, "no streaming VMs in any seed");
+    }
+
+    #[test]
+    fn count_tracks_sr() {
+        assert_eq!(build(12, 0.5, 1).vms.len(), 6);
+        assert_eq!(build(12, 2.0, 1).vms.len(), 24);
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's evaluation scenarios (§V-C) and the scenario runner.
+//!
+//! * [`random`] — §V-C.1: a random mix of all workload types, 30 s
+//!   inter-arrival, subscription ratio SR ∈ {0.5, 1, 1.5, 2} (Fig. 2).
+//! * [`latency`] — §V-C.2: many low-load latency-critical VMs plus a few
+//!   batch / streaming workloads (Fig. 3).
+//! * [`dynamic`] — §V-C.3: 24 pre-placed VMs activating in 6- or 12-job
+//!   batches (Figs. 4, 5, 6).
+//! * [`runner`] — drives engine + daemon to completion and summarises the
+//!   paper's metrics (average normalized performance, CPU time consumed).
+
+pub mod dynamic;
+pub mod latency;
+pub mod random;
+pub mod runner;
+pub mod spec;
+
+pub use runner::{run_scenario, ScenarioResult};
+pub use spec::{ScenarioKind, ScenarioSpec, VmTemplate};

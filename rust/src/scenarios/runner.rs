@@ -1,0 +1,228 @@
+//! The scenario runner: wires engine + daemon, runs to completion, and
+//! summarises the paper's metrics.
+
+use super::spec::ScenarioSpec;
+use crate::config::Config;
+use crate::hostsim::{SimEngine, Vm, VmId, VmState};
+use crate::metrics::TimeSeries;
+use crate::profiling::ProfileBank;
+use crate::util::stats::mean;
+use crate::vmcd::scheduler::{self, Policy, ScoringBackend};
+use crate::vmcd::Daemon;
+use crate::workloads::{WorkloadClass, WorkloadKind};
+use anyhow::Result;
+
+/// Everything the paper's figures need from one run.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub scenario: String,
+    pub policy: Policy,
+    pub sr: f64,
+    /// Mean normalized performance over all workloads (1.0 = isolated).
+    pub avg_perf: f64,
+    /// The paper's "CPU time consumed": busy-core hours.
+    pub core_hours: f64,
+    pub energy_wh: f64,
+    /// Virtual completion time (all batch jobs done, min duration met).
+    pub completion_time: f64,
+    /// Busy-core time series (Figs. 4/5).
+    pub busy_series: TimeSeries,
+    /// Per-class mean performance.
+    pub per_class_perf: Vec<(WorkloadClass, f64)>,
+    pub repin_count: u64,
+    pub sched_cycles: u64,
+}
+
+impl ScenarioResult {
+    /// Performance relative to a baseline run (paper figures normalise to
+    /// RRS).
+    pub fn perf_vs(&self, baseline: &ScenarioResult) -> f64 {
+        self.avg_perf / baseline.avg_perf
+    }
+
+    /// CPU-hours saving relative to a baseline (positive = fewer hours).
+    pub fn cpu_saving_vs(&self, baseline: &ScenarioResult) -> f64 {
+        1.0 - self.core_hours / baseline.core_hours
+    }
+}
+
+/// Run one scenario under one policy (native scoring backend).
+pub fn run_scenario(
+    cfg: &Config,
+    spec: &ScenarioSpec,
+    policy: Policy,
+    bank: &ProfileBank,
+) -> Result<ScenarioResult> {
+    let sched = scheduler::build(policy, bank, cfg.sched.ras_threshold, cfg.sched.ias_threshold);
+    run_scenario_with(cfg, spec, policy, sched)
+}
+
+/// Run one scenario with an explicit scoring backend (e.g. XLA).
+pub fn run_scenario_with_backend(
+    cfg: &Config,
+    spec: &ScenarioSpec,
+    policy: Policy,
+    bank: &ProfileBank,
+    backend: Box<dyn ScoringBackend>,
+) -> Result<ScenarioResult> {
+    let sched = scheduler::build_with_backend(
+        policy,
+        bank,
+        cfg.sched.ras_threshold,
+        cfg.sched.ias_threshold,
+        backend,
+    );
+    run_scenario_with(cfg, spec, policy, sched)
+}
+
+fn run_scenario_with(
+    cfg: &Config,
+    spec: &ScenarioSpec,
+    policy: Policy,
+    sched: Box<dyn scheduler::Scheduler>,
+) -> Result<ScenarioResult> {
+    let vms: Vec<Vm> = spec
+        .vms
+        .iter()
+        .enumerate()
+        .map(|(i, t)| Vm::new(VmId(i as u32), t.class, t.arrival, t.activity.clone()))
+        .collect();
+    let mut engine = SimEngine::new(cfg.clone(), vms);
+    let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+
+    loop {
+        for id in engine.process_arrivals() {
+            daemon.on_arrival(&mut engine, id)?;
+        }
+        daemon.maybe_cycle(&mut engine)?;
+        engine.step();
+
+        let done = engine.all_batch_done()
+            && !engine.arrivals_pending()
+            && engine.t >= spec.min_duration;
+        if done || engine.t >= cfg.sim.max_time {
+            break;
+        }
+    }
+
+    Ok(summarise(spec, policy, &engine, &daemon))
+}
+
+fn summarise(
+    spec: &ScenarioSpec,
+    policy: Policy,
+    engine: &SimEngine,
+    daemon: &Daemon,
+) -> ScenarioResult {
+    let mut all_perf = Vec::new();
+    let mut per_class: Vec<(WorkloadClass, Vec<f64>)> = Vec::new();
+    for vm in &engine.vms {
+        let perf = effective_perf(vm, engine.t);
+        let Some(perf) = perf else { continue };
+        all_perf.push(perf);
+        match per_class.iter_mut().find(|(c, _)| *c == vm.class) {
+            Some((_, v)) => v.push(perf),
+            None => per_class.push((vm.class, vec![perf])),
+        }
+    }
+    per_class.sort_by_key(|(c, _)| c.index());
+
+    ScenarioResult {
+        scenario: spec.name.clone(),
+        policy,
+        sr: spec.sr,
+        avg_perf: mean(&all_perf),
+        core_hours: engine.ledger.core_hours(),
+        energy_wh: engine.ledger.energy_wh(),
+        completion_time: engine.t,
+        busy_series: engine.ledger.busy_series.clone(),
+        per_class_perf: per_class
+            .into_iter()
+            .map(|(c, v)| (c, mean(&v)))
+            .collect(),
+        repin_count: engine.ledger.repin_count,
+        sched_cycles: daemon.cycles,
+    }
+}
+
+/// Performance of one VM at scenario end. Unfinished batch jobs (run hit
+/// max_time) are scored by their average progress rate so far.
+fn effective_perf(vm: &Vm, now: f64) -> Option<f64> {
+    if vm.state == VmState::NotArrived {
+        return None;
+    }
+    if let Some(p) = vm.normalized_perf() {
+        return Some(p);
+    }
+    if vm.spec.perf.kind == WorkloadKind::Batch {
+        let start = vm.work_started?;
+        let elapsed = now - start;
+        if elapsed > 0.0 && vm.work_done > 0.0 {
+            return Some((vm.work_done / elapsed).clamp(0.0, 1.0));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::random;
+
+    fn quiet_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.sim.demand_noise = 0.0;
+        cfg.sim.max_time = 4000.0;
+        cfg
+    }
+
+    fn bank(cfg: &Config) -> ProfileBank {
+        ProfileBank::generate(cfg)
+    }
+
+    #[test]
+    fn undersubscribed_random_all_policies_complete() {
+        let cfg = quiet_cfg();
+        let b = bank(&cfg);
+        let spec = random::build(cfg.host.cores, 0.5, 42);
+        for policy in Policy::ALL {
+            let r = run_scenario(&cfg, &spec, policy, &b).unwrap();
+            assert!(
+                r.completion_time < cfg.sim.max_time,
+                "{policy:?} did not complete"
+            );
+            assert!(r.avg_perf > 0.5, "{policy:?} perf {}", r.avg_perf);
+            assert!(r.core_hours > 0.0);
+        }
+    }
+
+    #[test]
+    fn ras_saves_core_hours_vs_rrs_at_low_sr() {
+        let cfg = quiet_cfg();
+        let b = bank(&cfg);
+        let spec = random::build(cfg.host.cores, 0.5, 42);
+        let rrs = run_scenario(&cfg, &spec, Policy::Rrs, &b).unwrap();
+        let ras = run_scenario(&cfg, &spec, Policy::Ras, &b).unwrap();
+        let saving = ras.cpu_saving_vs(&rrs);
+        assert!(
+            saving > 0.15,
+            "RAS must consolidate: saving {saving} (rrs {} ras {})",
+            rrs.core_hours,
+            ras.core_hours
+        );
+        let perf_ratio = ras.perf_vs(&rrs);
+        assert!(perf_ratio > 0.85, "perf ratio {perf_ratio}");
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let cfg = quiet_cfg();
+        let b = bank(&cfg);
+        let spec = random::build(cfg.host.cores, 1.0, 9);
+        let a = run_scenario(&cfg, &spec, Policy::Ias, &b).unwrap();
+        let c = run_scenario(&cfg, &spec, Policy::Ias, &b).unwrap();
+        assert_eq!(a.core_hours, c.core_hours);
+        assert_eq!(a.avg_perf, c.avg_perf);
+        assert_eq!(a.completion_time, c.completion_time);
+    }
+}

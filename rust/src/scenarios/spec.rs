@@ -1,0 +1,109 @@
+//! Scenario specification types.
+
+use crate::hostsim::ActivityModel;
+use crate::workloads::WorkloadClass;
+
+/// Which of the paper's scenarios (used by the CLI and reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    Random,
+    LatencyHeavy,
+    Dynamic6,
+    Dynamic12,
+}
+
+impl ScenarioKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScenarioKind::Random => "random",
+            ScenarioKind::LatencyHeavy => "latency",
+            ScenarioKind::Dynamic6 => "dynamic6",
+            ScenarioKind::Dynamic12 => "dynamic12",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<ScenarioKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "random" => Some(ScenarioKind::Random),
+            "latency" | "latency-heavy" => Some(ScenarioKind::LatencyHeavy),
+            "dynamic6" | "dynamic-6" => Some(ScenarioKind::Dynamic6),
+            "dynamic12" | "dynamic-12" => Some(ScenarioKind::Dynamic12),
+            _ => None,
+        }
+    }
+}
+
+/// One VM to create.
+#[derive(Debug, Clone)]
+pub struct VmTemplate {
+    pub class: WorkloadClass,
+    pub arrival: f64,
+    pub activity: ActivityModel,
+}
+
+/// A complete scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    /// Subscription ratio = VMs / cores (§V-C.1).
+    pub sr: f64,
+    pub vms: Vec<VmTemplate>,
+    /// Minimum virtual duration even if all batch jobs finish earlier
+    /// (services need time to accumulate performance samples).
+    pub min_duration: f64,
+}
+
+impl ScenarioSpec {
+    /// Count of VMs per class (for reporting).
+    pub fn class_histogram(&self) -> Vec<(WorkloadClass, usize)> {
+        let mut hist: Vec<(WorkloadClass, usize)> = Vec::new();
+        for vm in &self.vms {
+            match hist.iter_mut().find(|(c, _)| *c == vm.class) {
+                Some((_, n)) => *n += 1,
+                None => hist.push((vm.class, 1)),
+            }
+        }
+        hist.sort_by_key(|(c, _)| c.index());
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [
+            ScenarioKind::Random,
+            ScenarioKind::LatencyHeavy,
+            ScenarioKind::Dynamic6,
+            ScenarioKind::Dynamic12,
+        ] {
+            assert_eq!(ScenarioKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(ScenarioKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let spec = ScenarioSpec {
+            name: "t".into(),
+            sr: 0.5,
+            vms: vec![
+                VmTemplate {
+                    class: WorkloadClass::Jacobi,
+                    arrival: 0.0,
+                    activity: ActivityModel::AlwaysOn,
+                },
+                VmTemplate {
+                    class: WorkloadClass::Jacobi,
+                    arrival: 30.0,
+                    activity: ActivityModel::AlwaysOn,
+                },
+            ],
+            min_duration: 100.0,
+        };
+        assert_eq!(spec.class_histogram(), vec![(WorkloadClass::Jacobi, 2)]);
+    }
+}

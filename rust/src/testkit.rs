@@ -1,0 +1,120 @@
+//! Seeded property-testing mini-framework (proptest is not in the offline
+//! crate set).
+//!
+//! [`check`] runs a property over `n` pseudo-random cases derived from a
+//! base seed; on failure it reports the failing case seed so the exact
+//! case can be replayed with [`replay`]. Shared fixtures (the profile
+//! bank) are cached process-wide so the many property tests don't re-run
+//! the profiling phase.
+
+use crate::config::Config;
+use crate::profiling::ProfileBank;
+use crate::util::rng::Rng;
+use std::sync::OnceLock;
+
+/// Number of cases to run per property (override with VMCD_PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("VMCD_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32)
+}
+
+/// Run `prop` over `cases` seeded RNGs. Panics (with the failing seed) on
+/// the first violated property.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = splitmix(0xC0FFEE ^ case);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (seed {seed:#x}); \
+                 replay with testkit::replay({seed:#x}, ...)"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+fn splitmix(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Process-wide cached profile bank over the default (noise-free) config —
+/// the expensive fixture most scheduler properties need.
+pub fn shared_bank() -> &'static ProfileBank {
+    static BANK: OnceLock<ProfileBank> = OnceLock::new();
+    BANK.get_or_init(|| {
+        let mut cfg = Config::default();
+        cfg.sim.demand_noise = 0.0;
+        ProfileBank::generate(&cfg)
+    })
+}
+
+/// The matching config for [`shared_bank`].
+pub fn quiet_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.sim.demand_noise = 0.0;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counter", 10, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn failing_property_panics_with_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("fails", 5, |rng| {
+                assert!(rng.uniform() < 2.0); // passes
+                assert!(false, "boom");
+            });
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn shared_bank_is_cached() {
+        let a = shared_bank() as *const _;
+        let b = shared_bank() as *const _;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn replay_reproduces_stream() {
+        let mut first = Vec::new();
+        replay(0xABCD, |rng| {
+            for _ in 0..4 {
+                first.push(rng.next_u64());
+            }
+        });
+        let mut second = Vec::new();
+        replay(0xABCD, |rng| {
+            for _ in 0..4 {
+                second.push(rng.next_u64());
+            }
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,126 @@
+//! Minimal command-line argument parsing (clap is not in the offline set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+/// Option names that never take a value (so `--xla run` parses `run` as a
+/// positional, not as the value of `--xla`).
+const KNOWN_FLAGS: &[&str] = &["xla", "verbose", "json", "quick", "help", "real-compute"];
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if KNOWN_FLAGS.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse(&["run", "--verbose", "random", "--seed", "42"]);
+        assert_eq!(a.positional, vec!["run", "random"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("seed"), Some("42"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--sr=1.5", "--policy=ias"]);
+        assert_eq!(a.opt_f64("sr", 0.0).unwrap(), 1.5);
+        assert_eq!(a.opt("policy"), Some("ias"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--json"]);
+        assert!(a.flag("json"));
+        assert_eq!(a.opt("json"), None);
+    }
+
+    #[test]
+    fn numeric_errors_are_reported() {
+        let a = parse(&["--sr", "abc"]);
+        assert!(a.opt_f64("sr", 0.0).is_err());
+        assert_eq!(a.opt_usize("cores", 12).unwrap(), 12);
+    }
+}

@@ -1,0 +1,54 @@
+//! Tiny `log`-crate backend writing to stderr with a monotonic timestamp.
+//!
+//! `RUST_LOG`-style filtering via `VMCD_LOG` (error|warn|info|debug|trace,
+//! default info).
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, meta: &log::Metadata) -> bool {
+        meta.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        eprintln!(
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("VMCD_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger {
+        start: Instant::now(),
+        level,
+    });
+    // Err only if a logger is already set — fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}

@@ -1,0 +1,43 @@
+//! First-party utility modules.
+//!
+//! The build environment is fully offline with a fixed vendored crate set
+//! (no `rand`, `serde`, `clap`, …), so the small pieces of infrastructure a
+//! normal project would pull from crates.io live here instead.
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+
+/// Clamp a float into `[lo, hi]`.
+#[inline]
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+/// `true` if two floats agree within `tol` absolutely or relatively.
+#[inline]
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    let d = (a - b).abs();
+    d <= tol || d <= tol * a.abs().max(b.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clampf_bounds() {
+        assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn close_absolute_and_relative() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6));
+        assert!(close(1e9, 1e9 * (1.0 + 1e-7), 1e-6));
+        assert!(!close(1.0, 2.0, 1e-6));
+    }
+}

@@ -1,0 +1,140 @@
+//! Summary statistics for metric series and bench results.
+
+/// Online summary of a sample set (Welford mean/variance + retained sample
+/// for exact percentiles).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    mean: f64,
+    m2: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut s = Self::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+        let n = self.samples.len() as f64;
+        let d = x - self.mean;
+        self.mean += d / n;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation (n−1 denominator).
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        (self.m2 / (self.samples.len() as f64 - 1.0)).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    /// Exact percentile by nearest-rank on the sorted sample (p in [0,100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "percentile of empty summary");
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Geometric mean — used for normalized-performance aggregation, which is
+/// the right mean for ratios (the paper reports "average performance"
+/// against isolated runs).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let logsum: f64 = xs.iter().map(|x| x.max(1e-12).ln()).sum();
+    (logsum / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    #[test]
+    fn summary_moments() {
+        let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(close(s.mean(), 3.0, 1e-12));
+        assert!(close(s.stddev(), (2.5f64).sqrt(), 1e-12));
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!(close(s.median(), 3.0, 1e-12));
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let s = Summary::from_slice(&(0..101).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 50.0);
+        assert_eq!(s.percentile(95.0), 95.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        assert!(close(geomean(&[0.5, 2.0]), 1.0, 1e-12));
+        assert!(close(geomean(&[1.0, 1.0, 1.0]), 1.0, 1e-12));
+    }
+
+    #[test]
+    fn mean_empty_is_nan() {
+        assert!(mean(&[]).is_nan());
+        assert!(geomean(&[]).is_nan());
+    }
+}

@@ -1,0 +1,114 @@
+//! VM Actuator (paper §III): "a high-level abstraction to libvirt API
+//! calls … can manage VMs throughout their life-cycle and enforce the
+//! required CPU pinning adjustments."
+//!
+//! Tracks intended pinnings, skips no-op re-pins, and counts actuations so
+//! experiments can report actuation overhead.
+
+use crate::hostsim::{Hypervisor, VmId};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Actuator {
+    /// Last pinning this actuator applied (or observed).
+    applied: BTreeMap<VmId, usize>,
+    /// Actuation counters for reporting.
+    pub pin_calls: u64,
+    pub pin_noops: u64,
+}
+
+impl Actuator {
+    pub fn new() -> Actuator {
+        Actuator::default()
+    }
+
+    /// Pin `id` to `core`, skipping the hypervisor call when the domain is
+    /// already there.
+    pub fn pin(&mut self, hv: &mut dyn Hypervisor, id: VmId, core: usize) -> Result<()> {
+        if self.applied.get(&id) == Some(&core) {
+            self.pin_noops += 1;
+            return Ok(());
+        }
+        hv.pin_vcpu(id, core)?;
+        self.applied.insert(id, core);
+        self.pin_calls += 1;
+        Ok(())
+    }
+
+    /// Apply a whole placement map.
+    pub fn apply(&mut self, hv: &mut dyn Hypervisor, plan: &[(VmId, usize)]) -> Result<()> {
+        for &(id, core) in plan {
+            self.pin(hv, id, core)?;
+        }
+        Ok(())
+    }
+
+    /// Forget domains that no longer exist (so a VM re-using an id later
+    /// is re-pinned).
+    pub fn retain(&mut self, live: &[VmId]) {
+        self.applied.retain(|id, _| live.contains(id));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::hostsim::{ActivityModel, SimEngine, Vm, VmState};
+    use crate::workloads::WorkloadClass;
+
+    fn engine(n: u32) -> SimEngine {
+        let mut cfg = Config::default();
+        cfg.sim.demand_noise = 0.0;
+        let vms = (0..n)
+            .map(|i| {
+                let mut vm = Vm::new(
+                    VmId(i),
+                    WorkloadClass::Hadoop,
+                    0.0,
+                    ActivityModel::AlwaysOn,
+                );
+                vm.state = VmState::Running;
+                vm.pinned = Some(0);
+                vm
+            })
+            .collect();
+        SimEngine::new(cfg, vms)
+    }
+
+    #[test]
+    fn deduplicates_noop_pins() {
+        let mut eng = engine(1);
+        let mut act = Actuator::new();
+        act.pin(&mut eng, VmId(0), 3).unwrap();
+        act.pin(&mut eng, VmId(0), 3).unwrap();
+        act.pin(&mut eng, VmId(0), 4).unwrap();
+        assert_eq!(act.pin_calls, 2);
+        assert_eq!(act.pin_noops, 1);
+        assert_eq!(eng.vms[0].pinned, Some(4));
+    }
+
+    #[test]
+    fn apply_plan() {
+        let mut eng = engine(3);
+        let mut act = Actuator::new();
+        act.apply(&mut eng, &[(VmId(0), 1), (VmId(1), 2), (VmId(2), 1)])
+            .unwrap();
+        assert_eq!(eng.vms[0].pinned, Some(1));
+        assert_eq!(eng.vms[1].pinned, Some(2));
+        assert_eq!(eng.vms[2].pinned, Some(1));
+    }
+
+    #[test]
+    fn retain_forgets_dead_domains() {
+        let mut eng = engine(2);
+        let mut act = Actuator::new();
+        act.pin(&mut eng, VmId(0), 1).unwrap();
+        act.pin(&mut eng, VmId(1), 2).unwrap();
+        act.retain(&[VmId(1)]);
+        // VmId(0) must be re-pinned for real next time.
+        act.pin(&mut eng, VmId(0), 1).unwrap();
+        assert_eq!(act.pin_calls, 3);
+    }
+}

@@ -1,0 +1,271 @@
+//! The General Scheduler loop — paper Algorithm 1.
+//!
+//! Every `timeInterval` seconds the daemon:
+//! 1. polls the monitor for idle vs running workloads (idle = CPU below
+//!    2.5% over the last monitoring window),
+//! 2. pins every idle workload on core 0 ("considered to consume zero
+//!    resources"),
+//! 3. re-pins every running workload through the policy's `SelectPinning`.
+//!
+//! New arrivals are placed immediately (§III: "as new workloads are
+//! forwarded to VMCd, they are pinned to CPU cores as resource
+//! availability allows").
+
+use super::actuator::Actuator;
+use super::monitor::Monitor;
+use super::scheduler::{PlacementState, Policy, Scheduler};
+use crate::config::SchedParams;
+use crate::hostsim::{Hypervisor, VmId};
+use anyhow::Result;
+
+/// Core reserved for consolidated idle workloads (Alg. 1 line 7).
+pub const IDLE_CORE: usize = 0;
+
+pub struct Daemon {
+    pub params: SchedParams,
+    pub scheduler: Box<dyn Scheduler>,
+    pub monitor: Monitor,
+    pub actuator: Actuator,
+    last_cycle: Option<f64>,
+    /// Cycles run (reporting).
+    pub cycles: u64,
+    /// Transient actuation failures tolerated (reporting).
+    pub pin_failures: u64,
+}
+
+impl Daemon {
+    pub fn new(params: SchedParams, scheduler: Box<dyn Scheduler>) -> Daemon {
+        let monitor = Monitor::new(params.idle_cpu_threshold);
+        Daemon {
+            params,
+            scheduler,
+            monitor,
+            actuator: Actuator::new(),
+            last_cycle: None,
+            cycles: 0,
+            pin_failures: 0,
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.scheduler.policy()
+    }
+
+    /// Place a newly-arrived workload immediately.
+    pub fn on_arrival(&mut self, hv: &mut dyn Hypervisor, id: VmId) -> Result<()> {
+        let snap = self.monitor.poll(hv);
+        let cores = hv.host_spec().cores;
+
+        // Build the placement state from live pinnings of *running*
+        // workloads (idle ones are parked and "consume zero resources").
+        let has_idle = snap.domains.iter().any(|d| d.idle && d.id != id);
+        let mut state = PlacementState::new(cores, has_idle && self.scheduler.dynamic());
+        for d in &snap.domains {
+            if d.id == id || d.idle {
+                continue;
+            }
+            if let Some(core) = d.pinned {
+                state.place(core, d.class);
+            }
+        }
+        let class = snap
+            .domains
+            .iter()
+            .find(|d| d.id == id)
+            .map(|d| d.class)
+            .ok_or_else(|| anyhow::anyhow!("arrival {id:?} not visible to monitor"))?;
+        let core = self.scheduler.select_pinning(&state, class);
+        self.actuator.pin(hv, id, core)
+    }
+
+    /// Run a cycle if the interval has elapsed. Returns true if it ran.
+    pub fn maybe_cycle(&mut self, hv: &mut dyn Hypervisor) -> Result<bool> {
+        let t = hv.now();
+        let due = match self.last_cycle {
+            None => true,
+            Some(t0) => t - t0 >= self.params.interval - 1e-9,
+        };
+        if !due {
+            return Ok(false);
+        }
+        self.last_cycle = Some(t);
+        self.run_cycle(hv)?;
+        Ok(true)
+    }
+
+    /// One full Alg. 1 pass.
+    pub fn run_cycle(&mut self, hv: &mut dyn Hypervisor) -> Result<()> {
+        self.cycles += 1;
+
+        // RRS is static: no idle detection, no re-pinning.
+        if !self.scheduler.dynamic() {
+            return Ok(());
+        }
+
+        let snap = self.monitor.poll(hv);
+        let live: Vec<VmId> = snap.domains.iter().map(|d| d.id).collect();
+        self.actuator.retain(&live);
+
+        let cores = hv.host_spec().cores;
+        let idle: Vec<_> = snap
+            .domains
+            .iter()
+            .filter(|d| d.idle)
+            .cloned()
+            .collect();
+        let running: Vec<_> = snap
+            .domains
+            .iter()
+            .filter(|d| !d.idle)
+            .cloned()
+            .collect();
+
+        // Alg. 1 lines 6-7: park idle workloads on core 0. Individual pin
+        // failures (libvirt calls fail transiently in production) must not
+        // abort the cycle: log, count, and carry on — the VM keeps its old
+        // pinning until the next cycle.
+        for d in &idle {
+            if let Err(e) = self.actuator.pin(hv, d.id, IDLE_CORE) {
+                self.pin_failures += 1;
+                log::warn!("pin {:?} -> idle core failed: {e}", d.id);
+            }
+        }
+
+        // Alg. 1 lines 8-10: re-pin running workloads via SelectPinning.
+        // Stable order (arrival id) so decisions are deterministic.
+        let mut running = running;
+        running.sort_by_key(|d| d.id);
+        let mut state = PlacementState::new(cores, !idle.is_empty());
+        for d in &running {
+            let core = self.scheduler.select_pinning(&state, d.class);
+            // The placement state tracks the INTENDED placement even if the
+            // actuation fails — subsequent decisions stay consistent, and
+            // the failed VM is retried next cycle.
+            state.place(core, d.class);
+            if let Err(e) = self.actuator.pin(hv, d.id, core) {
+                self.pin_failures += 1;
+                log::warn!("pin {:?} -> core {core} failed: {e}", d.id);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::hostsim::{ActivityModel, SimEngine, Vm, VmState};
+    use crate::profiling::ProfileBank;
+    use crate::vmcd::scheduler;
+    use crate::workloads::WorkloadClass;
+
+    fn setup(policy: Policy, vms: Vec<Vm>) -> (SimEngine, Daemon) {
+        let mut cfg = Config::default();
+        cfg.sim.demand_noise = 0.0;
+        let bank = ProfileBank::generate(&cfg);
+        let sched = scheduler::build(policy, &bank, cfg.sched.ras_threshold, None);
+        let daemon = Daemon::new(cfg.sched.clone(), sched);
+        (SimEngine::new(cfg, vms), daemon)
+    }
+
+    fn resident(id: u32, class: WorkloadClass, active: bool) -> Vm {
+        let activity = if active {
+            ActivityModel::AlwaysOn
+        } else {
+            ActivityModel::Windows(vec![])
+        };
+        let mut vm = Vm::new(VmId(id), class, 0.0, activity);
+        vm.state = VmState::Running;
+        vm.started = Some(0.0);
+        vm.pinned = Some((id as usize) % 12);
+        vm
+    }
+
+    #[test]
+    fn idle_workloads_parked_on_core0() {
+        let vms = vec![
+            resident(0, WorkloadClass::Blackscholes, true),
+            resident(1, WorkloadClass::LampLight, false), // idle
+            resident(2, WorkloadClass::LampLight, false), // idle
+        ];
+        let (mut eng, mut daemon) = setup(Policy::Ras, vms);
+        // Warm the monitoring window.
+        for _ in 0..12 {
+            eng.step();
+        }
+        daemon.run_cycle(&mut eng).unwrap();
+        assert_eq!(eng.vms[1].pinned, Some(IDLE_CORE));
+        assert_eq!(eng.vms[2].pinned, Some(IDLE_CORE));
+        // The running workload is NOT on the idle core.
+        assert_ne!(eng.vms[0].pinned, Some(IDLE_CORE));
+    }
+
+    #[test]
+    fn rrs_never_repins() {
+        let vms = vec![
+            resident(0, WorkloadClass::Blackscholes, true),
+            resident(1, WorkloadClass::LampLight, false),
+        ];
+        let (mut eng, mut daemon) = setup(Policy::Rrs, vms);
+        let before: Vec<_> = eng.vms.iter().map(|v| v.pinned).collect();
+        for _ in 0..12 {
+            eng.step();
+        }
+        daemon.run_cycle(&mut eng).unwrap();
+        let after: Vec<_> = eng.vms.iter().map(|v| v.pinned).collect();
+        assert_eq!(before, after);
+        assert_eq!(eng.ledger.repin_count, 0);
+    }
+
+    #[test]
+    fn interval_gating() {
+        let vms = vec![resident(0, WorkloadClass::Hadoop, true)];
+        let (mut eng, mut daemon) = setup(Policy::Ras, vms);
+        assert!(daemon.maybe_cycle(&mut eng).unwrap()); // first is immediate
+        assert!(!daemon.maybe_cycle(&mut eng).unwrap()); // gated
+        for _ in 0..31 {
+            eng.step();
+        }
+        assert!(daemon.maybe_cycle(&mut eng).unwrap()); // 30 s later
+    }
+
+    #[test]
+    fn arrival_placed_immediately() {
+        let mut arriving = Vm::new(
+            VmId(5),
+            WorkloadClass::Jacobi,
+            0.0,
+            ActivityModel::AlwaysOn,
+        );
+        arriving.state = VmState::NotArrived;
+        let vms = vec![resident(0, WorkloadClass::Blackscholes, true), arriving];
+        let (mut eng, mut daemon) = setup(Policy::Ias, vms);
+        for _ in 0..5 {
+            eng.step();
+        }
+        let ids = eng.process_arrivals();
+        assert_eq!(ids, vec![VmId(5)]);
+        daemon.on_arrival(&mut eng, VmId(5)).unwrap();
+        let pinned = eng.vms[1].pinned.unwrap();
+        // IAS must not co-pin jacobi with the blackscholes hog (S > thr).
+        assert_ne!(Some(pinned), eng.vms[0].pinned);
+    }
+
+    #[test]
+    fn ras_consolidates_complementary_running_vms() {
+        let vms = vec![
+            resident(0, WorkloadClass::Blackscholes, true),
+            resident(1, WorkloadClass::StreamLow, true),
+        ];
+        let (mut eng, mut daemon) = setup(Policy::Ras, vms);
+        for _ in 0..12 {
+            eng.step();
+        }
+        daemon.run_cycle(&mut eng).unwrap();
+        assert_eq!(
+            eng.vms[0].pinned, eng.vms[1].pinned,
+            "complementary pair should share a core"
+        );
+    }
+}

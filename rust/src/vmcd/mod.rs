@@ -1,0 +1,20 @@
+//! VMCd — the VM Coordinator daemon (paper §III, Fig. 1).
+//!
+//! Three modules, mirroring the paper's architecture:
+//! * [`monitor`] — polls the hypervisor for per-VM resource usage; derives
+//!   memory bandwidth from the synthetic perf counters (Table I);
+//! * [`actuator`] — applies CPU-pinning decisions through the hypervisor
+//!   (the libvirt-API abstraction);
+//! * [`scheduler`] — the placement policies: RRS (baseline), CAS, RAS
+//!   (Alg. 2), IAS (Alg. 3);
+//! * [`daemon`] — the General Scheduler loop (Alg. 1): every interval,
+//!   idle workloads (< 2.5% CPU over the monitoring window) are parked on
+//!   core 0 and running workloads are re-pinned by the policy.
+
+pub mod actuator;
+pub mod daemon;
+pub mod monitor;
+pub mod scheduler;
+
+pub use daemon::Daemon;
+pub use monitor::{DomainView, Monitor, MonitorSnapshot};

@@ -1,0 +1,44 @@
+//! CAS — the CPU-Aware Scheduler (§IV-B.1).
+//!
+//! "A simpler version of RAS … taking into account only one metric, the
+//! CPU utilization of incoming workloads." Used by the paper as a
+//! reference point; implemented as [`super::ras::Ras`] with the CPU-only
+//! mask.
+
+use super::ras::Ras;
+use super::scoring::ScoringBackend;
+use crate::profiling::ProfileBank;
+
+/// CAS is RAS restricted to the CPU metric.
+pub type Cas = Ras;
+
+impl Cas {
+    pub fn new_cas(bank: ProfileBank, thr: f64, backend: Box<dyn ScoringBackend>) -> Cas {
+        Ras::cpu_only(bank, thr, backend)
+    }
+}
+
+/// Constructor used by the factory in `scheduler::build_with_backend`.
+pub fn new(bank: ProfileBank, thr: f64, backend: Box<dyn ScoringBackend>) -> Cas {
+    Ras::cpu_only(bank, thr, backend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::vmcd::scheduler::{NativeScoring, PlacementState, Policy, Scheduler};
+    use crate::workloads::WorkloadClass;
+
+    #[test]
+    fn cas_reports_cas_policy() {
+        let mut cfg = Config::default();
+        cfg.sim.demand_noise = 0.0;
+        let bank = ProfileBank::generate(&cfg);
+        let mut cas = new(bank, 1.2, Box::new(NativeScoring::new()));
+        assert_eq!(cas.policy(), Policy::Cas);
+        let state = PlacementState::new(2, false);
+        let c = cas.select_pinning(&state, WorkloadClass::Hadoop);
+        assert_eq!(c, 0);
+    }
+}

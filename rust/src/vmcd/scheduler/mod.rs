@@ -1,0 +1,165 @@
+//! Placement policies.
+//!
+//! All four schedulers implement [`Scheduler::select_pinning`] — the
+//! `SelectPinning` procedure of the paper's Algorithms 2 and 3. The daemon
+//! (Alg. 1) builds a [`PlacementState`] of already-placed running
+//! workloads and asks the policy where to pin the next one.
+
+pub mod cas;
+pub mod ias;
+pub mod ras;
+pub mod rrs;
+pub mod scoring;
+
+use crate::profiling::ProfileBank;
+use crate::workloads::WorkloadClass;
+
+pub use scoring::{NativeScoring, Scores, ScoringBackend};
+
+/// Which policy to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Round-Robin Scheduler — the paper's baseline: static, interference-
+    /// and resource-unaware, cannot detect idle workloads.
+    Rrs,
+    /// CPU-Aware Scheduler — RAS restricted to the CPU metric (§IV-B.1).
+    Cas,
+    /// Resource-Aware Scheduler — Alg. 2 over all four metrics.
+    Ras,
+    /// Interference-Aware Scheduler — Alg. 3 over the S matrix.
+    Ias,
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Rrs => "rrs",
+            Policy::Cas => "cas",
+            Policy::Ras => "ras",
+            Policy::Ias => "ias",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Policy> {
+        match name.to_ascii_lowercase().as_str() {
+            "rrs" => Some(Policy::Rrs),
+            "cas" => Some(Policy::Cas),
+            "ras" => Some(Policy::Ras),
+            "ias" => Some(Policy::Ias),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [Policy; 4] = [Policy::Rrs, Policy::Cas, Policy::Ras, Policy::Ias];
+}
+
+/// The incremental placement state the daemon builds while re-pinning:
+/// for each core, the class indices of the running workloads already
+/// placed there this cycle.
+#[derive(Debug, Clone)]
+pub struct PlacementState {
+    /// Per-core class indices (into [`ProfileBank::classes`]).
+    pub cores: Vec<Vec<usize>>,
+    /// Cores the policy may use for running workloads (excludes the idle
+    /// parking core when idle workloads exist — Alg. 1 pins idle workloads
+    /// on core 0 and running ones on "the rest of the server's cores").
+    pub allowed: Vec<usize>,
+}
+
+impl PlacementState {
+    pub fn new(cores: usize, reserve_idle_core: bool) -> PlacementState {
+        let allowed = if reserve_idle_core {
+            (1..cores).collect()
+        } else {
+            (0..cores).collect()
+        };
+        PlacementState {
+            cores: vec![Vec::new(); cores],
+            allowed,
+        }
+    }
+
+    /// Record a placement decided this cycle.
+    pub fn place(&mut self, core: usize, class: WorkloadClass) {
+        self.cores[core].push(class.index());
+    }
+
+    /// Total placed running workloads.
+    pub fn placed(&self) -> usize {
+        self.cores.iter().map(|c| c.len()).sum()
+    }
+}
+
+/// A placement policy.
+pub trait Scheduler {
+    fn policy(&self) -> Policy;
+
+    /// Choose the core for the next running workload (the paper's
+    /// `SelectPinning`). Must return a member of `state.allowed`.
+    fn select_pinning(&mut self, state: &PlacementState, class: WorkloadClass) -> usize;
+
+    /// Whether the policy participates in the periodic re-pin + idle
+    /// consolidation loop. RRS is static: it pins at arrival and never
+    /// reconsiders ("unable to detect whether a workload is in running
+    /// state or idle", §V-C.1).
+    fn dynamic(&self) -> bool {
+        true
+    }
+}
+
+/// Build a scheduler for `policy` with the native scoring backend.
+pub fn build(policy: Policy, bank: &ProfileBank, ras_thr: f64, ias_thr: Option<f64>) -> Box<dyn Scheduler> {
+    build_with_backend(policy, bank, ras_thr, ias_thr, Box::new(NativeScoring::new()))
+}
+
+/// Build a scheduler with an explicit scoring backend (native or XLA).
+pub fn build_with_backend(
+    policy: Policy,
+    bank: &ProfileBank,
+    ras_thr: f64,
+    ias_thr: Option<f64>,
+    backend: Box<dyn ScoringBackend>,
+) -> Box<dyn Scheduler> {
+    match policy {
+        Policy::Rrs => Box::new(rrs::Rrs::new()),
+        Policy::Cas => Box::new(cas::new(bank.clone(), ras_thr, backend)),
+        Policy::Ras => Box::new(ras::Ras::new(bank.clone(), ras_thr, backend)),
+        Policy::Ias => {
+            let thr = ias_thr.unwrap_or_else(|| bank.mean_slowdown());
+            Box::new(ias::Ias::new(bank.clone(), thr, backend))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Policy::from_name("IAS"), Some(Policy::Ias));
+        assert_eq!(Policy::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn placement_state_reserves_core0() {
+        let s = PlacementState::new(12, true);
+        assert!(!s.allowed.contains(&0));
+        assert_eq!(s.allowed.len(), 11);
+        let s2 = PlacementState::new(12, false);
+        assert!(s2.allowed.contains(&0));
+        assert_eq!(s2.allowed.len(), 12);
+    }
+
+    #[test]
+    fn place_tracks_counts() {
+        let mut s = PlacementState::new(4, false);
+        s.place(1, WorkloadClass::Jacobi);
+        s.place(1, WorkloadClass::Hadoop);
+        assert_eq!(s.placed(), 2);
+        assert_eq!(s.cores[1].len(), 2);
+    }
+}

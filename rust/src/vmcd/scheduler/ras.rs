@@ -1,0 +1,163 @@
+//! RAS — the Resource-Aware Scheduler (paper Algorithm 2).
+//!
+//! Scans the cores: the first core whose overload (Eq. 2) stays zero after
+//! adding the workload wins; otherwise the core whose overload *increase*
+//! is minimal.
+
+use super::scoring::ScoringBackend;
+use super::{PlacementState, Policy, Scheduler};
+use crate::profiling::ProfileBank;
+use crate::workloads::WorkloadClass;
+
+pub struct Ras {
+    bank: ProfileBank,
+    /// The resource-utilisation threshold `thr` (paper: 120%).
+    pub thr: f64,
+    backend: Box<dyn ScoringBackend>,
+    cpu_only: bool,
+}
+
+impl Ras {
+    pub fn new(bank: ProfileBank, thr: f64, backend: Box<dyn ScoringBackend>) -> Self {
+        Ras {
+            bank,
+            thr,
+            backend,
+            cpu_only: false,
+        }
+    }
+
+    /// The CAS variant: same algorithm, CPU metric only.
+    pub fn cpu_only(bank: ProfileBank, thr: f64, backend: Box<dyn ScoringBackend>) -> Self {
+        Ras {
+            bank,
+            thr,
+            backend,
+            cpu_only: true,
+        }
+    }
+
+    fn select(&mut self, state: &PlacementState, class: WorkloadClass) -> usize {
+        let scores = self
+            .backend
+            .score(state, class, &self.bank, self.thr, self.cpu_only);
+
+        // Alg. 2 lines 2-4: first core with zero overload after placement.
+        for &core in &state.allowed {
+            if scores.ol_after[core] <= 1e-12 {
+                return core;
+            }
+        }
+        // Alg. 2 lines 5-12: minimal overload increase.
+        let mut best = state.allowed[0];
+        let mut best_delta = f64::INFINITY;
+        for &core in &state.allowed {
+            let delta = scores.ol_after[core] - scores.ol_before[core];
+            if delta < best_delta {
+                best_delta = delta;
+                best = core;
+            }
+        }
+        best
+    }
+}
+
+impl Scheduler for Ras {
+    fn policy(&self) -> Policy {
+        if self.cpu_only {
+            Policy::Cas
+        } else {
+            Policy::Ras
+        }
+    }
+
+    fn select_pinning(&mut self, state: &PlacementState, class: WorkloadClass) -> usize {
+        self.select(state, class)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::vmcd::scheduler::NativeScoring;
+    use crate::workloads::WorkloadClass::*;
+
+    fn bank() -> ProfileBank {
+        let mut cfg = Config::default();
+        cfg.sim.demand_noise = 0.0;
+        ProfileBank::generate(&cfg)
+    }
+
+    fn ras(bank: &ProfileBank) -> Ras {
+        Ras::new(bank.clone(), 1.2, Box::new(NativeScoring::new()))
+    }
+
+    #[test]
+    fn consolidates_complementary_workloads() {
+        let b = bank();
+        let mut r = ras(&b);
+        let mut state = PlacementState::new(12, false);
+        // Blackscholes (CPU) then StreamLow (net): CPU sum ≈ 1.03 < 1.2 —
+        // RAS should co-locate them on core 0.
+        let c0 = r.select_pinning(&state, Blackscholes);
+        assert_eq!(c0, 0);
+        state.place(c0, Blackscholes);
+        let c1 = r.select_pinning(&state, StreamLow);
+        assert_eq!(c1, 0, "complementary workloads should consolidate");
+    }
+
+    #[test]
+    fn spreads_when_threshold_would_be_crossed() {
+        let b = bank();
+        let mut r = ras(&b);
+        let mut state = PlacementState::new(12, false);
+        state.place(0, Blackscholes);
+        // A second blackscholes would push CPU to ~1.9 > 1.2: overload > 0,
+        // so it must go to the next empty core.
+        let c = r.select_pinning(&state, Blackscholes);
+        assert_eq!(c, 1);
+    }
+
+    #[test]
+    fn oversubscribed_picks_min_increase() {
+        let b = bank();
+        let mut r = ras(&b);
+        // Two cores only, both loaded; jacobi everywhere.
+        let mut state = PlacementState::new(2, false);
+        state.place(0, Blackscholes);
+        state.place(0, Blackscholes);
+        state.place(1, Blackscholes);
+        // Core 1 is less overloaded; the new hog must land there.
+        let c = r.select_pinning(&state, Blackscholes);
+        assert_eq!(c, 1);
+    }
+
+    #[test]
+    fn respects_allowed_cores() {
+        let b = bank();
+        let mut r = ras(&b);
+        let state = PlacementState::new(4, true); // core 0 reserved
+        let c = r.select_pinning(&state, Hadoop);
+        assert_ne!(c, 0);
+    }
+
+    #[test]
+    fn cas_ignores_net_saturation() {
+        // Synthetic profile: low CPU, dominant NetIO (the §IV-B.1 case
+        // that separates RAS from CAS).
+        let mut b = bank();
+        b.u[StreamHigh.index()] = [0.2, 0.0, 0.7, 0.0];
+        let mut cas = Ras::cpu_only(b.clone(), 1.2, Box::new(NativeScoring::new()));
+        let mut state = PlacementState::new(4, false);
+        state.place(0, StreamHigh);
+        state.place(0, StreamHigh);
+        // CPU on core 0 is only 0.6; CAS happily stacks a third streamer
+        // (net would be 2.1 — RAS refuses).
+        let c_cas = cas.select_pinning(&state, StreamHigh);
+        assert_eq!(c_cas, 0);
+        let mut r = Ras::new(b, 1.2, Box::new(NativeScoring::new()));
+        let c_ras = r.select_pinning(&state, StreamHigh);
+        assert_ne!(c_ras, 0);
+    }
+}

@@ -1,0 +1,58 @@
+//! RRS — the Round-Robin baseline (§V-C.1).
+//!
+//! "Iterates over the list of workloads, pinning each workload in sequence
+//! on a different core. RRS is interference and resource unaware, and
+//! unable to detect whether a workload is in running state or idle."
+
+use super::{PlacementState, Policy, Scheduler};
+use crate::workloads::WorkloadClass;
+
+#[derive(Debug, Default)]
+pub struct Rrs {
+    next: usize,
+}
+
+impl Rrs {
+    pub fn new() -> Self {
+        Rrs { next: 0 }
+    }
+}
+
+impl Scheduler for Rrs {
+    fn policy(&self) -> Policy {
+        Policy::Rrs
+    }
+
+    fn select_pinning(&mut self, state: &PlacementState, _class: WorkloadClass) -> usize {
+        // RRS ignores the idle-core reservation too — it has no idle
+        // detection, so it cycles over ALL physical cores.
+        let cores = state.cores.len();
+        let core = self.next % cores;
+        self.next += 1;
+        core
+    }
+
+    fn dynamic(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_over_all_cores() {
+        let mut rrs = Rrs::new();
+        let state = PlacementState::new(4, false);
+        let picks: Vec<usize> = (0..6)
+            .map(|_| rrs.select_pinning(&state, WorkloadClass::Hadoop))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn is_static() {
+        assert!(!Rrs::new().dynamic());
+    }
+}

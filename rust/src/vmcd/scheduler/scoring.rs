@@ -1,0 +1,254 @@
+//! Scoring backends: the per-core RAS/IAS scores a policy consults.
+//!
+//! Two interchangeable implementations exist:
+//! * [`NativeScoring`] (here) — straight Rust over the paper's equations;
+//! * `runtime::scoring::XlaScoring` — executes the AOT-compiled Pallas
+//!   scoring kernel through PJRT (one fused call for all cores).
+//!
+//! The integration tests assert both produce identical decisions; the
+//! `scoring_backend` bench compares their latency.
+
+use super::PlacementState;
+use crate::interference::{core_interference, core_overload, cpu_overload};
+use crate::profiling::ProfileBank;
+use crate::workloads::{MetricVec, WorkloadClass};
+
+/// Per-core scores for placing one candidate workload.
+#[derive(Debug, Clone, Default)]
+pub struct Scores {
+    /// RAS overload per core, without the candidate (Eq. 2).
+    pub ol_before: Vec<f64>,
+    /// RAS overload per core, with the candidate added to that core.
+    pub ol_after: Vec<f64>,
+    /// IAS core interference per core, without the candidate (Eq. 3+4).
+    pub ic_before: Vec<f64>,
+    /// IAS core interference with the candidate added.
+    pub ic_after: Vec<f64>,
+}
+
+/// A backend that evaluates the scores for all cores in one call.
+///
+/// Not `Send`: the XLA backend holds PJRT handles (`Rc` internally); the
+/// daemon owns its scheduler on one thread, matching VMCd's single-threaded
+/// scheduler component.
+pub trait ScoringBackend {
+    /// `cpu_only` restricts the overload metric to CPU (the CAS variant).
+    fn score(
+        &mut self,
+        state: &PlacementState,
+        cand: WorkloadClass,
+        bank: &ProfileBank,
+        thr: f64,
+        cpu_only: bool,
+    ) -> Scores;
+
+    fn name(&self) -> &'static str;
+}
+
+/// WI-formula variant, for the ablation the paper motivates in §IV-B.2
+/// (why the mean of sum and product, not sum-only or product-only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WiMode {
+    /// Paper Eq. 3: (Σ + Π)/2.
+    MeanSumProd,
+    /// Σ only — overestimates for insensitive workloads.
+    SumOnly,
+    /// Π only — underestimates (predicts 1.0 for S = 1 co-runners).
+    ProdOnly,
+}
+
+fn wi_with(mode: WiMode, slowdowns: &[f64]) -> f64 {
+    let sum: f64 = slowdowns.iter().sum();
+    let prod: f64 = slowdowns.iter().product();
+    match mode {
+        WiMode::MeanSumProd => 0.5 * (sum + prod),
+        WiMode::SumOnly => sum,
+        WiMode::ProdOnly => prod,
+    }
+}
+
+/// Pure-Rust scoring.
+#[derive(Debug)]
+pub struct NativeScoring {
+    wi_mode: WiMode,
+}
+
+impl Default for NativeScoring {
+    fn default() -> Self {
+        NativeScoring::new()
+    }
+}
+
+impl NativeScoring {
+    pub fn new() -> Self {
+        NativeScoring {
+            wi_mode: WiMode::MeanSumProd,
+        }
+    }
+
+    /// Ablation constructor: swap the WI formula (benches/ablation_wi.rs).
+    pub fn with_wi_mode(wi_mode: WiMode) -> Self {
+        NativeScoring { wi_mode }
+    }
+}
+
+fn mask_cpu(u: MetricVec) -> MetricVec {
+    [u[0], 0.0, 0.0, 0.0]
+}
+
+impl ScoringBackend for NativeScoring {
+    fn score(
+        &mut self,
+        state: &PlacementState,
+        cand: WorkloadClass,
+        bank: &ProfileBank,
+        thr: f64,
+        cpu_only: bool,
+    ) -> Scores {
+        let ci = cand.index();
+        let ncores = state.cores.len();
+        let mut out = Scores {
+            ol_before: Vec::with_capacity(ncores),
+            ol_after: Vec::with_capacity(ncores),
+            ic_before: Vec::with_capacity(ncores),
+            ic_after: Vec::with_capacity(ncores),
+        };
+
+        for members in &state.cores {
+            // ---- RAS overload ----
+            let mut loads: Vec<MetricVec> = members.iter().map(|&m| bank.u[m]).collect();
+            if cpu_only {
+                for l in loads.iter_mut() {
+                    *l = mask_cpu(*l);
+                }
+            }
+            let (ol_b, ol_a) = if cpu_only {
+                let b = cpu_overload(&loads, thr);
+                loads.push(mask_cpu(bank.u[ci]));
+                (b, cpu_overload(&loads, thr))
+            } else {
+                let b = core_overload(&loads, thr);
+                loads.push(bank.u[ci]);
+                (b, core_overload(&loads, thr))
+            };
+            out.ol_before.push(ol_b);
+            out.ol_after.push(ol_a);
+
+            // ---- IAS interference ----
+            // Before: WI of each member against its co-members.
+            let wi_b: Vec<f64> = members
+                .iter()
+                .enumerate()
+                .map(|(pos, &m)| {
+                    let slows: Vec<f64> = members
+                        .iter()
+                        .enumerate()
+                        .filter(|&(p2, _)| p2 != pos)
+                        .map(|(_, &m2)| bank.s[m][m2])
+                        .collect();
+                    wi_with(self.wi_mode, &slows)
+                })
+                .collect();
+            out.ic_before.push(core_interference(&wi_b));
+
+            // After: every member gains the candidate as a co-runner, and
+            // the candidate gets its own WI.
+            let mut wi_a: Vec<f64> = members
+                .iter()
+                .enumerate()
+                .map(|(pos, &m)| {
+                    let mut slows: Vec<f64> = members
+                        .iter()
+                        .enumerate()
+                        .filter(|&(p2, _)| p2 != pos)
+                        .map(|(_, &m2)| bank.s[m][m2])
+                        .collect();
+                    slows.push(bank.s[m][ci]);
+                    wi_with(self.wi_mode, &slows)
+                })
+                .collect();
+            let cand_slows: Vec<f64> = members.iter().map(|&m| bank.s[ci][m]).collect();
+            wi_a.push(wi_with(self.wi_mode, &cand_slows));
+            out.ic_after.push(core_interference(&wi_a));
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::util::close;
+    use crate::workloads::WorkloadClass::*;
+
+    fn bank() -> ProfileBank {
+        let mut cfg = Config::default();
+        cfg.sim.demand_noise = 0.0;
+        ProfileBank::generate(&cfg)
+    }
+
+    #[test]
+    fn empty_core_scores() {
+        let b = bank();
+        let state = PlacementState::new(4, false);
+        let mut ns = NativeScoring::new();
+        let s = ns.score(&state, Blackscholes, &b, 1.2, false);
+        assert_eq!(s.ol_before, vec![0.0; 4]);
+        // Alone on an empty core: no overload, WI = 0.5.
+        assert_eq!(s.ol_after, vec![0.0; 4]);
+        assert_eq!(s.ic_before, vec![0.0; 4]);
+        for &ic in &s.ic_after {
+            assert!(close(ic, 0.5, 1e-12), "{ic}");
+        }
+    }
+
+    #[test]
+    fn overload_appears_beyond_threshold() {
+        let b = bank();
+        let mut state = PlacementState::new(2, false);
+        state.place(0, Blackscholes); // ~0.95 cpu
+        let mut ns = NativeScoring::new();
+        let s = ns.score(&state, Blackscholes, &b, 1.2, false);
+        assert!(close(s.ol_before[0], 0.0, 1e-9));
+        // Two blackscholes ≈ 1.9 CPU > 1.2 -> overload ≈ 0.7.
+        assert!(s.ol_after[0] > 0.5, "{}", s.ol_after[0]);
+        assert!(close(s.ol_after[1], 0.0, 1e-9));
+    }
+
+    #[test]
+    fn cpu_only_ignores_other_metrics() {
+        // Synthetic profile: a class with low CPU but dominant NetIO —
+        // the case separating RAS from CAS (§IV-B.1).
+        let mut b = bank();
+        b.u[StreamHigh.index()] = [0.2, 0.0, 0.7, 0.0];
+        let mut state = PlacementState::new(1, false);
+        state.place(0, StreamHigh);
+        state.place(0, StreamHigh);
+        let mut ns = NativeScoring::new();
+        let full = ns.score(&state, StreamHigh, &b, 1.2, false);
+        let cpu = ns.score(&state, StreamHigh, &b, 1.2, true);
+        // Full RAS sees net saturation (3 × 0.7 = 2.1 > 1.2); CAS doesn't
+        // (3 × 0.2 = 0.6 < 1.2).
+        assert!(full.ol_after[0] > 0.5, "{}", full.ol_after[0]);
+        assert!(close(cpu.ol_after[0], 0.0, 1e-9), "{}", cpu.ol_after[0]);
+    }
+
+    #[test]
+    fn interference_grows_with_stacking() {
+        let b = bank();
+        let mut ns = NativeScoring::new();
+        let mut state = PlacementState::new(1, false);
+        let mut last = 0.0;
+        for _ in 0..4 {
+            let s = ns.score(&state, Jacobi, &b, 1.2, false);
+            assert!(s.ic_after[0] > last);
+            last = s.ic_after[0];
+            state.place(0, Jacobi);
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Arrival processes for scenario generation.
+//!
+//! The paper's random scenario uses a fixed 30 s inter-arrival time (§V-C.1);
+//! the dynamic scenario activates pre-placed VMs in 6- or 12-job batches.
+//! A Poisson process is also provided for the extension experiments.
+
+use crate::util::rng::Rng;
+
+/// A stream of arrival times (seconds from scenario start).
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Fixed inter-arrival gap (the paper's 30 s).
+    Uniform { gap: f64 },
+    /// Poisson arrivals with the given mean gap.
+    Poisson { mean_gap: f64 },
+    /// Everyone arrives at t = 0 (dynamic scenario placement).
+    Immediate,
+}
+
+impl ArrivalProcess {
+    /// Generate `n` arrival times.
+    pub fn times(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        match self {
+            ArrivalProcess::Uniform { gap } => {
+                (0..n).map(|i| i as f64 * gap).collect()
+            }
+            ArrivalProcess::Poisson { mean_gap } => {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        let at = t;
+                        t += rng.exponential(*mean_gap);
+                        at
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Immediate => vec![0.0; n],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_thirty_seconds() {
+        let mut rng = Rng::new(1);
+        let ts = ArrivalProcess::Uniform { gap: 30.0 }.times(4, &mut rng);
+        assert_eq!(ts, vec![0.0, 30.0, 60.0, 90.0]);
+    }
+
+    #[test]
+    fn poisson_monotone_and_mean() {
+        let mut rng = Rng::new(2);
+        let ts = ArrivalProcess::Poisson { mean_gap: 10.0 }.times(2000, &mut rng);
+        for w in ts.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        let mean_gap = ts.last().unwrap() / (ts.len() as f64 - 1.0);
+        assert!((mean_gap - 10.0).abs() < 1.0, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn immediate_is_all_zero() {
+        let mut rng = Rng::new(3);
+        assert_eq!(
+            ArrivalProcess::Immediate.times(3, &mut rng),
+            vec![0.0, 0.0, 0.0]
+        );
+    }
+}

@@ -1,0 +1,66 @@
+//! The paper's workload classes (§V-B) as demand / performance models.
+//!
+//! Each class mirrors one of the benchmarks of the paper's evaluation:
+//! PARSEC `blackscholes`, Hadoop terasort, PolyBench `jacobi-2d`, the LAMP
+//! REST service under a light and a heavy JMeter pattern, and the
+//! CloudSuite media-streaming server at three client loads.
+//!
+//! A class carries:
+//! * a **demand vector** over the four monitored metrics (paper §III):
+//!   CPU (fraction of one core — VMs have a single vCPU, §V-A), DiskIO and
+//!   NetIO (fraction of host capacity), memory bandwidth (fraction of one
+//!   socket's capacity);
+//! * **pressure / sensitivity vectors** driving pairwise micro-architectural
+//!   interference (the phenomenon the paper measures into matrix S — the
+//!   scheduler never sees these constants, only the profiled S);
+//! * a **performance model**: completion time for batch classes, request
+//!   latency for latency-critical classes, delivered throughput for
+//!   streaming classes — matching §V-B's metric choice per benchmark.
+
+pub mod arrivals;
+pub mod catalog;
+pub mod perf;
+
+pub use catalog::{catalog, ClassSpec, WorkloadClass, ALL_CLASSES};
+pub use perf::{PerfModel, WorkloadKind};
+
+/// Monitored metrics, in the paper's order (§III: CPU, DiskIO, NetIO,
+/// Memory Bandwidth).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Cpu = 0,
+    DiskIo = 1,
+    NetIo = 2,
+    MemBw = 3,
+}
+
+/// Number of monitored metrics (paper: M = 4).
+pub const NUM_METRICS: usize = 4;
+
+/// A demand/utilisation vector over the monitored metrics.
+pub type MetricVec = [f64; NUM_METRICS];
+
+/// Element-wise sum of metric vectors.
+pub fn add(a: MetricVec, b: MetricVec) -> MetricVec {
+    [a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3]]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_order_matches_paper() {
+        assert_eq!(Metric::Cpu as usize, 0);
+        assert_eq!(Metric::DiskIo as usize, 1);
+        assert_eq!(Metric::NetIo as usize, 2);
+        assert_eq!(Metric::MemBw as usize, 3);
+    }
+
+    #[test]
+    fn add_vectors() {
+        let a = [0.1, 0.2, 0.3, 0.4];
+        let b = [0.4, 0.3, 0.2, 0.1];
+        assert_eq!(add(a, b), [0.5, 0.5, 0.5, 0.5]);
+    }
+}

