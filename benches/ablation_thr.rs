@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
         cfg.sched.ras_threshold = thr;
         let (mut perf, mut hours) = (0.0, 0.0);
         for &seed in &seeds {
-            let spec = random::build(cfg.host.cores, 1.0, seed);
+            let spec = random::build(cfg.host.cores, 1.0, seed)?;
             let r = run_scenario(&cfg, &spec, Policy::Ras, &bank)?;
             perf += r.avg_perf;
             hours += r.core_hours;
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
         cfg.host.ctx_switch_overhead = kappa;
         // Re-profile: κ changes the S matrix the scheduler sees.
         let bank_k = vmcd::profiling::ProfileBank::generate(&cfg);
-        let spec = random::build(cfg.host.cores, 1.5, seeds[0]);
+        let spec = random::build(cfg.host.cores, 1.5, seeds[0])?;
         let r = run_scenario(&cfg, &spec, Policy::Ias, &bank_k)?;
         println!("{:<8} {:>10.3} {:>12.3}", kappa, r.avg_perf, r.core_hours);
     }

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
             let mut perf_sum = 0.0;
             let mut hours_sum = 0.0;
             for &seed in &seeds {
-                let spec = random::build(cfg.host.cores, sr, seed);
+                let spec = random::build(cfg.host.cores, sr, seed)?;
                 let backend = Box::new(NativeScoring::with_wi_mode(mode));
                 let r =
                     run_scenario_with_backend(&cfg, &spec, Policy::Ias, &bank, backend)?;

@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
         "SR/host", "strategy", "perf", "core-hours", "host-hours", "migrations"
     );
     for sr in [0.6, 1.2, 1.8, 2.4] {
-        let scen = random::build(hosts * cfg.host.cores, sr, 42);
+        let scen = random::build(hosts * cfg.host.cores, sr, 42)?;
         for strategy in [Strategy::LocalVmcd, Strategy::GlobalMigration] {
             let spec = ClusterSpec::new(hosts, strategy);
             let r = ClusterSim::new(spec, &scen, &bank).run(&bank, scen.min_duration)?;
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut b = Bench::new();
     b.section("cluster simulation wall time (3 hosts, SR 1.2)");
-    let scen = random::build(hosts * cfg.host.cores, 1.2, 42);
+    let scen = random::build(hosts * cfg.host.cores, 1.2, 42)?;
     for strategy in [Strategy::LocalVmcd, Strategy::GlobalMigration] {
         b.run(&format!("cluster/{}", strategy.name()), || {
             let spec = ClusterSpec::new(hosts, strategy);

@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     // Micro: wall time of one full SR=1 scenario per policy.
     let mut b = Bench::new();
     b.section("fig2: end-to-end scenario simulation time (SR=1)");
-    let spec = random::build(cfg.host.cores, 1.0, seeds[0]);
+    let spec = random::build(cfg.host.cores, 1.0, seeds[0])?;
     for policy in Policy::ALL {
         b.run(&format!("simulate/random-sr1/{}", policy.name()), || {
             run_scenario(&cfg, &spec, policy, &bank).unwrap();

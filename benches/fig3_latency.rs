@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut b = Bench::new();
     b.section("fig3: end-to-end scenario simulation time (SR=2)");
-    let spec = latency::build(cfg.host.cores, 2.0, seeds[0]);
+    let spec = latency::build(cfg.host.cores, 2.0, seeds[0])?;
     for policy in Policy::ALL {
         b.run(&format!("simulate/latency-sr2/{}", policy.name()), || {
             run_scenario(&cfg, &spec, policy, &bank).unwrap();

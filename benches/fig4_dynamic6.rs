@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut b = Bench::new();
     b.section("fig4: dynamic-6 scenario simulation time");
-    let spec = dynamic::build(6, seeds[0]);
+    let spec = dynamic::build(6, seeds[0])?;
     for policy in Policy::ALL {
         b.run(&format!("simulate/dynamic6/{}", policy.name()), || {
             run_scenario(&cfg, &spec, policy, &bank).unwrap();

@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut b = Bench::new();
     b.section("fig5: dynamic-12 scenario simulation time");
-    let spec = dynamic::build(12, seeds[0]);
+    let spec = dynamic::build(12, seeds[0])?;
     for policy in Policy::ALL {
         b.run(&format!("simulate/dynamic12/{}", policy.name()), || {
             run_scenario(&cfg, &spec, policy, &bank).unwrap();

@@ -3,12 +3,14 @@
 //!
 //! DESIGN.md §Perf target: ≤ 10 µs per native placement decision — VMCd
 //! runs every 30 s, so the scheduler must be nowhere near the bottleneck.
+//! States come from `Scheduler::new_state`, so the scoring policies run on
+//! the incremental placement-scoring engine exactly as the daemon does.
 
 mod common;
 
 use vmcd::bench::Bench;
 use vmcd::util::rng::Rng;
-use vmcd::vmcd::scheduler::{self, PlacementState, Policy};
+use vmcd::vmcd::scheduler::{self, Policy};
 use vmcd::workloads::ALL_CLASSES;
 
 fn main() -> anyhow::Result<()> {
@@ -22,7 +24,7 @@ fn main() -> anyhow::Result<()> {
         for policy in Policy::ALL {
             let mut sched = scheduler::build(policy, &bank, 1.2, None);
             let mut rng = Rng::new(7);
-            let mut state = PlacementState::new(cfg.host.cores, false);
+            let mut state = sched.new_state(cfg.host.cores, false);
             for _ in 0..occupancy {
                 let core = rng.below(cfg.host.cores);
                 state.place(core, *rng.pick(&ALL_CLASSES));
@@ -44,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         let mut rng = Rng::new(3);
         let classes: Vec<_> = (0..24).map(|_| *rng.pick(&ALL_CLASSES)).collect();
         b.run("cycle/ras/24vms", || {
-            let mut state = PlacementState::new(cfg.host.cores, true);
+            let mut state = sched.new_state(cfg.host.cores, true);
             for &class in &classes {
                 let core = sched.select_pinning(&state, class);
                 state.place(core, class);

@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         for policy in Policy::ALL {
             let (mut perf, mut hours) = (0.0, 0.0);
             for &seed in &seeds {
-                let spec = random::build(cfg.host.cores, sr, seed);
+                let spec = random::build(cfg.host.cores, sr, seed)?;
                 let r = run_scenario(&cfg, &spec, policy, &bank)?;
                 perf += r.avg_perf;
                 hours += r.core_hours;

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     );
     for sr in [0.6, 1.2, 1.8] {
         // Cluster-wide population: hosts × 12 cores × sr.
-        let scen = random::build(hosts * cfg.host.cores, sr, cfg.sim.seed);
+        let scen = random::build(hosts * cfg.host.cores, sr, cfg.sim.seed)?;
         for strategy in [Strategy::LocalVmcd, Strategy::GlobalMigration] {
             let spec = ClusterSpec::new(hosts, strategy);
             let sim = ClusterSim::new(spec, &scen, &bank);

@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     compute_rt.prepare("jacobi")?;
 
     // ---- build the scenario ----
-    let spec = vmcd::scenarios::random::build(cfg.host.cores, sr, cfg.sim.seed);
+    let spec = vmcd::scenarios::random::build(cfg.host.cores, sr, cfg.sim.seed)?;
     let vms: Vec<Vm> = spec
         .vms
         .iter()

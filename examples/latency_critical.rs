@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     let sr = args.opt_f64("sr", 2.0)?;
     let cfg = Config::default();
     let bank = ProfileBank::generate(&cfg);
-    let spec = latency::build(cfg.host.cores, sr, cfg.sim.seed);
+    let spec = latency::build(cfg.host.cores, sr, cfg.sim.seed)?;
 
     println!("latency-critical heavy scenario, SR = {sr} ({} VMs)", spec.vms.len());
     for (class, n) in spec.class_histogram() {

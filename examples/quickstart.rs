@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
 
     // 2. One random scenario (paper §V-C.1) at SR = 1 under each policy.
     println!("random scenario, SR = 1.0 (12 VMs on the 12-core host):");
-    let spec = random::build(cfg.host.cores, 1.0, cfg.sim.seed);
+    let spec = random::build(cfg.host.cores, 1.0, cfg.sim.seed)?;
     let mut rrs_baseline = None;
     for policy in Policy::ALL {
         let r = run_scenario(&cfg, &spec, policy, &bank)?;

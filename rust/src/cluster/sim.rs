@@ -20,7 +20,10 @@ use anyhow::Result;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
     /// Dispatch at arrival; each host's own VMCd daemon optimises locally
-    /// by re-pinning. No migrations (the paper's approach).
+    /// by re-pinning. No migrations (the paper's approach). Each daemon's
+    /// scheduler scores on the incremental placement cache, so a lockstep
+    /// cluster step costs O(resident VMs) per host rather than
+    /// O(cores × members²).
     LocalVmcd,
     /// Centralized scheduler with global knowledge: periodic reshuffle
     /// packs VMs onto the fewest hosts via live migration; hosts pin
@@ -403,7 +406,7 @@ mod tests {
 
     fn cluster_scenario(hosts: usize, sr: f64, seed: u64) -> ScenarioSpec {
         // SR is per-host: hosts × cores × sr VMs cluster-wide.
-        random::build(hosts * 12, sr, seed)
+        random::build(hosts * 12, sr, seed).unwrap()
     }
 
     #[test]

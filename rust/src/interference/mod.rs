@@ -56,16 +56,28 @@ pub fn core_interference(wi: &[f64]) -> f64 {
     wi.iter().copied().fold(0.0, f64::max)
 }
 
-/// Eq. 5 — the IAS threshold: the mean entry of the pairwise slowdown
-/// matrix S ("close to the average slowdown of a pair of random
-/// co-scheduled workloads"). The paper selects 1.5 on its testbed.
+/// Eq. 5 — the IAS threshold: the mean *off-diagonal* entry of the
+/// pairwise slowdown matrix S ("close to the average slowdown of a pair
+/// of random co-scheduled workloads"). A pair of co-scheduled workloads
+/// is two *distinct* residents, so the self-slowdowns S[i][i] — which are
+/// among the heaviest entries — are excluded; including them inflated the
+/// acceptance threshold, letting IAS co-pin pairs it should refuse. The
+/// paper selects 1.5 on its testbed; with
+/// fewer than two classes there are no pairs and 1.5 is the fallback.
 pub fn ias_threshold(s: &[Vec<f64>]) -> f64 {
     let n = s.len();
-    if n == 0 {
+    if n <= 1 {
         return 1.5;
     }
-    let total: f64 = s.iter().flat_map(|row| row.iter()).sum();
-    total / (n * n) as f64
+    let mut total = 0.0;
+    for (i, row) in s.iter().enumerate() {
+        for (j, &x) in row.iter().enumerate() {
+            if i != j {
+                total += x;
+            }
+        }
+    }
+    total / (n * (n - 1)) as f64
 }
 
 #[cfg(test)]
@@ -125,9 +137,16 @@ mod tests {
     }
 
     #[test]
-    fn threshold_is_matrix_mean() {
+    fn threshold_is_off_diagonal_mean() {
+        // Off-diagonal entries are s[0][1] = 2 and s[1][0] = 1 -> mean 1.5.
         let s = vec![vec![1.0, 2.0], vec![1.0, 2.0]];
         assert!(close(ias_threshold(&s), 1.5, 1e-12));
-        assert!(close(ias_threshold(&[]), 1.5, 1e-12)); // fallback
+        // The diagonal self-slowdowns must not skew the mean: a full-matrix
+        // mean here would be 5.0, but the pairs average to 1.0.
+        let diag_heavy = vec![vec![9.0, 1.0], vec![1.0, 9.0]];
+        assert!(close(ias_threshold(&diag_heavy), 1.0, 1e-12));
+        // Fallbacks: no classes / a single class have no pairs.
+        assert!(close(ias_threshold(&[]), 1.5, 1e-12));
+        assert!(close(ias_threshold(&[vec![3.0]]), 1.5, 1e-12));
     }
 }

@@ -129,7 +129,12 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn build_spec(cfg: &Config, kind: ScenarioKind, sr: f64, seed: u64) -> scenarios::ScenarioSpec {
+fn build_spec(
+    cfg: &Config,
+    kind: ScenarioKind,
+    sr: f64,
+    seed: u64,
+) -> Result<scenarios::ScenarioSpec> {
     match kind {
         ScenarioKind::Random => scenarios::random::build(cfg.host.cores, sr, seed),
         ScenarioKind::LatencyHeavy => scenarios::latency::build(cfg.host.cores, sr, seed),
@@ -147,7 +152,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let sr = args.opt_f64("sr", 1.0)?;
     let seed = args.opt_u64("seed", cfg.sim.seed)?;
     let bank = bank_for(&cfg, args);
-    let spec = build_spec(&cfg, kind, sr, seed);
+    let spec = build_spec(&cfg, kind, sr, seed)?;
 
     log::info!(
         "scenario {} ({} VMs) under {}",
@@ -237,7 +242,9 @@ fn cmd_validate(args: &Args) -> Result<()> {
 
     let mut max_err = 0.0f64;
     for case in 0..cases {
-        let mut state = PlacementState::new(cfg.host.cores, rng.chance(0.3));
+        // Cached state: the native side runs the incremental engine, so
+        // this battery validates XLA against the production hot path.
+        let mut state = PlacementState::with_bank(cfg.host.cores, rng.chance(0.3), &bank);
         let nvms = rng.below(20);
         for _ in 0..nvms {
             let core = rng.below(cfg.host.cores);
@@ -306,7 +313,7 @@ fn cmd_daemon(args: &Args) -> Result<()> {
     let ticks = args.opt_usize("ticks", 300)?;
     let ms = args.opt_u64("ms-per-tick", 5)?;
     let bank = bank_for(&cfg, args);
-    let spec = scenarios::random::build(cfg.host.cores, 1.5, cfg.sim.seed);
+    let spec = scenarios::random::build(cfg.host.cores, 1.5, cfg.sim.seed)?;
 
     let vms: Vec<vmcd::hostsim::Vm> = spec
         .vms

@@ -296,13 +296,15 @@ mod tests {
 
     #[test]
     fn mean_slowdown_threshold_separates_light_from_heavy() {
-        // Eq. 5: the threshold is the mean of S. The paper lands at 1.5 on
-        // its testbed; our calibrated catalog has more near-1.0 service
+        // Eq. 5: the threshold is the mean slowdown of a pair of random
+        // co-scheduled workloads — distinct residents, so the diagonal
+        // self-slowdowns are excluded. The paper lands at 1.5 on its
+        // testbed; our calibrated catalog has more near-1.0 service
         // pairs, so the mean sits lower — what matters for IAS behaviour
         // is that it separates light pairs (below) from heavy ones (above).
         let bank = ProfileBank::generate(&small_cfg());
         let m = bank.mean_slowdown();
-        assert!((1.05..1.6).contains(&m), "mean slowdown {m}");
+        assert!((1.0..1.6).contains(&m), "mean slowdown {m}");
         let light = bank.slowdown(WorkloadClass::LampLight, WorkloadClass::StreamLow);
         let heavy = bank.slowdown(WorkloadClass::Jacobi, WorkloadClass::Jacobi);
         assert!(light < m, "light pair {light} must sit below the mean {m}");

@@ -119,7 +119,7 @@ fn bar_figure<F>(
     build: F,
 ) -> Result<FigureData>
 where
-    F: Fn(usize, f64, u64) -> crate::scenarios::ScenarioSpec,
+    F: Fn(usize, f64, u64) -> Result<crate::scenarios::ScenarioSpec>,
 {
     let mut rows = Vec::new();
     for &sr in srs {
@@ -127,7 +127,7 @@ where
         let mut per_policy: Vec<(Policy, Vec<ScenarioResult>)> =
             Policy::ALL.iter().map(|&p| (p, Vec::new())).collect();
         for &seed in seeds {
-            let spec = build(cfg.host.cores, sr, seed);
+            let spec = build(cfg.host.cores, sr, seed)?;
             for (policy, acc) in per_policy.iter_mut() {
                 acc.push(run_scenario(cfg, &spec, *policy, bank)?);
             }
@@ -198,7 +198,7 @@ pub fn fig45(
     seed: u64,
 ) -> Result<FigureData> {
     let id: &'static str = if batch == 6 { "fig4" } else { "fig5" };
-    let spec = dynamic::build(batch, seed);
+    let spec = dynamic::build(batch, seed)?;
     let mut series = Vec::new();
     let mut rows = Vec::new();
     let mut rrs_ref: Option<ScenarioResult> = None;
@@ -236,7 +236,7 @@ pub fn fig6(cfg: &Config, bank: &ProfileBank, seeds: &[u64]) -> Result<FigureDat
         let mut per_policy: Vec<(Policy, Vec<ScenarioResult>)> =
             Policy::ALL.iter().map(|&p| (p, Vec::new())).collect();
         for &seed in seeds {
-            let spec = dynamic::build(batch, seed);
+            let spec = dynamic::build(batch, seed)?;
             for (policy, acc) in per_policy.iter_mut() {
                 acc.push(run_scenario(cfg, &spec, *policy, bank)?);
             }

@@ -46,14 +46,16 @@ impl XlaScoring {
 }
 
 impl ScoringBackend for XlaScoring {
-    fn score(
+    fn score_into(
         &mut self,
         state: &PlacementState,
         cand: WorkloadClass,
         bank: &ProfileBank,
         thr: f64,
         cpu_only: bool,
-    ) -> Scores {
+        out: &mut Scores,
+    ) {
+        out.clear();
         let ncores = state.cores.len();
         assert!(ncores <= C_MAX, "host has more cores than the compiled kernel");
 
@@ -120,15 +122,14 @@ impl ScoringBackend for XlaScoring {
             )
             .expect("score kernel execution failed");
 
-        let take = |v: &Vec<f32>| -> Vec<f64> {
-            v.iter().take(ncores).map(|&x| x as f64).collect()
-        };
-        Scores {
-            ol_before: take(&outs[0]),
-            ol_after: take(&outs[1]),
-            ic_before: take(&outs[2]),
-            ic_after: take(&outs[3]),
-        }
+        out.ol_before
+            .extend(outs[0].iter().take(ncores).map(|&x| x as f64));
+        out.ol_after
+            .extend(outs[1].iter().take(ncores).map(|&x| x as f64));
+        out.ic_before
+            .extend(outs[2].iter().take(ncores).map(|&x| x as f64));
+        out.ic_after
+            .extend(outs[3].iter().take(ncores).map(|&x| x as f64));
     }
 
     fn name(&self) -> &'static str {
@@ -162,7 +163,9 @@ mod tests {
         let Some((mut xla, bank)) = setup() else { return };
         let mut native = NativeScoring::new();
 
-        let mut state = PlacementState::new(12, false);
+        // Cached state: native runs the incremental path, XLA the fused
+        // kernel; both must agree.
+        let mut state = PlacementState::with_bank(12, false, &bank);
         state.place(0, Blackscholes);
         state.place(0, StreamLow);
         state.place(1, Jacobi);

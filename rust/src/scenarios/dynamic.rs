@@ -11,6 +11,7 @@ use super::spec::{ScenarioSpec, VmTemplate};
 use crate::hostsim::ActivityModel;
 use crate::util::rng::Rng;
 use crate::workloads::ALL_CLASSES;
+use anyhow::{ensure, Result};
 
 /// Phase length between activation batches (seconds).
 pub const PHASE: f64 = 420.0;
@@ -18,11 +19,13 @@ pub const PHASE: f64 = 420.0;
 /// Total VMs in the scenario (paper: 24).
 pub const TOTAL_VMS: usize = 24;
 
-/// Build the dynamic scenario with `batch_size` ∈ {6, 12}.
-pub fn build(batch_size: usize, seed: u64) -> ScenarioSpec {
-    assert!(
-        TOTAL_VMS % batch_size == 0,
-        "batch size must divide {TOTAL_VMS}"
+/// Build the dynamic scenario with `batch_size` ∈ {6, 12}. A batch size
+/// that does not evenly divide the resident VM count is a malformed
+/// request and fails cleanly.
+pub fn build(batch_size: usize, seed: u64) -> Result<ScenarioSpec> {
+    ensure!(
+        batch_size > 0 && TOTAL_VMS % batch_size == 0,
+        "batch size {batch_size} must divide {TOTAL_VMS}"
     );
     let mut rng = Rng::new(seed ^ 0x5EED_0003);
     let groups = TOTAL_VMS / batch_size;
@@ -48,12 +51,12 @@ pub fn build(batch_size: usize, seed: u64) -> ScenarioSpec {
             });
         }
     }
-    ScenarioSpec {
+    Ok(ScenarioSpec {
         name: format!("dynamic-{batch_size}"),
         sr: TOTAL_VMS as f64 / 12.0,
         vms,
         min_duration: groups as f64 * PHASE,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -64,7 +67,7 @@ mod tests {
     #[test]
     fn twenty_four_vms_resident_from_t0() {
         for bs in [6, 12] {
-            let spec = build(bs, 1);
+            let spec = build(bs, 1).unwrap();
             assert_eq!(spec.vms.len(), 24);
             assert!(spec.vms.iter().all(|vm| vm.arrival == 0.0));
         }
@@ -72,7 +75,7 @@ mod tests {
 
     #[test]
     fn groups_activate_in_phases() {
-        let spec = build(6, 2);
+        let spec = build(6, 2).unwrap();
         for (i, vm) in spec.vms.iter().enumerate() {
             let group = i / 6;
             let expected_start = group as f64 * PHASE;
@@ -87,7 +90,7 @@ mod tests {
 
     #[test]
     fn services_deactivate_batch_jobs_run_out() {
-        let spec = build(12, 3);
+        let spec = build(12, 3).unwrap();
         for vm in &spec.vms {
             let kind = crate::workloads::catalog::spec_of(vm.class).perf.kind;
             if let ActivityModel::Windows(ws) = &vm.activity {
@@ -100,8 +103,10 @@ mod tests {
     }
 
     #[test]
-    fn bad_batch_size_panics() {
-        let result = std::panic::catch_unwind(|| build(7, 1));
-        assert!(result.is_err());
+    fn bad_batch_size_is_an_error() {
+        assert!(build(7, 1).is_err(), "non-divisor batch size");
+        assert!(build(0, 1).is_err(), "zero batch size");
+        let msg = format!("{:#}", build(7, 1).unwrap_err());
+        assert!(msg.contains("batch size 7"), "{msg}");
     }
 }

@@ -8,10 +8,16 @@ use crate::hostsim::ActivityModel;
 use crate::util::rng::Rng;
 use crate::workloads::arrivals::ArrivalProcess;
 use crate::workloads::WorkloadClass;
+use anyhow::{ensure, Result};
 
 /// Composition: ~65% lamp-light, ~10% lamp-heavy, ~15% low/med streaming,
-/// ~10% batch.
-pub fn build(cores: usize, sr: f64, seed: u64) -> ScenarioSpec {
+/// ~10% batch. Fails cleanly on a malformed request.
+pub fn build(cores: usize, sr: f64, seed: u64) -> Result<ScenarioSpec> {
+    ensure!(cores > 0, "latency scenario needs at least one core");
+    ensure!(
+        sr.is_finite() && sr > 0.0,
+        "subscription ratio must be positive and finite, got {sr}"
+    );
     let mut rng = Rng::new(seed ^ 0x5EED_0002);
     let n = ((cores as f64) * sr).round().max(1.0) as usize;
     let arrivals = ArrivalProcess::Uniform { gap: 30.0 }.times(n, &mut rng);
@@ -56,12 +62,12 @@ pub fn build(cores: usize, sr: f64, seed: u64) -> ScenarioSpec {
             activity,
         });
     }
-    ScenarioSpec {
+    Ok(ScenarioSpec {
         name: format!("latency-sr{sr}"),
         sr,
         vms,
         min_duration: 900.0,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -71,7 +77,7 @@ mod tests {
 
     #[test]
     fn latency_dominates_composition() {
-        let spec = build(12, 2.0, 11);
+        let spec = build(12, 2.0, 11).unwrap();
         let lc = spec
             .vms
             .iter()
@@ -94,7 +100,7 @@ mod tests {
         let mut batch = 0;
         let mut streaming = 0;
         for seed in 0..8 {
-            let spec = build(12, 2.0, seed);
+            let spec = build(12, 2.0, seed).unwrap();
             for vm in &spec.vms {
                 match crate::workloads::catalog::spec_of(vm.class).perf.kind {
                     WorkloadKind::Batch => batch += 1,
@@ -109,7 +115,8 @@ mod tests {
 
     #[test]
     fn count_tracks_sr() {
-        assert_eq!(build(12, 0.5, 1).vms.len(), 6);
-        assert_eq!(build(12, 2.0, 1).vms.len(), 24);
+        assert_eq!(build(12, 0.5, 1).unwrap().vms.len(), 6);
+        assert_eq!(build(12, 2.0, 1).unwrap().vms.len(), 24);
+        assert!(build(0, 1.0, 1).is_err(), "zero cores must error");
     }
 }

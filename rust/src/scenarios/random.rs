@@ -14,10 +14,17 @@ use crate::hostsim::ActivityModel;
 use crate::util::rng::Rng;
 use crate::workloads::arrivals::ArrivalProcess;
 use crate::workloads::{WorkloadClass, ALL_CLASSES};
+use anyhow::{ensure, Result};
 
 /// Build the random scenario for a host with `cores` cores at subscription
-/// ratio `sr`.
-pub fn build(cores: usize, sr: f64, seed: u64) -> ScenarioSpec {
+/// ratio `sr`. Fails cleanly (instead of producing a nonsense spec) on a
+/// malformed request.
+pub fn build(cores: usize, sr: f64, seed: u64) -> Result<ScenarioSpec> {
+    ensure!(cores > 0, "random scenario needs at least one core");
+    ensure!(
+        sr.is_finite() && sr > 0.0,
+        "subscription ratio must be positive and finite, got {sr}"
+    );
     let mut rng = Rng::new(seed ^ 0x5EED_0001);
     let n = ((cores as f64) * sr).round().max(1.0) as usize;
     let arrivals = ArrivalProcess::Uniform { gap: 30.0 }.times(n, &mut rng);
@@ -32,12 +39,12 @@ pub fn build(cores: usize, sr: f64, seed: u64) -> ScenarioSpec {
             activity,
         });
     }
-    ScenarioSpec {
+    Ok(ScenarioSpec {
         name: format!("random-sr{sr}"),
         sr,
         vms,
         min_duration: 900.0,
-    }
+    })
 }
 
 /// Class mix of the random scenario. Cloud tenants skew towards light
@@ -96,14 +103,14 @@ mod tests {
     #[test]
     fn vm_count_follows_subscription_ratio() {
         for (sr, expect) in [(0.5, 6), (1.0, 12), (1.5, 18), (2.0, 24)] {
-            let spec = build(12, sr, 1);
+            let spec = build(12, sr, 1).unwrap();
             assert_eq!(spec.vms.len(), expect, "sr {sr}");
         }
     }
 
     #[test]
     fn thirty_second_arrivals() {
-        let spec = build(12, 1.0, 2);
+        let spec = build(12, 1.0, 2).unwrap();
         for (i, vm) in spec.vms.iter().enumerate() {
             assert_eq!(vm.arrival, i as f64 * 30.0);
         }
@@ -111,12 +118,12 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let a = build(12, 2.0, 7);
-        let b = build(12, 2.0, 7);
+        let a = build(12, 2.0, 7).unwrap();
+        let b = build(12, 2.0, 7).unwrap();
         for (x, y) in a.vms.iter().zip(&b.vms) {
             assert_eq!(x.class, y.class);
         }
-        let c = build(12, 2.0, 8);
+        let c = build(12, 2.0, 8).unwrap();
         let same = a
             .vms
             .iter()
@@ -127,19 +134,27 @@ mod tests {
     }
 
     #[test]
+    fn malformed_requests_error_instead_of_panicking() {
+        assert!(build(0, 1.0, 1).is_err(), "zero cores");
+        assert!(build(12, 0.0, 1).is_err(), "zero sr");
+        assert!(build(12, -1.0, 1).is_err(), "negative sr");
+        assert!(build(12, f64::NAN, 1).is_err(), "nan sr");
+    }
+
+    #[test]
     fn batch_jobs_always_on_services_duty_cycled() {
-        let spec = build(12, 2.0, 3);
+        let spec = build(12, 2.0, 3).unwrap();
         for vm in &spec.vms {
             let kind = crate::workloads::catalog::spec_of(vm.class).perf.kind;
             match (kind, &vm.activity) {
-                (WorkloadKind::Batch, ActivityModel::AlwaysOn) => {}
-                (WorkloadKind::Batch, other) => {
-                    panic!("batch VM with activity {other:?}")
-                }
+                (WorkloadKind::Batch, activity) => assert!(
+                    matches!(activity, ActivityModel::AlwaysOn),
+                    "batch VM with activity {activity:?}"
+                ),
                 (_, ActivityModel::OnOff { duty, .. }) => {
                     assert!((0.6..=0.95).contains(duty));
                 }
-                (_, other) => panic!("service VM with activity {other:?}"),
+                (_, other) => unreachable!("service VM with activity {other:?}"),
             }
         }
     }

@@ -184,7 +184,7 @@ mod tests {
     fn undersubscribed_random_all_policies_complete() {
         let cfg = quiet_cfg();
         let b = bank(&cfg);
-        let spec = random::build(cfg.host.cores, 0.5, 42);
+        let spec = random::build(cfg.host.cores, 0.5, 42).unwrap();
         for policy in Policy::ALL {
             let r = run_scenario(&cfg, &spec, policy, &b).unwrap();
             assert!(
@@ -200,7 +200,7 @@ mod tests {
     fn ras_saves_core_hours_vs_rrs_at_low_sr() {
         let cfg = quiet_cfg();
         let b = bank(&cfg);
-        let spec = random::build(cfg.host.cores, 0.5, 42);
+        let spec = random::build(cfg.host.cores, 0.5, 42).unwrap();
         let rrs = run_scenario(&cfg, &spec, Policy::Rrs, &b).unwrap();
         let ras = run_scenario(&cfg, &spec, Policy::Ras, &b).unwrap();
         let saving = ras.cpu_saving_vs(&rrs);
@@ -218,7 +218,7 @@ mod tests {
     fn deterministic_runs() {
         let cfg = quiet_cfg();
         let b = bank(&cfg);
-        let spec = random::build(cfg.host.cores, 1.0, 9);
+        let spec = random::build(cfg.host.cores, 1.0, 9).unwrap();
         let a = run_scenario(&cfg, &spec, Policy::Ias, &b).unwrap();
         let c = run_scenario(&cfg, &spec, Policy::Ias, &b).unwrap();
         assert_eq!(a.core_hours, c.core_hours);

@@ -97,11 +97,16 @@ impl Json {
         }
     }
 
-    pub fn set(&mut self, key: &str, val: Json) {
-        if let Json::Obj(m) = self {
-            m.insert(key.to_string(), val);
-        } else {
-            panic!("Json::set on non-object");
+    /// Insert `key` into an object. Setting a field on a non-object is a
+    /// malformed-document bug in the caller; it surfaces as an error
+    /// instead of a panic so artifact writers can fail cleanly.
+    pub fn set(&mut self, key: &str, val: Json) -> anyhow::Result<()> {
+        match self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), val);
+                Ok(())
+            }
+            other => anyhow::bail!("Json::set('{key}') on non-object value {other}"),
         }
     }
 
@@ -433,6 +438,17 @@ mod tests {
         let arr = v.get("a").unwrap().as_arr().unwrap();
         assert_eq!(arr[0].as_f64(), Some(1.0));
         assert_eq!(arr[2].get("b").unwrap().as_str(), Some("x\ny"));
+    }
+
+    #[test]
+    fn set_inserts_on_objects_and_errors_on_scalars() {
+        let mut obj = Json::obj();
+        obj.set("a", Json::Num(1.0)).unwrap();
+        assert_eq!(obj.get("a").and_then(Json::as_f64), Some(1.0));
+        let mut arr = Json::Arr(vec![]);
+        assert!(arr.set("a", Json::Null).is_err());
+        let mut num = Json::Num(2.0);
+        assert!(num.set("a", Json::Null).is_err());
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use super::actuator::Actuator;
 use super::monitor::Monitor;
-use super::scheduler::{PlacementState, Policy, Scheduler};
+use super::scheduler::{Policy, Scheduler};
 use crate::config::SchedParams;
 use crate::hostsim::{Hypervisor, VmId};
 use anyhow::Result;
@@ -58,8 +58,12 @@ impl Daemon {
 
         // Build the placement state from live pinnings of *running*
         // workloads (idle ones are parked and "consume zero resources").
+        // `new_state` attaches the policy's score cache so every `place`
+        // below is a delta update, not a deferred O(members²) re-sum.
         let has_idle = snap.domains.iter().any(|d| d.idle && d.id != id);
-        let mut state = PlacementState::new(cores, has_idle && self.scheduler.dynamic());
+        let mut state = self
+            .scheduler
+            .new_state(cores, has_idle && self.scheduler.dynamic());
         for d in &snap.domains {
             if d.id == id || d.idle {
                 continue;
@@ -135,7 +139,7 @@ impl Daemon {
         // Stable order (arrival id) so decisions are deterministic.
         let mut running = running;
         running.sort_by_key(|d| d.id);
-        let mut state = PlacementState::new(cores, !idle.is_empty());
+        let mut state = self.scheduler.new_state(cores, !idle.is_empty());
         for d in &running {
             let core = self.scheduler.select_pinning(&state, d.class);
             // The placement state tracks the INTENDED placement even if the
@@ -250,6 +254,46 @@ mod tests {
         let pinned = eng.vms[1].pinned.unwrap();
         // IAS must not co-pin jacobi with the blackscholes hog (S > thr).
         assert_ne!(Some(pinned), eng.vms[0].pinned);
+    }
+
+    #[test]
+    fn single_core_host_with_idle_reservation_does_not_panic() {
+        // Regression: a 1-core host with an idle workload used to leave
+        // the policies with an empty `allowed` set and panic the cycle.
+        let mut cfg = Config::default();
+        cfg.sim.demand_noise = 0.0;
+        cfg.host.cores = 1;
+        let bank = ProfileBank::generate(&cfg);
+        let sched = scheduler::build(Policy::Ias, &bank, cfg.sched.ras_threshold, None);
+        let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+
+        let mut running = Vm::new(
+            VmId(0),
+            WorkloadClass::Blackscholes,
+            0.0,
+            ActivityModel::AlwaysOn,
+        );
+        running.state = VmState::Running;
+        running.started = Some(0.0);
+        running.pinned = Some(0);
+        let mut idle = Vm::new(
+            VmId(1),
+            WorkloadClass::LampLight,
+            0.0,
+            ActivityModel::Windows(vec![]),
+        );
+        idle.state = VmState::Running;
+        idle.started = Some(0.0);
+        idle.pinned = Some(0);
+
+        let mut eng = SimEngine::new(cfg, vec![running, idle]);
+        for _ in 0..12 {
+            eng.step();
+        }
+        daemon.run_cycle(&mut eng).unwrap();
+        // Both end up on the only core; the point is that the cycle ran.
+        assert_eq!(eng.vms[0].pinned, Some(0));
+        assert_eq!(eng.vms[1].pinned, Some(IDLE_CORE));
     }
 
     #[test]

@@ -4,6 +4,14 @@
 //! `SelectPinning` procedure of the paper's Algorithms 2 and 3. The daemon
 //! (Alg. 1) builds a [`PlacementState`] of already-placed running
 //! workloads and asks the policy where to pin the next one.
+//!
+//! Scoring is incremental: a [`PlacementState`] built with
+//! [`PlacementState::with_bank`] carries a [`ScoreCache`] of per-core
+//! aggregates (composite load vectors for Eq. 2, per-member WI partials
+//! for Eq. 3) that [`PlacementState::place`] keeps up to date with delta
+//! updates, so one `SelectPinning` decision costs O(resident VMs) instead
+//! of O(cores × members²). [`Scheduler::new_state`] hands the daemon a
+//! state pre-wired with the policy's own profile bank.
 
 pub mod cas;
 pub mod ias;
@@ -12,7 +20,8 @@ pub mod rrs;
 pub mod scoring;
 
 use crate::profiling::ProfileBank;
-use crate::workloads::WorkloadClass;
+use crate::workloads::{MetricVec, WorkloadClass, NUM_METRICS};
+use std::sync::Arc;
 
 pub use scoring::{NativeScoring, Scores, ScoringBackend};
 
@@ -53,9 +62,64 @@ impl Policy {
     pub const ALL: [Policy; 4] = [Policy::Rrs, Policy::Cas, Policy::Ras, Policy::Ias];
 }
 
+/// Cached per-core scoring aggregates, maintained by
+/// [`PlacementState::place`].
+///
+/// The aggregates make the paper's equations incremental:
+/// * Eq. 2 — the composite load is a running vector sum, so the overload
+///   of a core (with or without a candidate) is a threshold clip of a
+///   cached vector rather than a re-sum over its members.
+/// * Eq. 3 — WI is a function of `(Σ_j S[i][j], Π_j S[i][j])` over the
+///   co-runners, so each member carries its running `(Σ, Π)` pair and
+///   gains a co-runner in O(1).
+///
+/// The aggregates are derived from the bank captured at construction,
+/// and the incremental scoring path reads the candidate's rows from that
+/// same bank (via [`Self::bank`]), so cached scores can never mix two
+/// banks.
+#[derive(Debug, Clone)]
+pub struct ScoreCache {
+    /// Shared, not cloned: the schedulers hand their own bank to every
+    /// `new_state` call, so the cache must not deep-copy the S/U matrices
+    /// per decision cycle.
+    bank: Arc<ProfileBank>,
+    /// Per-core composite load: Σ U over the core's members.
+    load: Vec<MetricVec>,
+    /// Per-core WI partials, parallel to `PlacementState::cores[c]`:
+    /// `(Σ_j S[m][j], Π_j S[m][j])` of member m over its co-members.
+    wi: Vec<Vec<(f64, f64)>>,
+}
+
+impl ScoreCache {
+    fn new(cores: usize, bank: Arc<ProfileBank>) -> ScoreCache {
+        ScoreCache {
+            bank,
+            load: vec![[0.0; NUM_METRICS]; cores],
+            wi: vec![Vec::new(); cores],
+        }
+    }
+
+    /// Composite load vector of `core` (Σ U over its members).
+    pub fn load(&self, core: usize) -> MetricVec {
+        self.load[core]
+    }
+
+    /// WI partials `(Σ, Π)` of each member of `core` vs its co-members,
+    /// in member order.
+    pub fn wi_parts(&self, core: usize) -> &[(f64, f64)] {
+        &self.wi[core]
+    }
+
+    /// The bank the aggregates were derived from.
+    pub fn bank(&self) -> &ProfileBank {
+        &self.bank
+    }
+}
+
 /// The incremental placement state the daemon builds while re-pinning:
 /// for each core, the class indices of the running workloads already
-/// placed there this cycle.
+/// placed there this cycle, plus (when built via [`Self::with_bank`]) the
+/// cached scoring aggregates.
 #[derive(Debug, Clone)]
 pub struct PlacementState {
     /// Per-core class indices (into [`ProfileBank::classes`]).
@@ -64,24 +128,84 @@ pub struct PlacementState {
     /// parking core when idle workloads exist — Alg. 1 pins idle workloads
     /// on core 0 and running ones on "the rest of the server's cores").
     pub allowed: Vec<usize>,
+    cache: Option<ScoreCache>,
 }
 
 impl PlacementState {
     pub fn new(cores: usize, reserve_idle_core: bool) -> PlacementState {
-        let allowed = if reserve_idle_core {
+        let mut allowed: Vec<usize> = if reserve_idle_core {
             (1..cores).collect()
         } else {
             (0..cores).collect()
         };
+        // A 1-core host cannot afford a dedicated idle core: the policies
+        // still need one legal core, so core 0 double-duties for idle and
+        // running workloads.
+        if allowed.is_empty() && cores > 0 {
+            allowed.push(0);
+        }
         PlacementState {
             cores: vec![Vec::new(); cores],
             allowed,
+            cache: None,
         }
     }
 
-    /// Record a placement decided this cycle.
+    /// A state carrying the incremental [`ScoreCache`] derived from
+    /// `bank`. Placements keep the cached aggregates current, so scoring
+    /// backends skip the from-scratch Eq. 2–4 evaluation. Clones the bank
+    /// once; hot-path callers that build states repeatedly should hold an
+    /// `Arc` and use [`Self::with_shared_bank`].
+    pub fn with_bank(
+        cores: usize,
+        reserve_idle_core: bool,
+        bank: &ProfileBank,
+    ) -> PlacementState {
+        PlacementState::with_shared_bank(cores, reserve_idle_core, Arc::new(bank.clone()))
+    }
+
+    /// [`Self::with_bank`] without the deep copy — what
+    /// [`Scheduler::new_state`] uses every arrival / re-pin cycle.
+    pub fn with_shared_bank(
+        cores: usize,
+        reserve_idle_core: bool,
+        bank: Arc<ProfileBank>,
+    ) -> PlacementState {
+        let mut state = PlacementState::new(cores, reserve_idle_core);
+        state.cache = Some(ScoreCache::new(cores, bank));
+        state
+    }
+
+    /// The cached aggregates, if this state was built with a bank.
+    pub fn cache(&self) -> Option<&ScoreCache> {
+        self.cache.as_ref()
+    }
+
+    /// Record a placement decided this cycle. With a cache attached this
+    /// applies the delta updates: the core's load vector gains the
+    /// newcomer's U row, every resident member's WI partials gain one
+    /// pairwise slowdown (O(1) each), and the newcomer's own partials are
+    /// accumulated over the residents.
     pub fn place(&mut self, core: usize, class: WorkloadClass) {
-        self.cores[core].push(class.index());
+        let x = class.index();
+        if let Some(cache) = &mut self.cache {
+            let members = &self.cores[core];
+            let u = cache.bank.u[x];
+            for j in 0..NUM_METRICS {
+                cache.load[core][j] += u[j];
+            }
+            let (mut sum_x, mut prod_x) = (0.0, 1.0);
+            for (pos, &m) in members.iter().enumerate() {
+                let s_mx = cache.bank.s[m][x];
+                let part = &mut cache.wi[core][pos];
+                part.0 += s_mx;
+                part.1 *= s_mx;
+                sum_x += cache.bank.s[x][m];
+                prod_x *= cache.bank.s[x][m];
+            }
+            cache.wi[core].push((sum_x, prod_x));
+        }
+        self.cores[core].push(x);
     }
 
     /// Total placed running workloads.
@@ -97,6 +221,13 @@ pub trait Scheduler {
     /// Choose the core for the next running workload (the paper's
     /// `SelectPinning`). Must return a member of `state.allowed`.
     fn select_pinning(&mut self, state: &PlacementState, class: WorkloadClass) -> usize;
+
+    /// Build the placement state this policy scores against. Scoring
+    /// policies attach their profile bank so decisions run on the
+    /// incremental cache; the default is a plain (uncached) state.
+    fn new_state(&self, cores: usize, reserve_idle_core: bool) -> PlacementState {
+        PlacementState::new(cores, reserve_idle_core)
+    }
 
     /// Whether the policy participates in the periodic re-pin + idle
     /// consolidation loop. RRS is static: it pins at arrival and never
@@ -134,6 +265,8 @@ pub fn build_with_backend(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testkit;
+    use crate::workloads::ALL_CLASSES;
 
     #[test]
     fn policy_names_roundtrip() {
@@ -155,11 +288,83 @@ mod tests {
     }
 
     #[test]
+    fn single_core_reservation_falls_back_to_core0() {
+        // Regression: a 1-core host with idle reservation used to yield an
+        // empty `allowed` set and panic every policy's select_pinning.
+        let s = PlacementState::new(1, true);
+        assert_eq!(s.allowed, vec![0]);
+        let bank = testkit::shared_bank();
+        for p in Policy::ALL {
+            let mut sched = build(p, bank, 1.2, None);
+            let core = sched.select_pinning(&s, WorkloadClass::Jacobi);
+            assert_eq!(core, 0, "{p:?} must fall back to core 0");
+        }
+    }
+
+    #[test]
     fn place_tracks_counts() {
         let mut s = PlacementState::new(4, false);
         s.place(1, WorkloadClass::Jacobi);
         s.place(1, WorkloadClass::Hadoop);
         assert_eq!(s.placed(), 2);
         assert_eq!(s.cores[1].len(), 2);
+    }
+
+    #[test]
+    fn cache_aggregates_match_brute_force() {
+        let bank = testkit::shared_bank();
+        let mut s = PlacementState::with_bank(4, false, bank);
+        let picks = [
+            (0, ALL_CLASSES[0]),
+            (0, ALL_CLASSES[2]),
+            (1, ALL_CLASSES[2]),
+            (0, ALL_CLASSES[5]),
+        ];
+        for &(core, class) in &picks {
+            s.place(core, class);
+        }
+        let cache = s.cache().expect("cached state");
+        for core in 0..4 {
+            let members = &s.cores[core];
+            // Load vector = Σ U over members.
+            let mut want = [0.0f64; NUM_METRICS];
+            for &m in members {
+                for j in 0..NUM_METRICS {
+                    want[j] += bank.u[m][j];
+                }
+            }
+            let got = cache.load(core);
+            for j in 0..NUM_METRICS {
+                assert!((got[j] - want[j]).abs() < 1e-12, "core {core} metric {j}");
+            }
+            // WI partials = (Σ, Π) over co-members.
+            let parts = cache.wi_parts(core);
+            assert_eq!(parts.len(), members.len());
+            for (pos, &m) in members.iter().enumerate() {
+                let mut sum = 0.0;
+                let mut prod = 1.0;
+                for (p2, &m2) in members.iter().enumerate() {
+                    if p2 != pos {
+                        sum += bank.s[m][m2];
+                        prod *= bank.s[m][m2];
+                    }
+                }
+                assert!((parts[pos].0 - sum).abs() < 1e-12, "core {core} pos {pos}");
+                assert!((parts[pos].1 - prod).abs() < 1e-12, "core {core} pos {pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn scheduler_new_state_attaches_cache_for_scoring_policies() {
+        let bank = testkit::shared_bank();
+        for p in [Policy::Cas, Policy::Ras, Policy::Ias] {
+            let sched = build(p, bank, 1.2, None);
+            let state = sched.new_state(12, true);
+            assert!(state.cache().is_some(), "{p:?} state must carry the cache");
+            assert!(!state.allowed.contains(&0));
+        }
+        let rrs = build(Policy::Rrs, bank, 1.2, None);
+        assert!(rrs.new_state(12, false).cache().is_none());
     }
 }

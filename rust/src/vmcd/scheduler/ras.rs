@@ -4,43 +4,55 @@
 //! adding the workload wins; otherwise the core whose overload *increase*
 //! is minimal.
 
-use super::scoring::ScoringBackend;
+use super::scoring::{Scores, ScoringBackend};
 use super::{PlacementState, Policy, Scheduler};
 use crate::profiling::ProfileBank;
 use crate::workloads::WorkloadClass;
+use std::sync::Arc;
 
 pub struct Ras {
-    bank: ProfileBank,
+    /// Shared with every state this scheduler builds (`new_state`).
+    bank: Arc<ProfileBank>,
     /// The resource-utilisation threshold `thr` (paper: 120%).
     pub thr: f64,
     backend: Box<dyn ScoringBackend>,
     cpu_only: bool,
+    /// Reused score buffer — one allocation for the scheduler's lifetime.
+    scores: Scores,
 }
 
 impl Ras {
     pub fn new(bank: ProfileBank, thr: f64, backend: Box<dyn ScoringBackend>) -> Self {
         Ras {
-            bank,
+            bank: Arc::new(bank),
             thr,
             backend,
             cpu_only: false,
+            scores: Scores::default(),
         }
     }
 
     /// The CAS variant: same algorithm, CPU metric only.
     pub fn cpu_only(bank: ProfileBank, thr: f64, backend: Box<dyn ScoringBackend>) -> Self {
         Ras {
-            bank,
+            bank: Arc::new(bank),
             thr,
             backend,
             cpu_only: true,
+            scores: Scores::default(),
         }
     }
 
     fn select(&mut self, state: &PlacementState, class: WorkloadClass) -> usize {
-        let scores = self
-            .backend
-            .score(state, class, &self.bank, self.thr, self.cpu_only);
+        self.backend.score_into(
+            state,
+            class,
+            &self.bank,
+            self.thr,
+            self.cpu_only,
+            &mut self.scores,
+        );
+        let scores = &self.scores;
 
         // Alg. 2 lines 2-4: first core with zero overload after placement.
         for &core in &state.allowed {
@@ -73,6 +85,10 @@ impl Scheduler for Ras {
 
     fn select_pinning(&mut self, state: &PlacementState, class: WorkloadClass) -> usize {
         self.select(state, class)
+    }
+
+    fn new_state(&self, cores: usize, reserve_idle_core: bool) -> PlacementState {
+        PlacementState::with_shared_bank(cores, reserve_idle_core, Arc::clone(&self.bank))
     }
 }
 

@@ -1,17 +1,23 @@
 //! Scoring backends: the per-core RAS/IAS scores a policy consults.
 //!
 //! Two interchangeable implementations exist:
-//! * [`NativeScoring`] (here) — straight Rust over the paper's equations;
+//! * [`NativeScoring`] (here) — straight Rust over the paper's equations.
+//!   On a cached [`PlacementState`] (built via
+//!   [`PlacementState::with_bank`](super::PlacementState::with_bank)) it
+//!   reads the per-core aggregates, evaluating every core in O(members)
+//!   with no allocation; on a plain state it falls back to the
+//!   from-scratch [`reference_scores_with`] evaluation of Eq. 2–4.
 //! * `runtime::scoring::XlaScoring` — executes the AOT-compiled Pallas
 //!   scoring kernel through PJRT (one fused call for all cores).
 //!
 //! The integration tests assert both produce identical decisions; the
-//! `scoring_backend` bench compares their latency.
+//! `scoring_backend` bench compares their latency and quantifies the
+//! incremental-vs-reference speedup.
 
-use super::PlacementState;
+use super::{PlacementState, ScoreCache};
 use crate::interference::{core_interference, core_overload, cpu_overload};
 use crate::profiling::ProfileBank;
-use crate::workloads::{MetricVec, WorkloadClass};
+use crate::workloads::{MetricVec, WorkloadClass, NUM_METRICS};
 
 /// Per-core scores for placing one candidate workload.
 #[derive(Debug, Clone, Default)]
@@ -26,13 +32,38 @@ pub struct Scores {
     pub ic_after: Vec<f64>,
 }
 
+impl Scores {
+    /// Empty all four columns; `score_into` implementations call this so
+    /// schedulers can reuse one buffer across decisions.
+    pub fn clear(&mut self) {
+        self.ol_before.clear();
+        self.ol_after.clear();
+        self.ic_before.clear();
+        self.ic_after.clear();
+    }
+}
+
 /// A backend that evaluates the scores for all cores in one call.
 ///
 /// Not `Send`: the XLA backend holds PJRT handles (`Rc` internally); the
 /// daemon owns its scheduler on one thread, matching VMCd's single-threaded
 /// scheduler component.
 pub trait ScoringBackend {
-    /// `cpu_only` restricts the overload metric to CPU (the CAS variant).
+    /// Evaluate into a caller-owned buffer. `cpu_only` restricts the
+    /// overload metric to CPU (the CAS variant). The schedulers hold one
+    /// [`Scores`] and reuse it every decision, keeping the hot path
+    /// allocation-free.
+    fn score_into(
+        &mut self,
+        state: &PlacementState,
+        cand: WorkloadClass,
+        bank: &ProfileBank,
+        thr: f64,
+        cpu_only: bool,
+        out: &mut Scores,
+    );
+
+    /// Allocating convenience wrapper around [`Self::score_into`].
     fn score(
         &mut self,
         state: &PlacementState,
@@ -40,7 +71,11 @@ pub trait ScoringBackend {
         bank: &ProfileBank,
         thr: f64,
         cpu_only: bool,
-    ) -> Scores;
+    ) -> Scores {
+        let mut out = Scores::default();
+        self.score_into(state, cand, bank, thr, cpu_only, &mut out);
+        out
+    }
 
     fn name(&self) -> &'static str;
 }
@@ -57,14 +92,21 @@ pub enum WiMode {
     ProdOnly,
 }
 
-fn wi_with(mode: WiMode, slowdowns: &[f64]) -> f64 {
-    let sum: f64 = slowdowns.iter().sum();
-    let prod: f64 = slowdowns.iter().product();
+/// Eq. 3 from its running partials: WI is a function of the co-runner
+/// slowdown sum and product only, which is what makes it incrementally
+/// maintainable.
+pub fn wi_from_parts(mode: WiMode, sum: f64, prod: f64) -> f64 {
     match mode {
         WiMode::MeanSumProd => 0.5 * (sum + prod),
         WiMode::SumOnly => sum,
         WiMode::ProdOnly => prod,
     }
+}
+
+fn wi_with(mode: WiMode, slowdowns: &[f64]) -> f64 {
+    let sum: f64 = slowdowns.iter().sum();
+    let prod: f64 = slowdowns.iter().product();
+    wi_from_parts(mode, sum, prod)
 }
 
 /// Pure-Rust scoring.
@@ -96,82 +138,179 @@ fn mask_cpu(u: MetricVec) -> MetricVec {
     [u[0], 0.0, 0.0, 0.0]
 }
 
+/// The incremental hot path: one pass over the cores, each evaluated from
+/// the cached aggregates in O(members) with no allocation. The caller
+/// guarantees `state.cache()` is present. The candidate's U row and S
+/// entries come from the cache's own bank — the same one the aggregates
+/// were derived from — so a caller cannot accidentally mix two banks.
+fn incremental_into(
+    mode: WiMode,
+    state: &PlacementState,
+    cand: WorkloadClass,
+    thr: f64,
+    cpu_only: bool,
+    out: &mut Scores,
+) {
+    let cache: &ScoreCache = state.cache().expect("incremental scoring needs a cached state");
+    let bank = cache.bank();
+    out.clear();
+    let ci = cand.index();
+    let cu = bank.u[ci];
+    for (core, members) in state.cores.iter().enumerate() {
+        // ---- RAS overload (Eq. 2): threshold clip of the cached sum ----
+        let lb = cache.load(core);
+        let (ol_b, ol_a) = if cpu_only {
+            ((lb[0] - thr).max(0.0), (lb[0] + cu[0] - thr).max(0.0))
+        } else {
+            let mut before = 0.0;
+            let mut after = 0.0;
+            for j in 0..NUM_METRICS {
+                before += (lb[j] - thr).max(0.0);
+                after += (lb[j] + cu[j] - thr).max(0.0);
+            }
+            (before, after)
+        };
+        out.ol_before.push(ol_b);
+        out.ol_after.push(ol_a);
+
+        // ---- IAS interference (Eq. 3+4): each member's WI (with and
+        // without the candidate) comes from its cached (Σ, Π) in O(1) ----
+        let parts = cache.wi_parts(core);
+        let mut ic_b = 0.0f64;
+        let mut ic_a = 0.0f64;
+        let mut cand_sum = 0.0;
+        let mut cand_prod = 1.0;
+        for (pos, &m) in members.iter().enumerate() {
+            let (sum, prod) = parts[pos];
+            ic_b = ic_b.max(wi_from_parts(mode, sum, prod));
+            let s_mc = bank.s[m][ci];
+            ic_a = ic_a.max(wi_from_parts(mode, sum + s_mc, prod * s_mc));
+            cand_sum += bank.s[ci][m];
+            cand_prod *= bank.s[ci][m];
+        }
+        ic_a = ic_a.max(wi_from_parts(mode, cand_sum, cand_prod));
+        out.ic_before.push(ic_b);
+        out.ic_after.push(ic_a);
+    }
+}
+
+/// From-scratch evaluation of Eq. 2–4 — O(cores × members²). This is the
+/// specification the incremental path is tested against (the parity
+/// property in `rust/tests/proptests.rs`), and the fallback for states
+/// built without a bank.
+fn reference_into(
+    mode: WiMode,
+    state: &PlacementState,
+    cand: WorkloadClass,
+    bank: &ProfileBank,
+    thr: f64,
+    cpu_only: bool,
+    out: &mut Scores,
+) {
+    out.clear();
+    let ci = cand.index();
+
+    for members in &state.cores {
+        // ---- RAS overload ----
+        let mut loads: Vec<MetricVec> = members.iter().map(|&m| bank.u[m]).collect();
+        if cpu_only {
+            for l in loads.iter_mut() {
+                *l = mask_cpu(*l);
+            }
+        }
+        let (ol_b, ol_a) = if cpu_only {
+            let b = cpu_overload(&loads, thr);
+            loads.push(mask_cpu(bank.u[ci]));
+            (b, cpu_overload(&loads, thr))
+        } else {
+            let b = core_overload(&loads, thr);
+            loads.push(bank.u[ci]);
+            (b, core_overload(&loads, thr))
+        };
+        out.ol_before.push(ol_b);
+        out.ol_after.push(ol_a);
+
+        // ---- IAS interference ----
+        // Before: WI of each member against its co-members.
+        let wi_b: Vec<f64> = members
+            .iter()
+            .enumerate()
+            .map(|(pos, &m)| {
+                let slows: Vec<f64> = members
+                    .iter()
+                    .enumerate()
+                    .filter(|&(p2, _)| p2 != pos)
+                    .map(|(_, &m2)| bank.s[m][m2])
+                    .collect();
+                wi_with(mode, &slows)
+            })
+            .collect();
+        out.ic_before.push(core_interference(&wi_b));
+
+        // After: every member gains the candidate as a co-runner, and
+        // the candidate gets its own WI.
+        let mut wi_a: Vec<f64> = members
+            .iter()
+            .enumerate()
+            .map(|(pos, &m)| {
+                let mut slows: Vec<f64> = members
+                    .iter()
+                    .enumerate()
+                    .filter(|&(p2, _)| p2 != pos)
+                    .map(|(_, &m2)| bank.s[m][m2])
+                    .collect();
+                slows.push(bank.s[m][ci]);
+                wi_with(mode, &slows)
+            })
+            .collect();
+        let cand_slows: Vec<f64> = members.iter().map(|&m| bank.s[ci][m]).collect();
+        wi_a.push(wi_with(mode, &cand_slows));
+        out.ic_after.push(core_interference(&wi_a));
+    }
+}
+
+/// Public from-scratch reference (paper Eq. 3 WI formula).
+pub fn reference_scores(
+    state: &PlacementState,
+    cand: WorkloadClass,
+    bank: &ProfileBank,
+    thr: f64,
+    cpu_only: bool,
+) -> Scores {
+    reference_scores_with(WiMode::MeanSumProd, state, cand, bank, thr, cpu_only)
+}
+
+/// Public from-scratch reference with an explicit WI formula.
+pub fn reference_scores_with(
+    mode: WiMode,
+    state: &PlacementState,
+    cand: WorkloadClass,
+    bank: &ProfileBank,
+    thr: f64,
+    cpu_only: bool,
+) -> Scores {
+    let mut out = Scores::default();
+    reference_into(mode, state, cand, bank, thr, cpu_only, &mut out);
+    out
+}
+
 impl ScoringBackend for NativeScoring {
-    fn score(
+    fn score_into(
         &mut self,
         state: &PlacementState,
         cand: WorkloadClass,
         bank: &ProfileBank,
         thr: f64,
         cpu_only: bool,
-    ) -> Scores {
-        let ci = cand.index();
-        let ncores = state.cores.len();
-        let mut out = Scores {
-            ol_before: Vec::with_capacity(ncores),
-            ol_after: Vec::with_capacity(ncores),
-            ic_before: Vec::with_capacity(ncores),
-            ic_after: Vec::with_capacity(ncores),
-        };
-
-        for members in &state.cores {
-            // ---- RAS overload ----
-            let mut loads: Vec<MetricVec> = members.iter().map(|&m| bank.u[m]).collect();
-            if cpu_only {
-                for l in loads.iter_mut() {
-                    *l = mask_cpu(*l);
-                }
-            }
-            let (ol_b, ol_a) = if cpu_only {
-                let b = cpu_overload(&loads, thr);
-                loads.push(mask_cpu(bank.u[ci]));
-                (b, cpu_overload(&loads, thr))
-            } else {
-                let b = core_overload(&loads, thr);
-                loads.push(bank.u[ci]);
-                (b, core_overload(&loads, thr))
-            };
-            out.ol_before.push(ol_b);
-            out.ol_after.push(ol_a);
-
-            // ---- IAS interference ----
-            // Before: WI of each member against its co-members.
-            let wi_b: Vec<f64> = members
-                .iter()
-                .enumerate()
-                .map(|(pos, &m)| {
-                    let slows: Vec<f64> = members
-                        .iter()
-                        .enumerate()
-                        .filter(|&(p2, _)| p2 != pos)
-                        .map(|(_, &m2)| bank.s[m][m2])
-                        .collect();
-                    wi_with(self.wi_mode, &slows)
-                })
-                .collect();
-            out.ic_before.push(core_interference(&wi_b));
-
-            // After: every member gains the candidate as a co-runner, and
-            // the candidate gets its own WI.
-            let mut wi_a: Vec<f64> = members
-                .iter()
-                .enumerate()
-                .map(|(pos, &m)| {
-                    let mut slows: Vec<f64> = members
-                        .iter()
-                        .enumerate()
-                        .filter(|&(p2, _)| p2 != pos)
-                        .map(|(_, &m2)| bank.s[m][m2])
-                        .collect();
-                    slows.push(bank.s[m][ci]);
-                    wi_with(self.wi_mode, &slows)
-                })
-                .collect();
-            let cand_slows: Vec<f64> = members.iter().map(|&m| bank.s[ci][m]).collect();
-            wi_a.push(wi_with(self.wi_mode, &cand_slows));
-            out.ic_after.push(core_interference(&wi_a));
+        out: &mut Scores,
+    ) {
+        if state.cache().is_some() {
+            // `bank` is intentionally unused here: the cached state carries
+            // the bank its aggregates were derived from.
+            incremental_into(self.wi_mode, state, cand, thr, cpu_only, out)
+        } else {
+            reference_into(self.wi_mode, state, cand, bank, thr, cpu_only, out)
         }
-        out
     }
 
     fn name(&self) -> &'static str {
@@ -200,6 +339,20 @@ mod tests {
         let s = ns.score(&state, Blackscholes, &b, 1.2, false);
         assert_eq!(s.ol_before, vec![0.0; 4]);
         // Alone on an empty core: no overload, WI = 0.5.
+        assert_eq!(s.ol_after, vec![0.0; 4]);
+        assert_eq!(s.ic_before, vec![0.0; 4]);
+        for &ic in &s.ic_after {
+            assert!(close(ic, 0.5, 1e-12), "{ic}");
+        }
+    }
+
+    #[test]
+    fn empty_core_scores_cached() {
+        let b = bank();
+        let state = PlacementState::with_bank(4, false, &b);
+        let mut ns = NativeScoring::new();
+        let s = ns.score(&state, Blackscholes, &b, 1.2, false);
+        assert_eq!(s.ol_before, vec![0.0; 4]);
         assert_eq!(s.ol_after, vec![0.0; 4]);
         assert_eq!(s.ic_before, vec![0.0; 4]);
         for &ic in &s.ic_after {
@@ -250,5 +403,49 @@ mod tests {
             last = s.ic_after[0];
             state.place(0, Jacobi);
         }
+    }
+
+    #[test]
+    fn incremental_matches_reference_on_a_fixed_state() {
+        let b = bank();
+        let mut cached = PlacementState::with_bank(4, false, &b);
+        let mut plain = PlacementState::new(4, false);
+        for &(core, class) in &[
+            (0, Blackscholes),
+            (0, StreamLow),
+            (1, Jacobi),
+            (1, Jacobi),
+            (3, LampHeavy),
+        ] {
+            cached.place(core, class);
+            plain.place(core, class);
+        }
+        let mut ns = NativeScoring::new();
+        for cand in [Jacobi, LampLight, Hadoop] {
+            for cpu_only in [false, true] {
+                let fast = ns.score(&cached, cand, &b, 1.2, cpu_only);
+                let slow = ns.score(&plain, cand, &b, 1.2, cpu_only);
+                for core in 0..4 {
+                    assert!(close(fast.ol_before[core], slow.ol_before[core], 1e-12));
+                    assert!(close(fast.ol_after[core], slow.ol_after[core], 1e-12));
+                    assert!(close(fast.ic_before[core], slow.ic_before[core], 1e-12));
+                    assert!(close(fast.ic_after[core], slow.ic_after[core], 1e-12));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn score_into_reuses_buffer() {
+        let b = bank();
+        let state = PlacementState::with_bank(3, false, &b);
+        let mut ns = NativeScoring::new();
+        let mut out = Scores::default();
+        ns.score_into(&state, Jacobi, &b, 1.2, false, &mut out);
+        assert_eq!(out.ol_after.len(), 3);
+        // Second call into the same buffer must not accumulate.
+        ns.score_into(&state, Hadoop, &b, 1.2, false, &mut out);
+        assert_eq!(out.ol_after.len(), 3);
+        assert_eq!(out.ic_after.len(), 3);
     }
 }

@@ -148,7 +148,7 @@ fn dynamic_scenario_idle_consolidation_is_visible_in_repins() {
     // deactivate; RRS must not re-pin at all after initial placement.
     let cfg = testkit::quiet_config();
     let bank = testkit::shared_bank();
-    let spec = dynamic::build(6, 42);
+    let spec = dynamic::build(6, 42).unwrap();
     let rrs = run_scenario(&cfg, &spec, Policy::Rrs, bank).unwrap();
     let ias = run_scenario(&cfg, &spec, Policy::Ias, bank).unwrap();
     assert_eq!(rrs.repin_count, 24, "RRS re-pins only at arrival");

@@ -39,7 +39,9 @@ fn xla_and_native_backends_agree_on_random_states() {
     let mut rng = Rng::new(0xDEC1DE);
 
     for case in 0..40 {
-        let mut state = PlacementState::new(12, rng.chance(0.3));
+        // Cached state: native takes the incremental path, so this checks
+        // the fused kernel against the production scoring engine.
+        let mut state = PlacementState::with_bank(12, rng.chance(0.3), bank);
         for _ in 0..rng.below(24) {
             state.place(rng.below(12), *rng.pick(&ALL_CLASSES));
         }
@@ -69,7 +71,7 @@ fn xla_backed_scenario_matches_native_decisions() {
     let Some(rt) = runtime_or_skip() else { return };
     let cfg = testkit::quiet_config();
     let bank = testkit::shared_bank();
-    let spec = random::build(cfg.host.cores, 1.0, 5);
+    let spec = random::build(cfg.host.cores, 1.0, 5).unwrap();
 
     let native = run_scenario(&cfg, &spec, Policy::Ias, bank).unwrap();
     let backend = Box::new(XlaScoring::new(rt).unwrap());
@@ -86,7 +88,7 @@ fn xla_scheduler_integrates_with_all_dynamic_policies() {
     let Some(_) = runtime_or_skip() else { return };
     let cfg = testkit::quiet_config();
     let bank = testkit::shared_bank();
-    let spec = random::build(cfg.host.cores, 0.5, 11);
+    let spec = random::build(cfg.host.cores, 0.5, 11).unwrap();
     for policy in [Policy::Cas, Policy::Ras, Policy::Ias] {
         let rt = Runtime::new().unwrap();
         let backend = Box::new(XlaScoring::new(rt).unwrap());

@@ -26,7 +26,7 @@ fn abstract_claim_cpu_time_reductions_up_to_50_percent() {
     // "Both methodologies achieve significant reductions of the CPU time
     // consumed, reaching up to 50%, while at the same time maintaining
     // workload performance."
-    let spec = random::build(12, 0.5, 42);
+    let spec = random::build(12, 0.5, 42).unwrap();
     let results = run_all(&spec);
     let rrs = by(&results, Policy::Rrs);
     for p in [Policy::Ras, Policy::Ias] {
@@ -48,7 +48,7 @@ fn random_scenario_savings_grow_with_undersubscription() {
     let bank = testkit::shared_bank();
     let mut savings = Vec::new();
     for sr in [0.5, 2.0] {
-        let spec = random::build(12, sr, 42);
+        let spec = random::build(12, sr, 42).unwrap();
         let rrs = run_scenario(&cfg, &spec, Policy::Rrs, bank).unwrap();
         let ias = run_scenario(&cfg, &spec, Policy::Ias, bank).unwrap();
         savings.push(ias.cpu_saving_vs(&rrs));
@@ -66,7 +66,7 @@ fn latency_scenario_degradation_bounded() {
     // §V-C.2: "performance degradation never exceeding 10%" (up to SR 1.5);
     // allow a small margin for the simulated substrate.
     for sr in [0.5, 1.0, 1.5] {
-        let spec = latency::build(12, sr, 42);
+        let spec = latency::build(12, sr, 42).unwrap();
         let results = run_all(&spec);
         let rrs = by(&results, Policy::Rrs);
         // IAS holds the paper's 10% bound cleanly; RAS packs harder on our
@@ -83,7 +83,7 @@ fn latency_scenario_degradation_bounded() {
 fn latency_scenario_ias_saves_at_least_30_percent() {
     // §V-C.2: "significant reduction in core hours consumption of at least
     // 30% and up to 50% for IAS in SR = 1".
-    let spec = latency::build(12, 1.0, 42);
+    let spec = latency::build(12, 1.0, 42).unwrap();
     let results = run_all(&spec);
     let rrs = by(&results, Policy::Rrs);
     let saving = by(&results, Policy::Ias).cpu_saving_vs(rrs);
@@ -96,7 +96,7 @@ fn dynamic_scenario_rrs_reserves_whole_server() {
     // regardless of VMs' state."
     let cfg = testkit::quiet_config();
     let bank = testkit::shared_bank();
-    let spec = dynamic::build(6, 42);
+    let spec = dynamic::build(6, 42).unwrap();
     let rrs = run_scenario(&cfg, &spec, Policy::Rrs, bank).unwrap();
     // From the first scheduling cycle on, (almost) the whole server stays
     // reserved: a core only parks once BOTH its batch VMs complete; idle
@@ -131,7 +131,7 @@ fn dynamic_scenario_schedulers_track_the_active_envelope() {
     let cfg = testkit::quiet_config();
     let bank = testkit::shared_bank();
     for batch in [6, 12] {
-        let spec = dynamic::build(batch, 42);
+        let spec = dynamic::build(batch, 42).unwrap();
         for p in [Policy::Cas, Policy::Ras, Policy::Ias] {
             let r = run_scenario(&cfg, &spec, p, bank).unwrap();
             let mean_busy = r.busy_series.time_mean();
@@ -151,7 +151,7 @@ fn dynamic_scenario_dynamic_policies_hold_perf_while_saving() {
     // while using FAR fewer core-hours, which is the figure's point.
     let cfg = testkit::quiet_config();
     let bank = testkit::shared_bank();
-    let spec = dynamic::build(6, 42);
+    let spec = dynamic::build(6, 42).unwrap();
     let rrs = run_scenario(&cfg, &spec, Policy::Rrs, bank).unwrap();
     for p in [Policy::Ras, Policy::Ias] {
         let r = run_scenario(&cfg, &spec, p, bank).unwrap();
@@ -169,7 +169,7 @@ fn dynamic_scenario_dynamic_policies_hold_perf_while_saving() {
 fn results_are_deterministic_across_runs() {
     let cfg = testkit::quiet_config();
     let bank = testkit::shared_bank();
-    let spec = random::build(12, 1.5, 7);
+    let spec = random::build(12, 1.5, 7).unwrap();
     for p in Policy::ALL {
         let a = run_scenario(&cfg, &spec, p, bank).unwrap();
         let b = run_scenario(&cfg, &spec, p, bank).unwrap();
@@ -183,7 +183,7 @@ fn results_are_deterministic_across_runs() {
 fn oversubscribed_host_still_completes_and_accounts() {
     let cfg = testkit::quiet_config();
     let bank = testkit::shared_bank();
-    let spec = random::build(12, 2.0, 99);
+    let spec = random::build(12, 2.0, 99).unwrap();
     for p in Policy::ALL {
         let r = run_scenario(&cfg, &spec, p, bank).unwrap();
         assert!(r.completion_time < cfg.sim.max_time, "{p:?} hit max_time");

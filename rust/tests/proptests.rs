@@ -3,9 +3,11 @@
 //! cases; failures report the case seed for replay.
 
 use vmcd::interference::{core_interference, core_overload, workload_interference};
+use vmcd::profiling::ProfileBank;
 use vmcd::scenarios::{random, run_scenario};
 use vmcd::testkit::{self, check, default_cases};
 use vmcd::util::rng::Rng;
+use vmcd::vmcd::scheduler::scoring::{self, WiMode};
 use vmcd::vmcd::scheduler::{self, NativeScoring, PlacementState, Policy, ScoringBackend};
 use vmcd::workloads::{WorkloadClass, ALL_CLASSES};
 
@@ -16,6 +18,25 @@ fn random_state(rng: &mut Rng, cores: usize, max_vms: usize) -> PlacementState {
         state.place(core, *rng.pick(&ALL_CLASSES));
     }
     state
+}
+
+/// A cached and an uncached state built from the same placement sequence.
+fn random_state_pair(
+    rng: &mut Rng,
+    bank: &ProfileBank,
+    cores: usize,
+    max_vms: usize,
+) -> (PlacementState, PlacementState) {
+    let reserve = rng.chance(0.3);
+    let mut cached = PlacementState::with_bank(cores, reserve, bank);
+    let mut plain = PlacementState::new(cores, reserve);
+    for _ in 0..rng.below(max_vms + 1) {
+        let core = rng.below(cores);
+        let class = *rng.pick(&ALL_CLASSES);
+        cached.place(core, class);
+        plain.place(core, class);
+    }
+    (cached, plain)
 }
 
 #[test]
@@ -161,7 +182,7 @@ fn prop_scenarios_conserve_physics() {
     check("scenario-physics", 10, |rng| {
         let sr = rng.range(0.3, 2.2);
         let seed = rng.next_u64();
-        let spec = random::build(cfg.host.cores, sr, seed);
+        let spec = random::build(cfg.host.cores, sr, seed).unwrap();
         let policy = *rng.pick(&Policy::ALL);
         let r = run_scenario(&cfg, &spec, policy, bank).unwrap();
         assert!(r.avg_perf > 0.0 && r.avg_perf <= 1.0 + 1e-9, "{policy:?} perf");
@@ -180,15 +201,102 @@ fn prop_scenarios_conserve_physics() {
 }
 
 #[test]
+fn prop_incremental_scores_match_reference() {
+    // The tentpole invariant: the cached aggregates must reproduce the
+    // from-scratch Eq. 2–4 reference exactly, across random placement
+    // states, thresholds, CPU masking, and every WI formula.
+    let bank = testkit::shared_bank();
+    check("incremental-vs-reference", default_cases(), |rng| {
+        let cores = 1 + rng.below(16);
+        let (cached, _) = random_state_pair(rng, bank, cores, 48);
+        let cand = *rng.pick(&ALL_CLASSES);
+        let cpu_only = rng.chance(0.5);
+        let thr = rng.range(0.6, 2.0);
+        for mode in [WiMode::MeanSumProd, WiMode::SumOnly, WiMode::ProdOnly] {
+            let mut native = NativeScoring::with_wi_mode(mode);
+            let fast = native.score(&cached, cand, bank, thr, cpu_only);
+            let slow = scoring::reference_scores_with(mode, &cached, cand, bank, thr, cpu_only);
+            for c in 0..cores {
+                for (a, b, what) in [
+                    (fast.ol_before[c], slow.ol_before[c], "ol_before"),
+                    (fast.ol_after[c], slow.ol_after[c], "ol_after"),
+                    (fast.ic_before[c], slow.ic_before[c], "ic_before"),
+                    (fast.ic_after[c], slow.ic_after[c], "ic_after"),
+                ] {
+                    assert!(
+                        (a - b).abs() < 1e-9,
+                        "{mode:?} {what}[{c}]: incremental {a} vs reference {b}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cached_and_uncached_states_agree_on_decisions() {
+    // The same placement sequence, scored incrementally (cached state) and
+    // from scratch (plain state), must yield identical pinning decisions
+    // for every scoring policy.
+    let bank = testkit::shared_bank();
+    check("cached-vs-uncached-decisions", default_cases(), |rng| {
+        let cores = 1 + rng.below(16);
+        let (cached, plain) = random_state_pair(rng, bank, cores, 40);
+        let cand = *rng.pick(&ALL_CLASSES);
+        for policy in [Policy::Cas, Policy::Ras, Policy::Ias] {
+            let mut sched = scheduler::build(policy, bank, 1.2, None);
+            let a = sched.select_pinning(&cached, cand);
+            let b = sched.select_pinning(&plain, cand);
+            assert_eq!(a, b, "{policy:?} diverged: cached {a} vs uncached {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_single_core_states_always_offer_core0() {
+    // Regression companion to the 1-core daemon fix: whatever the
+    // reservation flag, a 1-core state must keep core 0 legal and every
+    // policy must pick it.
+    let bank = testkit::shared_bank();
+    check("single-core-fallback", default_cases(), |rng| {
+        let reserve = rng.chance(0.5);
+        let state = PlacementState::new(1, reserve);
+        assert_eq!(state.allowed, vec![0]);
+        let cand = *rng.pick(&ALL_CLASSES);
+        for policy in Policy::ALL {
+            let mut sched = scheduler::build(policy, bank, 1.2, None);
+            assert_eq!(sched.select_pinning(&state, cand), 0, "{policy:?}");
+        }
+    });
+}
+
+#[test]
 fn prop_placement_state_accounting() {
+    let bank = testkit::shared_bank();
     check("placement-accounting", default_cases(), |rng| {
         let cores = 2 + rng.below(31);
-        let mut state = PlacementState::new(cores, rng.chance(0.5));
+        let cached = rng.chance(0.5);
+        let mut state = if cached {
+            PlacementState::with_bank(cores, rng.chance(0.5), bank)
+        } else {
+            PlacementState::new(cores, rng.chance(0.5))
+        };
         let mut placed = 0;
         for _ in 0..rng.below(40) {
             state.place(rng.below(cores), WorkloadClass::Hadoop);
             placed += 1;
         }
         assert_eq!(state.placed(), placed);
+        if let Some(cache) = state.cache() {
+            // Cached load vectors must equal a brute-force re-sum.
+            let hadoop = WorkloadClass::Hadoop.index();
+            for (core, members) in state.cores.iter().enumerate() {
+                let load = cache.load(core);
+                for (j, &l) in load.iter().enumerate() {
+                    let want = bank.u[hadoop][j] * members.len() as f64;
+                    assert!((l - want).abs() < 1e-9, "core {core} metric {j}");
+                }
+            }
+        }
     });
 }
