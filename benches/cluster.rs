@@ -46,5 +46,20 @@ fn main() -> anyhow::Result<()> {
                 .unwrap();
         });
     }
+
+    // Sharded host stepping (HostHandle workers) vs lockstep on one
+    // thread. Results are bit-identical; only wall time may differ.
+    b.section("sharded vs single-thread stepping (8 hosts, SR 1.5, local-vmcd)");
+    let big_hosts = 8;
+    let big_scen = random::build(big_hosts * cfg.host.cores, 1.5, 42)?;
+    for threads in [0usize, 4] {
+        b.run(&format!("cluster/local-vmcd/shard-threads{threads}"), || {
+            let mut spec = ClusterSpec::new(big_hosts, Strategy::LocalVmcd);
+            spec.shard_threads = threads;
+            ClusterSim::new(spec, &big_scen, &bank)
+                .run(&bank, big_scen.min_duration)
+                .unwrap();
+        });
+    }
     Ok(())
 }

@@ -54,5 +54,64 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(state.placed());
         });
     }
+
+    // The event-API comparison the redesign is about: one daemon cycle as
+    // (a) the old rebuild — fresh state, place everything again — vs (b)
+    // remove+place deltas on one long-lived state.
+    b.section("daemon cycle: rebuild-per-cycle vs event deltas (24 VMs, IAS)");
+    {
+        let mut rng = Rng::new(5);
+        let classes: Vec<_> = (0..24).map(|_| *rng.pick(&ALL_CLASSES)).collect();
+
+        let mut sched = scheduler::build(Policy::Ias, &bank, 1.2, None);
+        b.run("cycle/rebuild/ias/24vms", || {
+            let mut state = sched.new_state(cfg.host.cores, true);
+            for &class in &classes {
+                let core = sched.select_pinning(&state, class);
+                state.place(core, class);
+            }
+            std::hint::black_box(state.placed());
+        });
+
+        let mut sched = scheduler::build(Policy::Ias, &bank, 1.2, None);
+        let mut state = sched.new_state(cfg.host.cores, true);
+        let mut cores_now: Vec<usize> = Vec::with_capacity(classes.len());
+        for &class in &classes {
+            let core = sched.select_pinning(&state, class);
+            state.place(core, class);
+            cores_now.push(core);
+        }
+        b.run("cycle/event-delta/ias/24vms", || {
+            for (i, &class) in classes.iter().enumerate() {
+                state.remove(cores_now[i], class);
+                let core = sched.select_pinning(&state, class);
+                state.place(core, class);
+                cores_now[i] = core;
+            }
+            std::hint::black_box(state.placed());
+        });
+    }
+
+    b.section("lifecycle churn: place+remove round-trip on a 24-VM state");
+    {
+        let mut sched = scheduler::build(Policy::Ias, &bank, 1.2, None);
+        let mut rng = Rng::new(9);
+        let mut state = sched.new_state(cfg.host.cores, false);
+        let mut members: Vec<(usize, _)> = Vec::new();
+        for _ in 0..24 {
+            let class = *rng.pick(&ALL_CLASSES);
+            let core = sched.select_pinning(&state, class);
+            state.place(core, class);
+            members.push((core, class));
+        }
+        let mut k = 0usize;
+        b.run("churn/remove+place/occ24", || {
+            let (core, class) = members[k % members.len()];
+            state.remove(core, class);
+            state.place(core, class);
+            k += 1;
+            std::hint::black_box(state.placed());
+        });
+    }
     Ok(())
 }

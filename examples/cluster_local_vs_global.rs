@@ -51,5 +51,28 @@ fn main() -> anyhow::Result<()> {
          global consolidation pays downtime + transfer + abort costs while\n\
          the local per-host approach keeps optimising for free."
     );
+
+    // Sharded stepping: native-backend hosts are `Send`, so the cluster
+    // can step them on worker threads — results are bit-identical.
+    let scen = random::build(hosts * cfg.host.cores, 1.2, cfg.sim.seed)?;
+    let mut results = Vec::new();
+    for threads in [0usize, 4] {
+        let mut spec = ClusterSpec::new(hosts, Strategy::LocalVmcd);
+        spec.shard_threads = threads;
+        let wall = std::time::Instant::now();
+        let r = ClusterSim::new(spec, &scen, &bank).run(&bank, scen.min_duration)?;
+        println!(
+            "shard_threads={threads}: perf {:.3}, core-hours {:.3} ({} ms wall)",
+            r.avg_perf,
+            r.core_hours,
+            wall.elapsed().as_millis()
+        );
+        results.push(r);
+    }
+    assert_eq!(
+        results[0].avg_perf.to_bits(),
+        results[1].avg_perf.to_bits(),
+        "sharded stepping must be bit-identical"
+    );
     Ok(())
 }

@@ -37,7 +37,7 @@ const VIRT_SECONDS_PER_BATCH: f64 = 10.0;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let sr = args.opt_f64("sr", 1.0)?;
-    let policy = Policy::from_name(&args.opt_or("policy", "ias")).expect("policy");
+    let policy = Policy::parse(&args.opt_or("policy", "ias"))?;
     let cfg = Config::default();
 
     println!("== e2e full stack: {} @ SR {sr} on the simulated X5650 host ==", policy.name());
@@ -99,7 +99,7 @@ fn main() -> anyhow::Result<()> {
         for id in engine.process_arrivals() {
             daemon.on_arrival(&mut engine, id)?;
         }
-        daemon.maybe_cycle(&mut engine)?;
+        daemon.step(&mut engine)?;
 
         // Record per-VM progress before the tick to credit real compute.
         let before: BTreeMap<VmId, f64> = engine

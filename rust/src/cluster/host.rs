@@ -1,0 +1,262 @@
+//! The host-stepping interface the cluster simulator drives.
+//!
+//! [`HostHandle`] decouples `ClusterSim::step` from the concrete
+//! daemon/engine pairing: a host is anything that can advance one tick,
+//! accept injected events (arrivals, forced scheduler ticks), and drain
+//! metrics. [`SimHost`] is the standard implementation — a [`SimEngine`]
+//! plus an optional per-host VMCd [`Daemon`].
+//!
+//! `SimHost` is generic over the daemon's scheduler so the *type system*
+//! decides which hosts can shard: [`NativeHost`]
+//! (`SimHost<dyn Scheduler + Send>`, natively-scored) moves across
+//! `std::thread` scoped workers, while an XLA-backed
+//! `SimHost<dyn Scheduler>` is not `Send` (PJRT handles) and must step on
+//! the caller thread behind a `Box<dyn HostHandle>`.
+
+use crate::hostsim::{Hypervisor, SimEngine, Vm};
+use crate::vmcd::daemon::SchedEvent;
+use crate::vmcd::scheduler::Scheduler;
+use crate::vmcd::Daemon;
+use anyhow::Result;
+
+/// Per-host summary counters drained by cluster-level reporting.
+#[derive(Debug, Clone, Default)]
+pub struct HostMetrics {
+    /// Resident VMs (all lifecycle states still tracked by the engine).
+    pub resident: usize,
+    /// Cores currently holding a running VM.
+    pub busy_cores: usize,
+    /// Busy-core hours accumulated so far.
+    pub core_hours: f64,
+    /// vCPU re-pin actuations applied.
+    pub repins: u64,
+    /// Scheduler cycles run (0 for daemon-less hosts).
+    pub cycles: u64,
+    /// Tolerated actuation failures (0 for daemon-less hosts).
+    pub pin_failures: u64,
+}
+
+/// One steppable host, as the cluster simulator sees it.
+pub trait HostHandle {
+    /// Current host-local virtual time.
+    fn now(&self) -> f64;
+
+    /// Advance one tick: run the daemon's event step (poll, diff,
+    /// lifecycle events, Tick when due), then the engine physics.
+    fn step_host(&mut self) -> Result<()>;
+
+    /// Inject an arriving VM (the dispatch decision is already made):
+    /// insert it and give it an initial pinning via the daemon, or
+    /// round-robin when the host has no daemon.
+    fn inject_arrival(&mut self, vm: Vm) -> Result<()>;
+
+    /// Inject a scheduler event directly (e.g. a forced
+    /// [`SchedEvent::Tick`]). A no-op on daemon-less hosts.
+    fn inject_event(&mut self, ev: SchedEvent) -> Result<()>;
+
+    /// Accept a VM migrated in from another host. Daemon-less hosts
+    /// assign a fresh round-robin core (the global strategy's in-host
+    /// contract); daemon hosts keep the carried pinning and let their
+    /// daemon adopt and re-pin it on the next poll.
+    fn inject_migrated(&mut self, vm: Vm);
+
+    /// The simulated engine — the metrics drain and the surgical surface
+    /// the migration model needs (every host wraps a [`SimEngine`]; the
+    /// trait abstracts the daemon/backend coupling, not the physics).
+    fn engine(&self) -> &SimEngine;
+    fn engine_mut(&mut self) -> &mut SimEngine;
+
+    /// Summary counters for dashboards and reports.
+    fn metrics(&self) -> HostMetrics;
+}
+
+/// A simulated host: engine + optional VMCd daemon.
+pub struct SimHost<S: ?Sized + Scheduler = dyn Scheduler> {
+    pub engine: SimEngine,
+    /// Per-host daemon; `None` means pinning is managed externally (the
+    /// global-migration strategy pins round-robin in-host).
+    pub daemon: Option<Daemon<S>>,
+    /// Round-robin cursor for daemon-less in-host pinning.
+    pub rr_core: usize,
+}
+
+/// The shardable host: natively-scored scheduler, so the whole host is
+/// `Send` and can step on a worker thread.
+pub type NativeHost = SimHost<dyn Scheduler + Send>;
+
+// Compile-time guarantee behind the sharded stepping path.
+#[allow(dead_code)]
+fn _assert_native_host_is_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<NativeHost>();
+}
+
+impl<S: ?Sized + Scheduler> SimHost<S> {
+    pub fn new(engine: SimEngine, daemon: Option<Daemon<S>>) -> SimHost<S> {
+        SimHost {
+            engine,
+            daemon,
+            rr_core: 0,
+        }
+    }
+
+    /// Next core of the in-host round-robin (daemon-less pinning, also
+    /// used for migrated-in VMs).
+    pub fn next_rr_core(&mut self) -> usize {
+        let cores = self.engine.cfg.host.cores;
+        let core = self.rr_core % cores;
+        self.rr_core += 1;
+        core
+    }
+}
+
+impl<S: ?Sized + Scheduler> HostHandle for SimHost<S> {
+    fn now(&self) -> f64 {
+        self.engine.t
+    }
+
+    fn step_host(&mut self) -> Result<()> {
+        if let Some(daemon) = &mut self.daemon {
+            daemon.step(&mut self.engine)?;
+        }
+        self.engine.step();
+        Ok(())
+    }
+
+    fn inject_arrival(&mut self, vm: Vm) -> Result<()> {
+        let id = vm.id;
+        self.engine.insert_vm(vm);
+        match &mut self.daemon {
+            Some(daemon) => daemon.on_arrival(&mut self.engine, id),
+            None => {
+                let core = self.next_rr_core();
+                self.engine.pin_vcpu(id, core)
+            }
+        }
+    }
+
+    fn inject_event(&mut self, ev: SchedEvent) -> Result<()> {
+        match &mut self.daemon {
+            Some(daemon) => daemon.handle_event(&mut self.engine, ev),
+            None => Ok(()),
+        }
+    }
+
+    fn inject_migrated(&mut self, mut vm: Vm) {
+        if self.daemon.is_none() {
+            let core = self.next_rr_core();
+            vm.pinned = Some(core);
+        }
+        self.engine.insert_vm(vm);
+    }
+
+    fn engine(&self) -> &SimEngine {
+        &self.engine
+    }
+
+    fn engine_mut(&mut self) -> &mut SimEngine {
+        &mut self.engine
+    }
+
+    fn metrics(&self) -> HostMetrics {
+        HostMetrics {
+            resident: self.engine.vms.len(),
+            busy_cores: self.engine.busy_cores(),
+            core_hours: self.engine.ledger.core_hours(),
+            repins: self.engine.ledger.repin_count,
+            cycles: self.daemon.as_ref().map_or(0, |d| d.cycles),
+            pin_failures: self.daemon.as_ref().map_or(0, |d| d.pin_failures),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostsim::{VmId, VmState};
+    use crate::testkit;
+    use crate::vmcd::scheduler::{self, Policy};
+    use crate::workloads::WorkloadClass;
+
+    fn native_host(policy: Policy) -> NativeHost {
+        let cfg = testkit::quiet_config();
+        let bank = testkit::shared_bank();
+        let sched = scheduler::build_native(policy, bank, cfg.sched.ras_threshold, None);
+        let daemon = Daemon::new(cfg.sched.clone(), sched);
+        SimHost::new(SimEngine::new(cfg, Vec::new()), Some(daemon))
+    }
+
+    #[test]
+    fn inject_arrival_places_via_daemon() {
+        let mut host = native_host(Policy::Ras);
+        let mut vm = Vm::new(
+            VmId(0),
+            WorkloadClass::Blackscholes,
+            0.0,
+            crate::hostsim::ActivityModel::AlwaysOn,
+        );
+        vm.state = VmState::Running;
+        vm.started = Some(0.0);
+        host.inject_arrival(vm).unwrap();
+        assert!(host.engine().vms[0].pinned.is_some());
+        host.step_host().unwrap();
+        let m = host.metrics();
+        assert_eq!(m.resident, 1);
+        assert!(m.busy_cores >= 1);
+        assert!(m.cycles >= 1);
+    }
+
+    #[test]
+    fn daemonless_host_pins_round_robin() {
+        let cfg = testkit::quiet_config();
+        let mut host: NativeHost = SimHost::new(SimEngine::new(cfg, Vec::new()), None);
+        for i in 0..3u32 {
+            let mut vm = Vm::new(
+                VmId(i),
+                WorkloadClass::Hadoop,
+                0.0,
+                crate::hostsim::ActivityModel::AlwaysOn,
+            );
+            vm.state = VmState::Running;
+            vm.started = Some(0.0);
+            host.inject_arrival(vm).unwrap();
+        }
+        let pins: Vec<_> = host.engine().vms.iter().map(|v| v.pinned).collect();
+        assert_eq!(pins, vec![Some(0), Some(1), Some(2)]);
+        // Event injection is a tolerated no-op without a daemon.
+        host.inject_event(SchedEvent::Tick).unwrap();
+        assert_eq!(host.metrics().cycles, 0);
+        // A migrated-in VM gets the next round-robin core, not the pin it
+        // carried from its source host.
+        let mut vm = Vm::new(
+            VmId(9),
+            WorkloadClass::Hadoop,
+            0.0,
+            crate::hostsim::ActivityModel::AlwaysOn,
+        );
+        vm.state = VmState::Running;
+        vm.pinned = Some(11);
+        host.inject_migrated(vm);
+        assert_eq!(host.engine().vms[3].pinned, Some(3));
+    }
+
+    #[test]
+    fn injected_tick_runs_a_cycle() {
+        let mut host = native_host(Policy::Ias);
+        host.inject_event(SchedEvent::Tick).unwrap();
+        assert_eq!(host.metrics().cycles, 1);
+    }
+
+    #[test]
+    fn boxed_host_handle_steps_on_caller_thread() {
+        // The non-Send path: any SimHost works behind Box<dyn HostHandle>.
+        let cfg = testkit::quiet_config();
+        let bank = testkit::shared_bank();
+        let sched = scheduler::build(Policy::Ias, bank, cfg.sched.ras_threshold, None);
+        let daemon = Daemon::new(cfg.sched.clone(), sched);
+        let mut host: Box<dyn HostHandle> =
+            Box::new(SimHost::new(SimEngine::new(cfg, Vec::new()), Some(daemon)));
+        host.step_host().unwrap();
+        assert!(host.now() > 0.0);
+    }
+}

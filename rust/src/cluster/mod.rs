@@ -18,10 +18,18 @@
 //!   pins round-robin (the centralized schedulers the paper contrasts
 //!   with do not micro-manage pinning).
 
+//!
+//! Hosts are driven through the [`host::HostHandle`] interface; native
+//! (`Send`) hosts can shard across worker threads
+//! ([`ClusterSpec::shard_threads`](sim::ClusterSpec::shard_threads)),
+//! XLA-backed hosts stay on the caller thread.
+
 pub mod dispatch;
+pub mod host;
 pub mod migration;
 pub mod sim;
 
 pub use dispatch::Dispatcher;
+pub use host::{HostHandle, HostMetrics, NativeHost, SimHost};
 pub use migration::MigrationModel;
-pub use sim::{ClusterResult, ClusterSim, ClusterSpec, Strategy};
+pub use sim::{ClusterHost, ClusterResult, ClusterSim, ClusterSpec, Strategy};

@@ -1,11 +1,21 @@
-//! The cluster simulator: N hosts in lockstep, one dispatcher, and either
-//! per-host VMCd daemons (local strategy) or a centralized
-//! migration-based consolidator (global strategy).
+//! The cluster simulator: N hosts stepped through the uniform
+//! [`HostHandle`] interface, one dispatcher, and either per-host VMCd
+//! daemons (local strategy) or a centralized migration-based consolidator
+//! (global strategy).
+//!
+//! Hosts are independent within one tick (dispatch, reshuffle and
+//! migration bookkeeping all happen on the coordinator thread between
+//! ticks), so native-backend hosts can shard across `std::thread` scoped
+//! workers — see [`ClusterSpec::shard_threads`] — with results
+//! bit-identical to single-threaded stepping. XLA-backed hosts are not
+//! `Send` and always step on the caller thread
+//! ([`ClusterHost::Pinned`]).
 
 use super::dispatch::Dispatcher;
+use super::host::{HostHandle, NativeHost, SimHost};
 use super::migration::{Migration, MigrationModel};
 use crate::config::Config;
-use crate::hostsim::{SimEngine, Vm, VmId, VmState};
+use crate::hostsim::{Vm, VmId, VmState};
 use crate::profiling::ProfileBank;
 use crate::scenarios::ScenarioSpec;
 use crate::util::rng::Rng;
@@ -20,10 +30,9 @@ use anyhow::Result;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
     /// Dispatch at arrival; each host's own VMCd daemon optimises locally
-    /// by re-pinning. No migrations (the paper's approach). Each daemon's
-    /// scheduler scores on the incremental placement cache, so a lockstep
-    /// cluster step costs O(resident VMs) per host rather than
-    /// O(cores × members²).
+    /// by re-pinning. No migrations (the paper's approach). Each daemon
+    /// mutates one long-lived placement state via event deltas, so a
+    /// cluster tick costs O(resident VMs) per host.
     LocalVmcd,
     /// Centralized scheduler with global knowledge: periodic reshuffle
     /// packs VMs onto the fewest hosts via live migration; hosts pin
@@ -55,6 +64,9 @@ pub struct ClusterSpec {
     pub global_interval: f64,
     /// Max concurrent migrations per reshuffle.
     pub max_migrations: usize,
+    /// Worker threads for stepping native hosts; 0 or 1 = step on the
+    /// caller thread. Results are bit-identical either way.
+    pub shard_threads: usize,
 }
 
 impl ClusterSpec {
@@ -68,6 +80,7 @@ impl ClusterSpec {
             migration: MigrationModel::default(),
             global_interval: 120.0,
             max_migrations: 4,
+            shard_threads: 0,
         }
     }
 }
@@ -87,11 +100,32 @@ pub struct ClusterResult {
     pub completion_time: f64,
 }
 
+/// One cluster host, partitioned by steppability: `Native` hosts are
+/// `Send` and shard across worker threads; `Pinned` hosts (e.g. XLA-
+/// backed daemons holding PJRT handles) step on the caller thread.
+pub enum ClusterHost {
+    Native(NativeHost),
+    Pinned(Box<dyn HostHandle>),
+}
+
+impl ClusterHost {
+    pub fn handle(&self) -> &dyn HostHandle {
+        match self {
+            ClusterHost::Native(h) => h,
+            ClusterHost::Pinned(h) => h.as_ref(),
+        }
+    }
+
+    pub fn handle_mut(&mut self) -> &mut dyn HostHandle {
+        match self {
+            ClusterHost::Native(h) => h,
+            ClusterHost::Pinned(h) => h.as_mut(),
+        }
+    }
+}
+
 struct HostSlot {
-    engine: SimEngine,
-    daemon: Option<Daemon>,
-    /// Round-robin core cursor for the global strategy's in-host pinning.
-    rr_core: usize,
+    host: ClusterHost,
     /// Host-powered integral (seconds).
     powered_seconds: f64,
 }
@@ -116,14 +150,15 @@ pub struct ClusterSim {
 
 impl ClusterSim {
     /// Build from a scenario spec: `scenario.vms` arrive cluster-wide and
-    /// are dispatched to hosts on arrival.
+    /// are dispatched to hosts on arrival. Hosts are native (shardable);
+    /// use [`Self::from_hosts`] to mix in caller-thread-pinned hosts.
     pub fn new(spec: ClusterSpec, scenario: &ScenarioSpec, bank: &ProfileBank) -> ClusterSim {
         let mut hosts = Vec::with_capacity(spec.hosts);
         for _ in 0..spec.hosts {
-            let engine = SimEngine::new(spec.cfg.clone(), Vec::new());
+            let engine = crate::hostsim::SimEngine::new(spec.cfg.clone(), Vec::new());
             let daemon = match spec.strategy {
                 Strategy::LocalVmcd => {
-                    let sched = scheduler::build(
+                    let sched = scheduler::build_native(
                         spec.local_policy,
                         bank,
                         spec.cfg.sched.ras_threshold,
@@ -133,13 +168,26 @@ impl ClusterSim {
                 }
                 Strategy::GlobalMigration => None,
             };
-            hosts.push(HostSlot {
-                engine,
-                daemon,
-                rr_core: 0,
-                powered_seconds: 0.0,
-            });
+            hosts.push(ClusterHost::Native(SimHost::new(engine, daemon)));
         }
+        ClusterSim::from_hosts(spec, scenario, hosts)
+    }
+
+    /// Build over explicit hosts (native and/or pinned). `spec.hosts` is
+    /// overridden by `hosts.len()`.
+    pub fn from_hosts(
+        mut spec: ClusterSpec,
+        scenario: &ScenarioSpec,
+        hosts: Vec<ClusterHost>,
+    ) -> ClusterSim {
+        spec.hosts = hosts.len();
+        let hosts = hosts
+            .into_iter()
+            .map(|host| HostSlot {
+                host,
+                powered_seconds: 0.0,
+            })
+            .collect();
         let pending = scenario
             .vms
             .iter()
@@ -173,26 +221,18 @@ impl ClusterSim {
             .collect();
         for &i in due.iter().rev() {
             let mut p = self.pending.remove(i);
-            let residents: Vec<usize> =
-                self.hosts.iter().map(|h| h.engine.vms.len()).collect();
+            let residents: Vec<usize> = self
+                .hosts
+                .iter()
+                .map(|h| h.host.handle().engine().vms.len())
+                .collect();
             let host = self
                 .spec
                 .dispatcher
                 .pick(&residents, &mut self.rr_dispatch, &mut self.rng);
             p.vm.state = VmState::Running;
             p.vm.started = Some(self.t);
-            let id = p.vm.id;
-            let slot = &mut self.hosts[host];
-            slot.engine.insert_vm(p.vm);
-            match &mut slot.daemon {
-                Some(daemon) => daemon.on_arrival(&mut slot.engine, id)?,
-                None => {
-                    let core = slot.rr_core % self.spec.cfg.host.cores;
-                    slot.rr_core += 1;
-                    use crate::hostsim::Hypervisor;
-                    slot.engine.pin_vcpu(id, core)?;
-                }
-            }
+            self.hosts[host].host.handle_mut().inject_arrival(p.vm)?;
         }
         Ok(())
     }
@@ -204,7 +244,9 @@ impl ClusterSim {
         let cores = self.spec.cfg.host.cores as f64;
         let cap = cores * self.spec.cfg.sched.ras_threshold;
         let load = |slot: &HostSlot| -> f64 {
-            slot.engine
+            slot.host
+                .handle()
+                .engine()
                 .vms
                 .iter()
                 .filter(|vm| vm.state == VmState::Running)
@@ -216,7 +258,9 @@ impl ClusterSim {
             .hosts
             .iter()
             .map(|h| {
-                h.engine
+                h.host
+                    .handle()
+                    .engine()
                     .vms
                     .iter()
                     .filter(|vm| vm.state == VmState::Running)
@@ -241,7 +285,9 @@ impl ClusterSim {
         }
 
         let vm_ids: Vec<VmId> = self.hosts[src]
-            .engine
+            .host
+            .handle()
+            .engine()
             .vms
             .iter()
             .filter(|vm| vm.state == VmState::Running)
@@ -255,7 +301,9 @@ impl ClusterSim {
             // Destination: most-loaded host that still fits the VM (pack).
             let vm_load = {
                 let vm = self.hosts[src]
-                    .engine
+                    .host
+                    .handle()
+                    .engine()
                     .vms
                     .iter()
                     .find(|vm| vm.id == id)
@@ -282,8 +330,10 @@ impl ClusterSim {
                 &mut self.rng,
             );
             // Transfer load on both ends for the whole window.
-            self.hosts[src].engine.external_net_load += self.spec.migration.transfer_net;
-            self.hosts[dst].engine.external_net_load += self.spec.migration.transfer_net;
+            self.hosts[src].host.handle_mut().engine_mut().external_net_load +=
+                self.spec.migration.transfer_net;
+            self.hosts[dst].host.handle_mut().engine_mut().external_net_load +=
+                self.spec.migration.transfer_net;
             self.migrations.push(mig);
             self.migrations_started += 1;
         }
@@ -299,27 +349,83 @@ impl ClusterSim {
         }
         for &i in finished.iter().rev() {
             let m = self.migrations.remove(i);
-            self.hosts[m.from_host].engine.external_net_load -=
-                self.spec.migration.transfer_net;
-            self.hosts[m.to_host].engine.external_net_load -=
-                self.spec.migration.transfer_net;
+            self.hosts[m.from_host]
+                .host
+                .handle_mut()
+                .engine_mut()
+                .external_net_load -= self.spec.migration.transfer_net;
+            self.hosts[m.to_host]
+                .host
+                .handle_mut()
+                .engine_mut()
+                .external_net_load -= self.spec.migration.transfer_net;
             let id = VmId(m.vm_index as u32);
             if m.doomed {
                 self.migrations_failed += 1;
                 continue; // pre-copy never converged; VM stays.
             }
             // Stop-and-copy: move the VM, pause it for the downtime.
-            if let Some(mut vm) = self.hosts[m.from_host].engine.remove_vm(id) {
+            let moved = self.hosts[m.from_host]
+                .host
+                .handle_mut()
+                .engine_mut()
+                .remove_vm(id);
+            if let Some(mut vm) = moved {
                 if vm.state == VmState::Running {
                     vm.paused_until = self.t + self.spec.migration.downtime;
                 }
-                let dst = &mut self.hosts[m.to_host];
-                let core = dst.rr_core % self.spec.cfg.host.cores;
-                dst.rr_core += 1;
-                vm.pinned = Some(core);
-                dst.engine.insert_vm(vm);
+                self.hosts[m.to_host].host.handle_mut().inject_migrated(vm);
             }
         }
+    }
+
+    /// Advance every host one tick. Native hosts shard across scoped
+    /// worker threads when `shard_threads > 1`; pinned hosts always step
+    /// on the caller thread. Hosts are independent within a tick, so the
+    /// schedule of workers cannot change results.
+    fn step_hosts(&mut self) -> Result<()> {
+        let threads = self.spec.shard_threads;
+        let mut native: Vec<&mut NativeHost> = Vec::new();
+        let mut pinned: Vec<&mut Box<dyn HostHandle>> = Vec::new();
+        for slot in &mut self.hosts {
+            match &mut slot.host {
+                ClusterHost::Native(h) => native.push(h),
+                ClusterHost::Pinned(h) => pinned.push(h),
+            }
+        }
+        if threads > 1 && native.len() > 1 {
+            // Manual ceil-div: usize::div_ceil needs rustc 1.73, above
+            // this crate's declared MSRV. unknown_lints keeps older
+            // clippy (which predates manual_div_ceil) happy too.
+            #[allow(unknown_lints, clippy::manual_div_ceil)]
+            let chunk = (native.len() + threads - 1) / threads;
+            let results: Vec<Result<()>> = std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for shard in native.chunks_mut(chunk) {
+                    handles.push(s.spawn(move || -> Result<()> {
+                        for host in shard.iter_mut() {
+                            host.step_host()?;
+                        }
+                        Ok(())
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard worker panicked"))
+                    .collect()
+            });
+            for r in results {
+                r?;
+            }
+        } else {
+            for host in native {
+                host.step_host()?;
+            }
+        }
+        for host in pinned {
+            host.step_host()?;
+        }
+        Ok(())
     }
 
     /// Run to completion; returns the cluster summary.
@@ -337,20 +443,27 @@ impl ClusterSim {
             }
             self.advance_migrations(dt);
 
+            self.step_hosts()?;
             for slot in &mut self.hosts {
-                if let Some(daemon) = &mut slot.daemon {
-                    daemon.maybe_cycle(&mut slot.engine)?;
-                }
-                slot.engine.step();
-                if slot.engine.ledger.busy_series.points.last().map(|p| p.1 > 0.0)
-                    == Some(true)
-                {
+                let busy_now = slot
+                    .host
+                    .handle()
+                    .engine()
+                    .ledger
+                    .busy_series
+                    .points
+                    .last()
+                    .map(|p| p.1 > 0.0);
+                if busy_now == Some(true) {
                     slot.powered_seconds += dt;
                 }
             }
             self.t += dt;
 
-            let batch_done = self.hosts.iter().all(|slot| slot.engine.all_batch_done())
+            let batch_done = self
+                .hosts
+                .iter()
+                .all(|slot| slot.host.handle().engine().all_batch_done())
                 && self.pending.is_empty();
             if (batch_done && self.t >= min_duration) || self.t >= max_time {
                 break;
@@ -361,9 +474,10 @@ impl ClusterSim {
         let mut core_hours = 0.0;
         let mut host_hours = 0.0;
         for slot in &self.hosts {
-            core_hours += slot.engine.ledger.core_hours();
+            let engine = slot.host.handle().engine();
+            core_hours += engine.ledger.core_hours();
             host_hours += slot.powered_seconds / 3600.0;
-            for vm in &slot.engine.vms {
+            for vm in &engine.vms {
                 if vm.state == VmState::NotArrived {
                     continue;
                 }
@@ -381,7 +495,9 @@ impl ClusterSim {
         }
         // Sanity: every spec'd class is consistent (defensive, cheap).
         debug_assert!(self.hosts.iter().all(|slot| {
-            slot.engine
+            slot.host
+                .handle()
+                .engine()
                 .vms
                 .iter()
                 .all(|vm| spec_of(vm.class).class == vm.class)
@@ -401,6 +517,7 @@ impl ClusterSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hostsim::SimEngine;
     use crate::scenarios::random;
     use crate::testkit;
 
@@ -469,17 +586,94 @@ mod tests {
         spec.cfg = testkit::quiet_config();
         let scen = cluster_scenario(4, 0.5, 7);
         let mut sim = ClusterSim::new(spec, &scen, bank);
-        // Step past all arrivals.
+        // Step past all arrivals (engines only: isolate the dispatcher).
         for _ in 0..(30 * scen.vms.len() + 10) {
             sim.dispatch_arrivals().unwrap();
             for slot in &mut sim.hosts {
-                slot.engine.step();
+                slot.host.handle_mut().engine_mut().step();
             }
             sim.t += 1.0;
         }
-        let counts: Vec<usize> = sim.hosts.iter().map(|h| h.engine.vms.len()).collect();
+        let counts: Vec<usize> = sim
+            .hosts
+            .iter()
+            .map(|h| h.host.handle().engine().vms.len())
+            .collect();
         let max = *counts.iter().max().unwrap();
         let min = *counts.iter().min().unwrap();
         assert!(max - min <= 1, "least-loaded must balance: {counts:?}");
+    }
+
+    #[test]
+    fn sharded_stepping_is_bit_identical_to_single_thread() {
+        // The acceptance property: hosts are independent within a tick,
+        // so the worker-thread split cannot change any result bit.
+        let bank = testkit::shared_bank();
+        let scen = cluster_scenario(4, 1.0, 11);
+        let run = |threads: usize| {
+            let mut spec = ClusterSpec::new(4, Strategy::LocalVmcd);
+            spec.cfg = testkit::quiet_config();
+            spec.shard_threads = threads;
+            ClusterSim::new(spec, &scen, bank)
+                .run(bank, scen.min_duration)
+                .unwrap()
+        };
+        let single = run(0);
+        let sharded = run(3);
+        assert_eq!(single.avg_perf.to_bits(), sharded.avg_perf.to_bits());
+        assert_eq!(single.core_hours.to_bits(), sharded.core_hours.to_bits());
+        assert_eq!(single.host_hours.to_bits(), sharded.host_hours.to_bits());
+        assert_eq!(
+            single.completion_time.to_bits(),
+            sharded.completion_time.to_bits()
+        );
+        assert_eq!(single.migrations_started, sharded.migrations_started);
+    }
+
+    #[test]
+    fn pinned_hosts_mix_with_sharded_native_hosts() {
+        // A caller-thread host (the XLA stand-in: Box<dyn HostHandle>)
+        // alongside sharded native hosts must reproduce the all-native
+        // results exactly — same policy, same backend math.
+        let bank = testkit::shared_bank();
+        let scen = cluster_scenario(3, 0.75, 42);
+        let cfg = testkit::quiet_config();
+
+        let mut nspec = ClusterSpec::new(3, Strategy::LocalVmcd);
+        nspec.cfg = cfg.clone();
+        let all_native = ClusterSim::new(nspec, &scen, bank)
+            .run(bank, scen.min_duration)
+            .unwrap();
+
+        let mut mspec = ClusterSpec::new(3, Strategy::LocalVmcd);
+        mspec.cfg = cfg.clone();
+        mspec.shard_threads = 2;
+        let mut hosts = Vec::new();
+        for i in 0..3 {
+            let engine = SimEngine::new(cfg.clone(), Vec::new());
+            if i == 2 {
+                let sched =
+                    scheduler::build(Policy::Ias, bank, cfg.sched.ras_threshold, None);
+                let daemon = Daemon::new(cfg.sched.clone(), sched);
+                hosts.push(ClusterHost::Pinned(Box::new(SimHost::new(
+                    engine,
+                    Some(daemon),
+                ))));
+            } else {
+                let sched = scheduler::build_native(
+                    Policy::Ias,
+                    bank,
+                    cfg.sched.ras_threshold,
+                    None,
+                );
+                let daemon = Daemon::new(cfg.sched.clone(), sched);
+                hosts.push(ClusterHost::Native(SimHost::new(engine, Some(daemon))));
+            }
+        }
+        let mixed = ClusterSim::from_hosts(mspec, &scen, hosts)
+            .run(bank, scen.min_duration)
+            .unwrap();
+        assert_eq!(all_native.avg_perf.to_bits(), mixed.avg_perf.to_bits());
+        assert_eq!(all_native.core_hours.to_bits(), mixed.core_hours.to_bits());
     }
 }

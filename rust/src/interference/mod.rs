@@ -6,7 +6,9 @@
 //!   workload from its co-runners (mean of sum and product of pairwise
 //!   slowdowns).
 //! * [`core_interference`] — Eq. 4: I_c, the worst WI on the core.
-//! * [`ias_threshold`] — Eq. 5: the IAS acceptance threshold ≈ mean of S.
+//! * [`ias_threshold`] — Eq. 5: the IAS acceptance threshold, the mean
+//!   *off-diagonal* entry of S (Eq. 5 averages distinct pairs; diagonal
+//!   self-slowdowns would skew it).
 //!
 //! These are the native scoring backend; `runtime::scoring` provides an
 //! XLA-executed equivalent (the AOT-compiled Pallas kernel) and the test

@@ -147,8 +147,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let kind = ScenarioKind::from_name(&args.opt_or("scenario", "random"))
         .context("unknown --scenario")?;
-    let policy =
-        Policy::from_name(&args.opt_or("policy", "ias")).context("unknown --policy")?;
+    let policy = Policy::parse(&args.opt_or("policy", "ias"))?;
     let sr = args.opt_f64("sr", 1.0)?;
     let seed = args.opt_u64("seed", cfg.sim.seed)?;
     let bank = bank_for(&cfg, args);
@@ -308,8 +307,7 @@ fn cmd_daemon(args: &Args) -> Result<()> {
     use vmcd::vmcd::Daemon;
 
     let cfg = load_config(args)?;
-    let policy =
-        Policy::from_name(&args.opt_or("policy", "ras")).context("unknown --policy")?;
+    let policy = Policy::parse(&args.opt_or("policy", "ras"))?;
     let ticks = args.opt_usize("ticks", 300)?;
     let ms = args.opt_u64("ms-per-tick", 5)?;
     let bank = bank_for(&cfg, args);
@@ -355,7 +353,7 @@ fn cmd_daemon(args: &Args) -> Result<()> {
             daemon.on_arrival(&mut engine, id)?;
             log::info!("t={:>5.0}s arrival {:?}", engine.t, id);
         }
-        if daemon.maybe_cycle(&mut engine)? {
+        if daemon.step(&mut engine)? {
             let busy = engine.busy_cores();
             log::info!(
                 "t={:>5.0}s cycle {}: {} resident, {} busy cores, {} re-pins so far",

@@ -94,7 +94,9 @@ fn run_scenario_with(
         for id in engine.process_arrivals() {
             daemon.on_arrival(&mut engine, id)?;
         }
-        daemon.maybe_cycle(&mut engine)?;
+        // One daemon step per tick: a single monitor poll diffed into
+        // lifecycle events, plus the Alg. 1 Tick when the interval is due.
+        daemon.step(&mut engine)?;
         engine.step();
 
         let done = engine.all_batch_done()

@@ -7,7 +7,7 @@
 
 use crate::hostsim::{Hypervisor, VmId};
 use anyhow::Result;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 #[derive(Debug, Default)]
 pub struct Actuator {
@@ -45,8 +45,9 @@ impl Actuator {
     }
 
     /// Forget domains that no longer exist (so a VM re-using an id later
-    /// is re-pinned).
-    pub fn retain(&mut self, live: &[VmId]) {
+    /// is re-pinned). Takes a set: the event-driven daemon calls this
+    /// every step, so the scan must stay O(n log n).
+    pub fn retain(&mut self, live: &BTreeSet<VmId>) {
         self.applied.retain(|id, _| live.contains(id));
     }
 }
@@ -106,7 +107,7 @@ mod tests {
         let mut act = Actuator::new();
         act.pin(&mut eng, VmId(0), 1).unwrap();
         act.pin(&mut eng, VmId(1), 2).unwrap();
-        act.retain(&[VmId(1)]);
+        act.retain(&BTreeSet::from([VmId(1)]));
         // VmId(0) must be re-pinned for real next time.
         act.pin(&mut eng, VmId(0), 1).unwrap();
         assert_eq!(act.pin_calls, 3);

@@ -1,29 +1,80 @@
-//! The General Scheduler loop — paper Algorithm 1.
+//! The General Scheduler loop — paper Algorithm 1, event-driven.
 //!
-//! Every `timeInterval` seconds the daemon:
-//! 1. polls the monitor for idle vs running workloads (idle = CPU below
-//!    2.5% over the last monitoring window),
-//! 2. pins every idle workload on core 0 ("considered to consume zero
-//!    resources"),
-//! 3. re-pins every running workload through the policy's `SelectPinning`.
+//! The paper re-derives the whole placement every `timeInterval`; early
+//! versions of this daemon mirrored that by rebuilding a fresh
+//! [`PlacementState`] from a monitor snapshot on every cycle *and* every
+//! arrival. The daemon now owns one **long-lived** state for the host's
+//! whole lifetime and mutates it through [`SchedEvent`]s:
 //!
-//! New arrivals are placed immediately (§III: "as new workloads are
-//! forwarded to VMCd, they are pinned to CPU cores as resource
-//! availability allows").
+//! * [`SchedEvent::Arrival`] — place the newcomer immediately (§III) via
+//!   `SelectPinning`, or adopt an already-pinned domain discovered by the
+//!   first poll;
+//! * [`SchedEvent::Departure`] — `PlacementState::remove` the member in
+//!   O(members);
+//! * [`SchedEvent::IdleTransition`] — park on core 0 ("considered to
+//!   consume zero resources") and remove from the running state;
+//! * [`SchedEvent::WakeTransition`] — re-enter via `SelectPinning`;
+//! * [`SchedEvent::Tick`] — the periodic Alg. 1 re-pin pass, expressed as
+//!   remove+place deltas per running workload instead of a rebuild.
+//!
+//! [`Daemon::step`] polls the monitor **once** per simulator step and
+//! diffs the snapshot into lifecycle events (the old design polled in
+//! both `on_arrival` and `run_cycle`). The full from-scratch rebuild
+//! survives only as the `debug_assert!` reconciliation path
+//! ([`Daemon::state_matches_rebuild`]).
 
 use super::actuator::Actuator;
-use super::monitor::Monitor;
-use super::scheduler::{Policy, Scheduler};
+use super::monitor::{Monitor, MonitorSnapshot};
+use super::scheduler::{PlacementState, Policy, Scheduler};
 use crate::config::SchedParams;
 use crate::hostsim::{Hypervisor, VmId};
+use crate::workloads::WorkloadClass;
 use anyhow::Result;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Core reserved for consolidated idle workloads (Alg. 1 line 7).
 pub const IDLE_CORE: usize = 0;
 
-pub struct Daemon {
+/// A scheduling-relevant change in the host's VM population. The daemon
+/// derives these by diffing monitor snapshots ([`Daemon::step`]), and
+/// embedders can inject them directly ([`Daemon::handle_event`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedEvent {
+    /// A domain became resident and needs an initial pinning (or, if it
+    /// already carries one, adoption into the placement state).
+    Arrival(VmId),
+    /// A resident domain left the host (finished or migrated away).
+    Departure(VmId),
+    /// A running workload's windowed CPU fell below the idle threshold.
+    IdleTransition(VmId),
+    /// An idle workload became active again.
+    WakeTransition(VmId),
+    /// The periodic Alg. 1 re-pin + idle-consolidation pass.
+    Tick,
+}
+
+/// What the daemon knows about one resident domain.
+#[derive(Debug, Clone)]
+struct Resident {
+    class: WorkloadClass,
+    /// Intended core: the placement-state position for running
+    /// workloads, the parking core for idle ones. Kept even when an
+    /// actuation fails so decisions stay consistent and the pin is
+    /// retried next Tick.
+    core: usize,
+    idle: bool,
+    /// When the daemon started tracking the domain. A freshly-placed
+    /// workload's monitoring window is empty (average 0), so idle
+    /// transitions are suppressed until one full window has elapsed —
+    /// the paper's 2.5% rule is defined over a complete window.
+    since: f64,
+}
+
+/// The VMCd daemon, generic over the scheduler so a natively-scored
+/// daemon (`Daemon<dyn Scheduler + Send>`) can move to a cluster worker
+/// thread while an XLA-backed `Daemon<dyn Scheduler>` stays put.
+pub struct Daemon<S: ?Sized + Scheduler = dyn Scheduler> {
     pub params: SchedParams,
-    pub scheduler: Box<dyn Scheduler>,
     pub monitor: Monitor,
     pub actuator: Actuator,
     last_cycle: Option<f64>,
@@ -31,19 +82,33 @@ pub struct Daemon {
     pub cycles: u64,
     /// Transient actuation failures tolerated (reporting).
     pub pin_failures: u64,
+    /// Lifecycle (non-Tick) events handled (reporting).
+    pub events_handled: u64,
+    /// The long-lived placement state, created on first hypervisor
+    /// contact (when the core count is known).
+    state: Option<PlacementState>,
+    /// Current idle-core reservation, so `sync_reservation` only touches
+    /// the state's `allowed` set on actual flips.
+    reserved: bool,
+    residents: BTreeMap<VmId, Resident>,
+    pub scheduler: Box<S>,
 }
 
-impl Daemon {
-    pub fn new(params: SchedParams, scheduler: Box<dyn Scheduler>) -> Daemon {
+impl<S: ?Sized + Scheduler> Daemon<S> {
+    pub fn new(params: SchedParams, scheduler: Box<S>) -> Daemon<S> {
         let monitor = Monitor::new(params.idle_cpu_threshold);
         Daemon {
             params,
-            scheduler,
             monitor,
             actuator: Actuator::new(),
             last_cycle: None,
             cycles: 0,
             pin_failures: 0,
+            events_handled: 0,
+            state: None,
+            reserved: false,
+            residents: BTreeMap::new(),
+            scheduler,
         }
     }
 
@@ -51,107 +116,421 @@ impl Daemon {
         self.scheduler.policy()
     }
 
-    /// Place a newly-arrived workload immediately.
-    pub fn on_arrival(&mut self, hv: &mut dyn Hypervisor, id: VmId) -> Result<()> {
-        let snap = self.monitor.poll(hv);
-        let cores = hv.host_spec().cores;
-
-        // Build the placement state from live pinnings of *running*
-        // workloads (idle ones are parked and "consume zero resources").
-        // `new_state` attaches the policy's score cache so every `place`
-        // below is a delta update, not a deferred O(members²) re-sum.
-        let has_idle = snap.domains.iter().any(|d| d.idle && d.id != id);
-        let mut state = self
-            .scheduler
-            .new_state(cores, has_idle && self.scheduler.dynamic());
-        for d in &snap.domains {
-            if d.id == id || d.idle {
-                continue;
-            }
-            if let Some(core) = d.pinned {
-                state.place(core, d.class);
-            }
-        }
-        let class = snap
-            .domains
-            .iter()
-            .find(|d| d.id == id)
-            .map(|d| d.class)
-            .ok_or_else(|| anyhow::anyhow!("arrival {id:?} not visible to monitor"))?;
-        let core = self.scheduler.select_pinning(&state, class);
-        self.actuator.pin(hv, id, core)
+    /// The long-lived placement state (None until first hypervisor
+    /// contact).
+    pub fn placement_state(&self) -> Option<&PlacementState> {
+        self.state.as_ref()
     }
 
-    /// Run a cycle if the interval has elapsed. Returns true if it ran.
-    pub fn maybe_cycle(&mut self, hv: &mut dyn Hypervisor) -> Result<bool> {
+    fn ensure_state(&mut self, hv: &dyn Hypervisor) {
+        if self.state.is_none() {
+            self.state = Some(self.scheduler.new_state(hv.host_spec().cores, false));
+        }
+    }
+
+    fn has_idle(&self) -> bool {
+        self.residents.values().any(|r| r.idle)
+    }
+
+    /// Recompute the idle-core reservation from the tracked idle set.
+    /// Touches the state's `allowed` set only when the flag flips.
+    fn sync_reservation(&mut self) {
+        let reserve = self.scheduler.dynamic() && self.has_idle();
+        if reserve == self.reserved {
+            return;
+        }
+        self.reserved = reserve;
+        if let Some(state) = self.state.as_mut() {
+            state.set_idle_reservation(reserve);
+        }
+    }
+
+    /// One daemon step: poll the monitor **once**, diff the snapshot into
+    /// lifecycle events and handle them, then run the Alg. 1 Tick if the
+    /// interval has elapsed. Returns whether the Tick ran.
+    pub fn step(&mut self, hv: &mut dyn Hypervisor) -> Result<bool> {
+        self.drain_lifecycle(hv)?;
         let t = hv.now();
         let due = match self.last_cycle {
             None => true,
             Some(t0) => t - t0 >= self.params.interval - 1e-9,
         };
-        if !due {
-            return Ok(false);
+        if due {
+            self.handle_event(hv, SchedEvent::Tick)?;
         }
-        self.last_cycle = Some(t);
-        self.run_cycle(hv)?;
-        Ok(true)
+        Ok(due)
     }
 
-    /// One full Alg. 1 pass.
-    pub fn run_cycle(&mut self, hv: &mut dyn Hypervisor) -> Result<()> {
-        self.cycles += 1;
+    /// Back-compat alias for [`Self::step`].
+    pub fn maybe_cycle(&mut self, hv: &mut dyn Hypervisor) -> Result<bool> {
+        self.step(hv)
+    }
 
+    /// Force a full pass now: drain lifecycle events, then Tick. (The old
+    /// rebuild-per-cycle entry point, kept for drivers and tests that
+    /// want an immediate cycle.)
+    pub fn run_cycle(&mut self, hv: &mut dyn Hypervisor) -> Result<()> {
+        self.drain_lifecycle(hv)?;
+        self.handle_event(hv, SchedEvent::Tick)
+    }
+
+    /// Place a newly-arrived workload immediately (§III: "as new
+    /// workloads are forwarded to VMCd, they are pinned to CPU cores as
+    /// resource availability allows"). The domain list (no monitor poll)
+    /// is reconciled first — departures drained, unknown co-residents
+    /// adopted — so the placement decision sees the real occupancy, not
+    /// ghosts of VMs that finished since the last step.
+    pub fn on_arrival(&mut self, hv: &mut dyn Hypervisor, id: VmId) -> Result<()> {
+        // Static schedulers don't track occupancy, so there is nothing
+        // to reconcile before placing.
+        if self.scheduler.dynamic() {
+            let domains = hv.list_domains();
+            let untracked_self = usize::from(!self.residents.contains_key(&id));
+            // Reconcile only when the tracked view visibly disagrees with
+            // the live set beyond the arriving VM itself: an arrival
+            // burst still pays list_domains (O(residents)) each, but
+            // skips the per-arrival set build, departure diff, and
+            // per-domain stats probes. (A numerically balanced
+            // ghost+unknown pair slips this gate; the next step's poll
+            // diff corrects it.)
+            if domains.len() != self.residents.len() + untracked_self {
+                let live: BTreeSet<VmId> = domains.into_iter().collect();
+                let gone: Vec<VmId> = self
+                    .residents
+                    .keys()
+                    .filter(|&&r| !live.contains(&r))
+                    .copied()
+                    .collect();
+                for g in gone {
+                    self.handle_event(hv, SchedEvent::Departure(g))?;
+                }
+                for other in live {
+                    if other != id && !self.residents.contains_key(&other) {
+                        self.handle_event(hv, SchedEvent::Arrival(other))?;
+                    }
+                }
+            }
+        }
+        self.handle_event(hv, SchedEvent::Arrival(id))
+    }
+
+    /// Poll once and apply every lifecycle delta since the last poll.
+    fn drain_lifecycle(&mut self, hv: &mut dyn Hypervisor) -> Result<()> {
+        // RRS is static: no idle detection, no monitoring ("unable to
+        // detect whether a workload is in running state or idle", §V-C.1).
+        if !self.scheduler.dynamic() {
+            return Ok(());
+        }
+        self.ensure_state(hv);
+        let snap = self.monitor.poll(hv);
+        let live: BTreeSet<VmId> = snap.domains.iter().map(|d| d.id).collect();
+        self.actuator.retain(&live);
+        for ev in self.diff(&snap, &live) {
+            self.handle_event(hv, ev)?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot → events: departures first (freeing cores), then unknown
+    /// domains, then idle/wake flips. `live` is the snapshot's id set, so
+    /// the per-step departure scan is O(residents · log domains) rather
+    /// than quadratic.
+    ///
+    /// A VmId reused for a *different workload class* between polls is
+    /// caught as Departure + Arrival; same-class reuse within one poll
+    /// interval is indistinguishable from the old domain by id alone.
+    fn diff(&self, snap: &MonitorSnapshot, live: &BTreeSet<VmId>) -> Vec<SchedEvent> {
+        let mut events = Vec::new();
+        for &id in self.residents.keys() {
+            if !live.contains(&id) {
+                events.push(SchedEvent::Departure(id));
+            }
+        }
+        for d in &snap.domains {
+            match self.residents.get(&d.id) {
+                None => events.push(SchedEvent::Arrival(d.id)),
+                Some(r) if r.class != d.class => {
+                    events.push(SchedEvent::Departure(d.id));
+                    events.push(SchedEvent::Arrival(d.id));
+                }
+                Some(r) => {
+                    let window_warm =
+                        snap.t - r.since >= self.params.monitor_window - 1e-9;
+                    if !r.idle && d.idle && window_warm {
+                        events.push(SchedEvent::IdleTransition(d.id));
+                    } else if r.idle && !d.idle {
+                        events.push(SchedEvent::WakeTransition(d.id));
+                    }
+                }
+            }
+        }
+        events
+    }
+
+    /// Apply one event to the long-lived state.
+    pub fn handle_event(&mut self, hv: &mut dyn Hypervisor, ev: SchedEvent) -> Result<()> {
+        self.ensure_state(hv);
+        if !matches!(ev, SchedEvent::Tick) {
+            self.events_handled += 1;
+        }
+        match ev {
+            SchedEvent::Arrival(id) => self.on_arrival_event(hv, id),
+            SchedEvent::Departure(id) => {
+                self.on_departure(id);
+                Ok(())
+            }
+            SchedEvent::IdleTransition(id) => {
+                self.on_idle(hv, id);
+                Ok(())
+            }
+            SchedEvent::WakeTransition(id) => {
+                self.on_wake(hv, id);
+                Ok(())
+            }
+            SchedEvent::Tick => self.on_tick(hv),
+        }
+    }
+
+    fn on_arrival_event(&mut self, hv: &mut dyn Hypervisor, id: VmId) -> Result<()> {
+        if self.residents.contains_key(&id) {
+            return Ok(()); // duplicate arrival: already tracked
+        }
+        let stats = hv
+            .domain_stats(id)
+            .ok_or_else(|| anyhow::anyhow!("arrival {id:?} not visible to the hypervisor"))?;
+        let class = stats.class;
+        // A static scheduler (RRS) never monitors, so departures would
+        // never be drained: pin the newcomer without tracking it, or the
+        // resident table and placement state grow with every arrival for
+        // the host's whole lifetime. Pin errors DO propagate here — a
+        // static policy has no Tick retry to self-heal through.
+        if !self.scheduler.dynamic() {
+            if stats.pinned.is_none() {
+                let core = self
+                    .scheduler
+                    .select_pinning(self.state.as_ref().unwrap(), class);
+                return self.actuator.pin(hv, id, core);
+            }
+            return Ok(());
+        }
+        let now = hv.now();
+        match stats.pinned {
+            // Adoption: a pre-existing resident (first poll after daemon
+            // start, or a VM migrated in). Trust the live pinning and the
+            // monitor's idle rule (its window belongs to a live history);
+            // the next Tick re-pins it like any other workload.
+            Some(core) => {
+                let idle = self.monitor.is_idle(stats.cpu_window_avg);
+                if !idle {
+                    self.state.as_mut().unwrap().place(core, class);
+                }
+                self.residents.insert(
+                    id,
+                    Resident {
+                        class,
+                        core,
+                        idle,
+                        since: now - self.params.monitor_window,
+                    },
+                );
+                self.sync_reservation();
+                Ok(())
+            }
+            // Fresh arrival: place immediately. Its monitoring window is
+            // empty, so it is treated as running — and `since` suppresses
+            // idle transitions — until one full window has elapsed.
+            None => {
+                let core = self
+                    .scheduler
+                    .select_pinning(self.state.as_ref().unwrap(), class);
+                self.state.as_mut().unwrap().place(core, class);
+                self.residents.insert(
+                    id,
+                    Resident {
+                        class,
+                        core,
+                        idle: false,
+                        since: now,
+                    },
+                );
+                // Like every other handler: a transient pin failure must
+                // not abort scheduling — the intended core is recorded
+                // and the pin is retried next Tick.
+                if let Err(e) = self.actuator.pin(hv, id, core) {
+                    self.pin_failures += 1;
+                    log::warn!("pin {id:?} -> core {core} failed: {e}");
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn on_departure(&mut self, id: VmId) {
+        let Some(r) = self.residents.remove(&id) else {
+            return;
+        };
+        if !r.idle {
+            let removed = self.state.as_mut().unwrap().remove(r.core, r.class);
+            debug_assert!(removed, "departing {id:?} missing from placement state");
+        }
+        self.sync_reservation();
+    }
+
+    fn on_idle(&mut self, hv: &mut dyn Hypervisor, id: VmId) {
+        if !self.scheduler.dynamic() {
+            return;
+        }
+        let Some(r) = self.residents.get_mut(&id) else {
+            return;
+        };
+        if r.idle {
+            return;
+        }
+        let (class, core) = (r.class, r.core);
+        r.idle = true;
+        r.core = IDLE_CORE;
+        let removed = self.state.as_mut().unwrap().remove(core, class);
+        debug_assert!(removed, "idling {id:?} missing from placement state");
+        self.sync_reservation();
+        // Alg. 1 lines 6-7. Pin failures must not abort scheduling: log,
+        // count, carry on — the VM keeps its old pinning and is retried
+        // next Tick.
+        if let Err(e) = self.actuator.pin(hv, id, IDLE_CORE) {
+            self.pin_failures += 1;
+            log::warn!("pin {id:?} -> idle core failed: {e}");
+        }
+    }
+
+    fn on_wake(&mut self, hv: &mut dyn Hypervisor, id: VmId) {
+        if !self.scheduler.dynamic() {
+            return;
+        }
+        let Some(r) = self.residents.get_mut(&id) else {
+            return;
+        };
+        if !r.idle {
+            return;
+        }
+        let class = r.class;
+        // The waking VM leaves the idle set *before* the reservation is
+        // recomputed: if it was the last idle workload, core 0 reopens.
+        r.idle = false;
+        self.sync_reservation();
+        let core = self
+            .scheduler
+            .select_pinning(self.state.as_ref().unwrap(), class);
+        self.state.as_mut().unwrap().place(core, class);
+        self.residents.get_mut(&id).unwrap().core = core;
+        if let Err(e) = self.actuator.pin(hv, id, core) {
+            self.pin_failures += 1;
+            log::warn!("pin {id:?} -> core {core} failed: {e}");
+        }
+    }
+
+    /// The periodic pass: park idle workloads, then re-pin every running
+    /// workload through `SelectPinning` — each as a remove+place delta on
+    /// the long-lived state, in stable (VmId) order so decisions are
+    /// deterministic.
+    ///
+    /// Deliberate divergence from the paper's Algorithm 1: the paper
+    /// re-derives the whole placement from an empty state (VM k's
+    /// decision sees only VMs 1..k-1), whereas this pass *refines* the
+    /// current placement (each decision sees all other residents where
+    /// they stand). Individual pinnings can differ from a from-scratch
+    /// greedy pass; the first-fit core scan still compacts toward
+    /// low-index cores, so the consolidation behaviour the paper
+    /// evaluates is preserved — that trade is the point of the
+    /// event-driven redesign (no O(members²) rebuild per cycle).
+    fn on_tick(&mut self, hv: &mut dyn Hypervisor) -> Result<()> {
+        // The Tick owns the interval clock, so every entry point
+        // (`step`'s gate, `run_cycle`, a directly-injected event) resets
+        // it consistently and cycles never double-run on one tick.
+        self.last_cycle = Some(hv.now());
+        self.cycles += 1;
         // RRS is static: no idle detection, no re-pinning.
         if !self.scheduler.dynamic() {
             return Ok(());
         }
+        self.sync_reservation();
 
-        let snap = self.monitor.poll(hv);
-        let live: Vec<VmId> = snap.domains.iter().map(|d| d.id).collect();
-        self.actuator.retain(&live);
-
-        let cores = hv.host_spec().cores;
-        let idle: Vec<_> = snap
-            .domains
+        let idle_ids: Vec<VmId> = self
+            .residents
             .iter()
-            .filter(|d| d.idle)
-            .cloned()
+            .filter(|(_, r)| r.idle)
+            .map(|(&id, _)| id)
             .collect();
-        let running: Vec<_> = snap
-            .domains
-            .iter()
-            .filter(|d| !d.idle)
-            .cloned()
-            .collect();
-
-        // Alg. 1 lines 6-7: park idle workloads on core 0. Individual pin
-        // failures (libvirt calls fail transiently in production) must not
-        // abort the cycle: log, count, and carry on — the VM keeps its old
-        // pinning until the next cycle.
-        for d in &idle {
-            if let Err(e) = self.actuator.pin(hv, d.id, IDLE_CORE) {
+        for id in idle_ids {
+            self.residents.get_mut(&id).unwrap().core = IDLE_CORE;
+            if let Err(e) = self.actuator.pin(hv, id, IDLE_CORE) {
                 self.pin_failures += 1;
-                log::warn!("pin {:?} -> idle core failed: {e}", d.id);
+                log::warn!("pin {id:?} -> idle core failed: {e}");
             }
         }
 
-        // Alg. 1 lines 8-10: re-pin running workloads via SelectPinning.
-        // Stable order (arrival id) so decisions are deterministic.
-        let mut running = running;
-        running.sort_by_key(|d| d.id);
-        let mut state = self.scheduler.new_state(cores, !idle.is_empty());
-        for d in &running {
-            let core = self.scheduler.select_pinning(&state, d.class);
-            // The placement state tracks the INTENDED placement even if the
-            // actuation fails — subsequent decisions stay consistent, and
-            // the failed VM is retried next cycle.
-            state.place(core, d.class);
-            if let Err(e) = self.actuator.pin(hv, d.id, core) {
+        let running_ids: Vec<VmId> = self
+            .residents
+            .iter()
+            .filter(|(_, r)| !r.idle)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in running_ids {
+            let (class, old_core) = {
+                let r = &self.residents[&id];
+                (r.class, r.core)
+            };
+            let removed = self.state.as_mut().unwrap().remove(old_core, class);
+            debug_assert!(removed, "running {id:?} missing from placement state");
+            let core = self
+                .scheduler
+                .select_pinning(self.state.as_ref().unwrap(), class);
+            self.state.as_mut().unwrap().place(core, class);
+            self.residents.get_mut(&id).unwrap().core = core;
+            if let Err(e) = self.actuator.pin(hv, id, core) {
                 self.pin_failures += 1;
-                log::warn!("pin {:?} -> core {core} failed: {e}", d.id);
+                log::warn!("pin {id:?} -> core {core} failed: {e}");
             }
         }
+        debug_assert!(
+            self.state_matches_rebuild(1e-6),
+            "long-lived placement state drifted from the event deltas"
+        );
         Ok(())
+    }
+
+    /// Rebuild a fresh placement state from the resident table — the old
+    /// per-cycle path, demoted to a reconciliation reference.
+    pub fn rebuild_state(&self) -> Option<PlacementState> {
+        let state = self.state.as_ref()?;
+        let reserve = self.scheduler.dynamic() && self.has_idle();
+        let mut rebuilt = self.scheduler.new_state(state.cores.len(), reserve);
+        for r in self.residents.values() {
+            if !r.idle {
+                rebuilt.place(r.core, r.class);
+            }
+        }
+        Some(rebuilt)
+    }
+
+    /// Does the long-lived state agree with a from-scratch rebuild — same
+    /// `allowed` set, same per-core membership (as multisets), and cached
+    /// aggregates within `tol` of a re-sum?
+    pub fn state_matches_rebuild(&self, tol: f64) -> bool {
+        let (Some(state), Some(rebuilt)) = (self.state.as_ref(), self.rebuild_state()) else {
+            return true;
+        };
+        if state.allowed != rebuilt.allowed {
+            return false;
+        }
+        for (a, b) in state.cores.iter().zip(rebuilt.cores.iter()) {
+            let mut x = a.clone();
+            let mut y = b.clone();
+            x.sort_unstable();
+            y.sort_unstable();
+            if x != y {
+                return false;
+            }
+        }
+        state.cache_matches_rebuild(tol)
     }
 }
 
@@ -226,12 +605,12 @@ mod tests {
     fn interval_gating() {
         let vms = vec![resident(0, WorkloadClass::Hadoop, true)];
         let (mut eng, mut daemon) = setup(Policy::Ras, vms);
-        assert!(daemon.maybe_cycle(&mut eng).unwrap()); // first is immediate
-        assert!(!daemon.maybe_cycle(&mut eng).unwrap()); // gated
+        assert!(daemon.step(&mut eng).unwrap()); // first is immediate
+        assert!(!daemon.step(&mut eng).unwrap()); // gated
         for _ in 0..31 {
             eng.step();
         }
-        assert!(daemon.maybe_cycle(&mut eng).unwrap()); // 30 s later
+        assert!(daemon.step(&mut eng).unwrap()); // 30 s later
     }
 
     #[test]
@@ -311,5 +690,42 @@ mod tests {
             eng.vms[0].pinned, eng.vms[1].pinned,
             "complementary pair should share a core"
         );
+    }
+
+    #[test]
+    fn departures_are_removed_from_the_long_lived_state() {
+        let vms = vec![
+            resident(0, WorkloadClass::Blackscholes, true),
+            resident(1, WorkloadClass::Hadoop, true),
+        ];
+        let (mut eng, mut daemon) = setup(Policy::Ras, vms);
+        for _ in 0..12 {
+            eng.step();
+        }
+        daemon.run_cycle(&mut eng).unwrap();
+        assert_eq!(daemon.placement_state().unwrap().placed(), 2);
+        // Force-finish one VM: the next step must emit a Departure.
+        eng.vms[0].state = VmState::Finished;
+        daemon.step(&mut eng).unwrap();
+        assert_eq!(daemon.placement_state().unwrap().placed(), 1);
+        assert!(daemon.state_matches_rebuild(1e-9));
+    }
+
+    #[test]
+    fn events_counter_tracks_lifecycle_churn() {
+        let vms = vec![
+            resident(0, WorkloadClass::Blackscholes, true),
+            resident(1, WorkloadClass::LampLight, false),
+        ];
+        let (mut eng, mut daemon) = setup(Policy::Ias, vms);
+        for _ in 0..12 {
+            eng.step();
+        }
+        daemon.run_cycle(&mut eng).unwrap();
+        // Two adoptions at least; Ticks are not counted as events.
+        assert!(daemon.events_handled >= 2, "{}", daemon.events_handled);
+        let before = daemon.events_handled;
+        daemon.run_cycle(&mut eng).unwrap();
+        assert_eq!(daemon.events_handled, before, "steady state emits no events");
     }
 }

@@ -7,14 +7,15 @@
 //!   (the libvirt-API abstraction);
 //! * [`scheduler`] — the placement policies: RRS (baseline), CAS, RAS
 //!   (Alg. 2), IAS (Alg. 3);
-//! * [`daemon`] — the General Scheduler loop (Alg. 1): every interval,
-//!   idle workloads (< 2.5% CPU over the monitoring window) are parked on
-//!   core 0 and running workloads are re-pinned by the policy.
+//! * [`daemon`] — the General Scheduler loop (Alg. 1), event-driven: one
+//!   long-lived placement state mutated through [`daemon::SchedEvent`]s
+//!   (arrivals, departures, idle/wake transitions, periodic Tick) with
+//!   the monitor polled once per step and diffed into events.
 
 pub mod actuator;
 pub mod daemon;
 pub mod monitor;
 pub mod scheduler;
 
-pub use daemon::Daemon;
+pub use daemon::{Daemon, SchedEvent};
 pub use monitor::{DomainView, Monitor, MonitorSnapshot};

@@ -44,10 +44,16 @@ impl MonitorSnapshot {
 
 /// The monitor holds the previous counter snapshot per domain so it can
 /// compute bandwidth from deltas (perf-style sampling).
+///
+/// The event-driven daemon polls **once per step** and diffs the snapshot
+/// into [`SchedEvent`](super::daemon::SchedEvent)s; [`Self::poll_count`]
+/// exposes the pass count so tests can pin that down (the old design
+/// polled in both the arrival path and the cycle path).
 #[derive(Debug, Default)]
 pub struct Monitor {
     idle_threshold: f64,
     last_counters: BTreeMap<VmId, (f64, PerfCounters)>,
+    polls: u64,
 }
 
 impl Monitor {
@@ -55,11 +61,26 @@ impl Monitor {
         Monitor {
             idle_threshold,
             last_counters: BTreeMap::new(),
+            polls: 0,
         }
+    }
+
+    /// Number of monitoring passes run so far.
+    pub fn poll_count(&self) -> u64 {
+        self.polls
+    }
+
+    /// The idle rule (paper §III): windowed CPU below the threshold.
+    /// Single source of truth — the daemon's adoption path classifies
+    /// through this too, so the rule cannot drift between poll-derived
+    /// [`DomainView::idle`] flags and per-domain stats reads.
+    pub fn is_idle(&self, cpu_window_avg: f64) -> bool {
+        cpu_window_avg < self.idle_threshold
     }
 
     /// Poll the hypervisor: one monitoring pass.
     pub fn poll(&mut self, hv: &dyn Hypervisor) -> MonitorSnapshot {
+        self.polls += 1;
         let t = hv.now();
         let mut snap = MonitorSnapshot {
             t,
@@ -82,7 +103,7 @@ impl Monitor {
             self.last_counters.insert(id, (t, stats.counters));
 
             let util = [stats.util[0], stats.util[1], stats.util[2], membw];
-            let idle = stats.cpu_window_avg < self.idle_threshold;
+            let idle = self.is_idle(stats.cpu_window_avg);
             snap.domains.push(DomainView {
                 id,
                 class: stats.class,

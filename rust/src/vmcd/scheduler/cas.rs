@@ -9,17 +9,13 @@ use super::ras::Ras;
 use super::scoring::ScoringBackend;
 use crate::profiling::ProfileBank;
 
-/// CAS is RAS restricted to the CPU metric.
+/// CAS is RAS restricted to the CPU metric (boxed-backend form).
 pub type Cas = Ras;
 
-impl Cas {
-    pub fn new_cas(bank: ProfileBank, thr: f64, backend: Box<dyn ScoringBackend>) -> Cas {
-        Ras::cpu_only(bank, thr, backend)
-    }
-}
-
-/// Constructor used by the factory in `scheduler::build_with_backend`.
-pub fn new(bank: ProfileBank, thr: f64, backend: Box<dyn ScoringBackend>) -> Cas {
+/// Constructor used by the factories in `scheduler::build_with_backend`
+/// and `scheduler::build_native` — generic over the backend so a
+/// `NativeScoring`-backed CAS stays `Send`.
+pub fn new<B: ?Sized + ScoringBackend>(bank: ProfileBank, thr: f64, backend: Box<B>) -> Ras<B> {
     Ras::cpu_only(bank, thr, backend)
 }
 

@@ -11,18 +11,21 @@ use crate::profiling::ProfileBank;
 use crate::workloads::WorkloadClass;
 use std::sync::Arc;
 
-pub struct Ias {
+/// Generic over the scoring backend so a natively-scored instance
+/// (`Ias<NativeScoring>`) is `Send` for the sharded cluster, while
+/// `Ias<dyn ScoringBackend>` (the default) still boxes any backend.
+pub struct Ias<B: ?Sized + ScoringBackend = dyn ScoringBackend> {
     /// Shared with every state this scheduler builds (`new_state`).
     bank: Arc<ProfileBank>,
     /// The interference acceptance threshold (Eq. 5).
     pub threshold: f64,
-    backend: Box<dyn ScoringBackend>,
     /// Reused score buffer — one allocation for the scheduler's lifetime.
     scores: Scores,
+    backend: Box<B>,
 }
 
-impl Ias {
-    pub fn new(bank: ProfileBank, threshold: f64, backend: Box<dyn ScoringBackend>) -> Self {
+impl<B: ?Sized + ScoringBackend> Ias<B> {
+    pub fn new(bank: ProfileBank, threshold: f64, backend: Box<B>) -> Self {
         Ias {
             bank: Arc::new(bank),
             threshold,
@@ -32,7 +35,7 @@ impl Ias {
     }
 }
 
-impl Scheduler for Ias {
+impl<B: ?Sized + ScoringBackend> Scheduler for Ias<B> {
     fn policy(&self) -> Policy {
         Policy::Ias
     }

@@ -2,7 +2,7 @@
 //!
 //! All four schedulers implement [`Scheduler::select_pinning`] — the
 //! `SelectPinning` procedure of the paper's Algorithms 2 and 3. The daemon
-//! (Alg. 1) builds a [`PlacementState`] of already-placed running
+//! (Alg. 1) owns a [`PlacementState`] of already-placed running
 //! workloads and asks the policy where to pin the next one.
 //!
 //! Scoring is incremental: a [`PlacementState`] built with
@@ -12,6 +12,14 @@
 //! updates, so one `SelectPinning` decision costs O(resident VMs) instead
 //! of O(cores × members²). [`Scheduler::new_state`] hands the daemon a
 //! state pre-wired with the policy's own profile bank.
+//!
+//! The state is also **long-lived**: [`PlacementState::remove`] reverses
+//! a `place` in O(members), so an event-driven daemon mutates one state
+//! across the host's whole lifetime (arrivals, departures, idle/wake
+//! churn, re-pin passes) instead of rebuilding it from a monitor snapshot
+//! every cycle. [`PlacementState::cache_matches_rebuild`] is the
+//! reconciliation check (delta aggregates vs a from-scratch re-sum) the
+//! daemon runs under `debug_assert!`.
 
 pub mod cas;
 pub mod ias;
@@ -57,6 +65,18 @@ impl Policy {
             "ias" => Some(Policy::Ias),
             _ => None,
         }
+    }
+
+    /// [`Self::from_name`] as a `Result`: case-insensitive, and the error
+    /// lists the valid names (what the CLI surfaces on a typo).
+    pub fn parse(name: &str) -> anyhow::Result<Policy> {
+        Policy::from_name(name).ok_or_else(|| {
+            let valid: Vec<&str> = Policy::ALL.iter().map(|p| p.name()).collect();
+            anyhow::anyhow!(
+                "unknown policy '{name}' (valid: {})",
+                valid.join(", ")
+            )
+        })
     }
 
     pub const ALL: [Policy; 4] = [Policy::Rrs, Policy::Cas, Policy::Ras, Policy::Ias];
@@ -133,6 +153,14 @@ pub struct PlacementState {
 
 impl PlacementState {
     pub fn new(cores: usize, reserve_idle_core: bool) -> PlacementState {
+        PlacementState {
+            cores: vec![Vec::new(); cores],
+            allowed: PlacementState::allowed_cores(cores, reserve_idle_core),
+            cache: None,
+        }
+    }
+
+    fn allowed_cores(cores: usize, reserve_idle_core: bool) -> Vec<usize> {
         let mut allowed: Vec<usize> = if reserve_idle_core {
             (1..cores).collect()
         } else {
@@ -144,11 +172,16 @@ impl PlacementState {
         if allowed.is_empty() && cores > 0 {
             allowed.push(0);
         }
-        PlacementState {
-            cores: vec![Vec::new(); cores],
-            allowed,
-            cache: None,
-        }
+        allowed
+    }
+
+    /// Flip the idle-core reservation on a live state. A long-lived state
+    /// crosses idle-set-empty boundaries many times (Alg. 1 reserves core
+    /// 0 only while idle workloads exist); membership and cached
+    /// aggregates are untouched — only the `allowed` set changes, and the
+    /// next re-pin pass moves running workloads off the idle core.
+    pub fn set_idle_reservation(&mut self, reserve: bool) {
+        self.allowed = PlacementState::allowed_cores(self.cores.len(), reserve);
     }
 
     /// A state carrying the incremental [`ScoreCache`] derived from
@@ -208,9 +241,92 @@ impl PlacementState {
         self.cores[core].push(x);
     }
 
+    /// Reverse a [`Self::place`] in O(members of `core`): the departing
+    /// workload's U row leaves the core's composite load vector, every
+    /// remaining member's WI partials drop one pairwise slowdown
+    /// (`Σ -= S[m][x]`, `Π /= S[m][x]` — S entries are strictly positive
+    /// slowdown ratios), and the member's own partials entry is dropped.
+    ///
+    /// Removes the most recent member of that class on the core (members
+    /// of one class are interchangeable under Eq. 2–4). Returns `false`
+    /// (state unchanged) when no such member exists.
+    pub fn remove(&mut self, core: usize, class: WorkloadClass) -> bool {
+        let x = class.index();
+        if core >= self.cores.len() {
+            return false;
+        }
+        let Some(pos) = self.cores[core].iter().rposition(|&m| m == x) else {
+            return false;
+        };
+        self.cores[core].remove(pos);
+        if let Some(cache) = &mut self.cache {
+            let u = cache.bank.u[x];
+            for j in 0..NUM_METRICS {
+                cache.load[core][j] -= u[j];
+            }
+            cache.wi[core].remove(pos);
+            for (p2, &m) in self.cores[core].iter().enumerate() {
+                let s_mx = cache.bank.s[m][x];
+                debug_assert!(s_mx > 0.0, "slowdown matrix entries must be positive");
+                let part = &mut cache.wi[core][p2];
+                part.0 -= s_mx;
+                part.1 /= s_mx;
+            }
+        }
+        true
+    }
+
     /// Total placed running workloads.
     pub fn placed(&self) -> usize {
         self.cores.iter().map(|c| c.len()).sum()
+    }
+
+    /// Reconciliation: do the cached aggregates equal a from-scratch
+    /// re-sum of Eq. 2–3 partials over the current membership? This is
+    /// the old rebuild-per-cycle path demoted to a check; the
+    /// event-driven daemon runs it under `debug_assert!` after each
+    /// re-pin pass. Always `true` for uncached states.
+    ///
+    /// `tol` is [`crate::util::close`]'s absolute-or-relative bound: the
+    /// Π partial grows like `S^members` (astronomical on crowded cores),
+    /// where delta updates and a re-multiply differ by reordering ULPs —
+    /// only a relative comparison is meaningful there.
+    pub fn cache_matches_rebuild(&self, tol: f64) -> bool {
+        let close = |a: f64, b: f64| crate::util::close(a, b, tol);
+        let Some(cache) = &self.cache else { return true };
+        let bank = cache.bank();
+        for (core, members) in self.cores.iter().enumerate() {
+            let mut load = [0.0f64; NUM_METRICS];
+            for &m in members {
+                for j in 0..NUM_METRICS {
+                    load[j] += bank.u[m][j];
+                }
+            }
+            let got = cache.load(core);
+            for j in 0..NUM_METRICS {
+                if !close(got[j], load[j]) {
+                    return false;
+                }
+            }
+            let parts = cache.wi_parts(core);
+            if parts.len() != members.len() {
+                return false;
+            }
+            for (pos, &m) in members.iter().enumerate() {
+                let mut sum = 0.0;
+                let mut prod = 1.0;
+                for (p2, &m2) in members.iter().enumerate() {
+                    if p2 != pos {
+                        sum += bank.s[m][m2];
+                        prod *= bank.s[m][m2];
+                    }
+                }
+                if !close(parts[pos].0, sum) || !close(parts[pos].1, prod) {
+                    return false;
+                }
+            }
+        }
+        true
     }
 }
 
@@ -239,8 +355,44 @@ pub trait Scheduler {
 }
 
 /// Build a scheduler for `policy` with the native scoring backend.
-pub fn build(policy: Policy, bank: &ProfileBank, ras_thr: f64, ias_thr: Option<f64>) -> Box<dyn Scheduler> {
-    build_with_backend(policy, bank, ras_thr, ias_thr, Box::new(NativeScoring::new()))
+pub fn build(
+    policy: Policy,
+    bank: &ProfileBank,
+    ras_thr: f64,
+    ias_thr: Option<f64>,
+) -> Box<dyn Scheduler> {
+    build_native(policy, bank, ras_thr, ias_thr)
+}
+
+/// The Eq. 5 defaulting rule shared by every factory: an explicit IAS
+/// threshold wins, otherwise it derives from the profiled S matrix.
+fn ias_threshold(bank: &ProfileBank, ias_thr: Option<f64>) -> f64 {
+    ias_thr.unwrap_or_else(|| bank.mean_slowdown())
+}
+
+/// [`build`] with the `Send` bound the sharded cluster needs: the native
+/// backend is plain data, so a natively-scored scheduler can move to a
+/// worker thread. (XLA-backed schedulers hold PJRT handles and are
+/// deliberately not `Send` — they only exist via [`build_with_backend`].)
+///
+/// Mirrors [`build_with_backend`]'s policy dispatch; keep the two in
+/// lockstep when adding a policy.
+pub fn build_native(
+    policy: Policy,
+    bank: &ProfileBank,
+    ras_thr: f64,
+    ias_thr: Option<f64>,
+) -> Box<dyn Scheduler + Send> {
+    let native = || Box::new(NativeScoring::new());
+    match policy {
+        Policy::Rrs => Box::new(rrs::Rrs::new()),
+        Policy::Cas => Box::new(cas::new(bank.clone(), ras_thr, native())),
+        Policy::Ras => Box::new(ras::Ras::new(bank.clone(), ras_thr, native())),
+        Policy::Ias => {
+            let thr = ias_threshold(bank, ias_thr);
+            Box::new(ias::Ias::new(bank.clone(), thr, native()))
+        }
+    }
 }
 
 /// Build a scheduler with an explicit scoring backend (native or XLA).
@@ -256,7 +408,7 @@ pub fn build_with_backend(
         Policy::Cas => Box::new(cas::new(bank.clone(), ras_thr, backend)),
         Policy::Ras => Box::new(ras::Ras::new(bank.clone(), ras_thr, backend)),
         Policy::Ias => {
-            let thr = ias_thr.unwrap_or_else(|| bank.mean_slowdown());
+            let thr = ias_threshold(bank, ias_thr);
             Box::new(ias::Ias::new(bank.clone(), thr, backend))
         }
     }
@@ -275,6 +427,16 @@ mod tests {
         }
         assert_eq!(Policy::from_name("IAS"), Some(Policy::Ias));
         assert_eq!(Policy::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn policy_parse_is_case_insensitive_and_errors_list_names() {
+        assert_eq!(Policy::parse("RaS").unwrap(), Policy::Ras);
+        assert_eq!(Policy::parse("IAS").unwrap(), Policy::Ias);
+        let err = Policy::parse("bogus").unwrap_err().to_string();
+        for name in ["bogus", "rrs", "cas", "ras", "ias"] {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
     }
 
     #[test]
@@ -352,6 +514,80 @@ mod tests {
                 assert!((parts[pos].0 - sum).abs() < 1e-12, "core {core} pos {pos}");
                 assert!((parts[pos].1 - prod).abs() < 1e-12, "core {core} pos {pos}");
             }
+        }
+    }
+
+    #[test]
+    fn remove_reverses_place_exactly() {
+        let bank = testkit::shared_bank();
+        let mut s = PlacementState::with_bank(4, false, bank);
+        s.place(0, ALL_CLASSES[0]);
+        s.place(0, ALL_CLASSES[2]);
+        s.place(1, ALL_CLASSES[3]);
+        let before = s.clone();
+        s.place(0, ALL_CLASSES[5]);
+        assert!(s.remove(0, ALL_CLASSES[5]));
+        assert_eq!(s.cores, before.cores);
+        let (a, b) = (s.cache().unwrap(), before.cache().unwrap());
+        for core in 0..4 {
+            for j in 0..NUM_METRICS {
+                assert!((a.load(core)[j] - b.load(core)[j]).abs() < 1e-12);
+            }
+            for (x, y) in a.wi_parts(core).iter().zip(b.wi_parts(core)) {
+                assert!((x.0 - y.0).abs() < 1e-12 && (x.1 - y.1).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn remove_missing_member_is_a_noop() {
+        let bank = testkit::shared_bank();
+        let mut s = PlacementState::with_bank(2, false, bank);
+        s.place(0, ALL_CLASSES[1]);
+        assert!(!s.remove(0, ALL_CLASSES[2]), "class not on the core");
+        assert!(!s.remove(1, ALL_CLASSES[1]), "wrong core");
+        assert!(!s.remove(9, ALL_CLASSES[1]), "core out of range");
+        assert_eq!(s.placed(), 1);
+        assert!(s.cache_matches_rebuild(1e-12));
+    }
+
+    #[test]
+    fn idle_reservation_toggles_on_a_live_state() {
+        let mut s = PlacementState::new(12, false);
+        s.place(0, ALL_CLASSES[0]);
+        s.set_idle_reservation(true);
+        assert!(!s.allowed.contains(&0));
+        assert_eq!(s.allowed.len(), 11);
+        // Membership survives the toggle; core 0 reopens on the way back.
+        assert_eq!(s.placed(), 1);
+        s.set_idle_reservation(false);
+        assert!(s.allowed.contains(&0));
+        // 1-core fallback holds through the setter too.
+        let mut one = PlacementState::new(1, false);
+        one.set_idle_reservation(true);
+        assert_eq!(one.allowed, vec![0]);
+    }
+
+    #[test]
+    fn cache_matches_rebuild_detects_drift() {
+        let bank = testkit::shared_bank();
+        let mut s = PlacementState::with_bank(3, false, bank);
+        s.place(0, ALL_CLASSES[0]);
+        s.place(0, ALL_CLASSES[1]);
+        s.place(2, ALL_CLASSES[4]);
+        assert!(s.cache_matches_rebuild(1e-9));
+        // Corrupt the membership behind the cache's back.
+        s.cores[0].push(ALL_CLASSES[3].index());
+        assert!(!s.cache_matches_rebuild(1e-9));
+    }
+
+    #[test]
+    fn build_native_schedulers_are_send() {
+        fn assert_send<T: Send + ?Sized>(_: &T) {}
+        let bank = testkit::shared_bank();
+        for p in Policy::ALL {
+            let sched = build_native(p, bank, 1.2, None);
+            assert_send(sched.as_ref());
         }
     }
 

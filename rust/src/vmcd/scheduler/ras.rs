@@ -10,19 +10,23 @@ use crate::profiling::ProfileBank;
 use crate::workloads::WorkloadClass;
 use std::sync::Arc;
 
-pub struct Ras {
+/// Generic over the scoring backend so a natively-scored instance
+/// (`Ras<NativeScoring>`) is `Send` and can shard across cluster worker
+/// threads, while the default `Ras<dyn ScoringBackend>` still accepts any
+/// boxed backend (the XLA one is intentionally not `Send`).
+pub struct Ras<B: ?Sized + ScoringBackend = dyn ScoringBackend> {
     /// Shared with every state this scheduler builds (`new_state`).
     bank: Arc<ProfileBank>,
     /// The resource-utilisation threshold `thr` (paper: 120%).
     pub thr: f64,
-    backend: Box<dyn ScoringBackend>,
     cpu_only: bool,
     /// Reused score buffer — one allocation for the scheduler's lifetime.
     scores: Scores,
+    backend: Box<B>,
 }
 
-impl Ras {
-    pub fn new(bank: ProfileBank, thr: f64, backend: Box<dyn ScoringBackend>) -> Self {
+impl<B: ?Sized + ScoringBackend> Ras<B> {
+    pub fn new(bank: ProfileBank, thr: f64, backend: Box<B>) -> Self {
         Ras {
             bank: Arc::new(bank),
             thr,
@@ -33,7 +37,7 @@ impl Ras {
     }
 
     /// The CAS variant: same algorithm, CPU metric only.
-    pub fn cpu_only(bank: ProfileBank, thr: f64, backend: Box<dyn ScoringBackend>) -> Self {
+    pub fn cpu_only(bank: ProfileBank, thr: f64, backend: Box<B>) -> Self {
         Ras {
             bank: Arc::new(bank),
             thr,
@@ -74,7 +78,7 @@ impl Ras {
     }
 }
 
-impl Scheduler for Ras {
+impl<B: ?Sized + ScoringBackend> Scheduler for Ras<B> {
     fn policy(&self) -> Policy {
         if self.cpu_only {
             Policy::Cas

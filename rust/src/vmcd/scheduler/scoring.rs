@@ -45,9 +45,12 @@ impl Scores {
 
 /// A backend that evaluates the scores for all cores in one call.
 ///
-/// Not `Send`: the XLA backend holds PJRT handles (`Rc` internally); the
-/// daemon owns its scheduler on one thread, matching VMCd's single-threaded
-/// scheduler component.
+/// The trait deliberately does not require `Send`: the XLA backend holds
+/// PJRT handles and must stay on the thread that created it. The
+/// schedulers are generic over the backend instead, so a
+/// [`NativeScoring`]-backed scheduler is `Send` (and can shard across
+/// cluster worker threads) while an XLA-backed one is pinned to the
+/// caller thread by the type system.
 pub trait ScoringBackend {
     /// Evaluate into a caller-owned buffer. `cpu_only` restricts the
     /// overload metric to CPU (the CAS variant). The schedulers hold one

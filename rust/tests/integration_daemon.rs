@@ -8,7 +8,7 @@ use vmcd::scenarios::{dynamic, run_scenario};
 use vmcd::testkit;
 use vmcd::vmcd::scheduler::{self, Policy};
 use vmcd::vmcd::{daemon::IDLE_CORE, Daemon};
-use vmcd::workloads::WorkloadClass;
+use vmcd::workloads::{WorkloadClass, ALL_CLASSES};
 
 fn resident(id: u32, class: WorkloadClass, activity: ActivityModel, core: usize) -> Vm {
     let mut vm = Vm::new(VmId(id), class, 0.0, activity);
@@ -156,6 +156,94 @@ fn dynamic_scenario_idle_consolidation_is_visible_in_repins() {
         ias.repin_count > 50,
         "IAS must keep re-pinning with phase churn, got {}",
         ias.repin_count
+    );
+}
+
+#[test]
+fn long_lived_state_matches_rebuild_through_100_mixed_events() {
+    // The event-API acceptance test: a host with staggered arrivals,
+    // on/off services (idle/wake churn) and finite batch jobs
+    // (departures) is driven through the event-driven daemon for a long
+    // window. After EVERY step the long-lived placement state must agree
+    // with a from-scratch rebuild, and the run must actually exercise
+    // well over 100 lifecycle events.
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    let sched = scheduler::build(Policy::Ias, bank, cfg.sched.ras_threshold, None);
+    let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+
+    let mut vms = Vec::new();
+    for i in 0..12u32 {
+        let activity = match i % 3 {
+            0 => ActivityModel::AlwaysOn,
+            1 => ActivityModel::OnOff {
+                period: 80.0,
+                duty: 0.5,
+                phase: (i as f64) * 7.0,
+            },
+            _ => ActivityModel::Windows(vec![(0.0, 150.0 + (i as f64) * 40.0)]),
+        };
+        let class = ALL_CLASSES[i as usize % ALL_CLASSES.len()];
+        vms.push(Vm::new(VmId(i), class, (i as f64) * 15.0, activity));
+    }
+    let mut engine = SimEngine::new(cfg, vms);
+
+    for _ in 0..2400 {
+        for id in engine.process_arrivals() {
+            daemon.on_arrival(&mut engine, id).unwrap();
+        }
+        daemon.step(&mut engine).unwrap();
+        engine.step();
+        assert!(
+            daemon.state_matches_rebuild(1e-6),
+            "long-lived state drifted from event deltas at t={}",
+            engine.t
+        );
+    }
+    assert!(
+        daemon.events_handled >= 100,
+        "churn too quiet to prove the event API: {} events",
+        daemon.events_handled
+    );
+    // The placement state tracks exactly the non-idle residents. (One
+    // more daemon step so its view covers the final engine tick.)
+    daemon.step(&mut engine).unwrap();
+    let placed = daemon.placement_state().unwrap().placed();
+    let running = daemon.monitor.poll(&engine).running_workloads().len();
+    assert_eq!(placed, running, "state members must be the running set");
+}
+
+#[test]
+fn monitor_polled_once_per_step_even_with_arrivals() {
+    // Regression for the double-poll: the old daemon polled in both
+    // on_arrival and run_cycle; the event API polls exactly once per
+    // step, and arrival placement reuses per-domain stats instead.
+    let cfg = testkit::quiet_config();
+    let bank = testkit::shared_bank();
+    let sched = scheduler::build(Policy::Ras, bank, cfg.sched.ras_threshold, None);
+    let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+    let mut vms = Vec::new();
+    for i in 0..6u32 {
+        vms.push(Vm::new(
+            VmId(i),
+            WorkloadClass::Hadoop,
+            (i as f64) * 5.0,
+            ActivityModel::AlwaysOn,
+        ));
+    }
+    let mut engine = SimEngine::new(cfg, vms);
+    let steps = 60u64;
+    for _ in 0..steps {
+        for id in engine.process_arrivals() {
+            daemon.on_arrival(&mut engine, id).unwrap();
+        }
+        daemon.step(&mut engine).unwrap();
+        engine.step();
+    }
+    assert_eq!(
+        daemon.monitor.poll_count(),
+        steps,
+        "exactly one monitor pass per step"
     );
 }
 

@@ -6,7 +6,7 @@ use vmcd::interference::{core_interference, core_overload, workload_interference
 use vmcd::profiling::ProfileBank;
 use vmcd::scenarios::{random, run_scenario};
 use vmcd::testkit::{self, check, default_cases};
-use vmcd::util::rng::Rng;
+use vmcd::util::{close, rng::Rng};
 use vmcd::vmcd::scheduler::scoring::{self, WiMode};
 use vmcd::vmcd::scheduler::{self, NativeScoring, PlacementState, Policy, ScoringBackend};
 use vmcd::workloads::{WorkloadClass, ALL_CLASSES};
@@ -228,6 +228,89 @@ fn prop_incremental_scores_match_reference() {
                         "{mode:?} {what}[{c}]: incremental {a} vs reference {b}"
                     );
                 }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_place_remove_interleavings_match_reference() {
+    // The removal-delta invariant: ANY interleaving of place/remove must
+    // leave the cached aggregates — and therefore the scores — equal to
+    // the from-scratch Eq. 2–4 reference over the surviving membership.
+    let bank = testkit::shared_bank();
+    check("place-remove-roundtrip", default_cases(), |rng| {
+        let cores = 1 + rng.below(12);
+        let mut state = PlacementState::with_bank(cores, rng.chance(0.3), bank);
+        let mut residents: Vec<(usize, WorkloadClass)> = Vec::new();
+        for _ in 0..rng.below(80) {
+            if !residents.is_empty() && rng.chance(0.4) {
+                let k = rng.below(residents.len());
+                let (core, class) = residents.swap_remove(k);
+                assert!(state.remove(core, class), "remove must find {class:?} on {core}");
+            } else {
+                let core = rng.below(cores);
+                let class = *rng.pick(&ALL_CLASSES);
+                state.place(core, class);
+                residents.push((core, class));
+            }
+        }
+        assert_eq!(state.placed(), residents.len());
+        assert!(state.cache_matches_rebuild(1e-9), "aggregates drifted");
+
+        let cand = *rng.pick(&ALL_CLASSES);
+        let cpu_only = rng.chance(0.5);
+        let thr = rng.range(0.6, 2.0);
+        let mut native = NativeScoring::new();
+        let fast = native.score(&state, cand, bank, thr, cpu_only);
+        let slow = scoring::reference_scores(&state, cand, bank, thr, cpu_only);
+        for c in 0..cores {
+            for (a, b, what) in [
+                (fast.ol_before[c], slow.ol_before[c], "ol_before"),
+                (fast.ol_after[c], slow.ol_after[c], "ol_after"),
+                (fast.ic_before[c], slow.ic_before[c], "ic_before"),
+                (fast.ic_after[c], slow.ic_after[c], "ic_after"),
+            ] {
+                // 1e-9 absolute-or-relative (util::close — the same rule
+                // cache_matches_rebuild uses): the IC scores carry the
+                // WI Π term, which grows like S^members on crowded cores,
+                // where remove()'s divisions reorder ULPs and only a
+                // relative comparison is meaningful.
+                assert!(
+                    close(a, b, 1e-9),
+                    "{what}[{c}] after churn: delta {a} vs reference {b}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_drain_to_empty_restores_pristine_aggregates() {
+    // Placing K workloads and removing all K must return every cached
+    // aggregate to (numerically) zero-load / empty-partials.
+    let bank = testkit::shared_bank();
+    check("place-remove-drain", default_cases(), |rng| {
+        let cores = 1 + rng.below(8);
+        let mut state = PlacementState::with_bank(cores, false, bank);
+        let mut residents: Vec<(usize, WorkloadClass)> = Vec::new();
+        for _ in 0..1 + rng.below(40) {
+            let core = rng.below(cores);
+            let class = *rng.pick(&ALL_CLASSES);
+            state.place(core, class);
+            residents.push((core, class));
+        }
+        while !residents.is_empty() {
+            let k = rng.below(residents.len());
+            let (core, class) = residents.swap_remove(k);
+            assert!(state.remove(core, class));
+        }
+        assert_eq!(state.placed(), 0);
+        let cache = state.cache().unwrap();
+        for core in 0..cores {
+            assert!(cache.wi_parts(core).is_empty());
+            for &l in cache.load(core).iter() {
+                assert!(l.abs() < 1e-9, "residual load {l}");
             }
         }
     });
