@@ -1,12 +1,14 @@
 //! Extension bench: local-VMCd vs global-migration consolidation across a
-//! cluster, swept over per-host subscription ratio (paper §VI future
-//! work; DESIGN.md §7).
+//! cluster (paper §VI future work), plus the host-stepping backends —
+//! persistent [`StepMode::Pool`] vs per-tick scoped threads vs single
+//! thread — at 64 and 256 hosts, where the per-tick spawn cost the pool
+//! amortises actually shows.
 
 mod common;
 
 use vmcd::bench::Bench;
-use vmcd::cluster::{ClusterSim, ClusterSpec, Strategy};
-use vmcd::scenarios::random;
+use vmcd::cluster::{ClusterSpec, StepMode, Strategy};
+use vmcd::scenarios::{random, run_cluster};
 
 fn main() -> anyhow::Result<()> {
     let cfg = common::config();
@@ -21,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         let scen = random::build(hosts * cfg.host.cores, sr, 42)?;
         for strategy in [Strategy::LocalVmcd, Strategy::GlobalMigration] {
             let spec = ClusterSpec::new(hosts, strategy);
-            let r = ClusterSim::new(spec, &scen, &bank).run(&bank, scen.min_duration)?;
+            let r = run_cluster(&spec, &scen, &bank)?;
             println!(
                 "{:<8} {:<18} {:>7.3} {:>12.3} {:>12.3} {:>5} ({} failed)",
                 sr,
@@ -41,25 +43,42 @@ fn main() -> anyhow::Result<()> {
     for strategy in [Strategy::LocalVmcd, Strategy::GlobalMigration] {
         b.run(&format!("cluster/{}", strategy.name()), || {
             let spec = ClusterSpec::new(hosts, strategy);
-            ClusterSim::new(spec, &scen, &bank)
-                .run(&bank, scen.min_duration)
-                .unwrap();
+            run_cluster(&spec, &scen, &bank).unwrap();
         });
     }
 
-    // Sharded host stepping (HostHandle workers) vs lockstep on one
-    // thread. Results are bit-identical; only wall time may differ.
-    b.section("sharded vs single-thread stepping (8 hosts, SR 1.5, local-vmcd)");
-    let big_hosts = 8;
-    let big_scen = random::build(big_hosts * cfg.host.cores, 1.5, 42)?;
-    for threads in [0usize, 4] {
-        b.run(&format!("cluster/local-vmcd/shard-threads{threads}"), || {
-            let mut spec = ClusterSpec::new(big_hosts, Strategy::LocalVmcd);
-            spec.shard_threads = threads;
-            ClusterSim::new(spec, &big_scen, &bank)
-                .run(&bank, big_scen.min_duration)
-                .unwrap();
-        });
+    // The step-mode matrix the pool redesign targets: at 64 and 256
+    // hosts a scoped scope() pays thread spawn + join every tick, the
+    // persistent pool pays it once per run. Results are bit-identical
+    // across modes; only wall time differs. A 600-simulated-second
+    // window keeps one iteration affordable at 256 hosts — and per-host
+    // work small, which is exactly the regime where per-tick spawn
+    // overhead dominates.
+    let mut big_cfg = cfg.clone();
+    big_cfg.sim.max_time = 600.0;
+    for big_hosts in [64usize, 256] {
+        b.section(&format!(
+            "step modes ({big_hosts} hosts, SR 0.4, 600 s window, local-vmcd)"
+        ));
+        let big_scen = random::build(big_hosts * big_cfg.host.cores, 0.4, 42)?;
+        let workers = 4;
+        for mode in [
+            StepMode::Single,
+            StepMode::Scoped(workers),
+            StepMode::Pool(workers),
+        ] {
+            let label = match mode {
+                StepMode::Single => "single".to_string(),
+                StepMode::Scoped(n) => format!("scoped{n}"),
+                StepMode::Pool(n) => format!("pool{n}"),
+            };
+            b.run(&format!("cluster/{big_hosts}hosts/{label}"), || {
+                let mut spec = ClusterSpec::new(big_hosts, Strategy::LocalVmcd);
+                spec.cfg = big_cfg.clone();
+                spec.step_mode = mode;
+                run_cluster(&spec, &big_scen, &bank).unwrap();
+            });
+        }
     }
     Ok(())
 }

@@ -1,25 +1,33 @@
 //! Local vs global consolidation across a small cluster — the paper's
-//! §VI future-work experiment and its §III argument made runnable.
+//! §VI future-work experiment and its §III argument made runnable, now
+//! entirely through the cluster event bus:
 //!
-//! * **local-vmcd**: least-loaded dispatch + a per-host VMCd daemon (IAS)
-//!   re-pinning locally; zero migrations.
-//! * **global-migration**: a centralized consolidator with full cluster
-//!   knowledge that drains lightly-loaded hosts via live migration
-//!   (downtime + transfer load + abort risk under load).
+//! * **local-vmcd**: an arrival policy dispatches each VM off the bus's
+//!   published host summaries; a per-host VMCd daemon (IAS) re-pins
+//!   locally; zero migrations.
+//! * **global-migration**: a centralized consolidator plans from the
+//!   same summaries and publishes `ClusterEvent::Migrate`s — each a
+//!   departure on the source plus a delayed, downtime-paused arrival on
+//!   the destination (transfer load + abort risk under load).
 //!
 //! ```sh
-//! cargo run --release --example cluster_local_vs_global [-- --hosts 3 --sr 1.8]
+//! cargo run --release --example cluster_local_vs_global \
+//!     [-- --hosts 3 --dispatcher least-loaded --workers 4]
 //! ```
 
-use vmcd::cluster::{ClusterSim, ClusterSpec, Strategy};
+use vmcd::cluster::{ClusterSpec, Dispatcher, StepMode, Strategy};
 use vmcd::config::Config;
 use vmcd::profiling::ProfileBank;
-use vmcd::scenarios::random;
+use vmcd::scenarios::{self, run_cluster};
 use vmcd::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let hosts = args.opt_usize("hosts", 3)?;
+    // `--dispatcher` goes through the same parse the CLI uses: a typo
+    // errors out listing the valid names.
+    let dispatcher = Dispatcher::parse(&args.opt_or("dispatcher", "least-loaded"))?;
+    let workers = args.opt_usize("workers", 4)?;
     let cfg = Config::default();
     let bank = ProfileBank::generate(&cfg);
 
@@ -29,20 +37,21 @@ fn main() -> anyhow::Result<()> {
     );
     for sr in [0.6, 1.2, 1.8] {
         // Cluster-wide population: hosts × 12 cores × sr.
-        let scen = random::build(hosts * cfg.host.cores, sr, cfg.sim.seed)?;
+        let scen = scenarios::random::build(hosts * cfg.host.cores, sr, cfg.sim.seed)?;
         for strategy in [Strategy::LocalVmcd, Strategy::GlobalMigration] {
-            let spec = ClusterSpec::new(hosts, strategy);
-            let sim = ClusterSim::new(spec, &scen, &bank);
-            let r = sim.run(&bank, scen.min_duration)?;
+            let mut spec = ClusterSpec::new(hosts, strategy);
+            spec.dispatcher = dispatcher;
+            let r = run_cluster(&spec, &scen, &bank)?;
             println!(
-                "{:<6} {:<18} {:>7.3} {:>12.3} {:>12.3} {:>7} ({} failed)",
+                "{:<6} {:<18} {:>7.3} {:>12.3} {:>12.3} {:>7} ({} failed, {} events)",
                 sr,
                 strategy.name(),
                 r.avg_perf,
                 r.core_hours,
                 r.host_hours,
                 r.migrations_started,
-                r.migrations_failed
+                r.migrations_failed,
+                r.events_routed
             );
         }
     }
@@ -52,27 +61,36 @@ fn main() -> anyhow::Result<()> {
          the local per-host approach keeps optimising for free."
     );
 
-    // Sharded stepping: native-backend hosts are `Send`, so the cluster
-    // can step them on worker threads — results are bit-identical.
-    let scen = random::build(hosts * cfg.host.cores, 1.2, cfg.sim.seed)?;
+    // Step modes: the persistent pool owns native hosts on worker
+    // threads for the whole run; the per-tick scope re-spawns each tick;
+    // single keeps everything on the caller thread. All bit-identical.
+    let scen = scenarios::random::build(hosts * cfg.host.cores, 1.2, cfg.sim.seed)?;
     let mut results = Vec::new();
-    for threads in [0usize, 4] {
+    for mode in [
+        StepMode::Single,
+        StepMode::Scoped(workers),
+        StepMode::Pool(workers),
+    ] {
         let mut spec = ClusterSpec::new(hosts, Strategy::LocalVmcd);
-        spec.shard_threads = threads;
+        spec.dispatcher = dispatcher;
+        spec.step_mode = mode;
         let wall = std::time::Instant::now();
-        let r = ClusterSim::new(spec, &scen, &bank).run(&bank, scen.min_duration)?;
+        let r = run_cluster(&spec, &scen, &bank)?;
         println!(
-            "shard_threads={threads}: perf {:.3}, core-hours {:.3} ({} ms wall)",
+            "step-mode {:<7}: perf {:.3}, core-hours {:.3} ({} ms wall)",
+            mode.name(),
             r.avg_perf,
             r.core_hours,
             wall.elapsed().as_millis()
         );
         results.push(r);
     }
-    assert_eq!(
-        results[0].avg_perf.to_bits(),
-        results[1].avg_perf.to_bits(),
-        "sharded stepping must be bit-identical"
-    );
+    for r in &results[1..] {
+        assert_eq!(
+            results[0].avg_perf.to_bits(),
+            r.avg_perf.to_bits(),
+            "all step modes must be bit-identical"
+        );
+    }
     Ok(())
 }

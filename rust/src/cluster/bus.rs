@@ -1,0 +1,554 @@
+//! The cluster-wide event bus: every piece of placement churn — arrivals,
+//! departures, live migrations — expressed as one [`ClusterEvent`] type
+//! and routed to per-host inboxes of [`HostEvent`] deliveries.
+//!
+//! This is the cluster-level mirror of the per-host `SchedEvent` design:
+//! the paper's datacenter management system "assigns a set of VMs to a
+//! server" (§IV-B) and from then on each host's VMCd optimises locally
+//! (§III). The bus is that assignment surface made explicit. Instead of
+//! the cluster simulator reaching into `SimHost` internals, *everything*
+//! flows through routed events:
+//!
+//! * [`ClusterEvent::Arrival`] — a VM arriving cluster-wide; an
+//!   [`ArrivalPolicy`] picks the host from the published
+//!   [`HostSummary`]s (never from raw engine state);
+//! * [`ClusterEvent::Departure`] — a resident VM leaves its host, which
+//!   removes it and hands its daemon a `SchedEvent::Departure` so the
+//!   long-lived placement state drops the member in O(members);
+//! * [`ClusterEvent::Migrate`] — expands to a **departure on the source
+//!   plus a delayed arrival on the destination** once the transfer
+//!   window elapses, with the [`MigrationModel`]'s costs (transfer
+//!   network load on both ends, stop-and-copy downtime, abort risk under
+//!   a busy destination) applied as routed deliveries;
+//! * [`ClusterEvent::Sched`] — a raw scheduler event for one host's
+//!   daemon (e.g. a forced `Tick`).
+//!
+//! Routing is deterministic (FIFO queue order, per-host append order), so
+//! stepping the inboxes on the persistent shard pool is bit-identical to
+//! single-threaded execution — see [`super::pool`].
+
+use super::dispatch::ArrivalPolicy;
+use super::host::HostHandle;
+use super::migration::{Migration, MigrationModel};
+use crate::hostsim::{Vm, VmId, VmState};
+use crate::profiling::ProfileBank;
+use crate::util::rng::Rng;
+use crate::vmcd::daemon::SchedEvent;
+use crate::workloads::WorkloadClass;
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// One piece of cluster-wide placement churn. Published with
+/// [`EventBus::publish`], routed with [`EventBus::route`].
+//
+// The arrival variant carries the whole `Vm` by value: events are
+// moved, short-lived, and one-per-churn-item, so boxing would buy
+// nothing but an extra allocation on the dispatch path.
+#[allow(clippy::large_enum_variant)]
+#[derive(Debug, Clone)]
+pub enum ClusterEvent {
+    /// A VM arriving cluster-wide. `host: None` lets the bus's
+    /// [`ArrivalPolicy`] pick the destination from the published
+    /// summaries; `Some(h)` forces it (re-dispatch, replay, tests).
+    Arrival { vm: Vm, host: Option<usize> },
+    /// A resident VM leaves the cluster outright (teardown, eviction).
+    Departure { host: usize, vm: VmId },
+    /// Live-migrate a VM: after the transfer window, a departure on
+    /// `src` and a delayed arrival on `dst` (paused for the
+    /// stop-and-copy downtime). Both hosts carry the transfer's network
+    /// load for the whole window; under a busy destination the transfer
+    /// may abort (pre-copy never converges) and the VM stays on `src`.
+    Migrate { vm: VmId, src: usize, dst: usize },
+    /// Inject a raw scheduler event into one host's daemon.
+    Sched { host: usize, ev: SchedEvent },
+}
+
+/// One routed, host-local delivery. Hosts drain their inbox at the start
+/// of the tick, before stepping — see [`apply_host_event`].
+#[derive(Debug, Clone)]
+pub enum HostEvent {
+    /// An arriving VM, already routed to this host.
+    Arrival(Vm),
+    /// A VM migrating in; `pause_until` is the end of the stop-and-copy
+    /// window (None when the VM was not running).
+    MigrateIn { vm: Vm, pause_until: Option<f64> },
+    /// Remove the VM from the host entirely.
+    Depart(VmId),
+    /// Raw daemon event.
+    Sched(SchedEvent),
+    /// Delta to the host's external network load (migration transfer
+    /// windows open with a positive delta and close with its negative).
+    NetLoad(f64),
+}
+
+/// Per-host state published on the bus after every tick — what arrival
+/// policies and the global strategy see instead of raw engine state.
+#[derive(Debug, Clone, Default)]
+pub struct HostSummary {
+    /// Resident VMs (every lifecycle state the engine still tracks).
+    /// Kept live within a tick: routing an arrival bumps it so multiple
+    /// same-tick dispatch decisions don't all pick the same host.
+    pub resident: usize,
+    /// Currently running VMs, in engine order.
+    pub running: Vec<(VmId, WorkloadClass)>,
+    /// Cores currently holding a running VM.
+    pub busy_cores: usize,
+    /// Worst per-core workload interference (Eq. 3/4) of the host
+    /// daemon's placement state; 0 for daemon-less hosts.
+    pub max_wi: f64,
+    /// Profile-estimated CPU load of the running VMs (Σ U[class][cpu]);
+    /// filled in by [`EventBus::refresh`] from the profile bank.
+    pub est_cpu_load: f64,
+}
+
+/// What one host reports back after draining its inbox and stepping.
+#[derive(Debug, Clone)]
+pub struct TickReport {
+    pub summary: HostSummary,
+    /// ≥ 1 busy core at the last ledger sample (host-hours integral).
+    pub busy_now: bool,
+    /// All batch workloads on this host have finished.
+    pub batch_done: bool,
+}
+
+/// Routing counters, drained by cluster-level reporting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BusStats {
+    /// Cluster events routed (each may expand to several deliveries).
+    pub events_routed: u64,
+    pub migrations_started: u64,
+    pub migrations_completed: u64,
+    /// Transfers that aborted (pre-copy never converged); the VM stayed
+    /// on its source host.
+    pub migrations_failed: u64,
+}
+
+/// The dispatcher: a FIFO of published [`ClusterEvent`]s, per-host
+/// inboxes of routed [`HostEvent`]s, the in-flight migration transfers,
+/// and the per-host [`HostSummary`]s published by the last tick.
+pub struct EventBus {
+    queue: VecDeque<ClusterEvent>,
+    inboxes: Vec<Vec<HostEvent>>,
+    inflight: Vec<Migration>,
+    summaries: Vec<HostSummary>,
+    model: MigrationModel,
+    /// Physical cores per host (destination-business normaliser for the
+    /// migration abort draw).
+    host_cores: usize,
+    pub stats: BusStats,
+}
+
+impl EventBus {
+    pub fn new(hosts: usize, model: MigrationModel, host_cores: usize) -> EventBus {
+        EventBus {
+            queue: VecDeque::new(),
+            inboxes: (0..hosts).map(|_| Vec::new()).collect(),
+            inflight: Vec::new(),
+            summaries: vec![HostSummary::default(); hosts],
+            model,
+            host_cores,
+            stats: BusStats::default(),
+        }
+    }
+
+    pub fn hosts(&self) -> usize {
+        self.inboxes.len()
+    }
+
+    /// The per-host summaries published by the last tick (plus any
+    /// within-tick routing increments).
+    pub fn summaries(&self) -> &[HostSummary] {
+        &self.summaries
+    }
+
+    /// Seed the published summaries before the first tick (hosts built
+    /// with pre-existing residents would otherwise all look empty to
+    /// arrival policies until the first refresh). `est_cpu_load` stays
+    /// whatever the caller captured — typically 0 until a bank-aware
+    /// [`Self::refresh`] runs.
+    pub fn prime(&mut self, summaries: Vec<HostSummary>) {
+        debug_assert_eq!(summaries.len(), self.hosts());
+        self.summaries = summaries;
+    }
+
+    /// Migration transfers currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Enqueue one cluster event for the next [`Self::route`] pass.
+    pub fn publish(&mut self, ev: ClusterEvent) {
+        self.queue.push_back(ev);
+    }
+
+    /// Route every queued event into the per-host inboxes, in publish
+    /// order. Arrivals without a forced host ask `policy`; migrations
+    /// open their transfer window (network load on both ends now, the
+    /// move itself once [`Self::advance`] matures the transfer).
+    pub fn route(&mut self, policy: &mut dyn ArrivalPolicy, rng: &mut Rng) -> Result<()> {
+        let hosts = self.hosts();
+        while let Some(ev) = self.queue.pop_front() {
+            self.stats.events_routed += 1;
+            match ev {
+                ClusterEvent::Arrival { vm, host } => {
+                    let h = match host {
+                        Some(h) => h,
+                        None => policy.pick(&self.summaries, rng),
+                    };
+                    anyhow::ensure!(h < hosts, "arrival routed to host {h} of {hosts}");
+                    self.summaries[h].resident += 1;
+                    self.inboxes[h].push(HostEvent::Arrival(vm));
+                }
+                ClusterEvent::Departure { host, vm } => {
+                    anyhow::ensure!(host < hosts, "departure on host {host} of {hosts}");
+                    let s = &mut self.summaries[host];
+                    s.resident = s.resident.saturating_sub(1);
+                    self.inboxes[host].push(HostEvent::Depart(vm));
+                }
+                ClusterEvent::Sched { host, ev } => {
+                    anyhow::ensure!(host < hosts, "sched event on host {host} of {hosts}");
+                    self.inboxes[host].push(HostEvent::Sched(ev));
+                }
+                ClusterEvent::Migrate { vm, src, dst } => {
+                    anyhow::ensure!(src < hosts && dst < hosts, "migration {src}->{dst}");
+                    anyhow::ensure!(src != dst, "migration to the same host {src}");
+                    let dest_busy = self.summaries[dst].est_cpu_load / self.host_cores as f64;
+                    let mig = self.model.start(vm, src, dst, dest_busy, rng);
+                    self.inboxes[src].push(HostEvent::NetLoad(self.model.transfer_net));
+                    self.inboxes[dst].push(HostEvent::NetLoad(self.model.transfer_net));
+                    self.inflight.push(mig);
+                    self.stats.migrations_started += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance in-flight transfers by `dt`; matured ones are removed and
+    /// returned (in start order) for [`Self::extraction_requests`] +
+    /// [`Self::deliver`].
+    pub fn advance(&mut self, dt: f64) -> Vec<Migration> {
+        for m in &mut self.inflight {
+            m.remaining -= dt;
+        }
+        let (matured, keep): (Vec<Migration>, Vec<Migration>) = self
+            .inflight
+            .drain(..)
+            .partition(|m| m.remaining <= 0.0);
+        self.inflight = keep;
+        matured
+    }
+
+    /// Which VMs the matured transfers pull off their source hosts. Only
+    /// successful transfers extract — a doomed (aborted) transfer leaves
+    /// the VM where it was.
+    pub fn extraction_requests(matured: &[Migration]) -> Vec<(usize, VmId)> {
+        matured
+            .iter()
+            .filter(|m| !m.doomed)
+            .map(|m| (m.from_host, m.vm))
+            .collect()
+    }
+
+    /// Finish matured transfers: close the transfer window on both ends
+    /// and route each extracted VM into its destination, paused for the
+    /// stop-and-copy downtime. `extracted` is the result of
+    /// [`super::pool::ShardPool::extract`] over
+    /// [`Self::extraction_requests`], in the same order.
+    pub fn deliver(&mut self, matured: Vec<Migration>, extracted: Vec<Option<Vm>>, now: f64) {
+        let mut pulled = extracted.into_iter();
+        for m in matured {
+            self.inboxes[m.from_host].push(HostEvent::NetLoad(-self.model.transfer_net));
+            self.inboxes[m.to_host].push(HostEvent::NetLoad(-self.model.transfer_net));
+            if m.doomed {
+                self.stats.migrations_failed += 1;
+                continue;
+            }
+            let Some(vm) = pulled.next().flatten() else {
+                // The VM vanished from the source mid-transfer (e.g. a
+                // concurrent departure); nothing to move.
+                continue;
+            };
+            // A Departure routed this same tick wins over the move: the
+            // cluster was told to tear the VM down, so the extracted VM
+            // is dropped instead of resurrected on the destination (the
+            // inbox Depart becomes a no-op and already adjusted the
+            // resident view).
+            let departing = self.inboxes[m.from_host]
+                .iter()
+                .any(|ev| matches!(ev, HostEvent::Depart(id) if *id == vm.id));
+            if departing {
+                continue;
+            }
+            let pause = (vm.state == VmState::Running).then_some(now + self.model.downtime);
+            self.summaries[m.from_host].resident =
+                self.summaries[m.from_host].resident.saturating_sub(1);
+            self.summaries[m.to_host].resident += 1;
+            self.inboxes[m.to_host].push(HostEvent::MigrateIn {
+                vm,
+                pause_until: pause,
+            });
+            self.stats.migrations_completed += 1;
+        }
+    }
+
+    /// Take the routed inboxes for this tick (leaving them empty), one
+    /// per host in host order — the shard pool's step input.
+    pub fn take_inboxes(&mut self) -> Vec<Vec<HostEvent>> {
+        self.inboxes.iter_mut().map(std::mem::take).collect()
+    }
+
+    /// Publish fresh per-host summaries from the tick reports, deriving
+    /// the profile-estimated CPU load from `bank`.
+    pub fn refresh(&mut self, reports: &[TickReport], bank: &ProfileBank) {
+        for (h, report) in reports.iter().enumerate() {
+            let mut s = report.summary.clone();
+            s.est_cpu_load = s
+                .running
+                .iter()
+                .map(|&(_, class)| bank.u[class.index()][0])
+                .sum();
+            self.summaries[h] = s;
+        }
+    }
+}
+
+/// Apply one routed delivery to a host through its [`HostHandle`]
+/// surface — the only place bus deliveries touch host state, shared by
+/// every step mode so pool workers and the caller thread behave
+/// identically.
+pub fn apply_host_event(host: &mut dyn HostHandle, ev: HostEvent) -> Result<()> {
+    match ev {
+        HostEvent::Arrival(vm) => host.inject_arrival(vm),
+        HostEvent::MigrateIn { vm, pause_until } => host.accept_migrant(vm, pause_until),
+        HostEvent::Depart(id) => host.remove_resident(id).map(|_| ()),
+        HostEvent::Sched(ev) => host.inject_event(ev),
+        HostEvent::NetLoad(delta) => {
+            host.add_external_net_load(delta);
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::dispatch::Dispatcher;
+    use crate::cluster::host::{NativeHost, SimHost};
+    use crate::hostsim::{ActivityModel, SimEngine};
+    use crate::testkit;
+    use crate::vmcd::scheduler::{self, Policy};
+    use crate::vmcd::Daemon;
+    use crate::workloads::WorkloadClass;
+
+    fn native_host(policy: Policy) -> NativeHost {
+        let cfg = testkit::quiet_config();
+        let bank = testkit::shared_bank();
+        let sched = scheduler::build_native(policy, bank, cfg.sched.ras_threshold, None);
+        let daemon = Daemon::new(cfg.sched.clone(), sched);
+        SimHost::new(SimEngine::new(cfg, Vec::new()), Some(daemon))
+    }
+
+    fn running_vm(id: u32, class: WorkloadClass) -> Vm {
+        let mut vm = Vm::new(VmId(id), class, 0.0, ActivityModel::AlwaysOn);
+        vm.state = VmState::Running;
+        vm.started = Some(0.0);
+        vm
+    }
+
+    #[test]
+    fn arrivals_route_to_the_policy_pick_and_bump_summaries() {
+        let mut bus = EventBus::new(3, MigrationModel::default(), 12);
+        let mut policy = Dispatcher::LeastLoaded.build();
+        let mut rng = Rng::new(1);
+        for i in 0..3 {
+            bus.publish(ClusterEvent::Arrival {
+                vm: running_vm(i, WorkloadClass::Hadoop),
+                host: None,
+            });
+        }
+        bus.route(policy.as_mut(), &mut rng).unwrap();
+        // Same-tick arrivals spread out because routing bumps the live
+        // resident view between picks.
+        let counts: Vec<usize> = bus.summaries().iter().map(|s| s.resident).collect();
+        assert_eq!(counts, vec![1, 1, 1]);
+        let inboxes = bus.take_inboxes();
+        assert!(inboxes.iter().all(|i| i.len() == 1));
+        assert_eq!(bus.stats.events_routed, 3);
+    }
+
+    #[test]
+    fn forced_host_and_bad_host_indices() {
+        let mut bus = EventBus::new(2, MigrationModel::default(), 12);
+        let mut policy = Dispatcher::RoundRobin.build();
+        let mut rng = Rng::new(1);
+        bus.publish(ClusterEvent::Arrival {
+            vm: running_vm(0, WorkloadClass::Jacobi),
+            host: Some(1),
+        });
+        bus.route(policy.as_mut(), &mut rng).unwrap();
+        assert_eq!(bus.summaries()[1].resident, 1);
+        bus.publish(ClusterEvent::Sched {
+            host: 7,
+            ev: SchedEvent::Tick,
+        });
+        assert!(bus.route(policy.as_mut(), &mut rng).is_err());
+    }
+
+    #[test]
+    fn migrate_expands_to_departure_plus_delayed_arrival() {
+        // The tentpole semantics: Migrate {vm, src, dst} opens the
+        // transfer window now (network load both ends), then after
+        // `transfer_secs` the VM departs the source and arrives paused on
+        // the destination.
+        let model = MigrationModel {
+            downtime: 3.0,
+            transfer_secs: 2.0,
+            transfer_net: 0.25,
+            failure_prob: 0.0,
+        };
+        let mut bus = EventBus::new(2, model.clone(), 12);
+        let mut policy = Dispatcher::RoundRobin.build();
+        let mut rng = Rng::new(9);
+
+        let mut src = native_host(Policy::Ias);
+        let mut dst = native_host(Policy::Ias);
+        src.inject_arrival(running_vm(5, WorkloadClass::Blackscholes))
+            .unwrap();
+        // Warm the monitoring window so the migrant is adopted as a
+        // running workload on the destination, not parked as idle.
+        for _ in 0..12 {
+            src.step_host().unwrap();
+        }
+        assert_eq!(src.daemon.as_ref().unwrap().placement_state().unwrap().placed(), 1);
+
+        bus.publish(ClusterEvent::Migrate {
+            vm: VmId(5),
+            src: 0,
+            dst: 1,
+        });
+        bus.route(policy.as_mut(), &mut rng).unwrap();
+        assert_eq!(bus.in_flight(), 1);
+        assert_eq!(bus.stats.migrations_started, 1);
+
+        // Transfer window open: both ends carry the network load.
+        let mut inboxes = bus.take_inboxes();
+        for (host, inbox) in [(&mut src, inboxes.remove(0)), (&mut dst, inboxes.remove(0))] {
+            for ev in inbox {
+                apply_host_event(host, ev).unwrap();
+            }
+        }
+        assert_eq!(src.engine().external_net_load, model.transfer_net);
+        assert_eq!(dst.engine().external_net_load, model.transfer_net);
+
+        // First second: still in flight.
+        assert!(bus.advance(1.0).is_empty());
+        // Second second: matured. Extract from src, deliver to dst.
+        let matured = bus.advance(1.0);
+        assert_eq!(matured.len(), 1);
+        let reqs = EventBus::extraction_requests(&matured);
+        assert_eq!(reqs, vec![(0, VmId(5))]);
+        let vm = src.remove_resident(VmId(5)).unwrap();
+        assert!(vm.is_some());
+        // Departure bookkeeping: the source daemon's placement state
+        // dropped the member immediately (no monitor-poll wait).
+        assert_eq!(src.daemon.as_ref().unwrap().placement_state().unwrap().placed(), 0);
+
+        let now = 2.0;
+        bus.deliver(matured, vec![vm], now);
+        let mut inboxes = bus.take_inboxes();
+        for ev in inboxes.remove(0) {
+            apply_host_event(&mut src, ev).unwrap();
+        }
+        for ev in inboxes.remove(0) {
+            apply_host_event(&mut dst, ev).unwrap();
+        }
+        // Window closed on both ends; VM resident on dst, paused for the
+        // stop-and-copy downtime, and adopted by the destination daemon.
+        assert_eq!(src.engine().external_net_load, 0.0);
+        assert_eq!(dst.engine().external_net_load, 0.0);
+        assert_eq!(dst.engine().vms.len(), 1);
+        assert_eq!(dst.engine().vms[0].id, VmId(5));
+        assert_eq!(dst.engine().vms[0].paused_until, now + model.downtime);
+        assert_eq!(dst.daemon.as_ref().unwrap().placement_state().unwrap().placed(), 1);
+        assert_eq!(bus.stats.migrations_completed, 1);
+        assert_eq!(bus.stats.migrations_failed, 0);
+    }
+
+    #[test]
+    fn same_tick_departure_wins_over_a_maturing_migration() {
+        // A VM torn down in the very tick its transfer matures must not
+        // be resurrected on the destination.
+        let model = MigrationModel {
+            downtime: 3.0,
+            transfer_secs: 1.0,
+            transfer_net: 0.25,
+            failure_prob: 0.0,
+        };
+        let mut bus = EventBus::new(2, model, 12);
+        let mut policy = Dispatcher::RoundRobin.build();
+        let mut rng = Rng::new(3);
+        bus.publish(ClusterEvent::Migrate {
+            vm: VmId(1),
+            src: 0,
+            dst: 1,
+        });
+        bus.route(policy.as_mut(), &mut rng).unwrap();
+        let _ = bus.take_inboxes();
+        // Next tick: the teardown lands just as the transfer matures.
+        bus.publish(ClusterEvent::Departure {
+            host: 0,
+            vm: VmId(1),
+        });
+        bus.route(policy.as_mut(), &mut rng).unwrap();
+        let matured = bus.advance(1.0);
+        assert_eq!(matured.len(), 1);
+        let mut vm = running_vm(1, WorkloadClass::Hadoop);
+        vm.pinned = Some(0);
+        bus.deliver(matured, vec![Some(vm)], 1.0);
+        let inboxes = bus.take_inboxes();
+        // Destination sees only the transfer-window close, never the VM.
+        assert!(inboxes[1]
+            .iter()
+            .all(|ev| matches!(ev, HostEvent::NetLoad(_))));
+        assert_eq!(bus.stats.migrations_completed, 0);
+    }
+
+    #[test]
+    fn doomed_transfer_leaves_the_vm_on_the_source() {
+        let model = MigrationModel {
+            downtime: 3.0,
+            transfer_secs: 1.0,
+            transfer_net: 0.25,
+            failure_prob: 1.0,
+        };
+        let mut bus = EventBus::new(2, model, 12);
+        let mut policy = Dispatcher::RoundRobin.build();
+        let mut rng = Rng::new(2);
+        // A saturated destination guarantees the abort draw (p clamps to
+        // 0.9), so try until one dooms — seed 2 dooms on the first draw
+        // at full business, but don't depend on that.
+        let mut doomed_seen = false;
+        for _ in 0..64 {
+            bus.summaries[1].est_cpu_load = 12.0; // fully busy destination
+            bus.publish(ClusterEvent::Migrate {
+                vm: VmId(0),
+                src: 0,
+                dst: 1,
+            });
+            bus.route(policy.as_mut(), &mut rng).unwrap();
+            let matured = bus.advance(1.0);
+            assert_eq!(matured.len(), 1);
+            let doomed = matured[0].doomed;
+            assert!(EventBus::extraction_requests(&matured).is_empty() == doomed);
+            bus.deliver(matured, Vec::new(), 1.0);
+            let _ = bus.take_inboxes();
+            if doomed {
+                doomed_seen = true;
+                break;
+            }
+        }
+        assert!(doomed_seen, "0.9 abort probability never fired in 64 draws");
+        assert_eq!(bus.stats.migrations_failed, 1);
+    }
+}

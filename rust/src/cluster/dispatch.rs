@@ -2,45 +2,100 @@
 //!
 //! The paper assumes "the datacenter management system assigns a set of
 //! VMs to a server" (§IV-B); these are the standard assignment policies
-//! such a system uses.
+//! such a system uses. Since the cluster-event redesign, policies are
+//! [`ArrivalPolicy`] trait objects driven by the per-host
+//! [`HostSummary`]s the event bus publishes each tick — never by raw
+//! engine state — so any summary field (residents, profile-estimated
+//! load, placement interference) can inform the pick.
+//!
+//! [`Dispatcher`] is the parseable configuration surface (symmetric
+//! with `Policy::parse`): an enum naming the built-in policies, with
+//! [`Dispatcher::build`] producing the routing-time object.
 
+use super::bus::HostSummary;
 use crate::util::rng::Rng;
 
-/// Host-selection policy for arrivals.
+/// Host-selection policy for cluster arrivals. `pick` sees the bus's
+/// published summaries, which the bus keeps live within a tick (routing
+/// an arrival bumps the destination's `resident`), so same-tick
+/// arrivals spread out exactly as they would with live engine counts.
+pub trait ArrivalPolicy {
+    /// Pick the destination host index for one arriving VM.
+    /// `summaries` is never empty.
+    fn pick(&mut self, summaries: &[HostSummary], rng: &mut Rng) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Cycle over hosts in index order.
+pub struct RoundRobinPolicy {
+    cursor: usize,
+}
+
+impl ArrivalPolicy for RoundRobinPolicy {
+    fn pick(&mut self, summaries: &[HostSummary], _rng: &mut Rng) -> usize {
+        assert!(!summaries.is_empty());
+        let h = self.cursor % summaries.len();
+        self.cursor += 1;
+        h
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Host with the fewest resident VMs. Ties break **deterministically on
+/// the lowest host index** — the strict `<` comparison keeps the first
+/// host among equals, independent of any iterator-combinator tie rule —
+/// so runs are reproducible across toolchains (regression-tested).
+pub struct LeastLoadedPolicy;
+
+impl ArrivalPolicy for LeastLoadedPolicy {
+    fn pick(&mut self, summaries: &[HostSummary], _rng: &mut Rng) -> usize {
+        assert!(!summaries.is_empty());
+        let mut best = 0;
+        for (h, s) in summaries.iter().enumerate().skip(1) {
+            if s.resident < summaries[best].resident {
+                best = h;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+}
+
+/// Uniformly random host.
+pub struct RandomPolicy;
+
+impl ArrivalPolicy for RandomPolicy {
+    fn pick(&mut self, summaries: &[HostSummary], rng: &mut Rng) -> usize {
+        assert!(!summaries.is_empty());
+        rng.below(summaries.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// The parseable dispatcher configuration (CLI `--dispatcher`, specs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dispatcher {
-    /// Cycle over hosts.
     RoundRobin,
-    /// Host with the fewest resident VMs.
     LeastLoaded,
-    /// Uniformly random host.
     Random,
 }
 
 impl Dispatcher {
-    /// Pick a host given per-host resident-VM counts.
-    pub fn pick(
-        self,
-        residents: &[usize],
-        rr_state: &mut usize,
-        rng: &mut Rng,
-    ) -> usize {
-        assert!(!residents.is_empty());
-        match self {
-            Dispatcher::RoundRobin => {
-                let h = *rr_state % residents.len();
-                *rr_state += 1;
-                h
-            }
-            Dispatcher::LeastLoaded => residents
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, &n)| n)
-                .map(|(h, _)| h)
-                .unwrap(),
-            Dispatcher::Random => rng.below(residents.len()),
-        }
-    }
+    pub const ALL: [Dispatcher; 3] = [
+        Dispatcher::RoundRobin,
+        Dispatcher::LeastLoaded,
+        Dispatcher::Random,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -49,38 +104,101 @@ impl Dispatcher {
             Dispatcher::Random => "random",
         }
     }
+
+    pub fn from_name(name: &str) -> Option<Dispatcher> {
+        match name.to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => Some(Dispatcher::RoundRobin),
+            "least-loaded" | "ll" => Some(Dispatcher::LeastLoaded),
+            "random" => Some(Dispatcher::Random),
+            _ => None,
+        }
+    }
+
+    /// [`Self::from_name`] as a `Result`: case-insensitive, and the
+    /// error lists the valid names (what the CLI surfaces on a typo) —
+    /// symmetric with `Policy::parse`.
+    pub fn parse(name: &str) -> anyhow::Result<Dispatcher> {
+        Dispatcher::from_name(name).ok_or_else(|| {
+            let valid: Vec<&str> = Dispatcher::ALL.iter().map(|d| d.name()).collect();
+            anyhow::anyhow!("unknown dispatcher '{name}' (valid: {})", valid.join(", "))
+        })
+    }
+
+    /// Build the routing-time policy object the bus drives.
+    pub fn build(self) -> Box<dyn ArrivalPolicy> {
+        match self {
+            Dispatcher::RoundRobin => Box::new(RoundRobinPolicy { cursor: 0 }),
+            Dispatcher::LeastLoaded => Box::new(LeastLoadedPolicy),
+            Dispatcher::Random => Box::new(RandomPolicy),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn summaries(residents: &[usize]) -> Vec<HostSummary> {
+        residents
+            .iter()
+            .map(|&resident| HostSummary {
+                resident,
+                ..HostSummary::default()
+            })
+            .collect()
+    }
+
     #[test]
     fn round_robin_cycles() {
-        let mut rr = 0;
+        let mut policy = Dispatcher::RoundRobin.build();
         let mut rng = Rng::new(1);
-        let counts = vec![0, 0, 0];
-        let picks: Vec<usize> = (0..5)
-            .map(|_| Dispatcher::RoundRobin.pick(&counts, &mut rr, &mut rng))
-            .collect();
+        let s = summaries(&[0, 0, 0]);
+        let picks: Vec<usize> = (0..5).map(|_| policy.pick(&s, &mut rng)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1]);
     }
 
     #[test]
     fn least_loaded_prefers_empty_host() {
-        let mut rr = 0;
+        let mut policy = Dispatcher::LeastLoaded.build();
         let mut rng = Rng::new(1);
-        let h = Dispatcher::LeastLoaded.pick(&[3, 0, 2], &mut rr, &mut rng);
-        assert_eq!(h, 1);
+        assert_eq!(policy.pick(&summaries(&[3, 0, 2]), &mut rng), 1);
+    }
+
+    #[test]
+    fn least_loaded_ties_break_on_lowest_host_index() {
+        // Regression: the tie-break is part of the policy's contract, not
+        // an accident of iterator internals.
+        let mut policy = Dispatcher::LeastLoaded.build();
+        let mut rng = Rng::new(1);
+        assert_eq!(policy.pick(&summaries(&[2, 1, 1, 1]), &mut rng), 1);
+        assert_eq!(policy.pick(&summaries(&[0, 0, 0, 0]), &mut rng), 0);
+        assert_eq!(policy.pick(&summaries(&[5, 4, 3, 3]), &mut rng), 2);
     }
 
     #[test]
     fn random_stays_in_range() {
-        let mut rr = 0;
+        let mut policy = Dispatcher::Random.build();
         let mut rng = Rng::new(2);
+        let s = summaries(&[1, 1, 1, 1]);
         for _ in 0..100 {
-            let h = Dispatcher::Random.pick(&[1, 1, 1, 1], &mut rr, &mut rng);
-            assert!(h < 4);
+            assert!(policy.pick(&s, &mut rng) < 4);
         }
+    }
+
+    #[test]
+    fn parse_lists_valid_names_on_error() {
+        for d in Dispatcher::ALL {
+            assert_eq!(Dispatcher::parse(d.name()).unwrap(), d);
+            assert_eq!(
+                Dispatcher::parse(&d.name().to_ascii_uppercase()).unwrap(),
+                d
+            );
+        }
+        assert_eq!(Dispatcher::parse("rr").unwrap(), Dispatcher::RoundRobin);
+        let err = Dispatcher::parse("bogus").unwrap_err().to_string();
+        assert!(err.contains("round-robin"), "{err}");
+        assert!(err.contains("least-loaded"), "{err}");
+        assert!(err.contains("random"), "{err}");
+        assert_eq!(Dispatcher::ALL.map(|d| d.name()).len(), 3);
     }
 }

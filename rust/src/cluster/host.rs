@@ -1,19 +1,22 @@
 //! The host-stepping interface the cluster simulator drives.
 //!
-//! [`HostHandle`] decouples `ClusterSim::step` from the concrete
+//! [`HostHandle`] decouples cluster stepping from the concrete
 //! daemon/engine pairing: a host is anything that can advance one tick,
-//! accept injected events (arrivals, forced scheduler ticks), and drain
-//! metrics. [`SimHost`] is the standard implementation — a [`SimEngine`]
-//! plus an optional per-host VMCd [`Daemon`].
+//! accept routed bus deliveries (arrivals, migrants, departures, raw
+//! scheduler events, transfer network load), and publish metrics plus a
+//! [`HostSummary`]. [`SimHost`] is the standard implementation — a
+//! [`SimEngine`] plus an optional per-host VMCd [`Daemon`].
 //!
 //! `SimHost` is generic over the daemon's scheduler so the *type system*
-//! decides which hosts can shard: [`NativeHost`]
-//! (`SimHost<dyn Scheduler + Send>`, natively-scored) moves across
-//! `std::thread` scoped workers, while an XLA-backed
-//! `SimHost<dyn Scheduler>` is not `Send` (PJRT handles) and must step on
-//! the caller thread behind a `Box<dyn HostHandle>`.
+//! decides which hosts can move to a shard worker: [`NativeHost`]
+//! (`SimHost<dyn Scheduler + Send>`, natively-scored) is `Send` and can
+//! be owned by a [`super::pool::ShardPool`] worker for the whole run,
+//! while an XLA-backed `SimHost<dyn Scheduler>` is not `Send` (PJRT
+//! handles) and must step on the caller thread behind a
+//! `Box<dyn HostHandle>` ([`ClusterHost::Pinned`]).
 
-use crate::hostsim::{Hypervisor, SimEngine, Vm};
+use super::bus::HostSummary;
+use crate::hostsim::{Hypervisor, SimEngine, Vm, VmId, VmState};
 use crate::vmcd::daemon::SchedEvent;
 use crate::vmcd::scheduler::Scheduler;
 use crate::vmcd::Daemon;
@@ -36,7 +39,9 @@ pub struct HostMetrics {
     pub pin_failures: u64,
 }
 
-/// One steppable host, as the cluster simulator sees it.
+/// One steppable host, as the cluster layer sees it. The default
+/// methods define the bus-delivery surface in terms of the required
+/// ones, so every host honours the same `ClusterEvent` semantics.
 pub trait HostHandle {
     /// Current host-local virtual time.
     fn now(&self) -> f64;
@@ -57,7 +62,8 @@ pub trait HostHandle {
     /// Accept a VM migrated in from another host. Daemon-less hosts
     /// assign a fresh round-robin core (the global strategy's in-host
     /// contract); daemon hosts keep the carried pinning and let their
-    /// daemon adopt and re-pin it on the next poll.
+    /// daemon adopt it. Prefer [`Self::accept_migrant`], which also
+    /// routes the daemon-side `Arrival` bookkeeping.
     fn inject_migrated(&mut self, vm: Vm);
 
     /// The simulated engine — the metrics drain and the surgical surface
@@ -68,6 +74,89 @@ pub trait HostHandle {
 
     /// Summary counters for dashboards and reports.
     fn metrics(&self) -> HostMetrics;
+
+    /// Worst per-core workload interference of the host daemon's
+    /// placement state (Eq. 3/4); 0 for daemon-less hosts.
+    fn placement_wi(&self) -> f64 {
+        0.0
+    }
+
+    /// The per-tick state published on the cluster bus (the
+    /// `est_cpu_load` field is filled in by the bus, which owns the
+    /// profile bank).
+    fn summary(&self) -> HostSummary {
+        let engine = self.engine();
+        HostSummary {
+            resident: engine.vms.len(),
+            running: engine
+                .vms
+                .iter()
+                .filter(|vm| vm.state == VmState::Running)
+                .map(|vm| (vm.id, vm.class))
+                .collect(),
+            busy_cores: engine.busy_cores(),
+            max_wi: self.placement_wi(),
+            est_cpu_load: 0.0,
+        }
+    }
+
+    /// Remove a resident VM entirely (a routed `Departure`, or a matured
+    /// migration pulling it off this source host): take it out of the
+    /// engine and hand the daemon a [`SchedEvent::Departure`] so the
+    /// long-lived placement state drops the member immediately instead
+    /// of waiting for the next monitor diff.
+    fn remove_resident(&mut self, id: VmId) -> Result<Option<Vm>> {
+        let vm = self.engine_mut().remove_vm(id);
+        if vm.is_some() {
+            self.inject_event(SchedEvent::Departure(id))?;
+        }
+        Ok(vm)
+    }
+
+    /// Accept a VM migrating in: apply the stop-and-copy pause, insert
+    /// it, and hand the daemon a [`SchedEvent::Arrival`] so the newcomer
+    /// is adopted (pin carried) or placed (pin lost) through the same
+    /// bookkeeping as any other arrival — the bus's "delayed `Arrival`
+    /// on the destination".
+    fn accept_migrant(&mut self, mut vm: Vm, pause_until: Option<f64>) -> Result<()> {
+        if let Some(until) = pause_until {
+            vm.paused_until = until;
+        }
+        let id = vm.id;
+        self.inject_migrated(vm);
+        self.inject_event(SchedEvent::Arrival(id))
+    }
+
+    /// Adjust the host's external network load (migration transfer
+    /// windows open with a positive delta and close with its negative).
+    fn add_external_net_load(&mut self, delta: f64) {
+        self.engine_mut().external_net_load += delta;
+    }
+}
+
+/// One cluster host, partitioned by steppability: `Native` hosts are
+/// `Send` and can live on pool/scoped worker threads; `Pinned` hosts
+/// (e.g. XLA-backed daemons holding PJRT handles) step on the caller
+/// thread.
+pub enum ClusterHost {
+    Native(NativeHost),
+    Pinned(Box<dyn HostHandle>),
+}
+
+impl ClusterHost {
+    pub fn handle(&self) -> &dyn HostHandle {
+        match self {
+            ClusterHost::Native(h) => h,
+            ClusterHost::Pinned(h) => h.as_ref(),
+        }
+    }
+
+    pub fn handle_mut(&mut self) -> &mut dyn HostHandle {
+        match self {
+            ClusterHost::Native(h) => h,
+            ClusterHost::Pinned(h) => h.as_mut(),
+        }
+    }
 }
 
 /// A simulated host: engine + optional VMCd daemon.
@@ -81,10 +170,10 @@ pub struct SimHost<S: ?Sized + Scheduler = dyn Scheduler> {
 }
 
 /// The shardable host: natively-scored scheduler, so the whole host is
-/// `Send` and can step on a worker thread.
+/// `Send` and can be owned by a worker thread.
 pub type NativeHost = SimHost<dyn Scheduler + Send>;
 
-// Compile-time guarantee behind the sharded stepping path.
+// Compile-time guarantee behind the pool/scoped stepping paths.
 #[allow(dead_code)]
 fn _assert_native_host_is_send() {
     fn assert_send<T: Send>() {}
@@ -168,12 +257,19 @@ impl<S: ?Sized + Scheduler> HostHandle for SimHost<S> {
             pin_failures: self.daemon.as_ref().map_or(0, |d| d.pin_failures),
         }
     }
+
+    fn placement_wi(&self) -> f64 {
+        self.daemon
+            .as_ref()
+            .and_then(|d| d.placement_state())
+            .map_or(0.0, |state| state.max_core_wi())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hostsim::{VmId, VmState};
+    use crate::hostsim::VmState;
     use crate::testkit;
     use crate::vmcd::scheduler::{self, Policy};
     use crate::workloads::WorkloadClass;
@@ -204,6 +300,12 @@ mod tests {
         assert_eq!(m.resident, 1);
         assert!(m.busy_cores >= 1);
         assert!(m.cycles >= 1);
+        // The bus-facing summary sees the same occupancy plus the
+        // daemon's placement interference.
+        let s = host.summary();
+        assert_eq!(s.resident, 1);
+        assert_eq!(s.running, vec![(VmId(0), WorkloadClass::Blackscholes)]);
+        assert!(s.max_wi >= 0.5, "solo member has WI 0.5, got {}", s.max_wi);
     }
 
     #[test]
@@ -226,6 +328,7 @@ mod tests {
         // Event injection is a tolerated no-op without a daemon.
         host.inject_event(SchedEvent::Tick).unwrap();
         assert_eq!(host.metrics().cycles, 0);
+        assert_eq!(host.placement_wi(), 0.0);
         // A migrated-in VM gets the next round-robin core, not the pin it
         // carried from its source host.
         let mut vm = Vm::new(
@@ -245,6 +348,61 @@ mod tests {
         let mut host = native_host(Policy::Ias);
         host.inject_event(SchedEvent::Tick).unwrap();
         assert_eq!(host.metrics().cycles, 1);
+    }
+
+    #[test]
+    fn remove_resident_updates_daemon_bookkeeping() {
+        let mut host = native_host(Policy::Ias);
+        let mut vm = Vm::new(
+            VmId(4),
+            WorkloadClass::Jacobi,
+            0.0,
+            crate::hostsim::ActivityModel::AlwaysOn,
+        );
+        vm.state = VmState::Running;
+        vm.started = Some(0.0);
+        host.inject_arrival(vm).unwrap();
+        assert_eq!(
+            host.daemon.as_ref().unwrap().placement_state().unwrap().placed(),
+            1
+        );
+        let vm = host.remove_resident(VmId(4)).unwrap();
+        assert_eq!(vm.map(|v| v.id), Some(VmId(4)));
+        assert_eq!(host.engine().vms.len(), 0);
+        assert_eq!(
+            host.daemon.as_ref().unwrap().placement_state().unwrap().placed(),
+            0
+        );
+        // Removing a ghost is a tolerated no-op.
+        assert!(host.remove_resident(VmId(4)).unwrap().is_none());
+    }
+
+    #[test]
+    fn accept_migrant_pauses_and_adopts() {
+        let mut host = native_host(Policy::Ias);
+        let mut vm = Vm::new(
+            VmId(6),
+            WorkloadClass::StreamLow,
+            0.0,
+            crate::hostsim::ActivityModel::AlwaysOn,
+        );
+        vm.state = VmState::Running;
+        vm.started = Some(0.0);
+        vm.pinned = Some(5);
+        // A live migrant carries its monitoring window; warm it so the
+        // adoption sees a running (non-idle) workload.
+        for _ in 0..12 {
+            vm.record_cpu(0.8, 10);
+        }
+        host.accept_migrant(vm, Some(42.0)).unwrap();
+        assert_eq!(host.engine().vms[0].paused_until, 42.0);
+        // Adoption keeps the carried pin and books the member into the
+        // long-lived placement state right away.
+        assert_eq!(host.engine().vms[0].pinned, Some(5));
+        assert_eq!(
+            host.daemon.as_ref().unwrap().placement_state().unwrap().placed(),
+            1
+        );
     }
 
     #[test]

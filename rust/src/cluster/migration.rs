@@ -13,7 +13,15 @@
 //! * **failure** — under a loaded destination the migration aborts with
 //!   probability `failure_prob` (pre-copy never converges), wasting the
 //!   transfer load without moving the VM.
+//!
+//! Since the cluster-event redesign the model never touches hosts
+//! itself: a `ClusterEvent::Migrate` routed through the
+//! [`super::bus::EventBus`] opens the transfer window (network load on
+//! both ends), and the matured [`Migration`] expands into a departure
+//! on the source plus a delayed, downtime-paused arrival on the
+//! destination.
 
+use crate::hostsim::VmId;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -39,10 +47,10 @@ impl Default for MigrationModel {
     }
 }
 
-/// An in-flight migration.
+/// An in-flight migration transfer (owned by the event bus).
 #[derive(Debug, Clone)]
 pub struct Migration {
-    pub vm_index: usize,
+    pub vm: VmId,
     pub from_host: usize,
     pub to_host: usize,
     /// Remaining transfer seconds.
@@ -55,7 +63,7 @@ impl MigrationModel {
     /// Start a migration; destination business decides the failure draw.
     pub fn start(
         &self,
-        vm_index: usize,
+        vm: VmId,
         from_host: usize,
         to_host: usize,
         dest_busy_fraction: f64,
@@ -66,7 +74,7 @@ impl MigrationModel {
         // oversubscribed".
         let p = self.failure_prob * dest_busy_fraction.clamp(0.0, 1.0) * 2.0;
         Migration {
-            vm_index,
+            vm,
             from_host,
             to_host,
             remaining: self.transfer_secs,
@@ -84,7 +92,7 @@ mod tests {
         let m = MigrationModel::default();
         let mut rng = Rng::new(1);
         let doomed = (0..1000)
-            .filter(|_| m.start(0, 0, 1, 0.0, &mut rng).doomed)
+            .filter(|_| m.start(VmId(0), 0, 1, 0.0, &mut rng).doomed)
             .count();
         assert_eq!(doomed, 0, "zero-busy destination must never abort");
     }
@@ -94,7 +102,7 @@ mod tests {
         let m = MigrationModel::default();
         let mut rng = Rng::new(2);
         let doomed = (0..1000)
-            .filter(|_| m.start(0, 0, 1, 1.0, &mut rng).doomed)
+            .filter(|_| m.start(VmId(0), 0, 1, 1.0, &mut rng).doomed)
             .count();
         // p = 0.30 at full business.
         assert!((200..400).contains(&doomed), "{doomed}");
@@ -104,8 +112,8 @@ mod tests {
     fn migration_carries_transfer_state() {
         let m = MigrationModel::default();
         let mut rng = Rng::new(3);
-        let mig = m.start(7, 2, 5, 0.5, &mut rng);
-        assert_eq!(mig.vm_index, 7);
+        let mig = m.start(VmId(7), 2, 5, 0.5, &mut rng);
+        assert_eq!(mig.vm, VmId(7));
         assert_eq!((mig.from_host, mig.to_host), (2, 5));
         assert_eq!(mig.remaining, m.transfer_secs);
     }

@@ -4,32 +4,43 @@
 //! migration-based global consolidation "fails when the infrastructure as
 //! a whole is oversubscribed".
 //!
-//! Two cluster-level strategies over N simulated hosts:
+//! The layer's public API is one event type and two engines:
 //!
-//! * **Local** ([`Strategy::LocalVmcd`]): a thin dispatcher assigns each
-//!   arriving VM to a host (least-resident-VMs); from then on every host's
-//!   own VMCd daemon (any per-host policy) does all optimisation by
-//!   re-pinning locally. No migrations, no global knowledge.
-//! * **Global** ([`Strategy::GlobalMigration`]): a centralized scheduler
-//!   with full cluster knowledge periodically reshuffles VMs *across*
-//!   hosts (live migration) to pack them onto the fewest hosts, at the
-//!   cost the paper identifies: each migration stalls the VM for a
-//!   downtime window and burns network on both ends. Within a host it
-//!   pins round-robin (the centralized schedulers the paper contrasts
-//!   with do not micro-manage pinning).
-
+//! * [`bus`] — the **cluster-wide event bus**: every piece of placement
+//!   churn (arrival, departure, live migration, raw scheduler event) is
+//!   a [`ClusterEvent`](bus::ClusterEvent) routed into per-host inboxes;
+//!   a migration expands to a departure on the source plus a delayed,
+//!   downtime-paused arrival on the destination. Hosts publish
+//!   [`HostSummary`](bus::HostSummary)s back each tick — the *only*
+//!   cluster state arrival policies and the global strategy see.
+//! * [`pool`] — the **persistent shard pool**: workers own their native
+//!   (`Send`) hosts for the whole run, drain the routed inboxes, step,
+//!   and report; XLA-backed hosts stay on the caller thread. All step
+//!   modes are bit-identical.
+//! * [`sim`] — the cluster simulator over both, with two strategies:
 //!
-//! Hosts are driven through the [`host::HostHandle`] interface; native
-//! (`Send`) hosts can shard across worker threads
-//! ([`ClusterSpec::shard_threads`](sim::ClusterSpec::shard_threads)),
-//! XLA-backed hosts stay on the caller thread.
+//!   * **Local** ([`Strategy::LocalVmcd`]): an [`ArrivalPolicy`] assigns
+//!     each arriving VM to a host; from then on every host's own VMCd
+//!     daemon (any per-host policy) does all optimisation by re-pinning
+//!     locally. No migrations, no global knowledge.
+//!   * **Global** ([`Strategy::GlobalMigration`]): a centralized
+//!     scheduler with full cluster knowledge periodically reshuffles VMs
+//!     *across* hosts (live migration) to pack them onto the fewest
+//!     hosts, at the cost the paper identifies: each migration stalls
+//!     the VM for a downtime window and burns network on both ends.
+//!     Within a host it pins round-robin (the centralized schedulers the
+//!     paper contrasts with do not micro-manage pinning).
 
+pub mod bus;
 pub mod dispatch;
 pub mod host;
 pub mod migration;
+pub mod pool;
 pub mod sim;
 
-pub use dispatch::Dispatcher;
-pub use host::{HostHandle, HostMetrics, NativeHost, SimHost};
+pub use bus::{BusStats, ClusterEvent, EventBus, HostEvent, HostSummary, TickReport};
+pub use dispatch::{ArrivalPolicy, Dispatcher};
+pub use host::{ClusterHost, HostHandle, HostMetrics, NativeHost, SimHost};
 pub use migration::MigrationModel;
-pub use sim::{ClusterHost, ClusterResult, ClusterSim, ClusterSpec, Strategy};
+pub use pool::{ShardPool, StepMode};
+pub use sim::{ClusterResult, ClusterSim, ClusterSpec, Strategy};

@@ -1,0 +1,565 @@
+//! Persistent shard-worker pool for cluster host stepping.
+//!
+//! PR 2 sharded native hosts across `std::thread::scope` workers spawned
+//! *every tick*; for clusters of hundreds of hosts the per-tick spawn and
+//! join dominates. [`ShardPool`] amortises it: workers are spawned once,
+//! **own their native hosts for the whole run**, drain the per-tick
+//! [`HostEvent`] inboxes the bus routed to them, step, and publish a
+//! [`TickReport`] (metrics + the [`super::bus::HostSummary`] the bus
+//! republishes) back to the coordinator over channels.
+//!
+//! Three step modes share one code path (`step_one`): everything on
+//! the caller thread ([`StepMode::Single`]), the PR 2 per-tick scoped
+//! workers ([`StepMode::Scoped`], kept as the bench baseline), and the
+//! persistent pool ([`StepMode::Pool`]). Hosts are independent within a
+//! tick and every delivery/step mutates exactly one host, so all three
+//! modes are **bit-identical** (test-gated in `sim.rs`). XLA-backed
+//! hosts are not `Send` and always stay on the caller thread, whatever
+//! the mode.
+
+use super::bus::{apply_host_event, HostEvent, TickReport};
+use super::host::{ClusterHost, HostHandle, NativeHost};
+use crate::hostsim::{Vm, VmId};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// How the cluster steps its hosts each tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepMode {
+    /// Everything on the caller thread.
+    Single,
+    /// Per-tick `std::thread::scope` workers (the pre-pool design, kept
+    /// for comparison benches). Values < 2 behave like [`Self::Single`].
+    Scoped(usize),
+    /// Persistent worker pool: the given number of workers (≥ 1) own
+    /// the native hosts for the whole run.
+    Pool(usize),
+}
+
+impl StepMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            StepMode::Single => "single",
+            StepMode::Scoped(_) => "scoped",
+            StepMode::Pool(_) => "pool",
+        }
+    }
+}
+
+/// Drain one host's inbox, step it once, report. The single code path
+/// every step mode funnels through.
+fn step_one(host: &mut dyn HostHandle, inbox: Vec<HostEvent>) -> Result<TickReport> {
+    for ev in inbox {
+        apply_host_event(host, ev)?;
+    }
+    host.step_host()?;
+    let engine = host.engine();
+    Ok(TickReport {
+        summary: host.summary(),
+        busy_now: engine
+            .ledger
+            .busy_series
+            .points
+            .last()
+            .map(|p| p.1 > 0.0)
+            == Some(true),
+        batch_done: engine.all_batch_done(),
+    })
+}
+
+/// Work sent to a persistent worker.
+enum Job {
+    /// Remove the given VMs (worker-local host index) from their hosts;
+    /// reply [`Reply::Extracted`] in request order.
+    Extract(Vec<(usize, VmId)>),
+    /// Apply one inbox per owned host (worker-local order) and step each
+    /// host once; reply [`Reply::Stepped`] in the same order.
+    Step(Vec<Vec<HostEvent>>),
+}
+
+enum Reply {
+    Extracted(Result<Vec<Option<Vm>>>),
+    Stepped(Result<Vec<TickReport>>),
+}
+
+fn worker_loop(
+    mut hosts: Vec<NativeHost>,
+    rx: Receiver<Job>,
+    tx: Sender<Reply>,
+) -> Vec<NativeHost> {
+    // Channel closed (pool dropped or torn down) => return the hosts to
+    // whoever joins us.
+    while let Ok(job) = rx.recv() {
+        let reply = match job {
+            Job::Extract(reqs) => Reply::Extracted(
+                reqs.into_iter()
+                    .map(|(i, id)| hosts[i].remove_resident(id))
+                    .collect(),
+            ),
+            Job::Step(inboxes) => Reply::Stepped(
+                hosts
+                    .iter_mut()
+                    .zip(inboxes)
+                    .map(|(host, inbox)| step_one(host, inbox))
+                    .collect(),
+            ),
+        };
+        if tx.send(reply).is_err() {
+            break;
+        }
+    }
+    hosts
+}
+
+struct Worker {
+    tx: Sender<Job>,
+    rx: Receiver<Reply>,
+    handle: JoinHandle<Vec<NativeHost>>,
+    /// Hosts this worker owns.
+    count: usize,
+}
+
+/// Where one global host index lives.
+#[derive(Debug, Clone, Copy)]
+enum Slot {
+    /// Caller-thread host (index into `ShardPool::local`).
+    Local(usize),
+    /// Pool-worker host (worker index, worker-local host index).
+    Remote { worker: usize, idx: usize },
+}
+
+/// The host-stepping engine behind `ClusterSim`: owns every host (some
+/// behind persistent workers), steps them against the bus's routed
+/// inboxes, and reassembles per-host reports in global host order so
+/// results never depend on worker scheduling.
+pub struct ShardPool {
+    slots: Vec<Slot>,
+    local: Vec<ClusterHost>,
+    workers: Vec<Worker>,
+    /// > 1 => step local native hosts under a per-tick `thread::scope`.
+    scoped_threads: usize,
+}
+
+impl ShardPool {
+    pub fn new(hosts: Vec<ClusterHost>, mode: StepMode) -> ShardPool {
+        let pool_workers = match mode {
+            StepMode::Pool(n) => n.max(1),
+            _ => 0,
+        };
+        let scoped_threads = match mode {
+            StepMode::Scoped(n) => n,
+            _ => 0,
+        };
+
+        let mut slots = Vec::with_capacity(hosts.len());
+        let mut local = Vec::new();
+        // (global index, host) pairs destined for pool workers.
+        let mut native: Vec<(usize, NativeHost)> = Vec::new();
+        for (g, host) in hosts.into_iter().enumerate() {
+            match host {
+                ClusterHost::Native(h) if pool_workers > 0 => {
+                    slots.push(Slot::Remote { worker: 0, idx: 0 }); // patched below
+                    native.push((g, h));
+                }
+                other => {
+                    slots.push(Slot::Local(local.len()));
+                    local.push(other);
+                }
+            }
+        }
+
+        let mut workers = Vec::new();
+        if !native.is_empty() {
+            let n_workers = pool_workers.min(native.len());
+            // Contiguous chunks, ceil-divided (matches the scoped split).
+            #[allow(unknown_lints, clippy::manual_div_ceil)]
+            let chunk = (native.len() + n_workers - 1) / n_workers;
+            let mut native = native.into_iter();
+            for w in 0..n_workers {
+                let mut owned = Vec::new();
+                for idx in 0..chunk {
+                    let Some((g, h)) = native.next() else { break };
+                    slots[g] = Slot::Remote { worker: w, idx };
+                    owned.push(h);
+                }
+                if owned.is_empty() {
+                    break;
+                }
+                let count = owned.len();
+                let (tx_job, rx_job) = channel::<Job>();
+                let (tx_reply, rx_reply) = channel::<Reply>();
+                let handle = std::thread::Builder::new()
+                    .name(format!("shard-worker-{w}"))
+                    .spawn(move || worker_loop(owned, rx_job, tx_reply))
+                    .expect("spawn shard worker");
+                workers.push(Worker {
+                    tx: tx_job,
+                    rx: rx_reply,
+                    handle,
+                    count,
+                });
+            }
+        }
+
+        ShardPool {
+            slots,
+            local,
+            workers,
+            scoped_threads,
+        }
+    }
+
+    /// Total hosts (local + worker-owned).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Worker threads currently running.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Remove VMs from their hosts (global host index), e.g. matured
+    /// migration transfers pulling VMs off their sources. Results are in
+    /// request order; `None` means the VM was not resident.
+    pub fn extract(&mut self, requests: &[(usize, VmId)]) -> Result<Vec<Option<Vm>>> {
+        // Partition per destination, remembering where each answer lands.
+        enum Origin {
+            Local(usize),
+            Worker(usize, usize),
+        }
+        let mut origins = Vec::with_capacity(requests.len());
+        let mut local_reqs: Vec<(usize, VmId)> = Vec::new();
+        let mut worker_reqs: Vec<Vec<(usize, VmId)>> =
+            (0..self.workers.len()).map(|_| Vec::new()).collect();
+        for &(g, id) in requests {
+            anyhow::ensure!(g < self.slots.len(), "extract from host {g} of {}", self.slots.len());
+            match self.slots[g] {
+                Slot::Local(i) => {
+                    origins.push(Origin::Local(local_reqs.len()));
+                    local_reqs.push((i, id));
+                }
+                Slot::Remote { worker, .. } => {
+                    origins.push(Origin::Worker(worker, worker_reqs[worker].len()));
+                    // Workers address hosts by their local index.
+                    let Slot::Remote { idx, .. } = self.slots[g] else {
+                        unreachable!()
+                    };
+                    worker_reqs[worker].push((idx, id));
+                }
+            }
+        }
+
+        let mut asked = vec![false; self.workers.len()];
+        for (w, reqs) in worker_reqs.iter_mut().enumerate() {
+            if !reqs.is_empty() {
+                self.workers[w]
+                    .tx
+                    .send(Job::Extract(std::mem::take(reqs)))
+                    .map_err(|_| anyhow!("shard worker {w} hung up"))?;
+                asked[w] = true;
+            }
+        }
+
+        let mut local_out: Vec<Option<Vm>> = Vec::with_capacity(local_reqs.len());
+        for (i, id) in local_reqs {
+            local_out.push(self.local[i].handle_mut().remove_resident(id)?);
+        }
+
+        // Every asked worker is drained before any error propagates, so
+        // the request/reply channels stay in lockstep for later calls.
+        let mut worker_out: Vec<Vec<Option<Vm>>> =
+            (0..self.workers.len()).map(|_| Vec::new()).collect();
+        let mut first_err = None;
+        for (w, worker) in self.workers.iter().enumerate() {
+            if asked[w] {
+                let outcome = match worker.rx.recv() {
+                    Ok(Reply::Extracted(Ok(r))) => Ok(r),
+                    Ok(Reply::Extracted(Err(e))) => Err(e),
+                    Ok(_) => Err(anyhow!("shard worker {w} answered out of protocol")),
+                    Err(_) => Err(anyhow!("shard worker {w} died")),
+                };
+                match outcome {
+                    Ok(r) => worker_out[w] = r,
+                    Err(e) => first_err = first_err.or(Some(e)),
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+
+        // Each position is consumed exactly once, so take() is safe.
+        Ok(origins
+            .into_iter()
+            .map(|o| match o {
+                Origin::Local(i) => local_out[i].take(),
+                Origin::Worker(w, i) => worker_out[w][i].take(),
+            })
+            .collect())
+    }
+
+    /// Apply one routed inbox per host (global host order — the bus's
+    /// [`super::bus::EventBus::take_inboxes`] output) and step every
+    /// host one tick. Reports come back in global host order.
+    pub fn step(&mut self, mut inboxes: Vec<Vec<HostEvent>>) -> Result<Vec<TickReport>> {
+        anyhow::ensure!(
+            inboxes.len() == self.slots.len(),
+            "{} inboxes for {} hosts",
+            inboxes.len(),
+            self.slots.len()
+        );
+        // Partition the inboxes by destination.
+        let mut local_in: Vec<Vec<HostEvent>> = (0..self.local.len()).map(|_| Vec::new()).collect();
+        let mut worker_in: Vec<Vec<Vec<HostEvent>>> = self
+            .workers
+            .iter()
+            .map(|w| (0..w.count).map(|_| Vec::new()).collect())
+            .collect();
+        for (g, inbox) in inboxes.drain(..).enumerate() {
+            match self.slots[g] {
+                Slot::Local(i) => local_in[i] = inbox,
+                Slot::Remote { worker, idx } => worker_in[worker][idx] = inbox,
+            }
+        }
+
+        // Kick the workers first so they overlap with the local stepping.
+        for (w, job) in worker_in.into_iter().enumerate() {
+            self.workers[w]
+                .tx
+                .send(Job::Step(job))
+                .map_err(|_| anyhow!("shard worker {w} hung up"))?;
+        }
+        let local_result = self.step_local(local_in);
+        // Drain every worker before propagating any error (local or
+        // remote), so the request/reply channels stay in lockstep.
+        let mut worker_reports: Vec<Vec<Option<TickReport>>> =
+            Vec::with_capacity(self.workers.len());
+        let mut first_err = None;
+        for (w, worker) in self.workers.iter().enumerate() {
+            let outcome = match worker.rx.recv() {
+                Ok(Reply::Stepped(Ok(r))) => Ok(r),
+                Ok(Reply::Stepped(Err(e))) => Err(e),
+                Ok(_) => Err(anyhow!("shard worker {w} answered out of protocol")),
+                Err(_) => Err(anyhow!("shard worker {w} died")),
+            };
+            match outcome {
+                Ok(r) => worker_reports.push(r.into_iter().map(Some).collect()),
+                Err(e) => {
+                    worker_reports.push(Vec::new());
+                    first_err = first_err.or(Some(e));
+                }
+            }
+        }
+        let mut local_reports = local_result?;
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+
+        // Reassemble in global host order.
+        Ok(self
+            .slots
+            .iter()
+            .map(|slot| match *slot {
+                Slot::Local(i) => local_reports[i].take().expect("local report missing"),
+                Slot::Remote { worker, idx } => {
+                    worker_reports[worker][idx].take().expect("worker report missing")
+                }
+            })
+            .collect())
+    }
+
+    /// Step the caller-thread hosts: natives optionally under a per-tick
+    /// scope ([`StepMode::Scoped`]), pinned hosts always inline.
+    fn step_local(&mut self, mut inboxes: Vec<Vec<HostEvent>>) -> Result<Vec<Option<TickReport>>> {
+        let mut results: Vec<Option<TickReport>> = (0..self.local.len()).map(|_| None).collect();
+        let threads = self.scoped_threads;
+        let mut native: Vec<(usize, &mut NativeHost)> = Vec::new();
+        let mut pinned: Vec<(usize, &mut Box<dyn HostHandle>)> = Vec::new();
+        for (i, host) in self.local.iter_mut().enumerate() {
+            match host {
+                ClusterHost::Native(h) => native.push((i, h)),
+                ClusterHost::Pinned(h) => pinned.push((i, h)),
+            }
+        }
+        if threads > 1 && native.len() > 1 {
+            #[allow(unknown_lints, clippy::manual_div_ceil)]
+            let chunk = (native.len() + threads - 1) / threads;
+            let shard_results: Vec<Result<Vec<(usize, TickReport)>>> =
+                std::thread::scope(|s| {
+                    let mut handles = Vec::new();
+                    for shard in native.chunks_mut(chunk) {
+                        // Each worker takes its hosts' inboxes with it.
+                        let jobs: Vec<Vec<HostEvent>> = shard
+                            .iter()
+                            .map(|(i, _)| std::mem::take(&mut inboxes[*i]))
+                            .collect();
+                        handles.push(s.spawn(move || -> Result<Vec<(usize, TickReport)>> {
+                            let mut out = Vec::with_capacity(shard.len());
+                            for ((i, host), inbox) in shard.iter_mut().zip(jobs) {
+                                out.push((*i, step_one(&mut **host, inbox)?));
+                            }
+                            Ok(out)
+                        }));
+                    }
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("scoped shard worker panicked"))
+                        .collect()
+                });
+            for shard in shard_results {
+                for (i, report) in shard? {
+                    results[i] = Some(report);
+                }
+            }
+        } else {
+            for (i, host) in native {
+                results[i] = Some(step_one(host, std::mem::take(&mut inboxes[i]))?);
+            }
+        }
+        for (i, host) in pinned {
+            results[i] = Some(step_one(host.as_mut(), std::mem::take(&mut inboxes[i]))?);
+        }
+        Ok(results)
+    }
+
+    /// Tear the pool down, returning every host in the original global
+    /// order (workers exit when their job channel closes).
+    pub fn into_hosts(self) -> Result<Vec<ClusterHost>> {
+        let ShardPool {
+            slots,
+            local,
+            workers,
+            ..
+        } = self;
+        let mut handles = Vec::with_capacity(workers.len());
+        for worker in workers {
+            let Worker { tx, handle, .. } = worker;
+            drop(tx); // closes the job channel; the worker returns its hosts
+            handles.push(handle);
+        }
+        let mut worker_hosts: Vec<Vec<Option<NativeHost>>> = Vec::with_capacity(handles.len());
+        for handle in handles {
+            let hosts = handle
+                .join()
+                .map_err(|_| anyhow!("shard worker panicked during teardown"))?;
+            worker_hosts.push(hosts.into_iter().map(Some).collect());
+        }
+        let mut local: Vec<Option<ClusterHost>> = local.into_iter().map(Some).collect();
+        Ok(slots
+            .into_iter()
+            .map(|slot| match slot {
+                Slot::Local(i) => local[i].take().expect("local host missing"),
+                Slot::Remote { worker, idx } => ClusterHost::Native(
+                    worker_hosts[worker][idx].take().expect("worker host missing"),
+                ),
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::host::SimHost;
+    use crate::hostsim::{ActivityModel, SimEngine, VmState};
+    use crate::testkit;
+    use crate::vmcd::scheduler::{self, Policy};
+    use crate::vmcd::Daemon;
+    use crate::workloads::WorkloadClass;
+
+    fn native_host() -> NativeHost {
+        let cfg = testkit::quiet_config();
+        let bank = testkit::shared_bank();
+        let sched = scheduler::build_native(Policy::Ias, bank, cfg.sched.ras_threshold, None);
+        let daemon = Daemon::new(cfg.sched.clone(), sched);
+        SimHost::new(SimEngine::new(cfg, Vec::new()), Some(daemon))
+    }
+
+    fn running_vm(id: u32) -> Vm {
+        let mut vm = Vm::new(
+            VmId(id),
+            WorkloadClass::Hadoop,
+            0.0,
+            ActivityModel::AlwaysOn,
+        );
+        vm.state = VmState::Running;
+        vm.started = Some(0.0);
+        vm
+    }
+
+    fn empty_inboxes(n: usize) -> Vec<Vec<HostEvent>> {
+        (0..n).map(|_| Vec::new()).collect()
+    }
+
+    #[test]
+    fn pool_steps_and_returns_hosts_in_global_order() {
+        let hosts: Vec<ClusterHost> =
+            (0..5).map(|_| ClusterHost::Native(native_host())).collect();
+        let mut pool = ShardPool::new(hosts, StepMode::Pool(2));
+        assert_eq!(pool.len(), 5);
+        assert_eq!(pool.workers(), 2);
+
+        // Deliver one arrival to host 3 via its inbox, then step twice.
+        let mut inboxes = empty_inboxes(5);
+        inboxes[3].push(HostEvent::Arrival(running_vm(7)));
+        let reports = pool.step(inboxes).unwrap();
+        assert_eq!(reports.len(), 5);
+        assert_eq!(reports[3].summary.resident, 1);
+        assert!(reports.iter().enumerate().all(|(h, r)| h == 3 || r.summary.resident == 0));
+
+        let reports = pool.step(empty_inboxes(5)).unwrap();
+        assert!(reports[3].summary.busy_cores >= 1);
+
+        let hosts = pool.into_hosts().unwrap();
+        assert_eq!(hosts.len(), 5);
+        let residents: Vec<usize> = hosts
+            .iter()
+            .map(|h| h.handle().engine().vms.len())
+            .collect();
+        assert_eq!(residents, vec![0, 0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn extract_pulls_the_vm_from_a_worker_owned_host() {
+        let hosts: Vec<ClusterHost> =
+            (0..4).map(|_| ClusterHost::Native(native_host())).collect();
+        let mut pool = ShardPool::new(hosts, StepMode::Pool(4));
+        let mut inboxes = empty_inboxes(4);
+        inboxes[2].push(HostEvent::Arrival(running_vm(9)));
+        pool.step(inboxes).unwrap();
+
+        let out = pool.extract(&[(2, VmId(9)), (1, VmId(9))]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].as_ref().map(|vm| vm.id), Some(VmId(9)));
+        assert!(out[1].is_none(), "host 1 never held the VM");
+
+        let hosts = pool.into_hosts().unwrap();
+        assert_eq!(hosts[2].handle().engine().vms.len(), 0);
+    }
+
+    #[test]
+    fn single_and_pool_modes_report_identically() {
+        let run = |mode: StepMode| {
+            let hosts: Vec<ClusterHost> =
+                (0..3).map(|_| ClusterHost::Native(native_host())).collect();
+            let mut pool = ShardPool::new(hosts, mode);
+            let mut inboxes = empty_inboxes(3);
+            inboxes[0].push(HostEvent::Arrival(running_vm(1)));
+            inboxes[2].push(HostEvent::Arrival(running_vm(2)));
+            pool.step(inboxes).unwrap();
+            let reports = pool.step(empty_inboxes(3)).unwrap();
+            reports
+                .iter()
+                .map(|r| (r.summary.resident, r.summary.busy_cores, r.summary.max_wi.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(StepMode::Single), run(StepMode::Pool(3)));
+        assert_eq!(run(StepMode::Single), run(StepMode::Scoped(2)));
+    }
+}

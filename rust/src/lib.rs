@@ -25,6 +25,10 @@
 //!   (`artifacts/*.hlo.txt`): the XLA scoring backend and the real-compute
 //!   workload kernels. Python is never on this path.
 //! * [`scenarios`] — the paper's three evaluation scenarios (§V-C).
+//! * [`cluster`] — the cluster layer (§III / §VI): the `ClusterEvent`
+//!   bus routing all placement churn (arrivals, departures, live
+//!   migrations), the persistent shard-worker pool stepping hosts, and
+//!   the local-vs-global consolidation simulator over both.
 //! * [`metrics`] / [`report`] — CPU-hours ledger, normalized performance,
 //!   time series, and the figure/table regeneration.
 //! * [`util`] — first-party RNG / JSON / stats / CLI (the build is offline;

@@ -12,6 +12,9 @@
 //! * `daemon [--policy P] [--ticks N] [--ms-per-tick M]` — run the daemon
 //!   loop against a simulated host in paced wall-clock time, printing
 //!   monitor snapshots (a demo of the Alg. 1 loop).
+//! * `cluster [--hosts N] [--strategy S] [--dispatcher D] [--step-mode M]
+//!   [--workers W]` — run a cluster-wide scenario through the event bus
+//!   and shard pool (local-vmcd vs global-migration).
 
 use anyhow::{Context, Result};
 use vmcd::config::Config;
@@ -65,6 +68,7 @@ fn run(args: &Args) -> Result<()> {
         "report" => cmd_report(args),
         "validate" => cmd_validate(args),
         "daemon" => cmd_daemon(args),
+        "cluster" => cmd_cluster(args),
         "help" | "--help" => {
             print!("{}", HELP);
             Ok(())
@@ -83,6 +87,10 @@ USAGE:
   vmcd report    fig2|fig3|fig4|fig5|fig6|table1|all [--seeds N] [--out DIR]
   vmcd validate  [--cases N]
   vmcd daemon    [--policy P] [--ticks N] [--ms-per-tick M]
+  vmcd cluster   [--hosts N] [--strategy local-vmcd|global-migration]
+                 [--dispatcher round-robin|least-loaded|random]
+                 [--policy P] [--sr X] [--seed N]
+                 [--step-mode single|scoped|pool] [--workers W]
 ";
 
 fn cmd_profile(args: &Args) -> Result<()> {
@@ -400,5 +408,65 @@ fn cmd_daemon(args: &Args) -> Result<()> {
         engine.ledger.repin_count,
         daemon.cycles
     );
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    use vmcd::cluster::{ClusterSpec, Dispatcher, StepMode, Strategy};
+
+    let cfg = load_config(args)?;
+    let hosts = args.opt_usize("hosts", 4)?;
+    let strategy = match args.opt_or("strategy", "local-vmcd").as_str() {
+        "local-vmcd" | "local" => Strategy::LocalVmcd,
+        "global-migration" | "global" => Strategy::GlobalMigration,
+        other => anyhow::bail!(
+            "unknown strategy '{other}' (valid: local-vmcd, global-migration)"
+        ),
+    };
+    let dispatcher = Dispatcher::parse(&args.opt_or("dispatcher", "least-loaded"))?;
+    let policy = Policy::parse(&args.opt_or("policy", "ias"))?;
+    let sr = args.opt_f64("sr", 1.0)?;
+    let seed = args.opt_u64("seed", cfg.sim.seed)?;
+    let workers = args.opt_usize("workers", 4)?;
+    let step_mode = match args.opt_or("step-mode", "pool").as_str() {
+        "single" => StepMode::Single,
+        "scoped" => StepMode::Scoped(workers),
+        "pool" => StepMode::Pool(workers),
+        other => anyhow::bail!("unknown step mode '{other}' (valid: single, scoped, pool)"),
+    };
+    let bank = bank_for(&cfg, args);
+
+    let mut spec = ClusterSpec::new(hosts, strategy);
+    spec.cfg = cfg.clone();
+    spec.dispatcher = dispatcher;
+    spec.local_policy = policy;
+    spec.step_mode = step_mode;
+    // Cluster-wide population: hosts × cores × sr.
+    let scen = scenarios::random::build(hosts * cfg.host.cores, sr, seed)?;
+
+    log::info!(
+        "cluster: {} hosts, {} strategy, {} dispatch, {} VMs, {} stepping",
+        hosts,
+        strategy.name(),
+        dispatcher.name(),
+        scen.vms.len(),
+        step_mode.name()
+    );
+    let wall = std::time::Instant::now();
+    let r = scenarios::run_cluster(&spec, &scen, &bank)?;
+    println!("strategy        : {}", r.strategy.name());
+    println!("hosts           : {hosts}");
+    println!("dispatcher      : {}", dispatcher.name());
+    println!("VMs             : {}", scen.vms.len());
+    println!("avg performance : {:.3} (1.0 = isolated)", r.avg_perf);
+    println!("core-hours      : {:.3}", r.core_hours);
+    println!("host-hours      : {:.3}", r.host_hours);
+    println!(
+        "migrations      : {} started, {} failed",
+        r.migrations_started, r.migrations_failed
+    );
+    println!("events routed   : {}", r.events_routed);
+    println!("completed at    : {:.0} s", r.completion_time);
+    println!("wall time       : {} ms", wall.elapsed().as_millis());
     Ok(())
 }

@@ -1,7 +1,10 @@
 //! The scenario runner: wires engine + daemon, runs to completion, and
-//! summarises the paper's metrics.
+//! summarises the paper's metrics. [`run_cluster`] is the cluster-layer
+//! counterpart: the same scenario arriving cluster-wide, dispatched and
+//! stepped through the event bus + shard pool.
 
 use super::spec::ScenarioSpec;
+use crate::cluster::{ClusterResult, ClusterSim, ClusterSpec};
 use crate::config::Config;
 use crate::hostsim::{SimEngine, Vm, VmId, VmState};
 use crate::metrics::TimeSeries;
@@ -73,6 +76,18 @@ pub fn run_scenario_with_backend(
         backend,
     );
     run_scenario_with(cfg, spec, policy, sched)
+}
+
+/// Run one scenario cluster-wide: `scenario.vms` arrive on the bus, an
+/// arrival policy dispatches them, hosts step under `spec.step_mode`,
+/// and all migration churn flows through `ClusterEvent` routing. The
+/// one-stop entry the CLI, examples, and benches share.
+pub fn run_cluster(
+    spec: &ClusterSpec,
+    scenario: &ScenarioSpec,
+    bank: &ProfileBank,
+) -> Result<ClusterResult> {
+    ClusterSim::new(spec.clone(), scenario, bank).run(bank, scenario.min_duration)
 }
 
 fn run_scenario_with(

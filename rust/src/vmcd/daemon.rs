@@ -30,7 +30,7 @@ use crate::config::SchedParams;
 use crate::hostsim::{Hypervisor, VmId};
 use crate::workloads::WorkloadClass;
 use anyhow::Result;
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// Core reserved for consolidated idle workloads (Alg. 1 line 7).
 pub const IDLE_CORE: usize = 0;
@@ -90,6 +90,9 @@ pub struct Daemon<S: ?Sized + Scheduler = dyn Scheduler> {
     /// Current idle-core reservation, so `sync_reservation` only touches
     /// the state's `allowed` set on actual flips.
     reserved: bool,
+    /// Events queued from outside the daemon's own poll loop (an async
+    /// actuator or embedder): see [`Self::enqueue`].
+    pending: VecDeque<SchedEvent>,
     residents: BTreeMap<VmId, Resident>,
     pub scheduler: Box<S>,
 }
@@ -107,6 +110,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
             events_handled: 0,
             state: None,
             reserved: false,
+            pending: VecDeque::new(),
             residents: BTreeMap::new(),
             scheduler,
         }
@@ -145,10 +149,32 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         }
     }
 
-    /// One daemon step: poll the monitor **once**, diff the snapshot into
-    /// lifecycle events and handle them, then run the Alg. 1 Tick if the
-    /// interval has elapsed. Returns whether the Tick ran.
+    /// Queue an event for the next [`Self::step`] without touching the
+    /// hypervisor now — the injection surface for embedders that run
+    /// outside the daemon's poll loop (e.g. the ROADMAP's async
+    /// actuation queue). The cluster bus deliberately does *not* use it:
+    /// bus deliveries go through the immediate `handle_event` path so
+    /// strict per-host inbox ordering is preserved. Queued events are
+    /// handled at the start of the step, *before* the monitor diff, so
+    /// queued bookkeeping lands ahead of lifecycle detection and is
+    /// never double-derived from the same snapshot.
+    pub fn enqueue(&mut self, ev: SchedEvent) {
+        self.pending.push_back(ev);
+    }
+
+    /// Queued events not yet drained.
+    pub fn pending_events(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// One daemon step: drain queued events, poll the monitor **once**,
+    /// diff the snapshot into lifecycle events and handle them, then run
+    /// the Alg. 1 Tick if the interval has elapsed. Returns whether the
+    /// Tick ran.
     pub fn step(&mut self, hv: &mut dyn Hypervisor) -> Result<bool> {
+        while let Some(ev) = self.pending.pop_front() {
+            self.handle_event(hv, ev)?;
+        }
         self.drain_lifecycle(hv)?;
         let t = hv.now();
         let due = match self.last_cycle {
@@ -708,6 +734,28 @@ mod tests {
         eng.vms[0].state = VmState::Finished;
         daemon.step(&mut eng).unwrap();
         assert_eq!(daemon.placement_state().unwrap().placed(), 1);
+        assert!(daemon.state_matches_rebuild(1e-9));
+    }
+
+    #[test]
+    fn queued_events_drain_at_the_start_of_step() {
+        let vms = vec![resident(0, WorkloadClass::Blackscholes, true)];
+        let (mut eng, mut daemon) = setup(Policy::Ias, vms);
+        for _ in 0..12 {
+            eng.step();
+        }
+        daemon.run_cycle(&mut eng).unwrap();
+        assert_eq!(daemon.placement_state().unwrap().placed(), 1);
+        // Queue a departure from outside the poll loop: nothing happens
+        // until the next step, which drains it before the monitor diff.
+        daemon.enqueue(SchedEvent::Departure(VmId(0)));
+        assert_eq!(daemon.pending_events(), 1);
+        assert_eq!(daemon.placement_state().unwrap().placed(), 1);
+        daemon.step(&mut eng).unwrap();
+        assert_eq!(daemon.pending_events(), 0);
+        // The member left via the queued event; the same step's poll then
+        // re-adopts the still-live domain (it never actually departed),
+        // so the state stays reconciled either way.
         assert!(daemon.state_matches_rebuild(1e-9));
     }
 

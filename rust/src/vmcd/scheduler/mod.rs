@@ -281,6 +281,24 @@ impl PlacementState {
         self.cores.iter().map(|c| c.len()).sum()
     }
 
+    /// Worst per-core workload interference over the current placement —
+    /// Eq. 4 (`max` over members) of Eq. 3 (`WI = (Σ + Π) / 2`), read
+    /// straight from the cached WI partials. 0 for uncached or empty
+    /// states (an empty core has interference 0); a solo member scores
+    /// the alone-value 0.5. This is what hosts publish in their cluster
+    /// [`HostSummary`](crate::cluster::HostSummary) so arrival policies
+    /// can see interference without touching placement state.
+    pub fn max_core_wi(&self) -> f64 {
+        let Some(cache) = &self.cache else { return 0.0 };
+        let mut worst = 0.0f64;
+        for core in 0..self.cores.len() {
+            for &(sum, prod) in cache.wi_parts(core) {
+                worst = worst.max(0.5 * (sum + prod));
+            }
+        }
+        worst
+    }
+
     /// Reconciliation: do the cached aggregates equal a from-scratch
     /// re-sum of Eq. 2–3 partials over the current membership? This is
     /// the old rebuild-per-cycle path demoted to a check; the
@@ -437,6 +455,32 @@ mod tests {
         for name in ["bogus", "rrs", "cas", "ras", "ias"] {
             assert!(err.contains(name), "error must list '{name}': {err}");
         }
+    }
+
+    #[test]
+    fn max_core_wi_matches_the_interference_reference() {
+        use crate::interference::workload_interference;
+        let bank = testkit::shared_bank();
+        // Uncached and empty states publish 0.
+        assert_eq!(PlacementState::new(4, false).max_core_wi(), 0.0);
+        let mut state = PlacementState::with_bank(4, false, bank);
+        assert_eq!(state.max_core_wi(), 0.0);
+        // A solo member scores the alone-value 0.5.
+        state.place(1, ALL_CLASSES[0]);
+        assert_eq!(state.max_core_wi(), 0.5);
+        // A co-scheduled pair matches the Eq. 3 reference, whichever
+        // member is worse.
+        state.place(1, ALL_CLASSES[2]);
+        let a = ALL_CLASSES[0].index();
+        let b = ALL_CLASSES[2].index();
+        let want = workload_interference(&[bank.s[a][b]])
+            .max(workload_interference(&[bank.s[b][a]]));
+        assert!(
+            (state.max_core_wi() - want).abs() < 1e-12,
+            "{} vs {}",
+            state.max_core_wi(),
+            want
+        );
     }
 
     #[test]

@@ -354,6 +354,165 @@ fn prop_single_core_states_always_offer_core0() {
 }
 
 #[test]
+fn prop_bus_routing_matches_direct_host_calls() {
+    // The cluster-event invariant: routing an arbitrary interleaving of
+    // ClusterEvents (arrivals, departures, raw scheduler ticks) through
+    // the EventBus + ShardPool must leave every host's engine and
+    // long-lived placement state bit-identical to driving the exact same
+    // sequence via direct HostHandle calls.
+    use vmcd::cluster::{
+        ClusterEvent, ClusterHost, Dispatcher, EventBus, HostHandle, MigrationModel,
+        NativeHost, ShardPool, SimHost, StepMode,
+    };
+    use vmcd::hostsim::{ActivityModel, SimEngine, Vm, VmId, VmState};
+    use vmcd::vmcd::daemon::SchedEvent;
+    use vmcd::vmcd::Daemon;
+
+    #[allow(clippy::large_enum_variant)]
+    #[derive(Clone)]
+    enum Act {
+        Arrive(usize, Vm),
+        Depart(usize, VmId),
+        Tick(usize),
+    }
+
+    let bank = testkit::shared_bank();
+    let cfg = testkit::quiet_config();
+    let hosts_n = 3;
+
+    let make_hosts = |cfg: &vmcd::config::Config| -> Vec<NativeHost> {
+        (0..hosts_n)
+            .map(|_| {
+                let sched =
+                    scheduler::build_native(Policy::Ias, bank, cfg.sched.ras_threshold, None);
+                let daemon = Daemon::new(cfg.sched.clone(), sched);
+                SimHost::new(SimEngine::new(cfg.clone(), Vec::new()), Some(daemon))
+            })
+            .collect()
+    };
+
+    // Everything that must agree, down to the bit: engine occupancy and
+    // pinning, and the daemon's placement state with its cached loads.
+    type Snapshot = (
+        Vec<(VmId, Option<usize>)>,
+        Vec<Vec<usize>>,
+        Vec<usize>,
+        Vec<Vec<u64>>,
+    );
+    let snapshot = |host: &NativeHost| -> Snapshot {
+        let pins = host
+            .engine
+            .vms
+            .iter()
+            .map(|v| (v.id, v.pinned))
+            .collect();
+        match host.daemon.as_ref().unwrap().placement_state() {
+            Some(s) => {
+                let loads: Vec<Vec<u64>> = (0..s.cores.len())
+                    .map(|c| {
+                        s.cache()
+                            .map(|k| k.load(c).iter().map(|x| x.to_bits()).collect())
+                            .unwrap_or_default()
+                    })
+                    .collect();
+                (pins, s.cores.clone(), s.allowed.clone(), loads)
+            }
+            None => (pins, Vec::new(), Vec::new(), Vec::new()),
+        }
+    };
+
+    check("bus-vs-direct", 12, |rng| {
+        // Script the interleaving first so both drives replay it exactly.
+        let ticks = 8 + rng.below(8);
+        let mut next_id = 0u32;
+        let mut live: Vec<Vec<VmId>> = vec![Vec::new(); hosts_n];
+        let mut script: Vec<Vec<Act>> = Vec::new();
+        for tick in 0..ticks {
+            let mut acts = Vec::new();
+            for _ in 0..rng.below(3) {
+                let h = rng.below(hosts_n);
+                let resident = !live[h].is_empty();
+                if resident && rng.chance(0.3) {
+                    let k = rng.below(live[h].len());
+                    let id = live[h].swap_remove(k);
+                    acts.push(Act::Depart(h, id));
+                } else if rng.chance(0.2) {
+                    acts.push(Act::Tick(h));
+                } else {
+                    let mut vm = Vm::new(
+                        VmId(next_id),
+                        *rng.pick(&ALL_CLASSES),
+                        0.0,
+                        ActivityModel::AlwaysOn,
+                    );
+                    vm.state = VmState::Running;
+                    vm.started = Some(tick as f64);
+                    live[h].push(vm.id);
+                    next_id += 1;
+                    acts.push(Act::Arrive(h, vm));
+                }
+            }
+            script.push(acts);
+        }
+
+        // Drive A: through the bus + pool.
+        let mut pool = ShardPool::new(
+            make_hosts(&cfg).into_iter().map(ClusterHost::Native).collect(),
+            StepMode::Single,
+        );
+        let mut bus = EventBus::new(hosts_n, MigrationModel::default(), cfg.host.cores);
+        let mut policy = Dispatcher::RoundRobin.build();
+        let mut route_rng = vmcd::util::rng::Rng::new(7);
+        for acts in &script {
+            for act in acts {
+                bus.publish(match act {
+                    Act::Arrive(h, vm) => ClusterEvent::Arrival {
+                        vm: vm.clone(),
+                        host: Some(*h),
+                    },
+                    Act::Depart(h, id) => ClusterEvent::Departure { host: *h, vm: *id },
+                    Act::Tick(h) => ClusterEvent::Sched {
+                        host: *h,
+                        ev: SchedEvent::Tick,
+                    },
+                });
+            }
+            bus.route(policy.as_mut(), &mut route_rng).unwrap();
+            pool.step(bus.take_inboxes()).unwrap();
+        }
+        let routed = pool.into_hosts().unwrap();
+
+        // Drive B: the same sequence via direct HostHandle calls.
+        let mut direct = make_hosts(&cfg);
+        for acts in &script {
+            for act in acts {
+                match act {
+                    Act::Arrive(h, vm) => direct[*h].inject_arrival(vm.clone()).unwrap(),
+                    Act::Depart(h, id) => {
+                        direct[*h].remove_resident(*id).unwrap();
+                    }
+                    Act::Tick(h) => direct[*h].inject_event(SchedEvent::Tick).unwrap(),
+                }
+            }
+            for host in &mut direct {
+                host.step_host().unwrap();
+            }
+        }
+
+        for (h, (a, b)) in routed.iter().zip(direct.iter()).enumerate() {
+            let ClusterHost::Native(a) = a else {
+                panic!("pool returned a pinned host")
+            };
+            assert_eq!(
+                snapshot(a),
+                snapshot(b),
+                "host {h} diverged between bus routing and direct calls"
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_placement_state_accounting() {
     let bank = testkit::shared_bank();
     check("placement-accounting", default_cases(), |rng| {
