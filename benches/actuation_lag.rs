@@ -1,0 +1,86 @@
+//! Extension: actuation-lag sensitivity of the dynamic policies.
+//!
+//! The paper's enforcement path (§III, the libvirt abstraction) is
+//! synchronous; real pin adjustments take time. With the command-queue
+//! actuation API the lag is a knob: `Deferred{latency_ticks}` lands every
+//! pin N simulator ticks after the decision (optionally budgeted per
+//! tick), so freshly-arrived VMs stall unpinned and re-pin passes act on
+//! a host whose enacted placement trails their intent. This bench sweeps
+//! the lag for RAS and IAS on the random scenario (SR 1.5 — enough
+//! contention that re-pinning matters) and reports how much of the
+//! schedulers' §IV advantage survives slow actuation.
+
+mod common;
+
+use vmcd::bench::Bench;
+use vmcd::scenarios::{random, run_scenario_with_actuation};
+use vmcd::vmcd::scheduler::Policy;
+use vmcd::vmcd::ActuationSpec;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let seeds = common::seeds();
+    let sr = 1.5;
+
+    println!(
+        "{:<6} {:<10} {:>8} {:>12} {:>14}",
+        "policy", "lag", "perf", "core-hours", "perf vs lag0"
+    );
+    for policy in [Policy::Ras, Policy::Ias] {
+        let mut base: Option<f64> = None;
+        for lag in [0u64, 1, 2, 4, 8, 16] {
+            let actuation = if lag == 0 {
+                ActuationSpec::Inline
+            } else {
+                ActuationSpec::Deferred {
+                    latency_ticks: lag,
+                    budget_per_tick: 0,
+                }
+            };
+            let (mut perf, mut hours) = (0.0, 0.0);
+            for &seed in &seeds {
+                let spec = random::build(cfg.host.cores, sr, seed)?;
+                let r = run_scenario_with_actuation(&cfg, &spec, policy, &bank, actuation)?;
+                perf += r.avg_perf;
+                hours += r.core_hours;
+            }
+            let n = seeds.len() as f64;
+            perf /= n;
+            hours /= n;
+            let b = *base.get_or_insert(perf);
+            println!(
+                "{:<6} {:<10} {:>8.3} {:>12.3} {:>14.3}",
+                policy.name(),
+                if lag == 0 {
+                    "inline".to_string()
+                } else {
+                    format!("deferred:{lag}")
+                },
+                perf,
+                hours,
+                perf / b
+            );
+        }
+    }
+
+    // Wall-time rows: what the queue + staging machinery itself costs.
+    let mut b = Bench::new();
+    b.section("single-host scenario wall time (SR 1.5, IAS)");
+    let spec = random::build(cfg.host.cores, sr, 42)?;
+    for (label, actuation) in [
+        ("inline", ActuationSpec::Inline),
+        (
+            "deferred8",
+            ActuationSpec::Deferred {
+                latency_ticks: 8,
+                budget_per_tick: 0,
+            },
+        ),
+    ] {
+        b.run(&format!("actuation/{label}"), || {
+            run_scenario_with_actuation(&cfg, &spec, Policy::Ias, &bank, actuation).unwrap();
+        });
+    }
+    Ok(())
+}

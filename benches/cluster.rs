@@ -9,6 +9,7 @@ mod common;
 use vmcd::bench::Bench;
 use vmcd::cluster::{ClusterSpec, StepMode, Strategy};
 use vmcd::scenarios::{random, run_cluster};
+use vmcd::vmcd::ActuationSpec;
 
 fn main() -> anyhow::Result<()> {
     let cfg = common::config();
@@ -79,6 +80,42 @@ fn main() -> anyhow::Result<()> {
                 run_cluster(&spec, &big_scen, &bank).unwrap();
             });
         }
+    }
+
+    // Actuation backends at 64 hosts: steady-state tick cost of the
+    // command-queue pipeline. Inline enforces within the deciding pass;
+    // Deferred pays queue staging plus the per-step due scan — and with
+    // a lag its placements differ, so this row measures cost, not
+    // bit-identity (that's test-gated at lag 0).
+    let actuation_hosts = 64usize;
+    b.section(&format!(
+        "actuation backends ({actuation_hosts} hosts, SR 0.4, 600 s window, pool4)"
+    ));
+    let act_scen = random::build(actuation_hosts * big_cfg.host.cores, 0.4, 42)?;
+    for (label, actuation) in [
+        ("inline", ActuationSpec::Inline),
+        (
+            "deferred4",
+            ActuationSpec::Deferred {
+                latency_ticks: 4,
+                budget_per_tick: 0,
+            },
+        ),
+        (
+            "deferred4b32",
+            ActuationSpec::Deferred {
+                latency_ticks: 4,
+                budget_per_tick: 32,
+            },
+        ),
+    ] {
+        b.run(&format!("cluster/{actuation_hosts}hosts/actuation-{label}"), || {
+            let mut spec = ClusterSpec::new(actuation_hosts, Strategy::LocalVmcd);
+            spec.cfg = big_cfg.clone();
+            spec.step_mode = StepMode::Pool(4);
+            spec.actuation = actuation;
+            run_cluster(&spec, &act_scen, &bank).unwrap();
+        });
     }
     Ok(())
 }

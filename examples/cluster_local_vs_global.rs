@@ -12,7 +12,7 @@
 //!
 //! ```sh
 //! cargo run --release --example cluster_local_vs_global \
-//!     [-- --hosts 3 --dispatcher least-loaded --workers 4]
+//!     [-- --hosts 3 --dispatcher least-loaded --workers 4 --actuation deferred:4]
 //! ```
 
 use vmcd::cluster::{ClusterSpec, Dispatcher, StepMode, Strategy};
@@ -20,13 +20,15 @@ use vmcd::config::Config;
 use vmcd::profiling::ProfileBank;
 use vmcd::scenarios::{self, run_cluster};
 use vmcd::util::cli::Args;
+use vmcd::vmcd::ActuationSpec;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let hosts = args.opt_usize("hosts", 3)?;
-    // `--dispatcher` goes through the same parse the CLI uses: a typo
-    // errors out listing the valid names.
+    // `--dispatcher` and `--actuation` go through the same parses the
+    // CLI uses: a typo errors out listing the valid names.
     let dispatcher = Dispatcher::parse(&args.opt_or("dispatcher", "least-loaded"))?;
+    let actuation = ActuationSpec::parse(&args.opt_or("actuation", "inline"))?;
     let workers = args.opt_usize("workers", 4)?;
     let cfg = Config::default();
     let bank = ProfileBank::generate(&cfg);
@@ -41,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         for strategy in [Strategy::LocalVmcd, Strategy::GlobalMigration] {
             let mut spec = ClusterSpec::new(hosts, strategy);
             spec.dispatcher = dispatcher;
+            spec.actuation = actuation;
             let r = run_cluster(&spec, &scen, &bank)?;
             println!(
                 "{:<6} {:<18} {:>7.3} {:>12.3} {:>12.3} {:>7} ({} failed, {} events)",
@@ -73,6 +76,7 @@ fn main() -> anyhow::Result<()> {
     ] {
         let mut spec = ClusterSpec::new(hosts, Strategy::LocalVmcd);
         spec.dispatcher = dispatcher;
+        spec.actuation = actuation;
         spec.step_mode = mode;
         let wall = std::time::Instant::now();
         let r = run_cluster(&spec, &scen, &bank)?;

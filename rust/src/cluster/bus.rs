@@ -59,7 +59,9 @@ pub enum ClusterEvent {
     /// load for the whole window; under a busy destination the transfer
     /// may abort (pre-copy never converges) and the VM stays on `src`.
     Migrate { vm: VmId, src: usize, dst: usize },
-    /// Inject a raw scheduler event into one host's daemon.
+    /// Inject a raw scheduler event into one host's daemon (a forced
+    /// `Tick`, or an externally observed `ActuationComplete` when a
+    /// remote actuation layer reports back through the bus).
     Sched { host: usize, ev: SchedEvent },
 }
 

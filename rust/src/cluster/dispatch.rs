@@ -68,6 +68,46 @@ impl ArrivalPolicy for LeastLoadedPolicy {
     }
 }
 
+/// Pack by published interference: the host whose placement currently
+/// shows the lowest worst-core workload interference (`max_wi`, Eq. 3/4
+/// as published in [`HostSummary`]), tie-broken by the lowest
+/// profile-estimated CPU load, then by the **live** resident count, then
+/// by the lowest host index. Daemon-less hosts publish 0 interference,
+/// so under the global strategy this degrades to a load-then-count pack.
+///
+/// The bus does not adjust `max_wi`/`est_cpu_load` within a tick (they
+/// are placement-state facts only the host daemons know), but it does
+/// bump `resident` as it routes — the resident tie-break is what spreads
+/// a same-tick arrival burst across equally-quiet hosts instead of
+/// stacking it on the first one; the interference facts catch up at the
+/// next summary refresh.
+pub struct LowestInterferencePolicy;
+
+impl ArrivalPolicy for LowestInterferencePolicy {
+    fn pick(&mut self, summaries: &[HostSummary], _rng: &mut Rng) -> usize {
+        assert!(!summaries.is_empty());
+        let mut best = 0;
+        for (h, s) in summaries.iter().enumerate().skip(1) {
+            let b = &summaries[best];
+            // Strict `<` comparisons keep the first host among exact
+            // ties, independent of any iterator-combinator tie rule —
+            // the same reproducibility contract as least-loaded.
+            let quieter = s.max_wi < b.max_wi
+                || (s.max_wi == b.max_wi
+                    && (s.est_cpu_load < b.est_cpu_load
+                        || (s.est_cpu_load == b.est_cpu_load && s.resident < b.resident)));
+            if quieter {
+                best = h;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "lowest-interference"
+    }
+}
+
 /// Uniformly random host.
 pub struct RandomPolicy;
 
@@ -87,13 +127,15 @@ impl ArrivalPolicy for RandomPolicy {
 pub enum Dispatcher {
     RoundRobin,
     LeastLoaded,
+    LowestInterference,
     Random,
 }
 
 impl Dispatcher {
-    pub const ALL: [Dispatcher; 3] = [
+    pub const ALL: [Dispatcher; 4] = [
         Dispatcher::RoundRobin,
         Dispatcher::LeastLoaded,
+        Dispatcher::LowestInterference,
         Dispatcher::Random,
     ];
 
@@ -101,6 +143,7 @@ impl Dispatcher {
         match self {
             Dispatcher::RoundRobin => "round-robin",
             Dispatcher::LeastLoaded => "least-loaded",
+            Dispatcher::LowestInterference => "lowest-interference",
             Dispatcher::Random => "random",
         }
     }
@@ -109,6 +152,7 @@ impl Dispatcher {
         match name.to_ascii_lowercase().as_str() {
             "round-robin" | "rr" => Some(Dispatcher::RoundRobin),
             "least-loaded" | "ll" => Some(Dispatcher::LeastLoaded),
+            "lowest-interference" | "li" => Some(Dispatcher::LowestInterference),
             "random" => Some(Dispatcher::Random),
             _ => None,
         }
@@ -129,6 +173,7 @@ impl Dispatcher {
         match self {
             Dispatcher::RoundRobin => Box::new(RoundRobinPolicy { cursor: 0 }),
             Dispatcher::LeastLoaded => Box::new(LeastLoadedPolicy),
+            Dispatcher::LowestInterference => Box::new(LowestInterferencePolicy),
             Dispatcher::Random => Box::new(RandomPolicy),
         }
     }
@@ -175,6 +220,77 @@ mod tests {
         assert_eq!(policy.pick(&summaries(&[5, 4, 3, 3]), &mut rng), 2);
     }
 
+    /// Summaries with explicit interference/load facts alongside the
+    /// resident counts.
+    fn wi_summaries(rows: &[(usize, f64, f64)]) -> Vec<HostSummary> {
+        rows.iter()
+            .map(|&(resident, max_wi, est_cpu_load)| HostSummary {
+                resident,
+                max_wi,
+                est_cpu_load,
+                ..HostSummary::default()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lowest_interference_vs_least_loaded_head_to_head() {
+        // Host 0: fewest residents but a high-interference placement.
+        // Host 2: more residents, quiet placement. Least-loaded packs by
+        // count and picks host 0; lowest-interference reads the bus's
+        // max_wi and picks host 2 — the ROADMAP's WI-aware dispatch.
+        let s = wi_summaries(&[(1, 2.4, 0.9), (3, 1.1, 2.0), (2, 0.6, 1.4)]);
+        let mut rng = Rng::new(1);
+        let mut ll = Dispatcher::LeastLoaded.build();
+        let mut li = Dispatcher::LowestInterference.build();
+        assert_eq!(ll.pick(&s, &mut rng), 0);
+        assert_eq!(li.pick(&s, &mut rng), 2);
+    }
+
+    #[test]
+    fn lowest_interference_tie_breaks_on_load_then_residents_then_index() {
+        let mut policy = Dispatcher::LowestInterference.build();
+        let mut rng = Rng::new(1);
+        // Equal interference: the profile-estimated load decides.
+        let s = wi_summaries(&[(1, 0.8, 2.0), (1, 0.8, 0.5), (1, 0.8, 1.0)]);
+        assert_eq!(policy.pick(&s, &mut rng), 1);
+        // Equal interference and load: the live resident count decides —
+        // this is what spreads a same-tick burst, because the bus bumps
+        // `resident` as it routes while `max_wi` stays stale in-tick.
+        let s = wi_summaries(&[(2, 0.8, 1.0), (0, 0.8, 1.0), (1, 0.8, 1.0)]);
+        assert_eq!(policy.pick(&s, &mut rng), 1);
+        // Full tie: lowest host index (empty cluster start).
+        let s = wi_summaries(&[(0, 0.0, 0.0), (0, 0.0, 0.0)]);
+        assert_eq!(policy.pick(&s, &mut rng), 0);
+    }
+
+    #[test]
+    fn lowest_interference_spreads_a_same_tick_burst_via_live_residents() {
+        // Route 4 arrivals into an empty 2-host cluster in one tick: the
+        // bus's live resident bumps must alternate the picks instead of
+        // stacking everything on host 0.
+        use crate::cluster::bus::{ClusterEvent, EventBus};
+        use crate::cluster::migration::MigrationModel;
+        use crate::hostsim::{ActivityModel, Vm, VmId, VmState};
+
+        let mut bus = EventBus::new(2, MigrationModel::default(), 12);
+        let mut policy = Dispatcher::LowestInterference.build();
+        let mut rng = Rng::new(1);
+        for i in 0..4 {
+            let mut vm = Vm::new(
+                VmId(i),
+                crate::workloads::WorkloadClass::Hadoop,
+                0.0,
+                ActivityModel::AlwaysOn,
+            );
+            vm.state = VmState::Running;
+            bus.publish(ClusterEvent::Arrival { vm, host: None });
+        }
+        bus.route(policy.as_mut(), &mut rng).unwrap();
+        let counts: Vec<usize> = bus.summaries().iter().map(|s| s.resident).collect();
+        assert_eq!(counts, vec![2, 2], "burst must spread across hosts");
+    }
+
     #[test]
     fn random_stays_in_range() {
         let mut policy = Dispatcher::Random.build();
@@ -195,10 +311,15 @@ mod tests {
             );
         }
         assert_eq!(Dispatcher::parse("rr").unwrap(), Dispatcher::RoundRobin);
+        assert_eq!(
+            Dispatcher::parse("li").unwrap(),
+            Dispatcher::LowestInterference
+        );
         let err = Dispatcher::parse("bogus").unwrap_err().to_string();
         assert!(err.contains("round-robin"), "{err}");
         assert!(err.contains("least-loaded"), "{err}");
+        assert!(err.contains("lowest-interference"), "{err}");
         assert!(err.contains("random"), "{err}");
-        assert_eq!(Dispatcher::ALL.map(|d| d.name()).len(), 3);
+        assert_eq!(Dispatcher::ALL.map(|d| d.name()).len(), 4);
     }
 }

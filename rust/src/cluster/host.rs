@@ -37,6 +37,9 @@ pub struct HostMetrics {
     pub cycles: u64,
     /// Tolerated actuation failures (0 for daemon-less hosts).
     pub pin_failures: u64,
+    /// Pins decided but not yet enforced by the daemon's actuation
+    /// backend (always 0 for daemon-less hosts and Inline actuation).
+    pub actuation_in_flight: usize,
 }
 
 /// One steppable host, as the cluster layer sees it. The default
@@ -47,7 +50,9 @@ pub trait HostHandle {
     fn now(&self) -> f64;
 
     /// Advance one tick: run the daemon's event step (poll, diff,
-    /// lifecycle events, Tick when due), then the engine physics.
+    /// lifecycle events, Tick when due, then one actuation pass — the
+    /// backend absorbs the step's commands, enforces whatever is due,
+    /// and feeds completions back), then the engine physics.
     fn step_host(&mut self) -> Result<()>;
 
     /// Inject an arriving VM (the dispatch decision is already made):
@@ -255,6 +260,7 @@ impl<S: ?Sized + Scheduler> HostHandle for SimHost<S> {
             repins: self.engine.ledger.repin_count,
             cycles: self.daemon.as_ref().map_or(0, |d| d.cycles),
             pin_failures: self.daemon.as_ref().map_or(0, |d| d.pin_failures),
+            actuation_in_flight: self.daemon.as_ref().map_or(0, |d| d.in_flight()),
         }
     }
 

@@ -8,6 +8,13 @@
 //! [`TickReport`] (metrics + the [`super::bus::HostSummary`] the bus
 //! republishes) back to the coordinator over channels.
 //!
+//! Worker assignment is **size-aware**: hosts are weighted by resident
+//! VM count and dealt, in global order, to the lightest worker, so a
+//! cluster built with a few crowded and many idle hosts starts balanced
+//! instead of handing one worker every crowded host in a contiguous
+//! chunk. Determinism is untouched — per-host serial application plus
+//! global-order reassembly make every assignment bit-identical.
+//!
 //! Three step modes share one code path (`step_one`): everything on
 //! the caller thread ([`StepMode::Single`]), the PR 2 per-tick scoped
 //! workers ([`StepMode::Scoped`], kept as the bench baseline), and the
@@ -172,26 +179,40 @@ impl ShardPool {
         let mut workers = Vec::new();
         if !native.is_empty() {
             let n_workers = pool_workers.min(native.len());
-            // Contiguous chunks, ceil-divided (matches the scoped split).
-            #[allow(unknown_lints, clippy::manual_div_ceil)]
-            let chunk = (native.len() + n_workers - 1) / n_workers;
-            let mut native = native.into_iter();
-            for w in 0..n_workers {
-                let mut owned = Vec::new();
-                for idx in 0..chunk {
-                    let Some((g, h)) = native.next() else { break };
-                    slots[g] = Slot::Remote { worker: w, idx };
-                    owned.push(h);
-                }
-                if owned.is_empty() {
-                    break;
-                }
-                let count = owned.len();
+            // Size-aware assignment (ROADMAP): weight each host by its
+            // resident VM count (+1 so empty hosts still cost their
+            // share of fixed per-host stepping work) and hand hosts, in
+            // global order, to the lightest worker so far — ties break
+            // on the lowest worker index, so an all-empty cluster deals
+            // evenly (same per-worker counts as the old contiguous
+            // split, dealt round-robin). Reassembly is by global slot
+            // order, so ANY assignment is result-identical (bit-identity
+            // with single-thread stepping is test-gated); only
+            // wall-clock balance changes when a few hosts are crowded
+            // and many are idle.
+            let mut owned: Vec<Vec<NativeHost>> =
+                (0..n_workers).map(|_| Vec::new()).collect();
+            let mut weights = vec![0usize; n_workers];
+            for (g, h) in native {
+                let w = (0..n_workers)
+                    .min_by_key(|&w| (weights[w], w))
+                    .expect("n_workers >= 1");
+                weights[w] += h.engine.vms.len() + 1;
+                slots[g] = Slot::Remote {
+                    worker: w,
+                    idx: owned[w].len(),
+                };
+                owned[w].push(h);
+            }
+            for (w, hosts) in owned.into_iter().enumerate() {
+                // Every worker owns >= 1 host: the +1 weight floor means
+                // the first n_workers hosts land on distinct workers.
+                let count = hosts.len();
                 let (tx_job, rx_job) = channel::<Job>();
                 let (tx_reply, rx_reply) = channel::<Reply>();
                 let handle = std::thread::Builder::new()
                     .name(format!("shard-worker-{w}"))
-                    .spawn(move || worker_loop(owned, rx_job, tx_reply))
+                    .spawn(move || worker_loop(hosts, rx_job, tx_reply))
                     .expect("spawn shard worker");
                 workers.push(Worker {
                     tx: tx_job,
@@ -222,6 +243,12 @@ impl ShardPool {
     /// Worker threads currently running.
     pub fn workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Hosts owned per worker (the size-aware assignment's shape, for
+    /// tests and diagnostics).
+    pub fn worker_counts(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.count).collect()
     }
 
     /// Remove VMs from their hosts (global host index), e.g. matured
@@ -541,6 +568,80 @@ mod tests {
 
         let hosts = pool.into_hosts().unwrap();
         assert_eq!(hosts[2].handle().engine().vms.len(), 0);
+    }
+
+    /// A native host pre-populated with `n` running residents.
+    fn populated_host(first_id: u32, n: u32) -> NativeHost {
+        let mut host = native_host();
+        for i in 0..n {
+            host.inject_arrival(running_vm(first_id + i)).unwrap();
+        }
+        host
+    }
+
+    #[test]
+    fn size_aware_assignment_balances_crowded_hosts() {
+        // Host 0 carries 5 residents, the rest are empty. The old
+        // contiguous split would give worker 0 hosts {0, 1} (6+1 weight)
+        // and worker 1 hosts {2, 3}; the size-aware deal gives worker 0
+        // only the crowded host and worker 1 the three empty ones.
+        let hosts: Vec<ClusterHost> = vec![
+            ClusterHost::Native(populated_host(0, 5)),
+            ClusterHost::Native(native_host()),
+            ClusterHost::Native(native_host()),
+            ClusterHost::Native(native_host()),
+        ];
+        let pool = ShardPool::new(hosts, StepMode::Pool(2));
+        assert_eq!(pool.workers(), 2);
+        assert_eq!(pool.worker_counts(), vec![1, 3]);
+        // Teardown preserves global order whatever the assignment.
+        let hosts = pool.into_hosts().unwrap();
+        let residents: Vec<usize> = hosts
+            .iter()
+            .map(|h| h.handle().engine().vms.len())
+            .collect();
+        assert_eq!(residents, vec![5, 0, 0, 0]);
+    }
+
+    #[test]
+    fn empty_hosts_deal_round_robin_like_the_old_contiguous_split() {
+        let hosts: Vec<ClusterHost> =
+            (0..6).map(|_| ClusterHost::Native(native_host())).collect();
+        let pool = ShardPool::new(hosts, StepMode::Pool(3));
+        assert_eq!(pool.worker_counts(), vec![2, 2, 2]);
+        pool.into_hosts().unwrap();
+    }
+
+    #[test]
+    fn size_aware_chunking_is_bit_identical_to_single_thread() {
+        // The satellite acceptance: the weighted assignment must not
+        // change any report bit vs caller-thread stepping, even when
+        // the weights actually skew the assignment.
+        let run = |mode: StepMode| {
+            let hosts: Vec<ClusterHost> = vec![
+                ClusterHost::Native(populated_host(0, 5)),
+                ClusterHost::Native(native_host()),
+                ClusterHost::Native(populated_host(10, 2)),
+                ClusterHost::Native(native_host()),
+            ];
+            let mut pool = ShardPool::new(hosts, mode);
+            let mut inboxes = empty_inboxes(4);
+            inboxes[1].push(HostEvent::Arrival(running_vm(30)));
+            pool.step(inboxes).unwrap();
+            let reports = pool.step(empty_inboxes(4)).unwrap();
+            reports
+                .iter()
+                .map(|r| {
+                    (
+                        r.summary.resident,
+                        r.summary.busy_cores,
+                        r.summary.max_wi.to_bits(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(StepMode::Single), run(StepMode::Pool(2)));
+        assert_eq!(run(StepMode::Single), run(StepMode::Pool(3)));
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::scenarios::ScenarioSpec;
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
 use crate::vmcd::scheduler::{self, Policy};
-use crate::vmcd::Daemon;
+use crate::vmcd::{ActuationSpec, Daemon};
 use crate::workloads::catalog::spec_of;
 use crate::workloads::WorkloadKind;
 use anyhow::Result;
@@ -74,6 +74,11 @@ pub struct ClusterSpec {
     /// How hosts step each tick. Results are bit-identical across
     /// modes; only wall time differs.
     pub step_mode: StepMode,
+    /// Actuation backend of each host daemon ([`Strategy::LocalVmcd`]):
+    /// `Inline` enforces pins within the deciding pass, `Deferred`
+    /// models real enforcement latency (pins land N ticks late, within
+    /// a per-tick budget).
+    pub actuation: ActuationSpec,
 }
 
 impl ClusterSpec {
@@ -88,6 +93,7 @@ impl ClusterSpec {
             global_interval: 120.0,
             max_migrations: 4,
             step_mode: StepMode::Single,
+            actuation: ActuationSpec::Inline,
         }
     }
 }
@@ -145,7 +151,11 @@ impl ClusterSim {
                         spec.cfg.sched.ras_threshold,
                         spec.cfg.sched.ias_threshold,
                     );
-                    Some(Daemon::new(spec.cfg.sched.clone(), sched))
+                    Some(Daemon::with_actuation(
+                        spec.cfg.sched.clone(),
+                        sched,
+                        spec.actuation.build(),
+                    ))
                 }
                 Strategy::GlobalMigration => None,
             };
@@ -517,6 +527,56 @@ mod tests {
             assert_eq!(single.migrations_started, other.migrations_started);
             assert_eq!(single.events_routed, other.events_routed);
         }
+    }
+
+    #[test]
+    fn inline_and_zero_lag_deferred_are_bit_identical_cluster_wide() {
+        // The tentpole acceptance at cluster scale: a Deferred backend
+        // with zero latency and no budget enforces every command before
+        // the engine physics of the same tick, so whole-run results
+        // cannot differ from Inline by a single bit.
+        let bank = testkit::shared_bank();
+        let scen = cluster_scenario(3, 1.0, 42);
+        let run = |actuation: ActuationSpec| {
+            let mut spec = ClusterSpec::new(3, Strategy::LocalVmcd);
+            spec.cfg = testkit::quiet_config();
+            spec.actuation = actuation;
+            ClusterSim::new(spec, &scen, bank)
+                .run(bank, scen.min_duration)
+                .unwrap()
+        };
+        let inline = run(ActuationSpec::Inline);
+        let deferred = run(ActuationSpec::Deferred {
+            latency_ticks: 0,
+            budget_per_tick: 0,
+        });
+        assert_eq!(inline.avg_perf.to_bits(), deferred.avg_perf.to_bits());
+        assert_eq!(inline.core_hours.to_bits(), deferred.core_hours.to_bits());
+        assert_eq!(
+            inline.completion_time.to_bits(),
+            deferred.completion_time.to_bits()
+        );
+        assert_eq!(inline.events_routed, deferred.events_routed);
+    }
+
+    #[test]
+    fn deferred_actuation_with_lag_still_completes_the_scenario() {
+        // Actuation-lag sensitivity end-to-end: pins landing 4 ticks
+        // late (and budgeted) slow workloads down but the cluster still
+        // converges and finishes.
+        let bank = testkit::shared_bank();
+        let scen = cluster_scenario(2, 0.75, 7);
+        let mut spec = ClusterSpec::new(2, Strategy::LocalVmcd);
+        spec.cfg = testkit::quiet_config();
+        spec.actuation = ActuationSpec::Deferred {
+            latency_ticks: 4,
+            budget_per_tick: 8,
+        };
+        let r = ClusterSim::new(spec, &scen, bank)
+            .run(bank, scen.min_duration)
+            .unwrap();
+        assert!(r.avg_perf > 0.3, "perf {}", r.avg_perf);
+        assert!(r.core_hours > 0.0);
     }
 
     #[test]

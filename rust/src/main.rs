@@ -3,8 +3,9 @@
 //! Subcommands:
 //! * `profile [--out FILE]` — run the offline profiling phase (§IV-A),
 //!   print the S/U matrices, optionally cache them as JSON.
-//! * `run --scenario NAME --policy P [--sr X] [--seed N] [--xla]` — run one
-//!   scenario under one policy and print the summary.
+//! * `run --scenario NAME --policy P [--sr X] [--seed N] [--xla]
+//!   [--actuation inline|deferred:N]` — run one scenario under one policy
+//!   (optionally with lagged pin actuation) and print the summary.
 //! * `report fig2|fig3|fig4|fig5|fig6|table1|all [--seeds N] [--out DIR]` —
 //!   regenerate the paper's figures (ASCII + CSV).
 //! * `validate` — assert the native and XLA scoring backends agree on a
@@ -13,8 +14,8 @@
 //!   loop against a simulated host in paced wall-clock time, printing
 //!   monitor snapshots (a demo of the Alg. 1 loop).
 //! * `cluster [--hosts N] [--strategy S] [--dispatcher D] [--step-mode M]
-//!   [--workers W]` — run a cluster-wide scenario through the event bus
-//!   and shard pool (local-vmcd vs global-migration).
+//!   [--workers W] [--actuation A]` — run a cluster-wide scenario through
+//!   the event bus and shard pool (local-vmcd vs global-migration).
 
 use anyhow::{Context, Result};
 use vmcd::config::Config;
@@ -84,13 +85,15 @@ USAGE:
   vmcd profile   [--out FILE] [--config FILE]
   vmcd run       --scenario random|latency|dynamic6|dynamic12 --policy rrs|cas|ras|ias
                  [--sr X] [--seed N] [--xla] [--profiles FILE]
+                 [--actuation inline|deferred:N|deferred:N:B]
   vmcd report    fig2|fig3|fig4|fig5|fig6|table1|all [--seeds N] [--out DIR]
   vmcd validate  [--cases N]
   vmcd daemon    [--policy P] [--ticks N] [--ms-per-tick M]
   vmcd cluster   [--hosts N] [--strategy local-vmcd|global-migration]
-                 [--dispatcher round-robin|least-loaded|random]
+                 [--dispatcher round-robin|least-loaded|lowest-interference|random]
                  [--policy P] [--sr X] [--seed N]
                  [--step-mode single|scoped|pool] [--workers W]
+                 [--actuation inline|deferred:N|deferred:N:B]
 ";
 
 fn cmd_profile(args: &Args) -> Result<()> {
@@ -152,31 +155,40 @@ fn build_spec(
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    use vmcd::vmcd::ActuationSpec;
+
     let cfg = load_config(args)?;
     let kind = ScenarioKind::from_name(&args.opt_or("scenario", "random"))
         .context("unknown --scenario")?;
     let policy = Policy::parse(&args.opt_or("policy", "ias"))?;
     let sr = args.opt_f64("sr", 1.0)?;
     let seed = args.opt_u64("seed", cfg.sim.seed)?;
+    let actuation = ActuationSpec::parse(&args.opt_or("actuation", "inline"))?;
     let bank = bank_for(&cfg, args);
     let spec = build_spec(&cfg, kind, sr, seed)?;
 
     log::info!(
-        "scenario {} ({} VMs) under {}",
+        "scenario {} ({} VMs) under {} ({} actuation)",
         spec.name,
         spec.vms.len(),
-        policy.name()
+        policy.name(),
+        actuation.name()
     );
     let result = if args.flag("xla") {
+        anyhow::ensure!(
+            actuation == ActuationSpec::Inline,
+            "--actuation is only supported with the native scoring backend"
+        );
         let rt = vmcd::runtime::Runtime::new()?;
         let backend = Box::new(vmcd::runtime::XlaScoring::new(rt)?);
         scenarios::runner::run_scenario_with_backend(&cfg, &spec, policy, &bank, backend)?
     } else {
-        scenarios::run_scenario(&cfg, &spec, policy, &bank)?
+        scenarios::run_scenario_with_actuation(&cfg, &spec, policy, &bank, actuation)?
     };
 
     println!("scenario        : {}", result.scenario);
     println!("policy          : {}", result.policy.name());
+    println!("actuation       : {}", actuation.name());
     println!("VMs             : {}", spec.vms.len());
     println!("avg performance : {:.3} (1.0 = isolated)", result.avg_perf);
     println!("core-hours      : {:.3}", result.core_hours);
@@ -413,6 +425,7 @@ fn cmd_daemon(args: &Args) -> Result<()> {
 
 fn cmd_cluster(args: &Args) -> Result<()> {
     use vmcd::cluster::{ClusterSpec, Dispatcher, StepMode, Strategy};
+    use vmcd::vmcd::ActuationSpec;
 
     let cfg = load_config(args)?;
     let hosts = args.opt_usize("hosts", 4)?;
@@ -434,6 +447,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "pool" => StepMode::Pool(workers),
         other => anyhow::bail!("unknown step mode '{other}' (valid: single, scoped, pool)"),
     };
+    let actuation = ActuationSpec::parse(&args.opt_or("actuation", "inline"))?;
     let bank = bank_for(&cfg, args);
 
     let mut spec = ClusterSpec::new(hosts, strategy);
@@ -441,6 +455,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     spec.dispatcher = dispatcher;
     spec.local_policy = policy;
     spec.step_mode = step_mode;
+    spec.actuation = actuation;
     // Cluster-wide population: hosts × cores × sr.
     let scen = scenarios::random::build(hosts * cfg.host.cores, sr, seed)?;
 
@@ -457,6 +472,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     println!("strategy        : {}", r.strategy.name());
     println!("hosts           : {hosts}");
     println!("dispatcher      : {}", dispatcher.name());
+    println!("actuation       : {}", actuation.name());
     println!("VMs             : {}", scen.vms.len());
     println!("avg performance : {:.3} (1.0 = isolated)", r.avg_perf);
     println!("core-hours      : {:.3}", r.core_hours);

@@ -11,7 +11,7 @@ use crate::metrics::TimeSeries;
 use crate::profiling::ProfileBank;
 use crate::util::stats::mean;
 use crate::vmcd::scheduler::{self, Policy, ScoringBackend};
-use crate::vmcd::Daemon;
+use crate::vmcd::{ActuationSpec, Daemon};
 use crate::workloads::{WorkloadClass, WorkloadKind};
 use anyhow::Result;
 
@@ -49,18 +49,34 @@ impl ScenarioResult {
     }
 }
 
-/// Run one scenario under one policy (native scoring backend).
+/// Run one scenario under one policy (native scoring backend, inline
+/// actuation).
 pub fn run_scenario(
     cfg: &Config,
     spec: &ScenarioSpec,
     policy: Policy,
     bank: &ProfileBank,
 ) -> Result<ScenarioResult> {
-    let sched = scheduler::build(policy, bank, cfg.sched.ras_threshold, cfg.sched.ias_threshold);
-    run_scenario_with(cfg, spec, policy, sched)
+    run_scenario_with_actuation(cfg, spec, policy, bank, ActuationSpec::Inline)
 }
 
-/// Run one scenario with an explicit scoring backend (e.g. XLA).
+/// Run one scenario with an explicit actuation backend — the
+/// actuation-lag sensitivity surface (paper §IV): `Deferred` pins land
+/// `latency_ticks` late, so RAS/IAS decisions act on a host whose
+/// enacted placement trails their intent.
+pub fn run_scenario_with_actuation(
+    cfg: &Config,
+    spec: &ScenarioSpec,
+    policy: Policy,
+    bank: &ProfileBank,
+    actuation: ActuationSpec,
+) -> Result<ScenarioResult> {
+    let sched = scheduler::build(policy, bank, cfg.sched.ras_threshold, cfg.sched.ias_threshold);
+    run_scenario_with(cfg, spec, policy, sched, actuation)
+}
+
+/// Run one scenario with an explicit scoring backend (e.g. XLA), inline
+/// actuation.
 pub fn run_scenario_with_backend(
     cfg: &Config,
     spec: &ScenarioSpec,
@@ -75,7 +91,7 @@ pub fn run_scenario_with_backend(
         cfg.sched.ias_threshold,
         backend,
     );
-    run_scenario_with(cfg, spec, policy, sched)
+    run_scenario_with(cfg, spec, policy, sched, ActuationSpec::Inline)
 }
 
 /// Run one scenario cluster-wide: `scenario.vms` arrive on the bus, an
@@ -95,6 +111,7 @@ fn run_scenario_with(
     spec: &ScenarioSpec,
     policy: Policy,
     sched: Box<dyn scheduler::Scheduler>,
+    actuation: ActuationSpec,
 ) -> Result<ScenarioResult> {
     let vms: Vec<Vm> = spec
         .vms
@@ -103,7 +120,7 @@ fn run_scenario_with(
         .map(|(i, t)| Vm::new(VmId(i as u32), t.class, t.arrival, t.activity.clone()))
         .collect();
     let mut engine = SimEngine::new(cfg.clone(), vms);
-    let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+    let mut daemon = Daemon::with_actuation(cfg.sched.clone(), sched, actuation.build());
 
     loop {
         for id in engine.process_arrivals() {
@@ -229,6 +246,62 @@ mod tests {
         );
         let perf_ratio = ras.perf_vs(&rrs);
         assert!(perf_ratio > 0.85, "perf ratio {perf_ratio}");
+    }
+
+    #[test]
+    fn zero_lag_deferred_actuation_is_bit_identical_to_inline() {
+        let cfg = quiet_cfg();
+        let b = bank(&cfg);
+        let spec = random::build(cfg.host.cores, 1.0, 42).unwrap();
+        let inline = run_scenario(&cfg, &spec, Policy::Ias, &b).unwrap();
+        let deferred = run_scenario_with_actuation(
+            &cfg,
+            &spec,
+            Policy::Ias,
+            &b,
+            ActuationSpec::Deferred {
+                latency_ticks: 0,
+                budget_per_tick: 0,
+            },
+        )
+        .unwrap();
+        assert_eq!(inline.avg_perf.to_bits(), deferred.avg_perf.to_bits());
+        assert_eq!(inline.core_hours.to_bits(), deferred.core_hours.to_bits());
+        assert_eq!(
+            inline.completion_time.to_bits(),
+            deferred.completion_time.to_bits()
+        );
+        assert_eq!(inline.repin_count, deferred.repin_count);
+    }
+
+    #[test]
+    fn actuation_lag_costs_performance_but_completes() {
+        // The new measurable scenario: pins landing late leave freshly
+        // arrived VMs stalled and re-pin passes acting on stale enacted
+        // state. The run must still finish, and lag cannot *improve* on
+        // inline actuation beyond noise.
+        let cfg = quiet_cfg();
+        let b = bank(&cfg);
+        let spec = random::build(cfg.host.cores, 1.0, 42).unwrap();
+        let inline = run_scenario(&cfg, &spec, Policy::Ias, &b).unwrap();
+        let lagged = run_scenario_with_actuation(
+            &cfg,
+            &spec,
+            Policy::Ias,
+            &b,
+            ActuationSpec::Deferred {
+                latency_ticks: 8,
+                budget_per_tick: 4,
+            },
+        )
+        .unwrap();
+        assert!(lagged.avg_perf > 0.3, "lagged perf {}", lagged.avg_perf);
+        assert!(
+            lagged.avg_perf <= inline.avg_perf + 0.05,
+            "lag must not beat inline: {} vs {}",
+            lagged.avg_perf,
+            inline.avg_perf
+        );
     }
 
     #[test]

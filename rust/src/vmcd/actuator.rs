@@ -1,14 +1,169 @@
-//! VM Actuator (paper §III): "a high-level abstraction to libvirt API
-//! calls … can manage VMs throughout their life-cycle and enforce the
-//! required CPU pinning adjustments."
+//! The actuation pipeline (paper §III): "a high-level abstraction to
+//! libvirt API calls … can manage VMs throughout their life-cycle and
+//! enforce the required CPU pinning adjustments."
 //!
-//! Tracks intended pinnings, skips no-op re-pins, and counts actuations so
-//! experiments can report actuation overhead.
+//! Since the command-queue redesign, **decision and enforcement are
+//! separate layers**:
+//!
+//! * `SchedEvent` handlers *decide* — they mutate the long-lived
+//!   placement state and emit typed [`ActuationCommand`]s into the
+//!   daemon's [`ActuationQueue`]. No handler touches the hypervisor.
+//! * An [`Actuate`] backend *enforces* — it drains the queue and applies
+//!   the commands through the hypervisor (or a real-hypervisor
+//!   [`PinSink`]), reporting [`ActuationReport::completions`] that the
+//!   daemon feeds back as `SchedEvent::ActuationComplete` bookkeeping.
+//!
+//! Three backends ship:
+//!
+//! * [`Inline`] — drains the queue immediately within the daemon pass,
+//!   bit-identical to the pre-queue design (test-gated);
+//! * [`Deferred`] — commands become enforceable `latency_ticks` daemon
+//!   steps after submission, at most `budget_per_tick` atomic pins per
+//!   step, so placement *intent* (the daemon's state) and *observed*
+//!   pinning (the engine) diverge and reconcile — the paper's §IV
+//!   actuation latency made a first-class experimental knob;
+//! * [`Threaded`] — forwards commands over an mpsc channel to a worker
+//!   thread owning a [`PinSink`] (the seam a real libvirt connection
+//!   implements), draining completions back without ever blocking the
+//!   monitor loop.
+//!
+//! [`Actuator`] survives as the low-level dedup applier backends share
+//! (skip no-op re-pins, count actuations); [`Actuate`] is the API.
 
 use crate::hostsim::{Hypervisor, VmId};
 use anyhow::Result;
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
 
+/// One typed CPU-pinning action, decided by a `SchedEvent` handler and
+/// enforced later by an [`Actuate`] backend.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ActuationCommand {
+    /// Pin one domain's vCPU to a physical core.
+    Pin { vm: VmId, core: usize },
+    /// Park one domain on the idle core (Alg. 1 lines 6–7).
+    Park { vm: VmId },
+    /// Enforce a whole placement map — the Tick re-pin pass as one
+    /// command.
+    ApplyPlan(Vec<(VmId, usize)>),
+}
+
+impl ActuationCommand {
+    /// The atomic `(vm, core)` pin operations this command expands to —
+    /// the unit backends order, budget, and complete. Consumes the
+    /// command so a Tick's `ApplyPlan` (O(residents) entries, one per
+    /// daemon pass) moves its plan out instead of cloning it.
+    pub fn into_atoms(self) -> Vec<(VmId, usize)> {
+        match self {
+            ActuationCommand::Pin { vm, core } => vec![(vm, core)],
+            ActuationCommand::Park { vm } => vec![(vm, super::daemon::IDLE_CORE)],
+            ActuationCommand::ApplyPlan(plan) => plan,
+        }
+    }
+}
+
+/// FIFO of commands the daemon's event handlers emitted and no backend
+/// has absorbed yet. Strictly ordered: backends enforce atoms in
+/// submission order, so the last command for a domain always wins and a
+/// lagging backend converges to the final intent once it drains.
+#[derive(Debug, Default)]
+pub struct ActuationQueue {
+    commands: VecDeque<ActuationCommand>,
+    /// Commands pushed over the queue's lifetime (reporting).
+    pub pushed: u64,
+}
+
+impl ActuationQueue {
+    pub fn new() -> ActuationQueue {
+        ActuationQueue::default()
+    }
+
+    pub fn push(&mut self, cmd: ActuationCommand) {
+        self.pushed += 1;
+        self.commands.push_back(cmd);
+    }
+
+    /// Shorthand for pushing a [`ActuationCommand::Pin`].
+    pub fn pin(&mut self, vm: VmId, core: usize) {
+        self.push(ActuationCommand::Pin { vm, core });
+    }
+
+    /// Shorthand for pushing a [`ActuationCommand::Park`].
+    pub fn park(&mut self, vm: VmId) {
+        self.push(ActuationCommand::Park { vm });
+    }
+
+    pub fn pop(&mut self) -> Option<ActuationCommand> {
+        self.commands.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.commands.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.commands.is_empty()
+    }
+
+    /// Drop queued pins for domains that no longer exist (a VM that
+    /// departed between decision and enforcement must not be re-pinned
+    /// under a reused id).
+    pub fn retain_live(&mut self, live: &BTreeSet<VmId>) {
+        for cmd in &mut self.commands {
+            if let ActuationCommand::ApplyPlan(plan) = cmd {
+                plan.retain(|(vm, _)| live.contains(vm));
+            }
+        }
+        self.commands.retain(|cmd| match cmd {
+            ActuationCommand::Pin { vm, .. } | ActuationCommand::Park { vm } => live.contains(vm),
+            ActuationCommand::ApplyPlan(plan) => !plan.is_empty(),
+        });
+    }
+}
+
+/// What one backend pass enforced.
+#[derive(Debug, Clone, Default)]
+pub struct ActuationReport {
+    /// Atomic pins that finished this pass (dedup no-ops included): the
+    /// observed pinning the daemon books via
+    /// `SchedEvent::ActuationComplete`.
+    pub completions: Vec<(VmId, usize)>,
+    /// Transient hypervisor failures (tolerated and counted; the intent
+    /// is kept and the next Tick's re-pin pass retries).
+    pub failures: u64,
+}
+
+/// The actuation API — what the daemon drives instead of a concrete
+/// actuator. `Send` because natively-scored daemons (and therefore their
+/// backends) migrate to cluster shard-pool workers.
+pub trait Actuate: Send {
+    fn name(&self) -> &'static str;
+
+    /// Absorb every queued command. [`Inline`] enforces them before
+    /// returning; latency backends stage them. Called at the end of each
+    /// daemon entry point that may have produced commands.
+    fn submit(&mut self, hv: &mut dyn Hypervisor, queue: &mut ActuationQueue) -> ActuationReport;
+
+    /// Advance one daemon step: enforce whatever became due (the latency
+    /// clock of [`Deferred`], the completion drain of [`Threaded`]).
+    fn on_step(&mut self, hv: &mut dyn Hypervisor) -> ActuationReport;
+
+    /// Atomic pins accepted but not yet enforced.
+    fn in_flight(&self) -> usize;
+
+    /// Forget domains that left the host: dedup state and staged pins
+    /// (so a VM re-using an id later is re-pinned for real).
+    fn retain(&mut self, live: &BTreeSet<VmId>);
+
+    /// Enforcement counters `(pin_calls, pin_noops)` for reporting.
+    fn counters(&self) -> (u64, u64);
+}
+
+/// Low-level pin applier shared by the hypervisor-driven backends:
+/// tracks the last applied pinning, skips no-op re-pins, and counts
+/// actuations so experiments can report actuation overhead. Not the
+/// API — daemons talk to [`Actuate`] backends, which use this inside.
 #[derive(Debug, Default)]
 pub struct Actuator {
     /// Last pinning this actuator applied (or observed).
@@ -50,6 +205,369 @@ impl Actuator {
     pub fn retain(&mut self, live: &BTreeSet<VmId>) {
         self.applied.retain(|id, _| live.contains(id));
     }
+
+    /// Would `pin` dedup-skip this atom (domain already there)?
+    pub fn would_noop(&self, id: VmId, core: usize) -> bool {
+        self.applied.get(&id) == Some(&core)
+    }
+
+    /// Apply one atom, folding the outcome into `report`: a success or a
+    /// dedup no-op completes, a failure is counted and logged (the
+    /// daemon keeps its intent and the next Tick retries).
+    fn apply_atom(
+        &mut self,
+        hv: &mut dyn Hypervisor,
+        vm: VmId,
+        core: usize,
+        report: &mut ActuationReport,
+    ) {
+        match self.pin(hv, vm, core) {
+            Ok(()) => report.completions.push((vm, core)),
+            Err(e) => {
+                report.failures += 1;
+                log::warn!("pin {vm:?} -> core {core} failed: {e}");
+            }
+        }
+    }
+}
+
+/// Synchronous backend: every submitted command is enforced before
+/// `submit` returns — bit-identical to the pre-queue daemon (test-gated
+/// by the Inline-vs-Deferred{0} property and the cluster bit-identity
+/// suite).
+#[derive(Debug, Default)]
+pub struct Inline {
+    applier: Actuator,
+}
+
+impl Inline {
+    pub fn new() -> Inline {
+        Inline::default()
+    }
+}
+
+impl Actuate for Inline {
+    fn name(&self) -> &'static str {
+        "inline"
+    }
+
+    fn submit(&mut self, hv: &mut dyn Hypervisor, queue: &mut ActuationQueue) -> ActuationReport {
+        let mut report = ActuationReport::default();
+        while let Some(cmd) = queue.pop() {
+            for (vm, core) in cmd.into_atoms() {
+                self.applier.apply_atom(hv, vm, core, &mut report);
+            }
+        }
+        report
+    }
+
+    fn on_step(&mut self, _hv: &mut dyn Hypervisor) -> ActuationReport {
+        ActuationReport::default()
+    }
+
+    fn in_flight(&self) -> usize {
+        0
+    }
+
+    fn retain(&mut self, live: &BTreeSet<VmId>) {
+        self.applier.retain(live);
+    }
+
+    fn counters(&self) -> (u64, u64) {
+        (self.applier.pin_calls, self.applier.pin_noops)
+    }
+}
+
+/// Deferred backend: atoms become enforceable `latency_ticks` daemon
+/// steps after submission and at most `budget_per_tick` real pin calls
+/// are made per step (0 = unlimited; dedup no-ops are free) — real
+/// placement actions have non-trivial latency, and modeling them
+/// asynchronously is exactly what lets intent and enacted pinning
+/// diverge under churn.
+#[derive(Debug)]
+pub struct Deferred {
+    pub latency_ticks: u64,
+    /// Max atoms enforced per step; 0 means unlimited.
+    pub budget_per_tick: usize,
+    /// Staged atoms `(due_tick, vm, core)` in submission order.
+    staged: VecDeque<(u64, VmId, usize)>,
+    /// Daemon steps seen so far (`on_step` calls completed).
+    tick: u64,
+    applier: Actuator,
+}
+
+impl Deferred {
+    pub fn new(latency_ticks: u64, budget_per_tick: usize) -> Deferred {
+        Deferred {
+            latency_ticks,
+            budget_per_tick,
+            staged: VecDeque::new(),
+            tick: 0,
+            applier: Actuator::new(),
+        }
+    }
+}
+
+impl Actuate for Deferred {
+    fn name(&self) -> &'static str {
+        "deferred"
+    }
+
+    fn submit(&mut self, _hv: &mut dyn Hypervisor, queue: &mut ActuationQueue) -> ActuationReport {
+        while let Some(cmd) = queue.pop() {
+            for (vm, core) in cmd.into_atoms() {
+                self.staged.push_back((self.tick + self.latency_ticks, vm, core));
+            }
+        }
+        ActuationReport::default()
+    }
+
+    fn on_step(&mut self, hv: &mut dyn Hypervisor) -> ActuationReport {
+        let mut report = ActuationReport::default();
+        let mut budget = if self.budget_per_tick == 0 {
+            usize::MAX
+        } else {
+            self.budget_per_tick
+        };
+        loop {
+            let (vm, core) = match self.staged.front() {
+                Some(&(due, vm, core)) if due <= self.tick => (vm, core),
+                _ => break,
+            };
+            // The budget models real hypervisor-call latency, so dedup
+            // no-ops (a Tick re-confirming an unchanged pin) are free —
+            // otherwise steady-state re-pin plans would starve genuinely
+            // changed pins queued behind them.
+            let noop = self.applier.would_noop(vm, core);
+            if !noop && budget == 0 {
+                break;
+            }
+            let _ = self.staged.pop_front();
+            self.applier.apply_atom(hv, vm, core, &mut report);
+            if !noop {
+                budget -= 1;
+            }
+        }
+        self.tick += 1;
+        report
+    }
+
+    fn in_flight(&self) -> usize {
+        self.staged.len()
+    }
+
+    fn retain(&mut self, live: &BTreeSet<VmId>) {
+        self.staged.retain(|(_, vm, _)| live.contains(vm));
+        self.applier.retain(live);
+    }
+
+    fn counters(&self) -> (u64, u64) {
+        (self.applier.pin_calls, self.applier.pin_noops)
+    }
+}
+
+/// Where a [`Threaded`] worker enforces pins — the real-hypervisor seam.
+/// A libvirt binding implements this over its own connection (libvirt
+/// handles are per-thread); tests use a recording mock. The simulated
+/// [`Hypervisor`] stays on the daemon thread, so `Threaded` never touches
+/// the `hv` argument of the [`Actuate`] calls.
+pub trait PinSink: Send {
+    fn pin(&mut self, vm: VmId, core: usize) -> Result<()>;
+}
+
+impl<F: FnMut(VmId, usize) -> Result<()> + Send> PinSink for F {
+    fn pin(&mut self, vm: VmId, core: usize) -> Result<()> {
+        self(vm, core)
+    }
+}
+
+/// Threaded backend: commands cross an mpsc channel to a worker thread
+/// owning the [`PinSink`]; completions flow back and are drained
+/// non-blockingly each step. A slow real actuation can therefore never
+/// stall the monitor loop — the ROADMAP's async-daemon item.
+pub struct Threaded {
+    tx: Option<Sender<(VmId, usize)>>,
+    rx: Receiver<(VmId, usize, bool)>,
+    handle: Option<JoinHandle<()>>,
+    sent: u64,
+    done: u64,
+    /// Completions the sink enforced successfully.
+    ok: u64,
+}
+
+impl Threaded {
+    pub fn new(mut sink: Box<dyn PinSink>) -> Threaded {
+        let (tx, rx_job) = channel::<(VmId, usize)>();
+        let (tx_done, rx) = channel::<(VmId, usize, bool)>();
+        let handle = std::thread::Builder::new()
+            .name("actuation-worker".into())
+            .spawn(move || {
+                while let Ok((vm, core)) = rx_job.recv() {
+                    let ok = sink.pin(vm, core).is_ok();
+                    if tx_done.send((vm, core, ok)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn actuation worker");
+        Threaded {
+            tx: Some(tx),
+            rx,
+            handle: Some(handle),
+            sent: 0,
+            done: 0,
+            ok: 0,
+        }
+    }
+
+    fn book(&mut self, vm: VmId, core: usize, ok: bool, report: &mut ActuationReport) {
+        self.done += 1;
+        if ok {
+            self.ok += 1;
+            report.completions.push((vm, core));
+        } else {
+            report.failures += 1;
+        }
+    }
+
+    /// Block until every accepted command has been enforced — teardown
+    /// and test synchronisation, not the steady-state path.
+    pub fn drain(&mut self) -> ActuationReport {
+        let mut report = ActuationReport::default();
+        while self.done < self.sent {
+            match self.rx.recv() {
+                Ok((vm, core, ok)) => self.book(vm, core, ok, &mut report),
+                Err(_) => break,
+            }
+        }
+        report
+    }
+}
+
+impl Actuate for Threaded {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn submit(&mut self, _hv: &mut dyn Hypervisor, queue: &mut ActuationQueue) -> ActuationReport {
+        let mut report = ActuationReport::default();
+        while let Some(cmd) = queue.pop() {
+            for (vm, core) in cmd.into_atoms() {
+                let accepted = self.tx.as_ref().is_some_and(|tx| tx.send((vm, core)).is_ok());
+                if accepted {
+                    self.sent += 1;
+                } else {
+                    // Worker gone (panicked sink or torn-down channel):
+                    // a dropped command is a failed actuation, not a
+                    // silent success — surface it like any pin failure.
+                    report.failures += 1;
+                    log::warn!("actuation worker rejected pin {vm:?} -> core {core}");
+                }
+            }
+        }
+        report
+    }
+
+    fn on_step(&mut self, _hv: &mut dyn Hypervisor) -> ActuationReport {
+        let mut report = ActuationReport::default();
+        // try_iter borrows self.rx immutably while book needs &mut self:
+        // collect first (the channel batch is small — one step's worth).
+        let batch: Vec<(VmId, usize, bool)> = self.rx.try_iter().collect();
+        for (vm, core, ok) in batch {
+            self.book(vm, core, ok, &mut report);
+        }
+        report
+    }
+
+    fn in_flight(&self) -> usize {
+        (self.sent - self.done) as usize
+    }
+
+    fn retain(&mut self, _live: &BTreeSet<VmId>) {
+        // In-flight commands already crossed the channel; the sink owns
+        // its own notion of domain liveness (a real connection errors on
+        // a gone domain, which comes back as a tolerated failure).
+    }
+
+    fn counters(&self) -> (u64, u64) {
+        (self.ok, 0)
+    }
+}
+
+impl Drop for Threaded {
+    fn drop(&mut self) {
+        self.tx.take(); // close the job channel; the worker exits
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// The parseable actuation configuration (CLI `--actuation`, cluster
+/// specs) — symmetric with `Policy::parse` and `Dispatcher::parse`.
+/// [`Threaded`] is deliberately absent: it needs a live [`PinSink`], not
+/// a string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActuationSpec {
+    Inline,
+    Deferred {
+        latency_ticks: u64,
+        /// Max atoms enforced per step; 0 means unlimited.
+        budget_per_tick: usize,
+    },
+}
+
+impl ActuationSpec {
+    pub fn name(self) -> &'static str {
+        match self {
+            ActuationSpec::Inline => "inline",
+            ActuationSpec::Deferred { .. } => "deferred",
+        }
+    }
+
+    /// Parse `inline`, `deferred:N` (N ticks of latency, unlimited
+    /// budget), or `deferred:N:B` (budget B atoms per tick). The error
+    /// lists the valid forms.
+    pub fn parse(s: &str) -> anyhow::Result<ActuationSpec> {
+        let lower = s.to_ascii_lowercase();
+        if lower == "inline" {
+            return Ok(ActuationSpec::Inline);
+        }
+        if let Some(rest) = lower.strip_prefix("deferred:") {
+            let mut parts = rest.splitn(2, ':');
+            let latency = parts
+                .next()
+                .unwrap_or_default()
+                .parse::<u64>()
+                .map_err(|_| {
+                    anyhow::anyhow!("bad latency in actuation spec '{s}' (want deferred:N)")
+                })?;
+            let budget = match parts.next() {
+                None => 0,
+                Some(b) => b.parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("bad budget in actuation spec '{s}' (want deferred:N:B)")
+                })?,
+            };
+            return Ok(ActuationSpec::Deferred {
+                latency_ticks: latency,
+                budget_per_tick: budget,
+            });
+        }
+        anyhow::bail!(
+            "unknown actuation spec '{s}' (valid: inline, deferred:N, deferred:N:B)"
+        )
+    }
+
+    /// Build the backend this spec describes.
+    pub fn build(self) -> Box<dyn Actuate> {
+        match self {
+            ActuationSpec::Inline => Box::new(Inline::new()),
+            ActuationSpec::Deferred {
+                latency_ticks,
+                budget_per_tick,
+            } => Box::new(Deferred::new(latency_ticks, budget_per_tick)),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -58,6 +576,7 @@ mod tests {
     use crate::config::Config;
     use crate::hostsim::{ActivityModel, SimEngine, Vm, VmState};
     use crate::workloads::WorkloadClass;
+    use std::sync::{Arc, Mutex};
 
     fn engine(n: u32) -> SimEngine {
         let mut cfg = Config::default();
@@ -111,5 +630,213 @@ mod tests {
         // VmId(0) must be re-pinned for real next time.
         act.pin(&mut eng, VmId(0), 1).unwrap();
         assert_eq!(act.pin_calls, 3);
+    }
+
+    #[test]
+    fn commands_expand_to_atoms() {
+        let pin = ActuationCommand::Pin {
+            vm: VmId(3),
+            core: 5,
+        };
+        assert_eq!(pin.into_atoms(), vec![(VmId(3), 5)]);
+        let park = ActuationCommand::Park { vm: VmId(7) };
+        assert_eq!(park.into_atoms(), vec![(VmId(7), super::super::daemon::IDLE_CORE)]);
+        let plan = ActuationCommand::ApplyPlan(vec![(VmId(0), 1), (VmId(1), 2)]);
+        assert_eq!(plan.into_atoms(), vec![(VmId(0), 1), (VmId(1), 2)]);
+    }
+
+    #[test]
+    fn queue_retain_live_prunes_dead_targets() {
+        let mut q = ActuationQueue::new();
+        q.pin(VmId(0), 1);
+        q.park(VmId(1));
+        q.push(ActuationCommand::ApplyPlan(vec![(VmId(0), 2), (VmId(2), 3)]));
+        q.push(ActuationCommand::ApplyPlan(vec![(VmId(1), 4)]));
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.pushed, 4);
+        // Only VmId(0) survives: the Park and the 1-entry plan vanish,
+        // the mixed plan keeps its live half.
+        q.retain_live(&BTreeSet::from([VmId(0)]));
+        assert_eq!(q.pop(), Some(ActuationCommand::Pin { vm: VmId(0), core: 1 }));
+        assert_eq!(
+            q.pop(),
+            Some(ActuationCommand::ApplyPlan(vec![(VmId(0), 2)]))
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn inline_backend_enforces_at_submit() {
+        let mut eng = engine(2);
+        let mut q = ActuationQueue::new();
+        let mut backend = Inline::new();
+        q.pin(VmId(0), 4);
+        q.push(ActuationCommand::ApplyPlan(vec![(VmId(1), 5)]));
+        let report = backend.submit(&mut eng, &mut q);
+        assert!(q.is_empty());
+        assert_eq!(report.completions, vec![(VmId(0), 4), (VmId(1), 5)]);
+        assert_eq!(report.failures, 0);
+        assert_eq!(eng.vms[0].pinned, Some(4));
+        assert_eq!(eng.vms[1].pinned, Some(5));
+        assert_eq!(backend.in_flight(), 0);
+        assert_eq!(backend.counters(), (2, 0));
+    }
+
+    #[test]
+    fn inline_backend_tolerates_and_counts_failures() {
+        let mut eng = engine(1);
+        let mut q = ActuationQueue::new();
+        let mut backend = Inline::new();
+        q.pin(VmId(0), 999); // out of range
+        q.pin(VmId(0), 2);
+        let report = backend.submit(&mut eng, &mut q);
+        assert_eq!(report.failures, 1);
+        assert_eq!(report.completions, vec![(VmId(0), 2)]);
+        assert_eq!(eng.vms[0].pinned, Some(2));
+    }
+
+    #[test]
+    fn deferred_applies_commands_latency_ticks_later() {
+        let mut eng = engine(1);
+        let mut q = ActuationQueue::new();
+        let mut backend = Deferred::new(2, 0);
+        q.pin(VmId(0), 6);
+        assert!(backend.submit(&mut eng, &mut q).completions.is_empty());
+        assert_eq!(backend.in_flight(), 1);
+        // Ticks 0 and 1: still in flight (due at tick 2).
+        assert!(backend.on_step(&mut eng).completions.is_empty());
+        assert!(backend.on_step(&mut eng).completions.is_empty());
+        assert_eq!(eng.vms[0].pinned, Some(0));
+        // Tick 2: enforced.
+        let report = backend.on_step(&mut eng);
+        assert_eq!(report.completions, vec![(VmId(0), 6)]);
+        assert_eq!(eng.vms[0].pinned, Some(6));
+        assert_eq!(backend.in_flight(), 0);
+    }
+
+    #[test]
+    fn deferred_budget_throttles_per_tick() {
+        let mut eng = engine(3);
+        let mut q = ActuationQueue::new();
+        let mut backend = Deferred::new(0, 2);
+        q.push(ActuationCommand::ApplyPlan(vec![
+            (VmId(0), 1),
+            (VmId(1), 2),
+            (VmId(2), 3),
+        ]));
+        backend.submit(&mut eng, &mut q);
+        assert_eq!(backend.in_flight(), 3);
+        // Budget 2: two atoms this tick, the third next tick — FIFO.
+        let r1 = backend.on_step(&mut eng);
+        assert_eq!(r1.completions, vec![(VmId(0), 1), (VmId(1), 2)]);
+        assert_eq!(backend.in_flight(), 1);
+        let r2 = backend.on_step(&mut eng);
+        assert_eq!(r2.completions, vec![(VmId(2), 3)]);
+        assert_eq!(backend.in_flight(), 0);
+    }
+
+    #[test]
+    fn deferred_budget_ignores_dedup_noops() {
+        let mut eng = engine(2);
+        let mut q = ActuationQueue::new();
+        let mut backend = Deferred::new(0, 1);
+        // First pass: enforce both pins (budget 1 real call per step).
+        q.pin(VmId(0), 3);
+        q.pin(VmId(1), 4);
+        backend.submit(&mut eng, &mut q);
+        backend.on_step(&mut eng);
+        backend.on_step(&mut eng);
+        assert_eq!(backend.in_flight(), 0);
+        // Second pass: a no-op re-confirmation queued ahead of a real
+        // change must not eat the budget — both land in one step.
+        q.pin(VmId(0), 3); // unchanged → dedup no-op, free
+        q.pin(VmId(1), 5); // real pin, costs the budget
+        backend.submit(&mut eng, &mut q);
+        let r = backend.on_step(&mut eng);
+        assert_eq!(r.completions, vec![(VmId(0), 3), (VmId(1), 5)]);
+        assert_eq!(backend.in_flight(), 0);
+        assert_eq!(eng.vms[1].pinned, Some(5));
+        assert_eq!(backend.counters(), (3, 1)); // 3 real calls, 1 noop
+    }
+
+    #[test]
+    fn deferred_retain_drops_staged_pins_of_dead_vms() {
+        let mut eng = engine(2);
+        let mut q = ActuationQueue::new();
+        let mut backend = Deferred::new(5, 0);
+        q.pin(VmId(0), 1);
+        q.pin(VmId(1), 2);
+        backend.submit(&mut eng, &mut q);
+        backend.retain(&BTreeSet::from([VmId(1)]));
+        assert_eq!(backend.in_flight(), 1);
+    }
+
+    #[test]
+    fn threaded_backend_enforces_through_the_sink() {
+        let seen: Arc<Mutex<Vec<(VmId, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink_seen = seen.clone();
+        let mut backend = Threaded::new(Box::new(move |vm: VmId, core: usize| -> Result<()> {
+            sink_seen.lock().unwrap().push((vm, core));
+            Ok(())
+        }));
+        let mut eng = engine(1); // untouched: Threaded never uses hv
+        let mut q = ActuationQueue::new();
+        q.pin(VmId(0), 3);
+        q.push(ActuationCommand::ApplyPlan(vec![(VmId(1), 4)]));
+        backend.submit(&mut eng, &mut q);
+        // drain() blocks until the worker reports both completions.
+        let report = backend.drain();
+        assert_eq!(report.completions.len(), 2);
+        assert_eq!(report.failures, 0);
+        assert_eq!(backend.in_flight(), 0);
+        assert_eq!(*seen.lock().unwrap(), vec![(VmId(0), 3), (VmId(1), 4)]);
+        // The simulated hypervisor was never actuated.
+        assert_eq!(eng.vms[0].pinned, Some(0));
+        assert_eq!(eng.ledger.repin_count, 0);
+    }
+
+    #[test]
+    fn threaded_backend_reports_sink_failures() {
+        let mut backend = Threaded::new(Box::new(|vm: VmId, _core: usize| -> Result<()> {
+            anyhow::ensure!(vm != VmId(1), "domain gone");
+            Ok(())
+        }));
+        let mut eng = engine(1);
+        let mut q = ActuationQueue::new();
+        q.pin(VmId(0), 1);
+        q.pin(VmId(1), 2);
+        backend.submit(&mut eng, &mut q);
+        let report = backend.drain();
+        assert_eq!(report.completions, vec![(VmId(0), 1)]);
+        assert_eq!(report.failures, 1);
+    }
+
+    #[test]
+    fn actuation_spec_parses_and_builds() {
+        assert_eq!(ActuationSpec::parse("inline").unwrap(), ActuationSpec::Inline);
+        assert_eq!(ActuationSpec::parse("INLINE").unwrap(), ActuationSpec::Inline);
+        assert_eq!(
+            ActuationSpec::parse("deferred:3").unwrap(),
+            ActuationSpec::Deferred {
+                latency_ticks: 3,
+                budget_per_tick: 0
+            }
+        );
+        assert_eq!(
+            ActuationSpec::parse("deferred:2:8").unwrap(),
+            ActuationSpec::Deferred {
+                latency_ticks: 2,
+                budget_per_tick: 8
+            }
+        );
+        for bad in ["bogus", "deferred", "deferred:x", "deferred:1:y"] {
+            let err = ActuationSpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains(bad), "{err}");
+        }
+        assert_eq!(ActuationSpec::parse("inline").unwrap().build().name(), "inline");
+        assert_eq!(
+            ActuationSpec::parse("deferred:1").unwrap().build().name(),
+            "deferred"
+        );
     }
 }

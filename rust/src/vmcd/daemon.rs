@@ -1,4 +1,5 @@
-//! The General Scheduler loop — paper Algorithm 1, event-driven.
+//! The General Scheduler loop — paper Algorithm 1, event-driven, with
+//! decision decoupled from actuation.
 //!
 //! The paper re-derives the whole placement every `timeInterval`; early
 //! versions of this daemon mirrored that by rebuilding a fresh
@@ -15,7 +16,22 @@
 //!   consume zero resources") and remove from the running state;
 //! * [`SchedEvent::WakeTransition`] — re-enter via `SelectPinning`;
 //! * [`SchedEvent::Tick`] — the periodic Alg. 1 re-pin pass, expressed as
-//!   remove+place deltas per running workload instead of a rebuild.
+//!   remove+place deltas per running workload instead of a rebuild;
+//! * [`SchedEvent::ActuationComplete`] — an actuation backend finished a
+//!   pin: the daemon's *observed* pinning catches up with its intent.
+//!
+//! **No handler touches the hypervisor's control surface.** Handlers see
+//! a read-only `&dyn Hypervisor` (stats, clock) and emit typed
+//! [`ActuationCommand`]s into the daemon's [`ActuationQueue`]; an
+//! [`Actuate`] backend enforces them — immediately
+//! ([`actuator::Inline`](super::actuator::Inline), bit-identical to the
+//! coupled design), N ticks later under a budget
+//! ([`actuator::Deferred`](super::actuator::Deferred)), or on a worker
+//! thread ([`actuator::Threaded`](super::actuator::Threaded)). With a
+//! lagging backend the placement *intent* (the state plus each
+//! resident's intended core) and the *observed* pinning diverge and
+//! reconcile through completion events — the paper's actuation latency
+//! as a first-class knob.
 //!
 //! [`Daemon::step`] polls the monitor **once** per simulator step and
 //! diffs the snapshot into lifecycle events (the old design polled in
@@ -23,7 +39,7 @@
 //! survives only as the `debug_assert!` reconciliation path
 //! ([`Daemon::state_matches_rebuild`]).
 
-use super::actuator::Actuator;
+use super::actuator::{Actuate, ActuationCommand, ActuationQueue, ActuationReport, Inline};
 use super::monitor::{Monitor, MonitorSnapshot};
 use super::scheduler::{PlacementState, Policy, Scheduler};
 use crate::config::SchedParams;
@@ -49,6 +65,9 @@ pub enum SchedEvent {
     IdleTransition(VmId),
     /// An idle workload became active again.
     WakeTransition(VmId),
+    /// An actuation backend enforced one pin — the feedback edge of the
+    /// command queue. Books the observed pinning; never re-decides.
+    ActuationComplete { vm: VmId, core: usize },
     /// The periodic Alg. 1 re-pin + idle-consolidation pass.
     Tick,
 }
@@ -58,9 +77,9 @@ pub enum SchedEvent {
 struct Resident {
     class: WorkloadClass,
     /// Intended core: the placement-state position for running
-    /// workloads, the parking core for idle ones. Kept even when an
-    /// actuation fails so decisions stay consistent and the pin is
-    /// retried next Tick.
+    /// workloads, the parking core for idle ones. Under a lagging
+    /// actuation backend the enacted pinning trails this; the command
+    /// queue's FIFO order guarantees it converges once drained.
     core: usize,
     idle: bool,
     /// When the daemon started tracking the domain. A freshly-placed
@@ -76,24 +95,33 @@ struct Resident {
 pub struct Daemon<S: ?Sized + Scheduler = dyn Scheduler> {
     pub params: SchedParams,
     pub monitor: Monitor,
-    pub actuator: Actuator,
     last_cycle: Option<f64>,
     /// Cycles run (reporting).
     pub cycles: u64,
     /// Transient actuation failures tolerated (reporting).
     pub pin_failures: u64,
-    /// Lifecycle (non-Tick) events handled (reporting).
+    /// Lifecycle (non-Tick, non-completion) events handled (reporting).
     pub events_handled: u64,
+    /// Actuation completions booked (reporting).
+    pub completions: u64,
     /// The long-lived placement state, created on first hypervisor
     /// contact (when the core count is known).
     state: Option<PlacementState>,
     /// Current idle-core reservation, so `sync_reservation` only touches
     /// the state's `allowed` set on actual flips.
     reserved: bool,
-    /// Events queued from outside the daemon's own poll loop (an async
-    /// actuator or embedder): see [`Self::enqueue`].
+    /// Events queued from outside the daemon's own poll loop (an
+    /// embedder, a remote controller): see [`Self::enqueue`].
     pending: VecDeque<SchedEvent>,
     residents: BTreeMap<VmId, Resident>,
+    /// Commands decided but not yet absorbed by the backend.
+    queue: ActuationQueue,
+    /// The enforcement backend (default [`Inline`]).
+    actuation: Box<dyn Actuate>,
+    /// Enacted pinnings as reported by actuation completions — the
+    /// daemon's belief of what the hypervisor actually runs, distinct
+    /// from its intent while commands are in flight.
+    observed: BTreeMap<VmId, usize>,
     pub scheduler: Box<S>,
 }
 
@@ -103,21 +131,78 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         Daemon {
             params,
             monitor,
-            actuator: Actuator::new(),
             last_cycle: None,
             cycles: 0,
             pin_failures: 0,
             events_handled: 0,
+            completions: 0,
             state: None,
             reserved: false,
             pending: VecDeque::new(),
             residents: BTreeMap::new(),
+            queue: ActuationQueue::new(),
+            actuation: Box::new(Inline::new()),
+            observed: BTreeMap::new(),
             scheduler,
         }
     }
 
+    /// [`Self::new`] with an explicit actuation backend.
+    pub fn with_actuation(
+        params: SchedParams,
+        scheduler: Box<S>,
+        actuation: Box<dyn Actuate>,
+    ) -> Daemon<S> {
+        let mut daemon = Daemon::new(params, scheduler);
+        daemon.actuation = actuation;
+        daemon
+    }
+
+    /// Swap the actuation backend (before the first step: in-flight
+    /// commands of the old backend are dropped with it).
+    pub fn set_actuation(&mut self, actuation: Box<dyn Actuate>) {
+        self.actuation = actuation;
+    }
+
     pub fn policy(&self) -> Policy {
         self.scheduler.policy()
+    }
+
+    /// Name of the active actuation backend.
+    pub fn actuation_name(&self) -> &'static str {
+        self.actuation.name()
+    }
+
+    /// Atomic pins decided but not yet enforced (queued + staged in the
+    /// backend).
+    pub fn in_flight(&self) -> usize {
+        self.queue.len() + self.actuation.in_flight()
+    }
+
+    /// Actuation commands emitted over the daemon's lifetime.
+    pub fn commands_issued(&self) -> u64 {
+        self.queue.pushed
+    }
+
+    /// Real hypervisor pin calls the backend performed.
+    pub fn pin_calls(&self) -> u64 {
+        self.actuation.counters().0
+    }
+
+    /// Dedup-skipped no-op pins.
+    pub fn pin_noops(&self) -> u64 {
+        self.actuation.counters().1
+    }
+
+    /// The enacted pinning last reported for `id` (None until its first
+    /// completion — e.g. an adopted domain that never needed a command).
+    pub fn observed_pinning(&self, id: VmId) -> Option<usize> {
+        self.observed.get(&id).copied()
+    }
+
+    /// The intended core of a tracked resident (placement intent).
+    pub fn intended_pinning(&self, id: VmId) -> Option<usize> {
+        self.residents.get(&id).map(|r| r.core)
     }
 
     /// The long-lived placement state (None until first hypervisor
@@ -151,13 +236,13 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
 
     /// Queue an event for the next [`Self::step`] without touching the
     /// hypervisor now — the injection surface for embedders that run
-    /// outside the daemon's poll loop (e.g. the ROADMAP's async
-    /// actuation queue). The cluster bus deliberately does *not* use it:
-    /// bus deliveries go through the immediate `handle_event` path so
-    /// strict per-host inbox ordering is preserved. Queued events are
-    /// handled at the start of the step, *before* the monitor diff, so
-    /// queued bookkeeping lands ahead of lifecycle detection and is
-    /// never double-derived from the same snapshot.
+    /// outside the daemon's poll loop. The cluster bus deliberately does
+    /// *not* use it: bus deliveries go through the immediate
+    /// `handle_event` path so strict per-host inbox ordering is
+    /// preserved. Queued events are handled at the start of the step,
+    /// *before* the monitor diff, so queued bookkeeping lands ahead of
+    /// lifecycle detection and is never double-derived from the same
+    /// snapshot.
     pub fn enqueue(&mut self, ev: SchedEvent) {
         self.pending.push_back(ev);
     }
@@ -168,12 +253,13 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
     }
 
     /// One daemon step: drain queued events, poll the monitor **once**,
-    /// diff the snapshot into lifecycle events and handle them, then run
-    /// the Alg. 1 Tick if the interval has elapsed. Returns whether the
-    /// Tick ran.
+    /// diff the snapshot into lifecycle events and handle them, run the
+    /// Alg. 1 Tick if the interval has elapsed, then run one actuation
+    /// pass (absorb this step's commands, advance the backend one tick,
+    /// book completions). Returns whether the Tick ran.
     pub fn step(&mut self, hv: &mut dyn Hypervisor) -> Result<bool> {
         while let Some(ev) = self.pending.pop_front() {
-            self.handle_event(hv, ev)?;
+            self.apply_event(hv, ev)?;
         }
         self.drain_lifecycle(hv)?;
         let t = hv.now();
@@ -182,8 +268,11 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
             Some(t0) => t - t0 >= self.params.interval - 1e-9,
         };
         if due {
-            self.handle_event(hv, SchedEvent::Tick)?;
+            self.apply_event(hv, SchedEvent::Tick)?;
         }
+        self.pump(hv)?;
+        let report = self.actuation.on_step(hv);
+        self.book(hv, report)?;
         Ok(due)
     }
 
@@ -192,12 +281,15 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         self.step(hv)
     }
 
-    /// Force a full pass now: drain lifecycle events, then Tick. (The old
+    /// Force a full pass now: drain lifecycle events, then Tick, then
+    /// push the resulting commands into the backend. (The old
     /// rebuild-per-cycle entry point, kept for drivers and tests that
-    /// want an immediate cycle.)
+    /// want an immediate cycle.) Does **not** advance a latency
+    /// backend's clock — only [`Self::step`] does.
     pub fn run_cycle(&mut self, hv: &mut dyn Hypervisor) -> Result<()> {
         self.drain_lifecycle(hv)?;
-        self.handle_event(hv, SchedEvent::Tick)
+        self.apply_event(hv, SchedEvent::Tick)?;
+        self.pump(hv)
     }
 
     /// Place a newly-arrived workload immediately (§III: "as new
@@ -228,20 +320,32 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
                     .copied()
                     .collect();
                 for g in gone {
-                    self.handle_event(hv, SchedEvent::Departure(g))?;
+                    self.apply_event(hv, SchedEvent::Departure(g))?;
                 }
                 for other in live {
                     if other != id && !self.residents.contains_key(&other) {
-                        self.handle_event(hv, SchedEvent::Arrival(other))?;
+                        self.apply_event(hv, SchedEvent::Arrival(other))?;
                     }
                 }
             }
         }
-        self.handle_event(hv, SchedEvent::Arrival(id))
+        self.apply_event(hv, SchedEvent::Arrival(id))?;
+        let failures_before = self.pin_failures;
+        self.pump(hv)?;
+        // A dynamic scheduler self-heals through the next Tick's re-pin
+        // pass, so its pin failures are tolerated. A static policy (RRS)
+        // has no retry path — surface an arrival-pin failure to the
+        // caller like the pre-queue actuator did. (Under a latency
+        // backend the failure shows up at a later step instead, where it
+        // can only be counted.)
+        if !self.scheduler.dynamic() && self.pin_failures > failures_before {
+            anyhow::bail!("static-policy arrival pin failed for {id:?} (no Tick retry path)");
+        }
+        Ok(())
     }
 
     /// Poll once and apply every lifecycle delta since the last poll.
-    fn drain_lifecycle(&mut self, hv: &mut dyn Hypervisor) -> Result<()> {
+    fn drain_lifecycle(&mut self, hv: &dyn Hypervisor) -> Result<()> {
         // RRS is static: no idle detection, no monitoring ("unable to
         // detect whether a workload is in running state or idle", §V-C.1).
         if !self.scheduler.dynamic() {
@@ -250,9 +354,11 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         self.ensure_state(hv);
         let snap = self.monitor.poll(hv);
         let live: BTreeSet<VmId> = snap.domains.iter().map(|d| d.id).collect();
-        self.actuator.retain(&live);
+        self.actuation.retain(&live);
+        self.queue.retain_live(&live);
+        self.observed.retain(|id, _| live.contains(id));
         for ev in self.diff(&snap, &live) {
-            self.handle_event(hv, ev)?;
+            self.apply_event(hv, ev)?;
         }
         Ok(())
     }
@@ -293,10 +399,20 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         events
     }
 
-    /// Apply one event to the long-lived state.
+    /// Apply one event and immediately push any resulting commands into
+    /// the actuation backend — the embedder surface (the cluster bus
+    /// routes `ClusterEvent::Sched` deliveries here).
     pub fn handle_event(&mut self, hv: &mut dyn Hypervisor, ev: SchedEvent) -> Result<()> {
+        self.apply_event(hv, ev)?;
+        self.pump(hv)
+    }
+
+    /// Apply one event to the long-lived state. Pure decision code: the
+    /// hypervisor is read-only here, every pinning consequence is a
+    /// typed command in [`Self::queue`] for the backend to enforce.
+    fn apply_event(&mut self, hv: &dyn Hypervisor, ev: SchedEvent) -> Result<()> {
         self.ensure_state(hv);
-        if !matches!(ev, SchedEvent::Tick) {
+        if !matches!(ev, SchedEvent::Tick | SchedEvent::ActuationComplete { .. }) {
             self.events_handled += 1;
         }
         match ev {
@@ -306,18 +422,45 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
                 Ok(())
             }
             SchedEvent::IdleTransition(id) => {
-                self.on_idle(hv, id);
+                self.on_idle(id);
                 Ok(())
             }
             SchedEvent::WakeTransition(id) => {
-                self.on_wake(hv, id);
+                self.on_wake(id);
+                Ok(())
+            }
+            SchedEvent::ActuationComplete { vm, core } => {
+                self.on_actuation_complete(vm, core);
                 Ok(())
             }
             SchedEvent::Tick => self.on_tick(hv),
         }
     }
 
-    fn on_arrival_event(&mut self, hv: &mut dyn Hypervisor, id: VmId) -> Result<()> {
+    /// Absorb this pass's queued commands into the backend and book what
+    /// completed. Called at the end of every public entry point.
+    fn pump(&mut self, hv: &mut dyn Hypervisor) -> Result<()> {
+        let report = self.actuation.submit(hv, &mut self.queue);
+        self.book(hv, report)
+    }
+
+    /// Fold one actuation report into the daemon: count tolerated
+    /// failures (the intent is kept; the next Tick's re-pin retries) and
+    /// feed every completion back as a [`SchedEvent::ActuationComplete`].
+    fn book(&mut self, hv: &dyn Hypervisor, report: ActuationReport) -> Result<()> {
+        self.pin_failures += report.failures;
+        for (vm, core) in report.completions {
+            self.apply_event(hv, SchedEvent::ActuationComplete { vm, core })?;
+        }
+        Ok(())
+    }
+
+    fn on_actuation_complete(&mut self, vm: VmId, core: usize) {
+        self.completions += 1;
+        self.observed.insert(vm, core);
+    }
+
+    fn on_arrival_event(&mut self, hv: &dyn Hypervisor, id: VmId) -> Result<()> {
         if self.residents.contains_key(&id) {
             return Ok(()); // duplicate arrival: already tracked
         }
@@ -328,14 +471,13 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         // A static scheduler (RRS) never monitors, so departures would
         // never be drained: pin the newcomer without tracking it, or the
         // resident table and placement state grow with every arrival for
-        // the host's whole lifetime. Pin errors DO propagate here — a
-        // static policy has no Tick retry to self-heal through.
+        // the host's whole lifetime.
         if !self.scheduler.dynamic() {
             if stats.pinned.is_none() {
                 let core = self
                     .scheduler
                     .select_pinning(self.state.as_ref().unwrap(), class);
-                return self.actuator.pin(hv, id, core);
+                self.queue.pin(id, core);
             }
             return Ok(());
         }
@@ -344,7 +486,8 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
             // Adoption: a pre-existing resident (first poll after daemon
             // start, or a VM migrated in). Trust the live pinning and the
             // monitor's idle rule (its window belongs to a live history);
-            // the next Tick re-pins it like any other workload.
+            // the next Tick re-pins it like any other workload. No
+            // command: there is nothing to enforce.
             Some(core) => {
                 let idle = self.monitor.is_idle(stats.cpu_window_avg);
                 if !idle {
@@ -362,9 +505,12 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
                 self.sync_reservation();
                 Ok(())
             }
-            // Fresh arrival: place immediately. Its monitoring window is
+            // Fresh arrival: decide immediately. Its monitoring window is
             // empty, so it is treated as running — and `since` suppresses
-            // idle transitions — until one full window has elapsed.
+            // idle transitions — until one full window has elapsed. The
+            // pin itself is a command; under a lagging backend the VM
+            // stalls unpinned until enforcement lands (the actuation-lag
+            // cost the Deferred backend measures).
             None => {
                 let core = self
                     .scheduler
@@ -379,13 +525,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
                         since: now,
                     },
                 );
-                // Like every other handler: a transient pin failure must
-                // not abort scheduling — the intended core is recorded
-                // and the pin is retried next Tick.
-                if let Err(e) = self.actuator.pin(hv, id, core) {
-                    self.pin_failures += 1;
-                    log::warn!("pin {id:?} -> core {core} failed: {e}");
-                }
+                self.queue.pin(id, core);
                 Ok(())
             }
         }
@@ -395,6 +535,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         let Some(r) = self.residents.remove(&id) else {
             return;
         };
+        self.observed.remove(&id);
         if !r.idle {
             let removed = self.state.as_mut().unwrap().remove(r.core, r.class);
             debug_assert!(removed, "departing {id:?} missing from placement state");
@@ -402,7 +543,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         self.sync_reservation();
     }
 
-    fn on_idle(&mut self, hv: &mut dyn Hypervisor, id: VmId) {
+    fn on_idle(&mut self, id: VmId) {
         if !self.scheduler.dynamic() {
             return;
         }
@@ -418,16 +559,11 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         let removed = self.state.as_mut().unwrap().remove(core, class);
         debug_assert!(removed, "idling {id:?} missing from placement state");
         self.sync_reservation();
-        // Alg. 1 lines 6-7. Pin failures must not abort scheduling: log,
-        // count, carry on — the VM keeps its old pinning and is retried
-        // next Tick.
-        if let Err(e) = self.actuator.pin(hv, id, IDLE_CORE) {
-            self.pin_failures += 1;
-            log::warn!("pin {id:?} -> idle core failed: {e}");
-        }
+        // Alg. 1 lines 6-7: the park is a command; the backend enforces.
+        self.queue.park(id);
     }
 
-    fn on_wake(&mut self, hv: &mut dyn Hypervisor, id: VmId) {
+    fn on_wake(&mut self, id: VmId) {
         if !self.scheduler.dynamic() {
             return;
         }
@@ -447,16 +583,15 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
             .select_pinning(self.state.as_ref().unwrap(), class);
         self.state.as_mut().unwrap().place(core, class);
         self.residents.get_mut(&id).unwrap().core = core;
-        if let Err(e) = self.actuator.pin(hv, id, core) {
-            self.pin_failures += 1;
-            log::warn!("pin {id:?} -> core {core} failed: {e}");
-        }
+        self.queue.pin(id, core);
     }
 
     /// The periodic pass: park idle workloads, then re-pin every running
     /// workload through `SelectPinning` — each as a remove+place delta on
     /// the long-lived state, in stable (VmId) order so decisions are
-    /// deterministic.
+    /// deterministic. The decisions leave as one
+    /// [`ActuationCommand::ApplyPlan`] (plus a park per idle workload);
+    /// enforcement is the backend's problem.
     ///
     /// Deliberate divergence from the paper's Algorithm 1: the paper
     /// re-derives the whole placement from an empty state (VM k's
@@ -467,7 +602,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
     /// low-index cores, so the consolidation behaviour the paper
     /// evaluates is preserved — that trade is the point of the
     /// event-driven redesign (no O(members²) rebuild per cycle).
-    fn on_tick(&mut self, hv: &mut dyn Hypervisor) -> Result<()> {
+    fn on_tick(&mut self, hv: &dyn Hypervisor) -> Result<()> {
         // The Tick owns the interval clock, so every entry point
         // (`step`'s gate, `run_cycle`, a directly-injected event) resets
         // it consistently and cycles never double-run on one tick.
@@ -487,10 +622,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
             .collect();
         for id in idle_ids {
             self.residents.get_mut(&id).unwrap().core = IDLE_CORE;
-            if let Err(e) = self.actuator.pin(hv, id, IDLE_CORE) {
-                self.pin_failures += 1;
-                log::warn!("pin {id:?} -> idle core failed: {e}");
-            }
+            self.queue.park(id);
         }
 
         let running_ids: Vec<VmId> = self
@@ -499,6 +631,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
             .filter(|(_, r)| !r.idle)
             .map(|(&id, _)| id)
             .collect();
+        let mut plan = Vec::with_capacity(running_ids.len());
         for id in running_ids {
             let (class, old_core) = {
                 let r = &self.residents[&id];
@@ -511,10 +644,10 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
                 .select_pinning(self.state.as_ref().unwrap(), class);
             self.state.as_mut().unwrap().place(core, class);
             self.residents.get_mut(&id).unwrap().core = core;
-            if let Err(e) = self.actuator.pin(hv, id, core) {
-                self.pin_failures += 1;
-                log::warn!("pin {id:?} -> core {core} failed: {e}");
-            }
+            plan.push((id, core));
+        }
+        if !plan.is_empty() {
+            self.queue.push(ActuationCommand::ApplyPlan(plan));
         }
         debug_assert!(
             self.state_matches_rebuild(1e-6),
@@ -566,6 +699,7 @@ mod tests {
     use crate::config::Config;
     use crate::hostsim::{ActivityModel, SimEngine, Vm, VmState};
     use crate::profiling::ProfileBank;
+    use crate::vmcd::actuator::Deferred;
     use crate::vmcd::scheduler;
     use crate::workloads::WorkloadClass;
 
@@ -770,10 +904,101 @@ mod tests {
             eng.step();
         }
         daemon.run_cycle(&mut eng).unwrap();
-        // Two adoptions at least; Ticks are not counted as events.
+        // Two adoptions at least; Ticks and actuation completions are
+        // not counted as lifecycle events.
         assert!(daemon.events_handled >= 2, "{}", daemon.events_handled);
         let before = daemon.events_handled;
         daemon.run_cycle(&mut eng).unwrap();
         assert_eq!(daemon.events_handled, before, "steady state emits no events");
+    }
+
+    #[test]
+    fn completions_track_observed_pinning() {
+        let vms = vec![
+            resident(0, WorkloadClass::Blackscholes, true),
+            resident(1, WorkloadClass::LampLight, false), // idle
+        ];
+        let (mut eng, mut daemon) = setup(Policy::Ras, vms);
+        for _ in 0..12 {
+            eng.step();
+        }
+        daemon.run_cycle(&mut eng).unwrap();
+        // Inline enforces within the pass: the park and the re-pin plan
+        // complete immediately and the observed map matches the intent.
+        assert!(daemon.completions >= 2, "{}", daemon.completions);
+        assert_eq!(daemon.observed_pinning(VmId(1)), Some(IDLE_CORE));
+        assert_eq!(
+            daemon.observed_pinning(VmId(0)),
+            daemon.intended_pinning(VmId(0))
+        );
+        assert_eq!(daemon.in_flight(), 0);
+        assert!(daemon.commands_issued() >= 2);
+        assert!(daemon.pin_calls() + daemon.pin_noops() >= 2);
+    }
+
+    #[test]
+    fn deferred_actuation_lags_then_reconciles() {
+        // The tentpole behaviour: under Deferred{latency 2} the decision
+        // (intent) is immediate but enforcement lands ticks later, so
+        // the engine runs unpinned in between; once the queue drains the
+        // observed pinning equals the intent.
+        let mut arriving = Vm::new(
+            VmId(0),
+            WorkloadClass::Jacobi,
+            0.0,
+            ActivityModel::AlwaysOn,
+        );
+        arriving.state = VmState::NotArrived;
+        let (mut eng, mut daemon) = setup(Policy::Ias, vec![arriving]);
+        daemon.set_actuation(Box::new(Deferred::new(2, 0)));
+        assert_eq!(daemon.actuation_name(), "deferred");
+        let ids = eng.process_arrivals();
+        assert_eq!(ids, vec![VmId(0)]);
+        daemon.on_arrival(&mut eng, VmId(0)).unwrap();
+        // Intent recorded; enforcement in flight; engine untouched.
+        let intent = daemon.intended_pinning(VmId(0)).unwrap();
+        assert_eq!(eng.vms[0].pinned, None, "deferred pin must not land yet");
+        assert!(daemon.in_flight() >= 1);
+        assert_eq!(daemon.observed_pinning(VmId(0)), None);
+        // Step until the backend drains (the first step also runs a
+        // Tick, whose re-pin plan joins the staged queue).
+        let mut drained = false;
+        for _ in 0..10 {
+            daemon.step(&mut eng).unwrap();
+            eng.step();
+            if daemon.in_flight() == 0 {
+                drained = true;
+                break;
+            }
+        }
+        assert!(drained, "deferred queue never drained");
+        let final_intent = daemon.intended_pinning(VmId(0)).unwrap();
+        assert_eq!(eng.vms[0].pinned, Some(final_intent));
+        assert_eq!(daemon.observed_pinning(VmId(0)), Some(final_intent));
+        assert!(daemon.completions >= 1);
+        // A lone VM on an empty host decides the same core every pass,
+        // so the Tick's re-pin confirms rather than moves the arrival
+        // decision.
+        assert_eq!(final_intent, intent);
+    }
+
+    #[test]
+    fn deferred_budget_spreads_a_tick_over_steps() {
+        // Six running residents re-pinned by the first Tick, budget 2:
+        // the plan takes 3 steps to enforce.
+        let vms: Vec<Vm> = (0..6)
+            .map(|i| resident(i, WorkloadClass::Hadoop, true))
+            .collect();
+        let (mut eng, mut daemon) = setup(Policy::Ras, vms);
+        daemon.set_actuation(Box::new(Deferred::new(0, 2)));
+        for _ in 0..12 {
+            eng.step();
+        }
+        daemon.step(&mut eng).unwrap(); // adopts 6, Ticks, enforces 2
+        assert_eq!(daemon.in_flight(), 4);
+        daemon.step(&mut eng).unwrap();
+        assert_eq!(daemon.in_flight(), 2);
+        daemon.step(&mut eng).unwrap();
+        assert_eq!(daemon.in_flight(), 0);
     }
 }

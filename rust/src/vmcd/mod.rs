@@ -1,21 +1,30 @@
 //! VMCd — the VM Coordinator daemon (paper §III, Fig. 1).
 //!
-//! Three modules, mirroring the paper's architecture:
+//! Four modules, mirroring the paper's architecture with decision and
+//! actuation decoupled:
+//!
 //! * [`monitor`] — polls the hypervisor for per-VM resource usage; derives
 //!   memory bandwidth from the synthetic perf counters (Table I);
-//! * [`actuator`] — applies CPU-pinning decisions through the hypervisor
-//!   (the libvirt-API abstraction);
 //! * [`scheduler`] — the placement policies: RRS (baseline), CAS, RAS
 //!   (Alg. 2), IAS (Alg. 3);
 //! * [`daemon`] — the General Scheduler loop (Alg. 1), event-driven: one
 //!   long-lived placement state mutated through [`daemon::SchedEvent`]s
 //!   (arrivals, departures, idle/wake transitions, periodic Tick) with
-//!   the monitor polled once per step and diffed into events.
+//!   the monitor polled once per step and diffed into events. Handlers
+//!   *decide* only: every pinning consequence leaves as a typed
+//!   [`actuator::ActuationCommand`];
+//! * [`actuator`] — the enforcement side (the libvirt-API abstraction):
+//!   an [`actuator::ActuationQueue`] of commands drained by a pluggable
+//!   [`actuator::Actuate`] backend — synchronous
+//!   ([`actuator::Inline`]), lagged/budgeted ([`actuator::Deferred`]),
+//!   or worker-threaded over mpsc ([`actuator::Threaded`]) — with
+//!   completions fed back as `SchedEvent::ActuationComplete`.
 
 pub mod actuator;
 pub mod daemon;
 pub mod monitor;
 pub mod scheduler;
 
+pub use actuator::{Actuate, ActuationCommand, ActuationQueue, ActuationSpec};
 pub use daemon::{Daemon, SchedEvent};
 pub use monitor::{DomainView, Monitor, MonitorSnapshot};

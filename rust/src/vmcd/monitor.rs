@@ -5,6 +5,12 @@
 //! from the hardware counter deltas of Table I (`UNC_QMC_NORMAL_READS`,
 //! `UNC_QMC_NORMAL_WRITES`), following A-DRM [4] — the same two-source
 //! design as the paper's monitor.
+//!
+//! The monitor is the *read* side of the actuation pipeline: it only ever
+//! sees `&dyn Hypervisor`, while enforcement flows through the
+//! [`actuator`](super::actuator) backends. Under a lagging backend the
+//! [`DomainView::pinned`] it reports is the *enacted* pinning, which can
+//! trail the daemon's intent until the command queue drains.
 
 use crate::hostsim::counters::{bandwidth_fraction, PerfCounters};
 use crate::hostsim::{Hypervisor, VmId};

@@ -513,6 +513,146 @@ fn prop_bus_routing_matches_direct_host_calls() {
 }
 
 #[test]
+fn prop_inline_and_zero_lag_deferred_are_bit_identical() {
+    // The actuation-API acceptance: a Deferred backend with zero latency
+    // and unlimited budget enforces every command inside the same daemon
+    // step as Inline does, so twin hosts driven through well over 100
+    // mixed events (arrivals, departures, idle/wake churn, Ticks) must
+    // never diverge by a single pin.
+    use vmcd::hostsim::{ActivityModel, SimEngine, Vm, VmId};
+    use vmcd::vmcd::{ActuationSpec, Daemon};
+
+    let bank = testkit::shared_bank();
+    let cfg = testkit::quiet_config();
+
+    check("inline-vs-deferred0", 3, |rng| {
+        let mut vms = Vec::new();
+        for i in 0..12u32 {
+            // The on/off third is pinned to a service class (it never
+            // finishes), so the idle/wake churn keeps flowing for the
+            // whole window and the 100-event floor below always holds.
+            let (activity, class) = match i % 3 {
+                0 => (ActivityModel::AlwaysOn, *rng.pick(&ALL_CLASSES)),
+                1 => (
+                    ActivityModel::OnOff {
+                        period: 40.0 + rng.range(0.0, 40.0),
+                        duty: 0.5,
+                        phase: rng.range(0.0, 40.0),
+                    },
+                    WorkloadClass::LampHeavy,
+                ),
+                _ => (
+                    ActivityModel::Windows(vec![(0.0, 120.0 + rng.range(0.0, 200.0))]),
+                    *rng.pick(&ALL_CLASSES),
+                ),
+            };
+            vms.push(Vm::new(VmId(i), class, rng.range(0.0, 120.0), activity));
+        }
+        let build = |actuation: ActuationSpec| {
+            let sched = scheduler::build(Policy::Ias, bank, cfg.sched.ras_threshold, None);
+            let daemon = Daemon::with_actuation(cfg.sched.clone(), sched, actuation.build());
+            (SimEngine::new(cfg.clone(), vms.clone()), daemon)
+        };
+        let (mut eng_a, mut inline) = build(ActuationSpec::Inline);
+        let (mut eng_b, mut deferred) = build(ActuationSpec::Deferred {
+            latency_ticks: 0,
+            budget_per_tick: 0,
+        });
+        for _ in 0..1200 {
+            for id in eng_a.process_arrivals() {
+                inline.on_arrival(&mut eng_a, id).unwrap();
+            }
+            for id in eng_b.process_arrivals() {
+                deferred.on_arrival(&mut eng_b, id).unwrap();
+            }
+            inline.step(&mut eng_a).unwrap();
+            deferred.step(&mut eng_b).unwrap();
+            eng_a.step();
+            eng_b.step();
+            let pins_a: Vec<_> = eng_a.vms.iter().map(|v| (v.id, v.pinned)).collect();
+            let pins_b: Vec<_> = eng_b.vms.iter().map(|v| (v.id, v.pinned)).collect();
+            assert_eq!(pins_a, pins_b, "pinning diverged at t={}", eng_a.t);
+            assert_eq!(deferred.in_flight(), 0, "zero-lag must drain every step");
+        }
+        assert!(
+            inline.events_handled >= 100,
+            "churn too quiet to prove the actuation API: {} events",
+            inline.events_handled
+        );
+        assert_eq!(inline.events_handled, deferred.events_handled);
+        let (a, b) = (
+            inline.placement_state().unwrap(),
+            deferred.placement_state().unwrap(),
+        );
+        assert_eq!(a.cores, b.cores);
+        assert_eq!(a.allowed, b.allowed);
+    });
+}
+
+#[test]
+fn prop_deferred_lag_reconciles_to_intent_once_drained() {
+    // The convergence half of the actuation satellite: with lag > 0 the
+    // enacted pinning trails the daemon's intent, but commands are FIFO,
+    // so the moment the backend drains, every running resident sits on
+    // exactly its intended core and the observed map agrees.
+    use vmcd::hostsim::{ActivityModel, SimEngine, Vm, VmId, VmState};
+    use vmcd::vmcd::actuator::Deferred;
+    use vmcd::vmcd::Daemon;
+
+    let bank = testkit::shared_bank();
+    let cfg = testkit::quiet_config();
+
+    check("deferred-lag-convergence", 6, |rng| {
+        let lag = 1 + rng.below(5) as u64;
+        let budget = [0usize, 2, 8][rng.below(3)];
+        let mut vms = Vec::new();
+        for i in 0..(6 + rng.below(6) as u32) {
+            vms.push(Vm::new(
+                VmId(i),
+                *rng.pick(&ALL_CLASSES),
+                rng.range(0.0, 60.0),
+                ActivityModel::AlwaysOn,
+            ));
+        }
+        let sched = scheduler::build(Policy::Ras, bank, cfg.sched.ras_threshold, None);
+        let mut daemon = Daemon::with_actuation(
+            cfg.sched.clone(),
+            sched,
+            Box::new(Deferred::new(lag, budget)),
+        );
+        let mut eng = SimEngine::new(cfg.clone(), vms);
+        let mut drained_after_churn = false;
+        for step in 0..600 {
+            for id in eng.process_arrivals() {
+                daemon.on_arrival(&mut eng, id).unwrap();
+            }
+            daemon.step(&mut eng).unwrap();
+            eng.step();
+            // Let the arrival window pass before looking for a drained
+            // instant (lag guarantees in-flight commands early on).
+            if step > 80 && daemon.in_flight() == 0 {
+                drained_after_churn = true;
+                break;
+            }
+        }
+        assert!(drained_after_churn, "deferred backend never drained");
+        for vm in &eng.vms {
+            if vm.state != VmState::Running {
+                continue;
+            }
+            let intent = daemon.intended_pinning(vm.id);
+            assert!(intent.is_some(), "running {:?} untracked", vm.id);
+            assert_eq!(
+                vm.pinned, intent,
+                "enacted pin must reconcile to intent for {:?} (lag {lag}, budget {budget})",
+                vm.id
+            );
+            assert_eq!(daemon.observed_pinning(vm.id), intent);
+        }
+    });
+}
+
+#[test]
 fn prop_placement_state_accounting() {
     let bank = testkit::shared_bank();
     check("placement-accounting", default_cases(), |rng| {
