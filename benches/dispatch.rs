@@ -1,0 +1,193 @@
+//! Dispatch ranking: per-host scalar pick loop vs one batched
+//! `ArrivalPolicy::rank` call over the flat SoA `SummaryMatrix`.
+//!
+//! The scalar side is the frozen pre-matrix path (`dispatch::scalar`):
+//! one full `Vec<HostSummary>` scan per arrival, with the bus's live
+//! per-pick updates (`resident += 1`, `est_cpu_load += demand[cpu]`)
+//! replayed between picks. The batched side ranks the whole burst in
+//! one `rank` call over dense f64 columns — the cache-friendly layout
+//! the score-matrix redesign buys. Both sides must agree pick-for-pick
+//! (asserted here; bit-for-bit gated by the parity proptest).
+//!
+//! Emits `BENCH_dispatch.json` so the dispatch hot path has a recorded
+//! perf trajectory (the acceptance bar: batched beats scalar at 1024
+//! hosts, burst ≥ 8).
+
+mod common;
+
+use vmcd::bench::Bench;
+use vmcd::cluster::dispatch::{scalar, ArrivalBatch, Dispatcher};
+use vmcd::cluster::{HostSummary, SummaryMatrix};
+use vmcd::profiling::ProfileBank;
+use vmcd::util::json::Json;
+use vmcd::util::rng::Rng;
+use vmcd::vmcd::scheduler::ScoreBuf;
+use vmcd::workloads::{WorkloadClass, ALL_CLASSES};
+
+const HOST_CORES: usize = 12;
+
+/// Random published summaries: what the last refresh left on the bus.
+fn random_summaries(hosts: usize, rng: &mut Rng) -> Vec<HostSummary> {
+    (0..hosts)
+        .map(|_| HostSummary {
+            resident: rng.below(8),
+            busy_cores: rng.below(HOST_CORES + 1),
+            max_wi: rng.range(0.0, 3.0),
+            est_cpu_load: rng.range(0.0, HOST_CORES as f64),
+            ..HostSummary::default()
+        })
+        .collect()
+}
+
+/// One scalar pick per arrival with the bus's live updates in between —
+/// the per-host dispatch loop the batched path replaces.
+fn scalar_drive(
+    d: Dispatcher,
+    live: &mut [HostSummary],
+    classes: &[WorkloadClass],
+    bank: &ProfileBank,
+    rng: &mut Rng,
+    picks: &mut Vec<usize>,
+) {
+    picks.clear();
+    let mut cursor = 0usize;
+    for &class in classes {
+        let h = match d {
+            Dispatcher::RoundRobin => scalar::round_robin(&mut cursor, live),
+            Dispatcher::LeastLoaded => scalar::least_loaded(live),
+            Dispatcher::LowestInterference => scalar::lowest_interference(live),
+            Dispatcher::Random => scalar::random(live, rng),
+            _ => unreachable!("no scalar counterpart for {}", d.name()),
+        };
+        live[h].resident += 1;
+        live[h].est_cpu_load += bank.u[class.index()][0];
+        picks.push(h);
+    }
+}
+
+/// Undo `scalar_drive`'s live updates so the next iteration starts from
+/// the same summaries without re-cloning the whole vector.
+fn scalar_undo(
+    live: &mut [HostSummary],
+    classes: &[WorkloadClass],
+    bank: &ProfileBank,
+    picks: &[usize],
+) {
+    for (&h, &class) in picks.iter().zip(classes) {
+        live[h].resident -= 1;
+        live[h].est_cpu_load -= bank.u[class.index()][0];
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let quick = std::env::var("VMCD_BENCH_QUICK").as_deref() == Ok("1");
+    let mut b = Bench::new();
+    let mut rows: Vec<Json> = Vec::new();
+
+    for &hosts in &[256usize, 1024, 4096] {
+        for &burst in &[1usize, 8, 32] {
+            b.section(&format!("{hosts} hosts × burst {burst}"));
+            let mut rng = Rng::new(42);
+            let summaries = random_summaries(hosts, &mut rng);
+            let classes: Vec<WorkloadClass> =
+                (0..burst).map(|_| *rng.pick(&ALL_CLASSES)).collect();
+            let matrix = SummaryMatrix::from_summaries(&summaries, HOST_CORES);
+            let mut batch = ArrivalBatch::default();
+            for &class in &classes {
+                batch.push_class(class, &bank);
+            }
+
+            for d in [
+                Dispatcher::RoundRobin,
+                Dispatcher::LeastLoaded,
+                Dispatcher::LowestInterference,
+                Dispatcher::Random,
+            ] {
+                // Agreement check first: same seeds, identical picks.
+                let mut want = Vec::new();
+                let mut live = summaries.clone();
+                scalar_drive(d, &mut live, &classes, &bank, &mut Rng::new(7), &mut want);
+                let mut policy = d.build();
+                let mut scratch = ScoreBuf::default();
+                let mut got = Vec::new();
+                policy.rank(&matrix, &batch, &mut scratch, &mut Rng::new(7), &mut got);
+                assert_eq!(got, want, "{} batched != scalar", d.name());
+
+                let mut live = summaries.clone();
+                let mut picks = Vec::with_capacity(burst);
+                let mut rng_s = Rng::new(7);
+                let scalar_r = b
+                    .run(&format!("scalar/{}/h{hosts}/b{burst}", d.name()), || {
+                        scalar_drive(d, &mut live, &classes, &bank, &mut rng_s, &mut picks);
+                        std::hint::black_box(&picks);
+                        scalar_undo(&mut live, &classes, &bank, &picks);
+                    })
+                    .clone();
+
+                let mut policy = d.build();
+                let mut rng_b = Rng::new(7);
+                let batched_r = b
+                    .run(&format!("batched/{}/h{hosts}/b{burst}", d.name()), || {
+                        policy.rank(&matrix, &batch, &mut scratch, &mut rng_b, &mut got);
+                        std::hint::black_box(&got);
+                    })
+                    .clone();
+
+                rows.push(Json::from_pairs(vec![
+                    ("policy", Json::Str(d.name().into())),
+                    ("hosts", Json::Num(hosts as f64)),
+                    ("burst", Json::Num(burst as f64)),
+                    ("scalar_ms", Json::Num(scalar_r.mean_ms())),
+                    ("scalar_p50_ms", Json::Num(scalar_r.p50_ms())),
+                    ("batched_ms", Json::Num(batched_r.mean_ms())),
+                    ("batched_p50_ms", Json::Num(batched_r.p50_ms())),
+                    (
+                        "speedup",
+                        Json::Num(scalar_r.mean_ms() / batched_r.mean_ms().max(1e-12)),
+                    ),
+                ]));
+            }
+
+            // Vector policies have no scalar counterpart: record the
+            // batched cost so their trajectory starts here too.
+            for d in [
+                Dispatcher::DotProduct,
+                Dispatcher::CosineSimilarity,
+                Dispatcher::NormBasedGreedy,
+            ] {
+                let mut policy = d.build();
+                let mut scratch = ScoreBuf::default();
+                let mut out = Vec::with_capacity(burst);
+                let mut rng_v = Rng::new(7);
+                let r = b
+                    .run(&format!("batched/{}/h{hosts}/b{burst}", d.name()), || {
+                        policy.rank(&matrix, &batch, &mut scratch, &mut rng_v, &mut out);
+                        std::hint::black_box(&out);
+                    })
+                    .clone();
+                rows.push(Json::from_pairs(vec![
+                    ("policy", Json::Str(d.name().into())),
+                    ("hosts", Json::Num(hosts as f64)),
+                    ("burst", Json::Num(burst as f64)),
+                    ("scalar_ms", Json::Null),
+                    ("scalar_p50_ms", Json::Null),
+                    ("batched_ms", Json::Num(r.mean_ms())),
+                    ("batched_p50_ms", Json::Num(r.p50_ms())),
+                    ("speedup", Json::Null),
+                ]));
+            }
+        }
+    }
+
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("dispatch".into())),
+        ("host_cores", Json::Num(HOST_CORES as f64)),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_dispatch.json", doc.pretty() + "\n")?;
+    println!("\nwrote BENCH_dispatch.json ({} rows)", doc.field("rows")?.as_arr().unwrap().len());
+    Ok(())
+}

@@ -64,14 +64,14 @@ fn main() -> anyhow::Result<()> {
         let fast = native.score(&state, cand, &bank, 1.2, false);
         let slow = reference_scores(&state, cand, &bank, 1.2, false);
         for core in 0..cfg.host.cores {
-            assert!((fast.ol_after[core] - slow.ol_after[core]).abs() < 1e-9);
-            assert!((fast.ic_after[core] - slow.ic_after[core]).abs() < 1e-9);
+            assert!((fast.ol_after()[core] - slow.ol_after()[core]).abs() < 1e-9);
+            assert!((fast.ic_after()[core] - slow.ic_after()[core]).abs() < 1e-9);
         }
         if let Some(xla) = xla.as_mut() {
             let x = xla.score(&state, cand, &bank, 1.2, false);
             for core in 0..cfg.host.cores {
-                assert!((fast.ol_after[core] - x.ol_after[core]).abs() < 1e-3);
-                assert!((fast.ic_after[core] - x.ic_after[core]).abs() < 1e-3);
+                assert!((fast.ol_after()[core] - x.ol_after()[core]).abs() < 1e-3);
+                assert!((fast.ic_after()[core] - x.ic_after()[core]).abs() < 1e-3);
             }
         }
     }

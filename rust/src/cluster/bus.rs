@@ -27,14 +27,15 @@
 //! stepping the inboxes on the persistent shard pool is bit-identical to
 //! single-threaded execution — see [`super::pool`].
 
-use super::dispatch::ArrivalPolicy;
+use super::dispatch::{ArrivalBatch, ArrivalPolicy};
 use super::host::HostHandle;
 use super::migration::{Migration, MigrationModel};
 use crate::hostsim::{Vm, VmId, VmState};
 use crate::profiling::ProfileBank;
 use crate::util::rng::Rng;
 use crate::vmcd::daemon::SchedEvent;
-use crate::workloads::WorkloadClass;
+use crate::vmcd::scheduler::ScoreBuf;
+use crate::workloads::{MetricVec, WorkloadClass, NUM_METRICS};
 use anyhow::Result;
 use std::collections::VecDeque;
 
@@ -103,6 +104,163 @@ pub struct HostSummary {
     pub est_cpu_load: f64,
 }
 
+/// [`SummaryMatrix`] lane indices into its backing [`ScoreBuf`].
+const COL_RESIDENT: usize = 0;
+const COL_BUSY_CORES: usize = 1;
+const COL_EST_CPU: usize = 2;
+const COL_MAX_WI: usize = 3;
+const COL_LOAD0: usize = 4;
+const MATRIX_LANES: usize = COL_LOAD0 + NUM_METRICS;
+
+/// The flat SoA mirror of the published [`HostSummary`]s: one dense
+/// f64 column per summary fact (residents, busy cores, estimated CPU
+/// load, worst-core interference) plus one per-resource load column
+/// per profiled metric, all over one contiguous [`ScoreBuf`]. This is
+/// what [`crate::cluster::dispatch::ArrivalPolicy::rank`] scores a
+/// whole arrival batch against — columnar reads over thousands of
+/// hosts instead of striding through a `Vec<HostSummary>` of
+/// pointer-carrying structs.
+///
+/// The bus keeps the matrix **live within a tick**: routing an arrival
+/// bumps the destination's resident and load columns (see
+/// [`Self::note_arrival`]) so later same-tick ranking sees the pick,
+/// exactly like the scalar summaries. `busy_cores`/`max_wi` are
+/// placement-state facts only the host daemons know; they refresh at
+/// the next tick.
+#[derive(Debug, Clone, Default)]
+pub struct SummaryMatrix {
+    buf: ScoreBuf,
+    host_cores: usize,
+}
+
+impl SummaryMatrix {
+    pub fn new(hosts: usize, host_cores: usize) -> SummaryMatrix {
+        let mut m = SummaryMatrix {
+            buf: ScoreBuf::default(),
+            host_cores,
+        };
+        m.buf.reset(MATRIX_LANES, hosts);
+        m
+    }
+
+    /// Build a bank-less matrix straight from summaries: the CPU load
+    /// column is the published `est_cpu_load`, the other resource
+    /// columns 0 (no bank to derive them from). The scalar
+    /// `ArrivalPolicy::pick` shim uses this.
+    pub fn from_summaries(summaries: &[HostSummary], host_cores: usize) -> SummaryMatrix {
+        let mut m = SummaryMatrix::new(summaries.len(), host_cores);
+        m.rebuild_basic(summaries);
+        m
+    }
+
+    pub fn hosts(&self) -> usize {
+        self.buf.width()
+    }
+
+    /// Physical cores per host — the CPU column's capacity.
+    pub fn host_cores(&self) -> usize {
+        self.host_cores
+    }
+
+    /// Capacity of one metric column: `host_cores` for CPU (loads are
+    /// in units of cores), 1.0 for the fractional metrics.
+    pub fn cap(&self, metric: usize) -> f64 {
+        if metric == 0 {
+            self.host_cores as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// Resident-VM counts, as a dense f64 column.
+    pub fn resident(&self) -> &[f64] {
+        self.buf.lane(COL_RESIDENT)
+    }
+
+    /// Cores currently holding a running VM.
+    pub fn busy_cores(&self) -> &[f64] {
+        self.buf.lane(COL_BUSY_CORES)
+    }
+
+    /// Profile-estimated CPU load (identical to the CPU load column
+    /// after a bank-aware rebuild).
+    pub fn est_cpu_load(&self) -> &[f64] {
+        self.buf.lane(COL_EST_CPU)
+    }
+
+    /// Worst per-core workload interference (Eq. 3/4).
+    pub fn max_wi(&self) -> &[f64] {
+        self.buf.lane(COL_MAX_WI)
+    }
+
+    /// One per-resource load column (Σ `U[class][metric]` over the
+    /// host's running VMs).
+    pub fn load(&self, metric: usize) -> &[f64] {
+        self.buf.lane(COL_LOAD0 + metric)
+    }
+
+    /// Free capacity of `host` on `metric`, clamped at 0.
+    pub fn free(&self, host: usize, metric: usize) -> f64 {
+        (self.cap(metric) - self.load(metric)[host]).max(0.0)
+    }
+
+    /// Rebuild every column from summaries, deriving the per-resource
+    /// load columns from the running classes' profile rows.
+    pub fn rebuild(&mut self, summaries: &[HostSummary], bank: &ProfileBank) {
+        self.buf.reset(MATRIX_LANES, summaries.len());
+        for (h, s) in summaries.iter().enumerate() {
+            self.set_basic(h, s);
+            for &(_, class) in &s.running {
+                let u = bank.u[class.index()];
+                for m in 0..NUM_METRICS {
+                    self.buf.lane_mut(COL_LOAD0 + m)[h] += u[m];
+                }
+            }
+        }
+    }
+
+    /// Bank-less rebuild: load columns carry only the published
+    /// `est_cpu_load` on the CPU lane.
+    pub fn rebuild_basic(&mut self, summaries: &[HostSummary]) {
+        self.buf.reset(MATRIX_LANES, summaries.len());
+        for (h, s) in summaries.iter().enumerate() {
+            self.set_basic(h, s);
+            self.buf.lane_mut(COL_LOAD0)[h] = s.est_cpu_load;
+        }
+    }
+
+    fn set_basic(&mut self, h: usize, s: &HostSummary) {
+        self.buf.lane_mut(COL_RESIDENT)[h] = s.resident as f64;
+        self.buf.lane_mut(COL_BUSY_CORES)[h] = s.busy_cores as f64;
+        self.buf.lane_mut(COL_EST_CPU)[h] = s.est_cpu_load;
+        self.buf.lane_mut(COL_MAX_WI)[h] = s.max_wi;
+    }
+
+    /// Live within-tick update for a routed arrival: one more resident,
+    /// its demand charged to the load (and estimated-CPU) columns.
+    pub fn note_arrival(&mut self, host: usize, demand: &MetricVec) {
+        self.buf.lane_mut(COL_RESIDENT)[host] += 1.0;
+        self.buf.lane_mut(COL_EST_CPU)[host] += demand[0];
+        for (m, &d) in demand.iter().enumerate() {
+            self.buf.lane_mut(COL_LOAD0 + m)[host] += d;
+        }
+    }
+
+    /// Live within-tick update for a departure: one fewer resident.
+    /// The load columns catch up at the next bank-aware rebuild (the
+    /// departing VM's class is not known here).
+    pub fn note_departure(&mut self, host: usize) {
+        let r = &mut self.buf.lane_mut(COL_RESIDENT)[host];
+        *r = (*r - 1.0).max(0.0);
+    }
+
+    /// Live within-tick update for a migrated-in VM: one more resident
+    /// (loads catch up at the next rebuild, mirroring the summaries).
+    pub fn note_transfer_in(&mut self, host: usize) {
+        self.buf.lane_mut(COL_RESIDENT)[host] += 1.0;
+    }
+}
+
 /// What one host reports back after draining its inbox and stepping.
 #[derive(Debug, Clone)]
 pub struct TickReport {
@@ -133,6 +291,15 @@ pub struct EventBus {
     inboxes: Vec<Vec<HostEvent>>,
     inflight: Vec<Migration>,
     summaries: Vec<HostSummary>,
+    /// Columnar mirror of `summaries`, kept in lockstep (rebuilt on
+    /// refresh/prime, live-bumped as events route) — what batched
+    /// ranking reads.
+    matrix: SummaryMatrix,
+    /// Reusable buffers for the batched ranking pass, so a steady-state
+    /// route() allocates nothing.
+    score_buf: ScoreBuf,
+    batch: ArrivalBatch,
+    picks: Vec<usize>,
     model: MigrationModel,
     /// Physical cores per host (destination-business normaliser for the
     /// migration abort draw).
@@ -147,6 +314,10 @@ impl EventBus {
             inboxes: (0..hosts).map(|_| Vec::new()).collect(),
             inflight: Vec::new(),
             summaries: vec![HostSummary::default(); hosts],
+            matrix: SummaryMatrix::new(hosts, host_cores),
+            score_buf: ScoreBuf::default(),
+            batch: ArrivalBatch::default(),
+            picks: Vec::new(),
             model,
             host_cores,
             stats: BusStats::default(),
@@ -163,6 +334,12 @@ impl EventBus {
         &self.summaries
     }
 
+    /// The columnar mirror of [`Self::summaries`] — the batched
+    /// ranking surface, kept in lockstep with the scalar summaries.
+    pub fn matrix(&self) -> &SummaryMatrix {
+        &self.matrix
+    }
+
     /// Seed the published summaries before the first tick (hosts built
     /// with pre-existing residents would otherwise all look empty to
     /// arrival policies until the first refresh). `est_cpu_load` stays
@@ -171,6 +348,7 @@ impl EventBus {
     pub fn prime(&mut self, summaries: Vec<HostSummary>) {
         debug_assert_eq!(summaries.len(), self.hosts());
         self.summaries = summaries;
+        self.matrix.rebuild_basic(&self.summaries);
     }
 
     /// Migration transfers currently in flight.
@@ -183,35 +361,53 @@ impl EventBus {
         self.queue.push_back(ev);
     }
 
-    /// Route every queued event into the per-host inboxes, in publish
-    /// order. Arrivals without a forced host ask `policy`; migrations
-    /// open their transfer window (network load on both ends now, the
-    /// move itself once [`Self::advance`] matures the transfer).
-    pub fn route(&mut self, policy: &mut dyn ArrivalPolicy, rng: &mut Rng) -> Result<()> {
+    /// Route every queued event into the per-host inboxes, preserving
+    /// publish-order semantics. Consecutive policy-routed arrivals
+    /// accumulate into one [`ArrivalBatch`] and go through a single
+    /// batched [`ArrivalPolicy::rank`] call over the live
+    /// [`SummaryMatrix`]; any other event (or a forced-host arrival) is
+    /// a barrier that flushes the pending batch first, so interleaved
+    /// departures/migrations see exactly the state they would have
+    /// under per-arrival dispatch. Migrations open their transfer
+    /// window (network load on both ends now, the move itself once
+    /// [`Self::advance`] matures the transfer).
+    ///
+    /// `bank` supplies each arrival's demand row: routing charges it to
+    /// the live summary/matrix columns (`est_cpu_load` included), so a
+    /// same-tick burst spreads by estimated load, not just residents.
+    pub fn route(
+        &mut self,
+        policy: &mut dyn ArrivalPolicy,
+        bank: &ProfileBank,
+        rng: &mut Rng,
+    ) -> Result<()> {
         let hosts = self.hosts();
+        let mut pending: Vec<Vm> = Vec::new();
         while let Some(ev) = self.queue.pop_front() {
             self.stats.events_routed += 1;
             match ev {
-                ClusterEvent::Arrival { vm, host } => {
-                    let h = match host {
-                        Some(h) => h,
-                        None => policy.pick(&self.summaries, rng),
-                    };
+                ClusterEvent::Arrival { vm, host: None } => pending.push(vm),
+                ClusterEvent::Arrival { vm, host: Some(h) } => {
+                    self.flush_batch(&mut pending, policy, bank, rng)?;
                     anyhow::ensure!(h < hosts, "arrival routed to host {h} of {hosts}");
-                    self.summaries[h].resident += 1;
+                    self.note_arrival(h, vm.class, bank);
                     self.inboxes[h].push(HostEvent::Arrival(vm));
                 }
                 ClusterEvent::Departure { host, vm } => {
+                    self.flush_batch(&mut pending, policy, bank, rng)?;
                     anyhow::ensure!(host < hosts, "departure on host {host} of {hosts}");
                     let s = &mut self.summaries[host];
                     s.resident = s.resident.saturating_sub(1);
+                    self.matrix.note_departure(host);
                     self.inboxes[host].push(HostEvent::Depart(vm));
                 }
                 ClusterEvent::Sched { host, ev } => {
+                    self.flush_batch(&mut pending, policy, bank, rng)?;
                     anyhow::ensure!(host < hosts, "sched event on host {host} of {hosts}");
                     self.inboxes[host].push(HostEvent::Sched(ev));
                 }
                 ClusterEvent::Migrate { vm, src, dst } => {
+                    self.flush_batch(&mut pending, policy, bank, rng)?;
                     anyhow::ensure!(src < hosts && dst < hosts, "migration {src}->{dst}");
                     anyhow::ensure!(src != dst, "migration to the same host {src}");
                     let dest_busy = self.summaries[dst].est_cpu_load / self.host_cores as f64;
@@ -223,7 +419,51 @@ impl EventBus {
                 }
             }
         }
+        self.flush_batch(&mut pending, policy, bank, rng)
+    }
+
+    /// Rank the pending arrival batch in one [`ArrivalPolicy::rank`]
+    /// call and route each VM to its ranked host, charging the live
+    /// summary and matrix columns per pick.
+    fn flush_batch(
+        &mut self,
+        pending: &mut Vec<Vm>,
+        policy: &mut dyn ArrivalPolicy,
+        bank: &ProfileBank,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let hosts = self.hosts();
+        self.batch.clear();
+        for vm in pending.iter() {
+            self.batch.push_class(vm.class, bank);
+        }
+        policy.rank(&self.matrix, &self.batch, &mut self.score_buf, rng, &mut self.picks);
+        anyhow::ensure!(
+            self.picks.len() == pending.len(),
+            "policy ranked {} of {} batched arrivals",
+            self.picks.len(),
+            pending.len()
+        );
+        for (i, vm) in pending.drain(..).enumerate() {
+            let h = self.picks[i];
+            anyhow::ensure!(h < hosts, "arrival routed to host {h} of {hosts}");
+            self.note_arrival(h, vm.class, bank);
+            self.inboxes[h].push(HostEvent::Arrival(vm));
+        }
         Ok(())
+    }
+
+    /// Charge one routed arrival to the live views: the scalar summary
+    /// (resident + profile-estimated CPU load) and every matrix column.
+    fn note_arrival(&mut self, host: usize, class: WorkloadClass, bank: &ProfileBank) {
+        let demand = bank.u[class.index()];
+        let s = &mut self.summaries[host];
+        s.resident += 1;
+        s.est_cpu_load += demand[0];
+        self.matrix.note_arrival(host, &demand);
     }
 
     /// Advance in-flight transfers by `dt`; matured ones are removed and
@@ -286,6 +526,8 @@ impl EventBus {
             self.summaries[m.from_host].resident =
                 self.summaries[m.from_host].resident.saturating_sub(1);
             self.summaries[m.to_host].resident += 1;
+            self.matrix.note_departure(m.from_host);
+            self.matrix.note_transfer_in(m.to_host);
             self.inboxes[m.to_host].push(HostEvent::MigrateIn {
                 vm,
                 pause_until: pause,
@@ -301,7 +543,9 @@ impl EventBus {
     }
 
     /// Publish fresh per-host summaries from the tick reports, deriving
-    /// the profile-estimated CPU load from `bank`.
+    /// the profile-estimated CPU load from `bank`, and rebuild the
+    /// columnar [`SummaryMatrix`] (per-resource load columns included)
+    /// in lockstep.
     pub fn refresh(&mut self, reports: &[TickReport], bank: &ProfileBank) {
         for (h, report) in reports.iter().enumerate() {
             let mut s = report.summary.clone();
@@ -312,6 +556,7 @@ impl EventBus {
                 .sum();
             self.summaries[h] = s;
         }
+        self.matrix.rebuild(&self.summaries, bank);
     }
 }
 
@@ -360,6 +605,7 @@ mod tests {
 
     #[test]
     fn arrivals_route_to_the_policy_pick_and_bump_summaries() {
+        let bank = testkit::shared_bank();
         let mut bus = EventBus::new(3, MigrationModel::default(), 12);
         let mut policy = Dispatcher::LeastLoaded.build();
         let mut rng = Rng::new(1);
@@ -369,7 +615,7 @@ mod tests {
                 host: None,
             });
         }
-        bus.route(policy.as_mut(), &mut rng).unwrap();
+        bus.route(policy.as_mut(), bank, &mut rng).unwrap();
         // Same-tick arrivals spread out because routing bumps the live
         // resident view between picks.
         let counts: Vec<usize> = bus.summaries().iter().map(|s| s.resident).collect();
@@ -381,6 +627,7 @@ mod tests {
 
     #[test]
     fn forced_host_and_bad_host_indices() {
+        let bank = testkit::shared_bank();
         let mut bus = EventBus::new(2, MigrationModel::default(), 12);
         let mut policy = Dispatcher::RoundRobin.build();
         let mut rng = Rng::new(1);
@@ -388,13 +635,13 @@ mod tests {
             vm: running_vm(0, WorkloadClass::Jacobi),
             host: Some(1),
         });
-        bus.route(policy.as_mut(), &mut rng).unwrap();
+        bus.route(policy.as_mut(), bank, &mut rng).unwrap();
         assert_eq!(bus.summaries()[1].resident, 1);
         bus.publish(ClusterEvent::Sched {
             host: 7,
             ev: SchedEvent::Tick,
         });
-        assert!(bus.route(policy.as_mut(), &mut rng).is_err());
+        assert!(bus.route(policy.as_mut(), bank, &mut rng).is_err());
     }
 
     #[test]
@@ -409,6 +656,7 @@ mod tests {
             transfer_net: 0.25,
             failure_prob: 0.0,
         };
+        let bank = testkit::shared_bank();
         let mut bus = EventBus::new(2, model.clone(), 12);
         let mut policy = Dispatcher::RoundRobin.build();
         let mut rng = Rng::new(9);
@@ -429,7 +677,7 @@ mod tests {
             src: 0,
             dst: 1,
         });
-        bus.route(policy.as_mut(), &mut rng).unwrap();
+        bus.route(policy.as_mut(), bank, &mut rng).unwrap();
         assert_eq!(bus.in_flight(), 1);
         assert_eq!(bus.stats.migrations_started, 1);
 
@@ -487,6 +735,7 @@ mod tests {
             transfer_net: 0.25,
             failure_prob: 0.0,
         };
+        let bank = testkit::shared_bank();
         let mut bus = EventBus::new(2, model, 12);
         let mut policy = Dispatcher::RoundRobin.build();
         let mut rng = Rng::new(3);
@@ -495,14 +744,14 @@ mod tests {
             src: 0,
             dst: 1,
         });
-        bus.route(policy.as_mut(), &mut rng).unwrap();
+        bus.route(policy.as_mut(), bank, &mut rng).unwrap();
         let _ = bus.take_inboxes();
         // Next tick: the teardown lands just as the transfer matures.
         bus.publish(ClusterEvent::Departure {
             host: 0,
             vm: VmId(1),
         });
-        bus.route(policy.as_mut(), &mut rng).unwrap();
+        bus.route(policy.as_mut(), bank, &mut rng).unwrap();
         let matured = bus.advance(1.0);
         assert_eq!(matured.len(), 1);
         let mut vm = running_vm(1, WorkloadClass::Hadoop);
@@ -524,6 +773,7 @@ mod tests {
             transfer_net: 0.25,
             failure_prob: 1.0,
         };
+        let bank = testkit::shared_bank();
         let mut bus = EventBus::new(2, model, 12);
         let mut policy = Dispatcher::RoundRobin.build();
         let mut rng = Rng::new(2);
@@ -538,7 +788,7 @@ mod tests {
                 src: 0,
                 dst: 1,
             });
-            bus.route(policy.as_mut(), &mut rng).unwrap();
+            bus.route(policy.as_mut(), bank, &mut rng).unwrap();
             let matured = bus.advance(1.0);
             assert_eq!(matured.len(), 1);
             let doomed = matured[0].doomed;
@@ -552,5 +802,105 @@ mod tests {
         }
         assert!(doomed_seen, "0.9 abort probability never fired in 64 draws");
         assert_eq!(bus.stats.migrations_failed, 1);
+    }
+
+    #[test]
+    fn same_tick_burst_spreads_by_estimated_load_not_just_residents() {
+        // Regression for the HostSummary same-tick staleness bug: routing
+        // an arrival used to bump `resident` but not `est_cpu_load`, so a
+        // burst under lowest-interference stacked onto a host that merely
+        // *started* with fewer residents. Host 1 starts with 5 residents,
+        // host 0 with none; with live est_cpu_load charging, the burst's
+        // picks alternate on the load tie-break instead of all four
+        // stacking host 0 via the resident tie-break.
+        let bank = testkit::shared_bank();
+        let mut bus = EventBus::new(2, MigrationModel::default(), 12);
+        bus.prime(vec![
+            HostSummary::default(),
+            HostSummary {
+                resident: 5,
+                ..HostSummary::default()
+            },
+        ]);
+        let mut policy = Dispatcher::LowestInterference.build();
+        let mut rng = Rng::new(1);
+        for i in 0..4 {
+            bus.publish(ClusterEvent::Arrival {
+                vm: running_vm(i, WorkloadClass::Hadoop),
+                host: None,
+            });
+        }
+        bus.route(policy.as_mut(), bank, &mut rng).unwrap();
+        let counts: Vec<usize> = bus.summaries().iter().map(|s| s.resident).collect();
+        assert_eq!(counts, vec![2, 7], "burst must spread by estimated load");
+        let u_cpu = bank.u[WorkloadClass::Hadoop.index()][0];
+        assert!((bus.summaries()[0].est_cpu_load - 2.0 * u_cpu).abs() < 1e-12);
+        assert!((bus.matrix().est_cpu_load()[0] - 2.0 * u_cpu).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_mirrors_summaries_through_refresh_and_routing() {
+        let bank = testkit::shared_bank();
+        let mut bus = EventBus::new(2, MigrationModel::default(), 12);
+        // A refresh publishes summaries and rebuilds the matrix columns
+        // (per-resource loads derived from the running classes).
+        let reports: Vec<TickReport> = [
+            vec![(VmId(0), WorkloadClass::Jacobi), (VmId(1), WorkloadClass::Hadoop)],
+            vec![(VmId(2), WorkloadClass::StreamLow)],
+        ]
+        .into_iter()
+        .map(|running| TickReport {
+            summary: HostSummary {
+                resident: running.len(),
+                busy_cores: running.len(),
+                max_wi: 0.25,
+                running,
+                ..HostSummary::default()
+            },
+            busy_now: true,
+            batch_done: false,
+        })
+        .collect();
+        bus.refresh(&reports, bank);
+
+        let m = bus.matrix();
+        assert_eq!(m.hosts(), 2);
+        assert_eq!(m.resident(), vec![2.0, 1.0]);
+        assert_eq!(m.busy_cores(), vec![2.0, 1.0]);
+        for h in 0..2 {
+            assert_eq!(m.max_wi()[h], 0.25);
+            // The CPU load column equals the published est_cpu_load, and
+            // every metric column is the Σ of the running classes' rows.
+            assert!((m.load(0)[h] - bus.summaries()[h].est_cpu_load).abs() < 1e-12);
+            for metric in 0..NUM_METRICS {
+                let want: f64 = bus.summaries()[h]
+                    .running
+                    .iter()
+                    .map(|&(_, class)| bank.u[class.index()][metric])
+                    .sum();
+                assert!((m.load(metric)[h] - want).abs() < 1e-12);
+                assert!(m.free(h, metric) <= m.cap(metric));
+            }
+        }
+
+        // Routing a policy-less (forced) arrival keeps the mirror live.
+        let mut policy = Dispatcher::LeastLoaded.build();
+        let mut rng = Rng::new(4);
+        bus.publish(ClusterEvent::Arrival {
+            vm: running_vm(9, WorkloadClass::Jacobi),
+            host: Some(1),
+        });
+        bus.route(policy.as_mut(), bank, &mut rng).unwrap();
+        assert_eq!(bus.matrix().resident()[1], 2.0);
+        let u = bank.u[WorkloadClass::Jacobi.index()];
+        for metric in 0..NUM_METRICS {
+            let base: f64 = reports[1]
+                .summary
+                .running
+                .iter()
+                .map(|&(_, class)| bank.u[class.index()][metric])
+                .sum();
+            assert!((bus.matrix().load(metric)[1] - (base + u[metric])).abs() < 1e-12);
+        }
     }
 }

@@ -3,26 +3,130 @@
 //! The paper assumes "the datacenter management system assigns a set of
 //! VMs to a server" (§IV-B); these are the standard assignment policies
 //! such a system uses. Since the cluster-event redesign, policies are
-//! [`ArrivalPolicy`] trait objects driven by the per-host
-//! [`HostSummary`]s the event bus publishes each tick — never by raw
-//! engine state — so any summary field (residents, profile-estimated
-//! load, placement interference) can inform the pick.
+//! [`ArrivalPolicy`] trait objects driven by the state the event bus
+//! publishes each tick — never by raw engine state. Since the
+//! score-matrix redesign that state is the flat SoA
+//! [`SummaryMatrix`]: one dense column per summary fact (residents,
+//! busy cores, profile-estimated load, worst-core interference) plus
+//! one per-resource load column per profiled metric, and policies rank
+//! a whole same-tick [`ArrivalBatch`] against all hosts in one
+//! [`ArrivalPolicy::rank`] call instead of one scalar pick per VM.
+//!
+//! ## Policy ↔ literature map
+//!
+//! The classic policies mirror dslab's `vm_placement_algorithms` (the
+//! reference simulator the ROADMAP benchmarks against) and the paper's
+//! equations:
+//!
+//! | policy                | dslab analogue     | paper hook              |
+//! |-----------------------|--------------------|-------------------------|
+//! | `round-robin`         | `RoundRobin`       | RRS baseline, cluster-scope |
+//! | `least-loaded`        | `LeastLoadedHost`  | count-packed baseline   |
+//! | `random`              | `RandomHost`       | arrival-order control   |
+//! | `lowest-interference` | —                  | Eq. 3/4 WI + Eq. 5 pack |
+//! | `dot-product`         | `DotProduct`       | Eq. 2 vector headroom   |
+//! | `cosine`              | `CosineSimilarity` | Eq. 2, shape-matched    |
+//! | `norm-greedy`         | `NormBasedGreedy`  | Eq. 2, L2 best-fit      |
+//!
+//! The vector family scores the arrival's profile-bank demand row
+//! (`U[class]`, the Eq. 2 utilisation vector) against each host's
+//! **free-capacity** columns `max(cap − load, 0)`: `dot-product` packs
+//! onto the host with the most demand-aligned headroom,
+//! `cosine` onto the host whose headroom *shape* best matches the
+//! demand (scale-free), and `norm-greedy` is the L2 best-fit — the host
+//! whose headroom the demand most snugly consumes. All three break
+//! exact ties on the lowest host index, the same reproducibility
+//! contract as the classic policies.
 //!
 //! [`Dispatcher`] is the parseable configuration surface (symmetric
 //! with `Policy::parse`): an enum naming the built-in policies, with
 //! [`Dispatcher::build`] producing the routing-time object.
 
-use super::bus::HostSummary;
+use super::bus::{HostSummary, SummaryMatrix};
+use crate::profiling::ProfileBank;
 use crate::util::rng::Rng;
+use crate::vmcd::scheduler::ScoreBuf;
+use crate::workloads::{MetricVec, WorkloadClass, NUM_METRICS};
 
-/// Host-selection policy for cluster arrivals. `pick` sees the bus's
-/// published summaries, which the bus keeps live within a tick (routing
-/// an arrival bumps the destination's `resident`), so same-tick
-/// arrivals spread out exactly as they would with live engine counts.
+/// The same-tick arrivals a policy ranks in one pass: one profile-bank
+/// demand row (`U[class]`, Eq. 2) per arriving VM, in publish order.
+#[derive(Debug, Clone, Default)]
+pub struct ArrivalBatch {
+    demands: Vec<MetricVec>,
+}
+
+impl ArrivalBatch {
+    pub fn clear(&mut self) {
+        self.demands.clear();
+    }
+
+    /// Append one arrival with an explicit demand vector.
+    pub fn push(&mut self, demand: MetricVec) {
+        self.demands.push(demand);
+    }
+
+    /// Append one arrival, demand looked up from the profile bank.
+    pub fn push_class(&mut self, class: WorkloadClass, bank: &ProfileBank) {
+        self.demands.push(bank.u[class.index()]);
+    }
+
+    pub fn len(&self) -> usize {
+        self.demands.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.demands.is_empty()
+    }
+
+    /// The demand rows, in arrival order.
+    pub fn demands(&self) -> &[MetricVec] {
+        &self.demands
+    }
+}
+
+/// The single-arrival demand the scalar [`ArrivalPolicy::pick`] shim
+/// ranks with: one CPU core, nothing else — the neutral stand-in when
+/// the caller has no profile row for the arrival.
+const UNIT_CPU: MetricVec = [1.0, 0.0, 0.0, 0.0];
+
+/// Host-selection policy for cluster arrivals.
+///
+/// [`Self::rank`] is the primary entry point: one call scores every
+/// candidate host × every same-tick arrival off the bus's published
+/// [`SummaryMatrix`] columns. Implementations must mirror the bus's
+/// live within-tick updates on their own working copies — after each
+/// in-batch pick the destination's `resident` grows by one and its
+/// load columns by the arrival's demand — so ranking a burst is
+/// bit-identical to scalar-picking it one arrival at a time against a
+/// live-updated bus (the parity property in `rust/tests/proptests.rs`).
 pub trait ArrivalPolicy {
-    /// Pick the destination host index for one arriving VM.
-    /// `summaries` is never empty.
-    fn pick(&mut self, summaries: &[HostSummary], rng: &mut Rng) -> usize;
+    /// Rank the whole arrival batch: append one destination host index
+    /// per batch entry (in batch order) to `out`, which is cleared
+    /// first. `scratch` is a caller-owned reusable buffer for working
+    /// copies of matrix columns; `matrix` always has ≥ 1 host.
+    fn rank(
+        &mut self,
+        matrix: &SummaryMatrix,
+        batch: &ArrivalBatch,
+        scratch: &mut ScoreBuf,
+        rng: &mut Rng,
+        out: &mut Vec<usize>,
+    );
+
+    /// Scalar compatibility shim: pick the destination for one arriving
+    /// VM straight from summaries. Builds a bank-less single-arrival
+    /// matrix (CPU load column from `est_cpu_load`, [`UNIT_CPU`]
+    /// demand) and delegates to [`Self::rank`] — identical to the
+    /// pre-matrix scalar behavior for the classic policies.
+    fn pick(&mut self, summaries: &[HostSummary], rng: &mut Rng) -> usize {
+        let matrix = SummaryMatrix::from_summaries(summaries, 1);
+        let mut batch = ArrivalBatch::default();
+        batch.push(UNIT_CPU);
+        let mut scratch = ScoreBuf::default();
+        let mut out = Vec::with_capacity(1);
+        self.rank(&matrix, &batch, &mut scratch, rng, &mut out);
+        out[0]
+    }
 
     fn name(&self) -> &'static str;
 }
@@ -33,11 +137,21 @@ pub struct RoundRobinPolicy {
 }
 
 impl ArrivalPolicy for RoundRobinPolicy {
-    fn pick(&mut self, summaries: &[HostSummary], _rng: &mut Rng) -> usize {
-        assert!(!summaries.is_empty());
-        let h = self.cursor % summaries.len();
-        self.cursor += 1;
-        h
+    fn rank(
+        &mut self,
+        matrix: &SummaryMatrix,
+        batch: &ArrivalBatch,
+        _scratch: &mut ScoreBuf,
+        _rng: &mut Rng,
+        out: &mut Vec<usize>,
+    ) {
+        let hosts = matrix.hosts();
+        assert!(hosts > 0);
+        out.clear();
+        for _ in 0..batch.len() {
+            out.push(self.cursor % hosts);
+            self.cursor += 1;
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -52,7 +166,293 @@ impl ArrivalPolicy for RoundRobinPolicy {
 pub struct LeastLoadedPolicy;
 
 impl ArrivalPolicy for LeastLoadedPolicy {
-    fn pick(&mut self, summaries: &[HostSummary], _rng: &mut Rng) -> usize {
+    fn rank(
+        &mut self,
+        matrix: &SummaryMatrix,
+        batch: &ArrivalBatch,
+        scratch: &mut ScoreBuf,
+        _rng: &mut Rng,
+        out: &mut Vec<usize>,
+    ) {
+        let hosts = matrix.hosts();
+        assert!(hosts > 0);
+        out.clear();
+        scratch.reset(1, hosts);
+        scratch.fill_lane(0, matrix.resident());
+        for _ in 0..batch.len() {
+            let resident = scratch.lane(0);
+            let mut best = 0;
+            for (h, &r) in resident.iter().enumerate().skip(1) {
+                if r < resident[best] {
+                    best = h;
+                }
+            }
+            scratch.lane_mut(0)[best] += 1.0;
+            out.push(best);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+}
+
+/// Pack by published interference: the host whose placement currently
+/// shows the lowest worst-core workload interference (`max_wi`, Eq. 3/4
+/// as published on the bus), tie-broken by the lowest profile-estimated
+/// CPU load, then by the **live** resident count, then by the lowest
+/// host index. Daemon-less hosts publish 0 interference, so under the
+/// global strategy this degrades to a load-then-count pack.
+///
+/// `max_wi` is a placement-state fact only the host daemons know and
+/// stays stale within a tick, but the load and resident columns are
+/// live — the bus (and this policy's in-batch working copies) bump them
+/// per routed arrival, which is what spreads a same-tick burst across
+/// equally-quiet hosts instead of stacking it on the first one.
+pub struct LowestInterferencePolicy;
+
+impl ArrivalPolicy for LowestInterferencePolicy {
+    fn rank(
+        &mut self,
+        matrix: &SummaryMatrix,
+        batch: &ArrivalBatch,
+        scratch: &mut ScoreBuf,
+        _rng: &mut Rng,
+        out: &mut Vec<usize>,
+    ) {
+        let hosts = matrix.hosts();
+        assert!(hosts > 0);
+        out.clear();
+        scratch.reset(3, hosts);
+        scratch.fill_lane(0, matrix.max_wi());
+        scratch.fill_lane(1, matrix.est_cpu_load());
+        scratch.fill_lane(2, matrix.resident());
+        for demand in batch.demands() {
+            let best = {
+                let wi = scratch.lane(0);
+                let est = scratch.lane(1);
+                let res = scratch.lane(2);
+                let mut best = 0;
+                for h in 1..hosts {
+                    // Strict `<` comparisons keep the first host among
+                    // exact ties, independent of any iterator-combinator
+                    // tie rule — the same reproducibility contract as
+                    // least-loaded.
+                    let quieter = wi[h] < wi[best]
+                        || (wi[h] == wi[best]
+                            && (est[h] < est[best]
+                                || (est[h] == est[best] && res[h] < res[best])));
+                    if quieter {
+                        best = h;
+                    }
+                }
+                best
+            };
+            scratch.lane_mut(1)[best] += demand[0];
+            scratch.lane_mut(2)[best] += 1.0;
+            out.push(best);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "lowest-interference"
+    }
+}
+
+/// Uniformly random host. Batched ranking draws once per arrival in
+/// batch order — the same RNG stream the scalar path consumes.
+pub struct RandomPolicy;
+
+impl ArrivalPolicy for RandomPolicy {
+    fn rank(
+        &mut self,
+        matrix: &SummaryMatrix,
+        batch: &ArrivalBatch,
+        _scratch: &mut ScoreBuf,
+        rng: &mut Rng,
+        out: &mut Vec<usize>,
+    ) {
+        let hosts = matrix.hosts();
+        assert!(hosts > 0);
+        out.clear();
+        for _ in 0..batch.len() {
+            out.push(rng.below(hosts));
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Copy the per-resource load columns into `scratch` (one lane per
+/// metric) — the vector policies' live working state for a batch.
+fn load_working_copy(matrix: &SummaryMatrix, scratch: &mut ScoreBuf) {
+    scratch.reset(NUM_METRICS, matrix.hosts());
+    for m in 0..NUM_METRICS {
+        scratch.fill_lane(m, matrix.load(m));
+    }
+}
+
+/// Free capacity of `host` on `metric` against the live working loads.
+fn free_at(matrix: &SummaryMatrix, scratch: &ScoreBuf, host: usize, metric: usize) -> f64 {
+    (matrix.cap(metric) - scratch.lane(metric)[host]).max(0.0)
+}
+
+/// Charge a placed arrival's demand to the working loads.
+fn charge(scratch: &mut ScoreBuf, host: usize, demand: &MetricVec) {
+    for (m, &d) in demand.iter().enumerate() {
+        scratch.lane_mut(m)[host] += d;
+    }
+}
+
+/// dslab `DotProduct`: maximise `demand · free` — the host with the
+/// most headroom *in the directions this arrival will use*.
+pub struct DotProductPolicy;
+
+impl ArrivalPolicy for DotProductPolicy {
+    fn rank(
+        &mut self,
+        matrix: &SummaryMatrix,
+        batch: &ArrivalBatch,
+        scratch: &mut ScoreBuf,
+        _rng: &mut Rng,
+        out: &mut Vec<usize>,
+    ) {
+        let hosts = matrix.hosts();
+        assert!(hosts > 0);
+        out.clear();
+        load_working_copy(matrix, scratch);
+        for demand in batch.demands() {
+            let mut best = 0;
+            let mut best_score = f64::NEG_INFINITY;
+            for h in 0..hosts {
+                let mut dot = 0.0;
+                for (m, &d) in demand.iter().enumerate() {
+                    dot += d * free_at(matrix, scratch, h, m);
+                }
+                if dot > best_score {
+                    best_score = dot;
+                    best = h;
+                }
+            }
+            charge(scratch, best, demand);
+            out.push(best);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "dot-product"
+    }
+}
+
+/// dslab `CosineSimilarity`: maximise `cos(demand, free)` — the host
+/// whose free-capacity *shape* best matches the demand, independent of
+/// scale. A zero-norm side (saturated host or zero demand) scores 0.
+pub struct CosineSimilarityPolicy;
+
+impl ArrivalPolicy for CosineSimilarityPolicy {
+    fn rank(
+        &mut self,
+        matrix: &SummaryMatrix,
+        batch: &ArrivalBatch,
+        scratch: &mut ScoreBuf,
+        _rng: &mut Rng,
+        out: &mut Vec<usize>,
+    ) {
+        let hosts = matrix.hosts();
+        assert!(hosts > 0);
+        out.clear();
+        load_working_copy(matrix, scratch);
+        for demand in batch.demands() {
+            let dnorm = demand.iter().map(|d| d * d).sum::<f64>().sqrt();
+            let mut best = 0;
+            let mut best_score = f64::NEG_INFINITY;
+            for h in 0..hosts {
+                let mut dot = 0.0;
+                let mut fsq = 0.0;
+                for (m, &d) in demand.iter().enumerate() {
+                    let f = free_at(matrix, scratch, h, m);
+                    dot += d * f;
+                    fsq += f * f;
+                }
+                let denom = dnorm * fsq.sqrt();
+                let cos = if denom > 0.0 { dot / denom } else { 0.0 };
+                if cos > best_score {
+                    best_score = cos;
+                    best = h;
+                }
+            }
+            charge(scratch, best, demand);
+            out.push(best);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "cosine"
+    }
+}
+
+/// dslab `NormBasedGreedy`: minimise `‖free − demand‖²` — the L2
+/// best-fit host, whose remaining headroom the arrival most snugly
+/// consumes (bin-packing flavour: keeps big holes intact).
+pub struct NormBasedGreedyPolicy;
+
+impl ArrivalPolicy for NormBasedGreedyPolicy {
+    fn rank(
+        &mut self,
+        matrix: &SummaryMatrix,
+        batch: &ArrivalBatch,
+        scratch: &mut ScoreBuf,
+        _rng: &mut Rng,
+        out: &mut Vec<usize>,
+    ) {
+        let hosts = matrix.hosts();
+        assert!(hosts > 0);
+        out.clear();
+        load_working_copy(matrix, scratch);
+        for demand in batch.demands() {
+            let mut best = 0;
+            let mut best_score = f64::INFINITY;
+            for h in 0..hosts {
+                let mut dist = 0.0;
+                for (m, &d) in demand.iter().enumerate() {
+                    let gap = free_at(matrix, scratch, h, m) - d;
+                    dist += gap * gap;
+                }
+                if dist < best_score {
+                    best_score = dist;
+                    best = h;
+                }
+            }
+            charge(scratch, best, demand);
+            out.push(best);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "norm-greedy"
+    }
+}
+
+/// The frozen pre-matrix scalar pickers, verbatim. These are **not**
+/// wired into the bus — they are the baseline the parity proptest
+/// checks the batched [`ArrivalPolicy::rank`] path against bit-for-bit,
+/// and the per-host scalar side of the `dispatch` bench.
+pub mod scalar {
+    use super::HostSummary;
+    use crate::util::rng::Rng;
+
+    /// Scalar round-robin: advance the cursor one host per arrival.
+    pub fn round_robin(cursor: &mut usize, summaries: &[HostSummary]) -> usize {
+        assert!(!summaries.is_empty());
+        let h = *cursor % summaries.len();
+        *cursor += 1;
+        h
+    }
+
+    /// Scalar least-loaded: fewest residents, lowest index on ties.
+    pub fn least_loaded(summaries: &[HostSummary]) -> usize {
         assert!(!summaries.is_empty());
         let mut best = 0;
         for (h, s) in summaries.iter().enumerate().skip(1) {
@@ -63,35 +463,13 @@ impl ArrivalPolicy for LeastLoadedPolicy {
         best
     }
 
-    fn name(&self) -> &'static str {
-        "least-loaded"
-    }
-}
-
-/// Pack by published interference: the host whose placement currently
-/// shows the lowest worst-core workload interference (`max_wi`, Eq. 3/4
-/// as published in [`HostSummary`]), tie-broken by the lowest
-/// profile-estimated CPU load, then by the **live** resident count, then
-/// by the lowest host index. Daemon-less hosts publish 0 interference,
-/// so under the global strategy this degrades to a load-then-count pack.
-///
-/// The bus does not adjust `max_wi`/`est_cpu_load` within a tick (they
-/// are placement-state facts only the host daemons know), but it does
-/// bump `resident` as it routes — the resident tie-break is what spreads
-/// a same-tick arrival burst across equally-quiet hosts instead of
-/// stacking it on the first one; the interference facts catch up at the
-/// next summary refresh.
-pub struct LowestInterferencePolicy;
-
-impl ArrivalPolicy for LowestInterferencePolicy {
-    fn pick(&mut self, summaries: &[HostSummary], _rng: &mut Rng) -> usize {
+    /// Scalar lowest-interference: min `max_wi`, tie-broken by load,
+    /// then residents, then index.
+    pub fn lowest_interference(summaries: &[HostSummary]) -> usize {
         assert!(!summaries.is_empty());
         let mut best = 0;
         for (h, s) in summaries.iter().enumerate().skip(1) {
             let b = &summaries[best];
-            // Strict `<` comparisons keep the first host among exact
-            // ties, independent of any iterator-combinator tie rule —
-            // the same reproducibility contract as least-loaded.
             let quieter = s.max_wi < b.max_wi
                 || (s.max_wi == b.max_wi
                     && (s.est_cpu_load < b.est_cpu_load
@@ -103,22 +481,10 @@ impl ArrivalPolicy for LowestInterferencePolicy {
         best
     }
 
-    fn name(&self) -> &'static str {
-        "lowest-interference"
-    }
-}
-
-/// Uniformly random host.
-pub struct RandomPolicy;
-
-impl ArrivalPolicy for RandomPolicy {
-    fn pick(&mut self, summaries: &[HostSummary], rng: &mut Rng) -> usize {
+    /// Scalar uniform random pick.
+    pub fn random(summaries: &[HostSummary], rng: &mut Rng) -> usize {
         assert!(!summaries.is_empty());
         rng.below(summaries.len())
-    }
-
-    fn name(&self) -> &'static str {
-        "random"
     }
 }
 
@@ -129,14 +495,20 @@ pub enum Dispatcher {
     LeastLoaded,
     LowestInterference,
     Random,
+    DotProduct,
+    CosineSimilarity,
+    NormBasedGreedy,
 }
 
 impl Dispatcher {
-    pub const ALL: [Dispatcher; 4] = [
+    pub const ALL: [Dispatcher; 7] = [
         Dispatcher::RoundRobin,
         Dispatcher::LeastLoaded,
         Dispatcher::LowestInterference,
         Dispatcher::Random,
+        Dispatcher::DotProduct,
+        Dispatcher::CosineSimilarity,
+        Dispatcher::NormBasedGreedy,
     ];
 
     pub fn name(self) -> &'static str {
@@ -145,6 +517,9 @@ impl Dispatcher {
             Dispatcher::LeastLoaded => "least-loaded",
             Dispatcher::LowestInterference => "lowest-interference",
             Dispatcher::Random => "random",
+            Dispatcher::DotProduct => "dot-product",
+            Dispatcher::CosineSimilarity => "cosine",
+            Dispatcher::NormBasedGreedy => "norm-greedy",
         }
     }
 
@@ -154,6 +529,9 @@ impl Dispatcher {
             "least-loaded" | "ll" => Some(Dispatcher::LeastLoaded),
             "lowest-interference" | "li" => Some(Dispatcher::LowestInterference),
             "random" => Some(Dispatcher::Random),
+            "dot-product" | "dp" => Some(Dispatcher::DotProduct),
+            "cosine" | "cos" => Some(Dispatcher::CosineSimilarity),
+            "norm-greedy" | "ng" => Some(Dispatcher::NormBasedGreedy),
             _ => None,
         }
     }
@@ -175,6 +553,9 @@ impl Dispatcher {
             Dispatcher::LeastLoaded => Box::new(LeastLoadedPolicy),
             Dispatcher::LowestInterference => Box::new(LowestInterferencePolicy),
             Dispatcher::Random => Box::new(RandomPolicy),
+            Dispatcher::DotProduct => Box::new(DotProductPolicy),
+            Dispatcher::CosineSimilarity => Box::new(CosineSimilarityPolicy),
+            Dispatcher::NormBasedGreedy => Box::new(NormBasedGreedyPolicy),
         }
     }
 }
@@ -218,6 +599,25 @@ mod tests {
         assert_eq!(policy.pick(&summaries(&[2, 1, 1, 1]), &mut rng), 1);
         assert_eq!(policy.pick(&summaries(&[0, 0, 0, 0]), &mut rng), 0);
         assert_eq!(policy.pick(&summaries(&[5, 4, 3, 3]), &mut rng), 2);
+    }
+
+    #[test]
+    fn least_loaded_batched_spreads_within_the_batch() {
+        // One rank call over a 4-arrival batch must spread exactly like
+        // four scalar picks with live resident bumps in between.
+        let mut policy = Dispatcher::LeastLoaded.build();
+        let mut rng = Rng::new(1);
+        let matrix = SummaryMatrix::from_summaries(&summaries(&[1, 0, 0]), 12);
+        let mut batch = ArrivalBatch::default();
+        for _ in 0..4 {
+            batch.push([0.5, 0.0, 0.0, 0.0]);
+        }
+        let mut scratch = ScoreBuf::default();
+        let mut out = Vec::new();
+        policy.rank(&matrix, &batch, &mut scratch, &mut rng, &mut out);
+        // [1,0,0] → host 1, [1,1,0] → host 2, [1,1,1] → host 0 (tie),
+        // [2,1,1] → host 1.
+        assert_eq!(out, vec![1, 2, 0, 1]);
     }
 
     /// Summaries with explicit interference/load facts alongside the
@@ -272,7 +672,9 @@ mod tests {
         use crate::cluster::bus::{ClusterEvent, EventBus};
         use crate::cluster::migration::MigrationModel;
         use crate::hostsim::{ActivityModel, Vm, VmId, VmState};
+        use crate::testkit;
 
+        let bank = testkit::shared_bank();
         let mut bus = EventBus::new(2, MigrationModel::default(), 12);
         let mut policy = Dispatcher::LowestInterference.build();
         let mut rng = Rng::new(1);
@@ -286,7 +688,7 @@ mod tests {
             vm.state = VmState::Running;
             bus.publish(ClusterEvent::Arrival { vm, host: None });
         }
-        bus.route(policy.as_mut(), &mut rng).unwrap();
+        bus.route(policy.as_mut(), bank, &mut rng).unwrap();
         let counts: Vec<usize> = bus.summaries().iter().map(|s| s.resident).collect();
         assert_eq!(counts, vec![2, 2], "burst must spread across hosts");
     }
@@ -299,6 +701,96 @@ mod tests {
         for _ in 0..100 {
             assert!(policy.pick(&s, &mut rng) < 4);
         }
+    }
+
+    /// A hand-built matrix: `host_cores` CPU capacity, per-host loads
+    /// charged via the same live-update path the bus uses.
+    fn matrix_with_loads(host_cores: usize, loads: &[MetricVec]) -> SummaryMatrix {
+        let mut m = SummaryMatrix::new(loads.len(), host_cores);
+        for (h, load) in loads.iter().enumerate() {
+            m.note_arrival(h, load);
+        }
+        m
+    }
+
+    fn rank_one(policy: &mut dyn ArrivalPolicy, m: &SummaryMatrix, demand: MetricVec) -> usize {
+        let mut batch = ArrivalBatch::default();
+        batch.push(demand);
+        let mut scratch = ScoreBuf::default();
+        let mut rng = Rng::new(7);
+        let mut out = Vec::new();
+        policy.rank(m, &batch, &mut scratch, &mut rng, &mut out);
+        out[0]
+    }
+
+    #[test]
+    fn vector_policies_head_to_head_known_best_hosts() {
+        // cap = [4, 1, 1, 1]. Host 0 is empty (free [4,1,1,1]); host 1's
+        // free capacity [2, 0.5, 0, 0] is exactly proportional to the
+        // demand [2, 0.5, 0, 0].
+        let m = matrix_with_loads(4, &[[0.0; 4], [2.0, 0.5, 1.0, 1.0]]);
+        let demand = [2.0, 0.5, 0.0, 0.0];
+        // Dot-product wants raw aligned headroom: host 0 (8.5 vs 4.25).
+        assert_eq!(rank_one(&mut DotProductPolicy, &m, demand), 0);
+        // Cosine wants shape: host 1 is a perfect match (cos = 1).
+        assert_eq!(rank_one(&mut CosineSimilarityPolicy, &m, demand), 1);
+        // Norm-greedy wants the snuggest fit: host 1 (‖f−d‖² = 0).
+        assert_eq!(rank_one(&mut NormBasedGreedyPolicy, &m, demand), 1);
+    }
+
+    #[test]
+    fn norm_greedy_best_fits_where_dot_and_cosine_spread() {
+        // CPU-only demand; host 1 has exactly one core free (snug),
+        // host 0 is empty (roomy).
+        let m = matrix_with_loads(4, &[[0.0; 4], [3.0, 0.0, 0.0, 0.0]]);
+        let demand = [1.0, 0.0, 0.0, 0.0];
+        assert_eq!(rank_one(&mut DotProductPolicy, &m, demand), 0);
+        assert_eq!(rank_one(&mut CosineSimilarityPolicy, &m, demand), 0);
+        assert_eq!(rank_one(&mut NormBasedGreedyPolicy, &m, demand), 1);
+    }
+
+    #[test]
+    fn vector_policies_tie_break_on_lowest_host_index() {
+        // Identical hosts: every vector policy must keep host 0.
+        let m = matrix_with_loads(4, &[[1.0, 0.2, 0.1, 0.0]; 3]);
+        let demand = [0.5, 0.1, 0.0, 0.0];
+        assert_eq!(rank_one(&mut DotProductPolicy, &m, demand), 0);
+        assert_eq!(rank_one(&mut CosineSimilarityPolicy, &m, demand), 0);
+        assert_eq!(rank_one(&mut NormBasedGreedyPolicy, &m, demand), 0);
+    }
+
+    #[test]
+    fn vector_policies_spread_within_a_batch_via_working_loads() {
+        // Two identical hosts, two identical arrivals in one batch: the
+        // first pick charges host 0's working loads, so the second must
+        // land on host 1 (dot and cosine; norm-greedy *stacks* by design
+        // — the charged host became the snugger fit).
+        let m = matrix_with_loads(4, &[[0.0; 4]; 2]);
+        let mut batch = ArrivalBatch::default();
+        batch.push([1.0, 0.2, 0.0, 0.0]);
+        batch.push([1.0, 0.2, 0.0, 0.0]);
+        let mut scratch = ScoreBuf::default();
+        let mut rng = Rng::new(7);
+        let mut out = Vec::new();
+        DotProductPolicy.rank(&m, &batch, &mut scratch, &mut rng, &mut out);
+        assert_eq!(out, vec![0, 1]);
+        CosineSimilarityPolicy.rank(&m, &batch, &mut scratch, &mut rng, &mut out);
+        assert_eq!(out, vec![0, 1]);
+        NormBasedGreedyPolicy.rank(&m, &batch, &mut scratch, &mut rng, &mut out);
+        assert_eq!(out, vec![0, 0]);
+    }
+
+    #[test]
+    fn cosine_zero_norm_scores_zero_not_nan() {
+        // Host 0 fully saturated (free = 0 in every metric): its score
+        // must be a clean 0, never NaN, so the empty host wins.
+        let m = matrix_with_loads(4, &[[4.0, 1.0, 1.0, 1.0], [0.0; 4]]);
+        assert_eq!(
+            rank_one(&mut CosineSimilarityPolicy, &m, [1.0, 0.0, 0.0, 0.0]),
+            1
+        );
+        // Zero demand: every host scores 0 — lowest index wins.
+        assert_eq!(rank_one(&mut CosineSimilarityPolicy, &m, [0.0; 4]), 0);
     }
 
     #[test]
@@ -315,11 +807,20 @@ mod tests {
             Dispatcher::parse("li").unwrap(),
             Dispatcher::LowestInterference
         );
+        assert_eq!(Dispatcher::parse("dp").unwrap(), Dispatcher::DotProduct);
+        assert_eq!(
+            Dispatcher::parse("cos").unwrap(),
+            Dispatcher::CosineSimilarity
+        );
+        assert_eq!(Dispatcher::parse("ng").unwrap(), Dispatcher::NormBasedGreedy);
         let err = Dispatcher::parse("bogus").unwrap_err().to_string();
         assert!(err.contains("round-robin"), "{err}");
         assert!(err.contains("least-loaded"), "{err}");
         assert!(err.contains("lowest-interference"), "{err}");
         assert!(err.contains("random"), "{err}");
-        assert_eq!(Dispatcher::ALL.map(|d| d.name()).len(), 4);
+        assert!(err.contains("dot-product"), "{err}");
+        assert!(err.contains("cosine"), "{err}");
+        assert!(err.contains("norm-greedy"), "{err}");
+        assert_eq!(Dispatcher::ALL.map(|d| d.name()).len(), 7);
     }
 }

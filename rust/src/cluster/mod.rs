@@ -38,8 +38,8 @@ pub mod migration;
 pub mod pool;
 pub mod sim;
 
-pub use bus::{BusStats, ClusterEvent, EventBus, HostEvent, HostSummary, TickReport};
-pub use dispatch::{ArrivalPolicy, Dispatcher};
+pub use bus::{BusStats, ClusterEvent, EventBus, HostEvent, HostSummary, SummaryMatrix, TickReport};
+pub use dispatch::{ArrivalBatch, ArrivalPolicy, Dispatcher};
 pub use host::{ClusterHost, HostHandle, HostMetrics, NativeHost, SimHost};
 pub use migration::MigrationModel;
 pub use pool::{ShardPool, StepMode};

@@ -308,7 +308,7 @@ impl ClusterSim {
             self.plan_reshuffle(bank);
         }
 
-        self.bus.route(self.policy.as_mut(), &mut self.rng)?;
+        self.bus.route(self.policy.as_mut(), bank, &mut self.rng)?;
 
         let matured = self.bus.advance(dt);
         if !matured.is_empty() {

@@ -90,7 +90,8 @@ USAGE:
   vmcd validate  [--cases N]
   vmcd daemon    [--policy P] [--ticks N] [--ms-per-tick M]
   vmcd cluster   [--hosts N] [--strategy local-vmcd|global-migration]
-                 [--dispatcher round-robin|least-loaded|lowest-interference|random]
+                 [--dispatcher round-robin|least-loaded|lowest-interference|random
+                               |dot-product|cosine|norm-greedy]
                  [--policy P] [--sr X] [--seed N]
                  [--step-mode single|scoped|pool] [--workers W]
                  [--actuation inline|deferred:N|deferred:N:B]
@@ -275,10 +276,10 @@ fn cmd_validate(args: &Args) -> Result<()> {
         let b = native.score(&state, cand, &bank, cfg.sched.ras_threshold, cpu_only);
         for core in 0..cfg.host.cores {
             for (x, y, what) in [
-                (a.ol_before[core], b.ol_before[core], "ol_before"),
-                (a.ol_after[core], b.ol_after[core], "ol_after"),
-                (a.ic_before[core], b.ic_before[core], "ic_before"),
-                (a.ic_after[core], b.ic_after[core], "ic_after"),
+                (a.ol_before()[core], b.ol_before()[core], "ol_before"),
+                (a.ol_after()[core], b.ol_after()[core], "ol_after"),
+                (a.ic_before()[core], b.ic_before()[core], "ic_before"),
+                (a.ic_after()[core], b.ic_after()[core], "ic_after"),
             ] {
                 let err = (x - y).abs();
                 max_err = max_err.max(err);

@@ -55,8 +55,8 @@ impl ScoringBackend for XlaScoring {
         cpu_only: bool,
         out: &mut Scores,
     ) {
-        out.clear();
         let ncores = state.cores.len();
+        out.reset(ncores);
         assert!(ncores <= C_MAX, "host has more cores than the compiled kernel");
 
         // Collect placed VM slots: (core, class index).
@@ -122,14 +122,15 @@ impl ScoringBackend for XlaScoring {
             )
             .expect("score kernel execution failed");
 
-        out.ol_before
-            .extend(outs[0].iter().take(ncores).map(|&x| x as f64));
-        out.ol_after
-            .extend(outs[1].iter().take(ncores).map(|&x| x as f64));
-        out.ic_before
-            .extend(outs[2].iter().take(ncores).map(|&x| x as f64));
-        out.ic_after
-            .extend(outs[3].iter().take(ncores).map(|&x| x as f64));
+        for core in 0..ncores {
+            out.set(
+                core,
+                outs[0][core] as f64,
+                outs[1][core] as f64,
+                outs[2][core] as f64,
+                outs[3][core] as f64,
+            );
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -178,26 +179,26 @@ mod tests {
                 let b = native.score(&state, cand, &bank, 1.2, cpu_only);
                 for core in 0..12 {
                     assert!(
-                        (a.ol_before[core] - b.ol_before[core]).abs() < 1e-4,
+                        (a.ol_before()[core] - b.ol_before()[core]).abs() < 1e-4,
                         "ol_before[{core}] {cand:?}: xla {} native {}",
-                        a.ol_before[core],
-                        b.ol_before[core]
+                        a.ol_before()[core],
+                        b.ol_before()[core]
                     );
                     assert!(
-                        (a.ol_after[core] - b.ol_after[core]).abs() < 1e-4,
+                        (a.ol_after()[core] - b.ol_after()[core]).abs() < 1e-4,
                         "ol_after[{core}] {cand:?}"
                     );
                     assert!(
-                        (a.ic_before[core] - b.ic_before[core]).abs() < 1e-3,
+                        (a.ic_before()[core] - b.ic_before()[core]).abs() < 1e-3,
                         "ic_before[{core}] {cand:?}: xla {} native {}",
-                        a.ic_before[core],
-                        b.ic_before[core]
+                        a.ic_before()[core],
+                        b.ic_before()[core]
                     );
                     assert!(
-                        (a.ic_after[core] - b.ic_after[core]).abs() < 1e-3,
+                        (a.ic_after()[core] - b.ic_after()[core]).abs() < 1e-3,
                         "ic_after[{core}] {cand:?}: xla {} native {}",
-                        a.ic_after[core],
-                        b.ic_after[core]
+                        a.ic_after()[core],
+                        b.ic_after()[core]
                     );
                 }
             }
@@ -209,10 +210,10 @@ mod tests {
         let Some((mut xla, bank)) = setup() else { return };
         let state = PlacementState::new(12, false);
         let s = xla.score(&state, Blackscholes, &bank, 1.2, false);
-        assert_eq!(s.ol_before.len(), 12);
+        assert_eq!(s.ol_before().len(), 12);
         for core in 0..12 {
-            assert!(s.ol_before[core].abs() < 1e-6);
-            assert!((s.ic_after[core] - 0.5).abs() < 1e-4); // candidate alone
+            assert!(s.ol_before()[core].abs() < 1e-6);
+            assert!((s.ic_after()[core] - 0.5).abs() < 1e-4); // candidate alone
         }
     }
 }

@@ -49,7 +49,7 @@ impl<B: ?Sized + ScoringBackend> Scheduler for Ias<B> {
 
         // Alg. 3 lines 2-4: first core below the interference threshold.
         for &core in &state.allowed {
-            if scores.ic_after[core] < self.threshold {
+            if scores.ic_after()[core] < self.threshold {
                 return core;
             }
         }
@@ -57,8 +57,8 @@ impl<B: ?Sized + ScoringBackend> Scheduler for Ias<B> {
         let mut best = state.allowed[0];
         let mut best_ic = f64::INFINITY;
         for &core in &state.allowed {
-            if scores.ic_after[core] < best_ic {
-                best_ic = scores.ic_after[core];
+            if scores.ic_after()[core] < best_ic {
+                best_ic = scores.ic_after()[core];
                 best = core;
             }
         }

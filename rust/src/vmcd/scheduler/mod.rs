@@ -31,7 +31,7 @@ use crate::profiling::ProfileBank;
 use crate::workloads::{MetricVec, WorkloadClass, NUM_METRICS};
 use std::sync::Arc;
 
-pub use scoring::{NativeScoring, Scores, ScoringBackend};
+pub use scoring::{NativeScoring, ScoreBuf, Scores, ScoringBackend};
 
 /// Which policy to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -60,7 +60,7 @@ impl<B: ?Sized + ScoringBackend> Ras<B> {
 
         // Alg. 2 lines 2-4: first core with zero overload after placement.
         for &core in &state.allowed {
-            if scores.ol_after[core] <= 1e-12 {
+            if scores.ol_after()[core] <= 1e-12 {
                 return core;
             }
         }
@@ -68,7 +68,7 @@ impl<B: ?Sized + ScoringBackend> Ras<B> {
         let mut best = state.allowed[0];
         let mut best_delta = f64::INFINITY;
         for &core in &state.allowed {
-            let delta = scores.ol_after[core] - scores.ol_before[core];
+            let delta = scores.ol_after()[core] - scores.ol_before()[core];
             if delta < best_delta {
                 best_delta = delta;
                 best = core;

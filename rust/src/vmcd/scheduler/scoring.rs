@@ -19,27 +19,124 @@ use crate::interference::{core_interference, core_overload, cpu_overload};
 use crate::profiling::ProfileBank;
 use crate::workloads::{MetricVec, WorkloadClass, NUM_METRICS};
 
-/// Per-core scores for placing one candidate workload.
+/// A reusable flat SoA score buffer: `lanes × width` f64 values in one
+/// contiguous allocation, each lane a dense column over the scored
+/// entities (cores for a [`Scores`] pass, candidate hosts for the
+/// cluster dispatch matrix pass). One `ScoreBuf` is held for the
+/// caller's lifetime and `reset` to any shape without reallocating once
+/// it has grown to its steady-state size — the same allocation-free
+/// contract as [`ScoringBackend::score_into`], and the buffer type that
+/// pass shares with the cluster's batched `ArrivalPolicy::rank`.
 #[derive(Debug, Clone, Default)]
-pub struct Scores {
-    /// RAS overload per core, without the candidate (Eq. 2).
-    pub ol_before: Vec<f64>,
-    /// RAS overload per core, with the candidate added to that core.
-    pub ol_after: Vec<f64>,
-    /// IAS core interference per core, without the candidate (Eq. 3+4).
-    pub ic_before: Vec<f64>,
-    /// IAS core interference with the candidate added.
-    pub ic_after: Vec<f64>,
+pub struct ScoreBuf {
+    data: Vec<f64>,
+    width: usize,
 }
 
+impl ScoreBuf {
+    /// Reshape to `lanes × width`, zero-filled. Keeps the allocation.
+    pub fn reset(&mut self, lanes: usize, width: usize) {
+        self.width = width;
+        self.data.clear();
+        self.data.resize(lanes * width, 0.0);
+    }
+
+    /// Entries per lane.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Number of lanes in the current shape.
+    pub fn lanes(&self) -> usize {
+        if self.width == 0 {
+            0
+        } else {
+            self.data.len() / self.width
+        }
+    }
+
+    /// One lane as a dense slice.
+    pub fn lane(&self, lane: usize) -> &[f64] {
+        &self.data[lane * self.width..(lane + 1) * self.width]
+    }
+
+    /// One lane, mutable.
+    pub fn lane_mut(&mut self, lane: usize) -> &mut [f64] {
+        let w = self.width;
+        &mut self.data[lane * w..(lane + 1) * w]
+    }
+
+    /// Copy `src` into a lane (`src.len()` must equal the width).
+    pub fn fill_lane(&mut self, lane: usize, src: &[f64]) {
+        self.lane_mut(lane).copy_from_slice(src);
+    }
+}
+
+/// Per-core scores for placing one candidate workload — four lanes
+/// (RAS overload and IAS interference, each before/after placing the
+/// candidate) over one flat [`ScoreBuf`].
+#[derive(Debug, Clone, Default)]
+pub struct Scores {
+    buf: ScoreBuf,
+}
+
+/// [`Scores`] lane indices into its backing [`ScoreBuf`].
+const OL_BEFORE: usize = 0;
+const OL_AFTER: usize = 1;
+const IC_BEFORE: usize = 2;
+const IC_AFTER: usize = 3;
+
 impl Scores {
-    /// Empty all four columns; `score_into` implementations call this so
-    /// schedulers can reuse one buffer across decisions.
+    const LANES: usize = 4;
+
+    /// Reshape to `cores` entries per lane, zeroed; `score_into`
+    /// implementations call this so schedulers can reuse one buffer
+    /// across decisions.
+    pub fn reset(&mut self, cores: usize) {
+        self.buf.reset(Self::LANES, cores);
+    }
+
+    /// Drop all columns (a zero-core reset).
     pub fn clear(&mut self) {
-        self.ol_before.clear();
-        self.ol_after.clear();
-        self.ic_before.clear();
-        self.ic_after.clear();
+        self.buf.reset(Self::LANES, 0);
+    }
+
+    /// Number of scored cores.
+    pub fn cores(&self) -> usize {
+        self.buf.width()
+    }
+
+    /// Write one core's four scores.
+    pub fn set(&mut self, core: usize, ol_before: f64, ol_after: f64, ic_before: f64, ic_after: f64) {
+        self.buf.lane_mut(OL_BEFORE)[core] = ol_before;
+        self.buf.lane_mut(OL_AFTER)[core] = ol_after;
+        self.buf.lane_mut(IC_BEFORE)[core] = ic_before;
+        self.buf.lane_mut(IC_AFTER)[core] = ic_after;
+    }
+
+    /// RAS overload per core, without the candidate (Eq. 2).
+    pub fn ol_before(&self) -> &[f64] {
+        self.buf.lane(OL_BEFORE)
+    }
+
+    /// RAS overload per core, with the candidate added to that core.
+    pub fn ol_after(&self) -> &[f64] {
+        self.buf.lane(OL_AFTER)
+    }
+
+    /// IAS core interference per core, without the candidate (Eq. 3+4).
+    pub fn ic_before(&self) -> &[f64] {
+        self.buf.lane(IC_BEFORE)
+    }
+
+    /// IAS core interference with the candidate added.
+    pub fn ic_after(&self) -> &[f64] {
+        self.buf.lane(IC_AFTER)
+    }
+
+    /// The backing flat buffer.
+    pub fn as_buf(&self) -> &ScoreBuf {
+        &self.buf
     }
 }
 
@@ -156,7 +253,7 @@ fn incremental_into(
 ) {
     let cache: &ScoreCache = state.cache().expect("incremental scoring needs a cached state");
     let bank = cache.bank();
-    out.clear();
+    out.reset(state.cores.len());
     let ci = cand.index();
     let cu = bank.u[ci];
     for (core, members) in state.cores.iter().enumerate() {
@@ -173,8 +270,6 @@ fn incremental_into(
             }
             (before, after)
         };
-        out.ol_before.push(ol_b);
-        out.ol_after.push(ol_a);
 
         // ---- IAS interference (Eq. 3+4): each member's WI (with and
         // without the candidate) comes from its cached (Σ, Π) in O(1) ----
@@ -192,8 +287,7 @@ fn incremental_into(
             cand_prod *= bank.s[ci][m];
         }
         ic_a = ic_a.max(wi_from_parts(mode, cand_sum, cand_prod));
-        out.ic_before.push(ic_b);
-        out.ic_after.push(ic_a);
+        out.set(core, ol_b, ol_a, ic_b, ic_a);
     }
 }
 
@@ -210,10 +304,10 @@ fn reference_into(
     cpu_only: bool,
     out: &mut Scores,
 ) {
-    out.clear();
+    out.reset(state.cores.len());
     let ci = cand.index();
 
-    for members in &state.cores {
+    for (core, members) in state.cores.iter().enumerate() {
         // ---- RAS overload ----
         let mut loads: Vec<MetricVec> = members.iter().map(|&m| bank.u[m]).collect();
         if cpu_only {
@@ -230,8 +324,6 @@ fn reference_into(
             loads.push(bank.u[ci]);
             (b, core_overload(&loads, thr))
         };
-        out.ol_before.push(ol_b);
-        out.ol_after.push(ol_a);
 
         // ---- IAS interference ----
         // Before: WI of each member against its co-members.
@@ -248,7 +340,7 @@ fn reference_into(
                 wi_with(mode, &slows)
             })
             .collect();
-        out.ic_before.push(core_interference(&wi_b));
+        let ic_b = core_interference(&wi_b);
 
         // After: every member gains the candidate as a co-runner, and
         // the candidate gets its own WI.
@@ -268,7 +360,7 @@ fn reference_into(
             .collect();
         let cand_slows: Vec<f64> = members.iter().map(|&m| bank.s[ci][m]).collect();
         wi_a.push(wi_with(mode, &cand_slows));
-        out.ic_after.push(core_interference(&wi_a));
+        out.set(core, ol_b, ol_a, ic_b, core_interference(&wi_a));
     }
 }
 
@@ -340,11 +432,11 @@ mod tests {
         let state = PlacementState::new(4, false);
         let mut ns = NativeScoring::new();
         let s = ns.score(&state, Blackscholes, &b, 1.2, false);
-        assert_eq!(s.ol_before, vec![0.0; 4]);
+        assert_eq!(s.ol_before(), vec![0.0; 4]);
         // Alone on an empty core: no overload, WI = 0.5.
-        assert_eq!(s.ol_after, vec![0.0; 4]);
-        assert_eq!(s.ic_before, vec![0.0; 4]);
-        for &ic in &s.ic_after {
+        assert_eq!(s.ol_after(), vec![0.0; 4]);
+        assert_eq!(s.ic_before(), vec![0.0; 4]);
+        for &ic in s.ic_after() {
             assert!(close(ic, 0.5, 1e-12), "{ic}");
         }
     }
@@ -355,10 +447,10 @@ mod tests {
         let state = PlacementState::with_bank(4, false, &b);
         let mut ns = NativeScoring::new();
         let s = ns.score(&state, Blackscholes, &b, 1.2, false);
-        assert_eq!(s.ol_before, vec![0.0; 4]);
-        assert_eq!(s.ol_after, vec![0.0; 4]);
-        assert_eq!(s.ic_before, vec![0.0; 4]);
-        for &ic in &s.ic_after {
+        assert_eq!(s.ol_before(), vec![0.0; 4]);
+        assert_eq!(s.ol_after(), vec![0.0; 4]);
+        assert_eq!(s.ic_before(), vec![0.0; 4]);
+        for &ic in s.ic_after() {
             assert!(close(ic, 0.5, 1e-12), "{ic}");
         }
     }
@@ -370,10 +462,10 @@ mod tests {
         state.place(0, Blackscholes); // ~0.95 cpu
         let mut ns = NativeScoring::new();
         let s = ns.score(&state, Blackscholes, &b, 1.2, false);
-        assert!(close(s.ol_before[0], 0.0, 1e-9));
+        assert!(close(s.ol_before()[0], 0.0, 1e-9));
         // Two blackscholes ≈ 1.9 CPU > 1.2 -> overload ≈ 0.7.
-        assert!(s.ol_after[0] > 0.5, "{}", s.ol_after[0]);
-        assert!(close(s.ol_after[1], 0.0, 1e-9));
+        assert!(s.ol_after()[0] > 0.5, "{}", s.ol_after()[0]);
+        assert!(close(s.ol_after()[1], 0.0, 1e-9));
     }
 
     #[test]
@@ -390,8 +482,8 @@ mod tests {
         let cpu = ns.score(&state, StreamHigh, &b, 1.2, true);
         // Full RAS sees net saturation (3 × 0.7 = 2.1 > 1.2); CAS doesn't
         // (3 × 0.2 = 0.6 < 1.2).
-        assert!(full.ol_after[0] > 0.5, "{}", full.ol_after[0]);
-        assert!(close(cpu.ol_after[0], 0.0, 1e-9), "{}", cpu.ol_after[0]);
+        assert!(full.ol_after()[0] > 0.5, "{}", full.ol_after()[0]);
+        assert!(close(cpu.ol_after()[0], 0.0, 1e-9), "{}", cpu.ol_after()[0]);
     }
 
     #[test]
@@ -402,8 +494,8 @@ mod tests {
         let mut last = 0.0;
         for _ in 0..4 {
             let s = ns.score(&state, Jacobi, &b, 1.2, false);
-            assert!(s.ic_after[0] > last);
-            last = s.ic_after[0];
+            assert!(s.ic_after()[0] > last);
+            last = s.ic_after()[0];
             state.place(0, Jacobi);
         }
     }
@@ -429,10 +521,10 @@ mod tests {
                 let fast = ns.score(&cached, cand, &b, 1.2, cpu_only);
                 let slow = ns.score(&plain, cand, &b, 1.2, cpu_only);
                 for core in 0..4 {
-                    assert!(close(fast.ol_before[core], slow.ol_before[core], 1e-12));
-                    assert!(close(fast.ol_after[core], slow.ol_after[core], 1e-12));
-                    assert!(close(fast.ic_before[core], slow.ic_before[core], 1e-12));
-                    assert!(close(fast.ic_after[core], slow.ic_after[core], 1e-12));
+                    assert!(close(fast.ol_before()[core], slow.ol_before()[core], 1e-12));
+                    assert!(close(fast.ol_after()[core], slow.ol_after()[core], 1e-12));
+                    assert!(close(fast.ic_before()[core], slow.ic_before()[core], 1e-12));
+                    assert!(close(fast.ic_after()[core], slow.ic_after()[core], 1e-12));
                 }
             }
         }
@@ -445,10 +537,10 @@ mod tests {
         let mut ns = NativeScoring::new();
         let mut out = Scores::default();
         ns.score_into(&state, Jacobi, &b, 1.2, false, &mut out);
-        assert_eq!(out.ol_after.len(), 3);
+        assert_eq!(out.ol_after().len(), 3);
         // Second call into the same buffer must not accumulate.
         ns.score_into(&state, Hadoop, &b, 1.2, false, &mut out);
-        assert_eq!(out.ol_after.len(), 3);
-        assert_eq!(out.ic_after.len(), 3);
+        assert_eq!(out.ol_after().len(), 3);
+        assert_eq!(out.ic_after().len(), 3);
     }
 }

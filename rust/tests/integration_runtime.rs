@@ -51,16 +51,16 @@ fn xla_and_native_backends_agree_on_random_states() {
         let b = native.score(&state, cand, bank, 1.2, cpu_only);
         for core in 0..12 {
             assert!(
-                (a.ol_after[core] - b.ol_after[core]).abs() < 1e-3,
+                (a.ol_after()[core] - b.ol_after()[core]).abs() < 1e-3,
                 "case {case} core {core} ol_after: {} vs {}",
-                a.ol_after[core],
-                b.ol_after[core]
+                a.ol_after()[core],
+                b.ol_after()[core]
             );
             assert!(
-                (a.ic_after[core] - b.ic_after[core]).abs() < 1e-3,
+                (a.ic_after()[core] - b.ic_after()[core]).abs() < 1e-3,
                 "case {case} core {core} ic_after: {} vs {}",
-                a.ic_after[core],
-                b.ic_after[core]
+                a.ic_after()[core],
+                b.ic_after()[core]
             );
         }
     }

@@ -71,12 +71,12 @@ fn prop_ras_prefers_zero_overload_cores() {
         let exists_zero = state
             .allowed
             .iter()
-            .any(|&c| scores.ol_after[c] <= 1e-12);
+            .any(|&c| scores.ol_after()[c] <= 1e-12);
         if exists_zero {
             assert!(
-                scores.ol_after[core] <= 1e-12,
+                scores.ol_after()[core] <= 1e-12,
                 "a zero-overload core existed but RAS picked OL={}",
-                scores.ol_after[core]
+                scores.ol_after()[core]
             );
         }
     });
@@ -98,23 +98,23 @@ fn prop_ias_respects_threshold_when_possible() {
         let exists_under = state
             .allowed
             .iter()
-            .any(|&c| scores.ic_after[c] < threshold);
+            .any(|&c| scores.ic_after()[c] < threshold);
         if exists_under {
             assert!(
-                scores.ic_after[core] < threshold,
+                scores.ic_after()[core] < threshold,
                 "an under-threshold core existed but IAS picked I={}",
-                scores.ic_after[core]
+                scores.ic_after()[core]
             );
         } else {
             let min = state
                 .allowed
                 .iter()
-                .map(|&c| scores.ic_after[c])
+                .map(|&c| scores.ic_after()[c])
                 .fold(f64::INFINITY, f64::min);
             assert!(
-                scores.ic_after[core] <= min + 1e-9,
+                scores.ic_after()[core] <= min + 1e-9,
                 "IAS must minimise: picked {} vs min {min}",
-                scores.ic_after[core]
+                scores.ic_after()[core]
             );
         }
     });
@@ -218,10 +218,10 @@ fn prop_incremental_scores_match_reference() {
             let slow = scoring::reference_scores_with(mode, &cached, cand, bank, thr, cpu_only);
             for c in 0..cores {
                 for (a, b, what) in [
-                    (fast.ol_before[c], slow.ol_before[c], "ol_before"),
-                    (fast.ol_after[c], slow.ol_after[c], "ol_after"),
-                    (fast.ic_before[c], slow.ic_before[c], "ic_before"),
-                    (fast.ic_after[c], slow.ic_after[c], "ic_after"),
+                    (fast.ol_before()[c], slow.ol_before()[c], "ol_before"),
+                    (fast.ol_after()[c], slow.ol_after()[c], "ol_after"),
+                    (fast.ic_before()[c], slow.ic_before()[c], "ic_before"),
+                    (fast.ic_after()[c], slow.ic_after()[c], "ic_after"),
                 ] {
                     assert!(
                         (a - b).abs() < 1e-9,
@@ -266,10 +266,10 @@ fn prop_place_remove_interleavings_match_reference() {
         let slow = scoring::reference_scores(&state, cand, bank, thr, cpu_only);
         for c in 0..cores {
             for (a, b, what) in [
-                (fast.ol_before[c], slow.ol_before[c], "ol_before"),
-                (fast.ol_after[c], slow.ol_after[c], "ol_after"),
-                (fast.ic_before[c], slow.ic_before[c], "ic_before"),
-                (fast.ic_after[c], slow.ic_after[c], "ic_after"),
+                (fast.ol_before()[c], slow.ol_before()[c], "ol_before"),
+                (fast.ol_after()[c], slow.ol_after()[c], "ol_after"),
+                (fast.ic_before()[c], slow.ic_before()[c], "ic_before"),
+                (fast.ic_after()[c], slow.ic_after()[c], "ic_after"),
             ] {
                 // 1e-9 absolute-or-relative (util::close — the same rule
                 // cache_matches_rebuild uses): the IC scores carry the
@@ -477,7 +477,7 @@ fn prop_bus_routing_matches_direct_host_calls() {
                     },
                 });
             }
-            bus.route(policy.as_mut(), &mut route_rng).unwrap();
+            bus.route(policy.as_mut(), bank, &mut route_rng).unwrap();
             pool.step(bus.take_inboxes()).unwrap();
         }
         let routed = pool.into_hosts().unwrap();
@@ -679,6 +679,96 @@ fn prop_placement_state_accounting() {
                     assert!((l - want).abs() < 1e-9, "core {core} metric {j}");
                 }
             }
+        }
+    });
+}
+
+#[test]
+fn prop_batched_rank_matches_scalar_picks() {
+    // The score-matrix parity contract: for the four classic policies,
+    // one batched `rank` call over an N-arrival burst must produce
+    // exactly the pick sequence of N scalar picks against summaries
+    // live-updated between picks the way `EventBus::route` updates them
+    // (`resident += 1`, `est_cpu_load += demand[cpu]`).
+    use vmcd::cluster::dispatch::{scalar, ArrivalBatch, Dispatcher};
+    use vmcd::cluster::{HostSummary, SummaryMatrix};
+    use vmcd::vmcd::scheduler::ScoreBuf;
+
+    let bank = testkit::shared_bank();
+    check("batched-rank-parity", default_cases(), |rng| {
+        let hosts = 1 + rng.below(12);
+        let host_cores = 4 + rng.below(13);
+        let burst = 1 + rng.below(16);
+
+        // Random published summaries (whatever the last refresh left),
+        // with deliberate exact ties so the tie-break order is exercised.
+        let summaries: Vec<HostSummary> = (0..hosts)
+            .map(|_| HostSummary {
+                resident: rng.below(4),
+                busy_cores: rng.below(host_cores + 1),
+                max_wi: if rng.chance(0.4) {
+                    0.0
+                } else {
+                    rng.range(0.0, 3.0)
+                },
+                est_cpu_load: if rng.chance(0.4) {
+                    0.0
+                } else {
+                    rng.range(0.0, host_cores as f64)
+                },
+                ..HostSummary::default()
+            })
+            .collect();
+        let classes: Vec<WorkloadClass> =
+            (0..burst).map(|_| *rng.pick(&ALL_CLASSES)).collect();
+
+        // Matrix and batch exactly as `EventBus::flush_batch` builds them.
+        let matrix = SummaryMatrix::from_summaries(&summaries, host_cores);
+        let mut batch = ArrivalBatch::default();
+        for &class in &classes {
+            batch.push_class(class, bank);
+        }
+
+        for d in [
+            Dispatcher::RoundRobin,
+            Dispatcher::LeastLoaded,
+            Dispatcher::LowestInterference,
+            Dispatcher::Random,
+        ] {
+            // Identical RNG streams on both sides (only Random draws).
+            let mut rng_batched = Rng::new(rng.next_u64());
+            let mut rng_scalar = rng_batched.clone();
+
+            let mut policy = d.build();
+            let mut scratch = ScoreBuf::default();
+            let mut batched = Vec::new();
+            policy.rank(&matrix, &batch, &mut scratch, &mut rng_batched, &mut batched);
+            assert_eq!(batched.len(), burst, "{} rank pick count", d.name());
+
+            // Scalar drive: frozen pre-matrix pickers over a summary copy
+            // that replays the bus's per-arrival live updates.
+            let mut live = summaries.clone();
+            let mut cursor = 0usize;
+            let mut picks = Vec::with_capacity(burst);
+            for &class in &classes {
+                let h = match d {
+                    Dispatcher::RoundRobin => scalar::round_robin(&mut cursor, &live),
+                    Dispatcher::LeastLoaded => scalar::least_loaded(&live),
+                    Dispatcher::LowestInterference => scalar::lowest_interference(&live),
+                    Dispatcher::Random => scalar::random(&live, &mut rng_scalar),
+                    _ => unreachable!(),
+                };
+                live[h].resident += 1;
+                live[h].est_cpu_load += bank.u[class.index()][0];
+                picks.push(h);
+            }
+
+            assert_eq!(
+                batched, picks,
+                "{} batched rank diverged from scalar picks \
+                 (hosts {hosts}, burst {burst})",
+                d.name()
+            );
         }
     });
 }
