@@ -1,0 +1,102 @@
+//! Trace replay at cluster scale: the headline end-to-end throughput of
+//! the trace subsystem. Each cell streams a seeded synthetic trace
+//! (heavy-tailed Poisson-burst arrivals, lognormal lifetimes) through
+//! `run_trace` — every arrival is batch-ranked by the dispatcher under
+//! test, every departure routed through the event bus, hosts stepped by
+//! the persistent shard pool — and reports sustained events/sec.
+//!
+//! Full mode runs 100k+ VM events (50k arrivals + 50k departures) at
+//! 1024 and 4096 hosts per dispatcher; `VMCD_BENCH_QUICK=1` shrinks to
+//! 64 hosts × 2k events so CI can afford a smoke pass. Replays are
+//! seconds-long, so each cell is measured once end-to-end (no
+//! iteration harness). Emits `BENCH_trace.json`.
+
+mod common;
+
+use vmcd::cluster::trace::synth::SyntheticTraceGenerator;
+use vmcd::cluster::{ClusterSpec, Dispatcher, StepMode, Strategy};
+use vmcd::scenarios::run_trace;
+use vmcd::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let quick = std::env::var("VMCD_BENCH_QUICK").as_deref() == Ok("1");
+
+    // 50k VMs at 100 arrivals/s with 60 s lognormal lifetimes (capped at
+    // 600 s) keeps the simulated window near 1100 s while still pushing
+    // 100k events through the bus.
+    let (fleets, synth_spec): (&[usize], &str) = if quick {
+        (&[64], "vms=1000,rate=50,burst=8,life=30,lmax=120,seed=42")
+    } else {
+        (
+            &[1024, 4096],
+            "vms=50000,rate=100,burst=8,life=60,lmax=600,seed=42",
+        )
+    };
+    let dispatchers = [
+        Dispatcher::LeastLoaded,
+        Dispatcher::LowestInterference,
+        Dispatcher::DotProduct,
+        Dispatcher::PerpDistance,
+    ];
+
+    println!(
+        "{:<20} {:>6} {:>9} {:>7} {:>10} {:>9} {:>12}",
+        "dispatcher", "hosts", "events", "ticks", "peak live", "wall ms", "events/sec"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &hosts in fleets {
+        for d in dispatchers {
+            let mut spec = ClusterSpec::new(hosts, Strategy::LocalVmcd);
+            spec.cfg = cfg.clone();
+            spec.dispatcher = d;
+            spec.step_mode = StepMode::Pool(4);
+            let mut reader = SyntheticTraceGenerator::parse(synth_spec, 42)?;
+            let r = run_trace(&spec, &mut reader, &bank)?;
+            anyhow::ensure!(!r.truncated, "trace replay hit max_time at {hosts} hosts");
+            anyhow::ensure!(
+                r.final_live == 0,
+                "{} VMs never departed at {hosts} hosts",
+                r.final_live
+            );
+            let events = r.arrivals + r.departures + r.migrates;
+            println!(
+                "{:<20} {:>6} {:>9} {:>7} {:>10} {:>9} {:>12.0}",
+                d.name(),
+                hosts,
+                events,
+                r.ticks,
+                r.peak_live,
+                r.wall.as_millis(),
+                r.events_per_sec()
+            );
+            rows.push(Json::from_pairs(vec![
+                ("dispatcher", Json::Str(d.name().into())),
+                ("hosts", Json::Num(hosts as f64)),
+                ("events", Json::Num(events as f64)),
+                ("arrivals", Json::Num(r.arrivals as f64)),
+                ("departures", Json::Num(r.departures as f64)),
+                ("ticks", Json::Num(r.ticks as f64)),
+                ("peak_live", Json::Num(r.peak_live as f64)),
+                ("events_routed", Json::Num(r.events_routed as f64)),
+                ("core_hours", Json::Num(r.core_hours)),
+                ("wall_ms", Json::Num(r.wall.as_secs_f64() * 1e3)),
+                ("events_per_sec", Json::Num(r.events_per_sec())),
+            ]));
+        }
+    }
+
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("trace_replay".into())),
+        ("synth_spec", Json::Str(synth_spec.into())),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_trace.json", doc.pretty() + "\n")?;
+    println!(
+        "\nwrote BENCH_trace.json ({} rows)",
+        doc.field("rows")?.as_arr().unwrap().len()
+    );
+    Ok(())
+}

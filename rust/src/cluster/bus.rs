@@ -131,6 +131,12 @@ const MATRIX_LANES: usize = COL_LOAD0 + NUM_METRICS;
 pub struct SummaryMatrix {
     buf: ScoreBuf,
     host_cores: usize,
+    /// Per-host capacity vectors (heterogeneous clusters: trace
+    /// host-classes, `ClusterSpec::host_caps`). Empty = the homogeneous
+    /// default (`host_cores` CPU, 1.0 per fractional metric). Kept
+    /// outside `buf` on purpose: [`Self::rebuild`] resets the lanes
+    /// every tick, but capacities are configuration, not tick state.
+    caps: Vec<MetricVec>,
 }
 
 impl SummaryMatrix {
@@ -138,6 +144,7 @@ impl SummaryMatrix {
         let mut m = SummaryMatrix {
             buf: ScoreBuf::default(),
             host_cores,
+            caps: Vec::new(),
         };
         m.buf.reset(MATRIX_LANES, hosts);
         m
@@ -162,14 +169,26 @@ impl SummaryMatrix {
         self.host_cores
     }
 
-    /// Capacity of one metric column: `host_cores` for CPU (loads are
-    /// in units of cores), 1.0 for the fractional metrics.
-    pub fn cap(&self, metric: usize) -> f64 {
-        if metric == 0 {
+    /// Capacity of `host` on one metric column. Defaults to
+    /// `host_cores` for CPU (loads are in units of cores) and 1.0 for
+    /// the fractional metrics; heterogeneous per-host vectors installed
+    /// via [`Self::set_caps`] override both.
+    pub fn cap(&self, host: usize, metric: usize) -> f64 {
+        if let Some(caps) = self.caps.get(host) {
+            caps[metric]
+        } else if metric == 0 {
             self.host_cores as f64
         } else {
             1.0
         }
+    }
+
+    /// Install per-host capacity vectors (`[cpu_cores, diskio, netio,
+    /// membw]`, same axes as the load columns). An empty vector
+    /// restores the homogeneous default.
+    pub fn set_caps(&mut self, caps: Vec<MetricVec>) {
+        debug_assert!(caps.is_empty() || caps.len() == self.hosts());
+        self.caps = caps;
     }
 
     /// Resident-VM counts, as a dense f64 column.
@@ -201,7 +220,7 @@ impl SummaryMatrix {
 
     /// Free capacity of `host` on `metric`, clamped at 0.
     pub fn free(&self, host: usize, metric: usize) -> f64 {
-        (self.cap(metric) - self.load(metric)[host]).max(0.0)
+        (self.cap(host, metric) - self.load(metric)[host]).max(0.0)
     }
 
     /// Rebuild every column from summaries, deriving the per-resource
@@ -304,6 +323,13 @@ pub struct EventBus {
     /// Physical cores per host (destination-business normaliser for the
     /// migration abort draw).
     host_cores: usize,
+    /// Placement log of this routing window: `(vm, host)` for every
+    /// policy-ranked arrival, forced arrival, and completed migration —
+    /// how external drivers (trace replay) learn where the bus put each
+    /// VM without reaching into engine state. Drained by
+    /// [`Self::take_moves`]; aborted migrations never log (the VM stayed
+    /// on its source).
+    moves: Vec<(VmId, usize)>,
     pub stats: BusStats,
 }
 
@@ -320,8 +346,21 @@ impl EventBus {
             picks: Vec::new(),
             model,
             host_cores,
+            moves: Vec::new(),
             stats: BusStats::default(),
         }
+    }
+
+    /// Drain the placement log: every `(vm, host)` the bus decided since
+    /// the last drain. See the `moves` field.
+    pub fn take_moves(&mut self) -> Vec<(VmId, usize)> {
+        std::mem::take(&mut self.moves)
+    }
+
+    /// Install per-host capacity vectors on the ranking matrix (see
+    /// [`SummaryMatrix::set_caps`]).
+    pub fn set_host_caps(&mut self, caps: Vec<MetricVec>) {
+        self.matrix.set_caps(caps);
     }
 
     pub fn hosts(&self) -> usize {
@@ -391,6 +430,7 @@ impl EventBus {
                     self.flush_batch(&mut pending, policy, bank, rng)?;
                     anyhow::ensure!(h < hosts, "arrival routed to host {h} of {hosts}");
                     self.note_arrival(h, vm.class, bank);
+                    self.moves.push((vm.id, h));
                     self.inboxes[h].push(HostEvent::Arrival(vm));
                 }
                 ClusterEvent::Departure { host, vm } => {
@@ -451,6 +491,7 @@ impl EventBus {
             let h = self.picks[i];
             anyhow::ensure!(h < hosts, "arrival routed to host {h} of {hosts}");
             self.note_arrival(h, vm.class, bank);
+            self.moves.push((vm.id, h));
             self.inboxes[h].push(HostEvent::Arrival(vm));
         }
         Ok(())
@@ -528,6 +569,7 @@ impl EventBus {
             self.summaries[m.to_host].resident += 1;
             self.matrix.note_departure(m.from_host);
             self.matrix.note_transfer_in(m.to_host);
+            self.moves.push((vm.id, m.to_host));
             self.inboxes[m.to_host].push(HostEvent::MigrateIn {
                 vm,
                 pause_until: pause,
@@ -839,6 +881,49 @@ mod tests {
     }
 
     #[test]
+    fn per_host_caps_override_the_homogeneous_default_and_survive_rebuild() {
+        let mut m = SummaryMatrix::new(2, 12);
+        assert_eq!(m.cap(0, 0), 12.0);
+        assert_eq!(m.cap(1, 2), 1.0);
+        m.set_caps(vec![[16.0, 2.0, 1.0, 4.0], [8.0, 1.0, 0.5, 2.0]]);
+        assert_eq!(m.cap(0, 0), 16.0);
+        assert_eq!(m.cap(1, 3), 2.0);
+        // Rebuild resets the tick lanes but never the configuration.
+        m.rebuild_basic(&[HostSummary::default(), HostSummary::default()]);
+        assert_eq!(m.cap(1, 2), 0.5);
+        assert_eq!(m.free(1, 2), 0.5);
+        m.set_caps(Vec::new());
+        assert_eq!(m.cap(0, 0), 12.0);
+    }
+
+    #[test]
+    fn take_moves_logs_where_every_arrival_landed() {
+        let bank = testkit::shared_bank();
+        let mut bus = EventBus::new(3, MigrationModel::default(), 12);
+        let mut policy = Dispatcher::LeastLoaded.build();
+        let mut rng = Rng::new(1);
+        for i in 0..3 {
+            bus.publish(ClusterEvent::Arrival {
+                vm: running_vm(i, WorkloadClass::Hadoop),
+                host: None,
+            });
+        }
+        bus.publish(ClusterEvent::Arrival {
+            vm: running_vm(9, WorkloadClass::Jacobi),
+            host: Some(2),
+        });
+        bus.route(policy.as_mut(), bank, &mut rng).unwrap();
+        let moves = bus.take_moves();
+        assert_eq!(moves.len(), 4);
+        assert_eq!(moves[3], (VmId(9), 2), "forced arrival logs its host");
+        let mut ids: Vec<u32> = moves.iter().map(|&(VmId(id), _)| id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 9]);
+        assert!(moves.iter().all(|&(_, h)| h < 3));
+        assert!(bus.take_moves().is_empty(), "drain leaves the log empty");
+    }
+
+    #[test]
     fn matrix_mirrors_summaries_through_refresh_and_routing() {
         let bank = testkit::shared_bank();
         let mut bus = EventBus::new(2, MigrationModel::default(), 12);
@@ -879,7 +964,7 @@ mod tests {
                     .map(|&(_, class)| bank.u[class.index()][metric])
                     .sum();
                 assert!((m.load(metric)[h] - want).abs() < 1e-12);
-                assert!(m.free(h, metric) <= m.cap(metric));
+                assert!(m.free(h, metric) <= m.cap(h, metric));
             }
         }
 

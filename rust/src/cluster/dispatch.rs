@@ -27,16 +27,19 @@
 //! | `dot-product`         | `DotProduct`       | Eq. 2 vector headroom   |
 //! | `cosine`              | `CosineSimilarity` | Eq. 2, shape-matched    |
 //! | `norm-greedy`         | `NormBasedGreedy`  | Eq. 2, L2 best-fit      |
+//! | `perp-distance`       | `PerpendicularDistance` | Eq. 2, least stranded headroom |
 //!
 //! The vector family scores the arrival's profile-bank demand row
 //! (`U[class]`, the Eq. 2 utilisation vector) against each host's
 //! **free-capacity** columns `max(cap − load, 0)`: `dot-product` packs
 //! onto the host with the most demand-aligned headroom,
 //! `cosine` onto the host whose headroom *shape* best matches the
-//! demand (scale-free), and `norm-greedy` is the L2 best-fit — the host
-//! whose headroom the demand most snugly consumes. All three break
-//! exact ties on the lowest host index, the same reproducibility
-//! contract as the classic policies.
+//! demand (scale-free), `norm-greedy` is the L2 best-fit — the host
+//! whose headroom the demand most snugly consumes — and
+//! `perp-distance` minimises the headroom component orthogonal to the
+//! demand direction (absolute-units shape match: large-but-misshapen
+//! headroom loses). All four break exact ties on the lowest host
+//! index, the same reproducibility contract as the classic policies.
 //!
 //! [`Dispatcher`] is the parseable configuration surface (symmetric
 //! with `Policy::parse`): an enum naming the built-in policies, with
@@ -294,9 +297,10 @@ fn load_working_copy(matrix: &SummaryMatrix, scratch: &mut ScoreBuf) {
     }
 }
 
-/// Free capacity of `host` on `metric` against the live working loads.
+/// Free capacity of `host` on `metric` against the live working loads
+/// (per-host capacity vectors respected — heterogeneous clusters).
 fn free_at(matrix: &SummaryMatrix, scratch: &ScoreBuf, host: usize, metric: usize) -> f64 {
-    (matrix.cap(metric) - scratch.lane(metric)[host]).max(0.0)
+    (matrix.cap(host, metric) - scratch.lane(metric)[host]).max(0.0)
 }
 
 /// Charge a placed arrival's demand to the working loads.
@@ -435,6 +439,62 @@ impl ArrivalPolicy for NormBasedGreedyPolicy {
     }
 }
 
+/// dslab `PerpendicularDistance`: minimise `‖f‖² − (f·d̂)²` — the squared
+/// perpendicular distance from the host's free-capacity vector `f` to
+/// the line spanned by the demand direction `d̂`. The winner is the host
+/// whose headroom is most *parallel* to what this arrival consumes,
+/// i.e. with the least headroom stranded orthogonal to the demand —
+/// unlike `cosine` it penalises large but misshapen headroom in
+/// absolute units rather than by angle alone.
+///
+/// Zero demand scores every host 0 (lowest index wins). Because
+/// charging a demand moves `f` exactly along `d̂`, identical in-batch
+/// arrivals score the charged host identically and stack (like
+/// `norm-greedy`) until a metric clamps at 0.
+pub struct PerpDistancePolicy;
+
+impl ArrivalPolicy for PerpDistancePolicy {
+    fn rank(
+        &mut self,
+        matrix: &SummaryMatrix,
+        batch: &ArrivalBatch,
+        scratch: &mut ScoreBuf,
+        _rng: &mut Rng,
+        out: &mut Vec<usize>,
+    ) {
+        let hosts = matrix.hosts();
+        assert!(hosts > 0);
+        out.clear();
+        load_working_copy(matrix, scratch);
+        for demand in batch.demands() {
+            let dsq: f64 = demand.iter().map(|d| d * d).sum();
+            let mut best = 0;
+            let mut best_score = f64::INFINITY;
+            for h in 0..hosts {
+                let mut dot = 0.0;
+                let mut fsq = 0.0;
+                for (m, &d) in demand.iter().enumerate() {
+                    let f = free_at(matrix, scratch, h, m);
+                    dot += d * f;
+                    fsq += f * f;
+                }
+                let perp = if dsq > 0.0 { fsq - dot * dot / dsq } else { 0.0 };
+                // Strict `<` keeps the lowest host index on exact ties.
+                if perp < best_score {
+                    best_score = perp;
+                    best = h;
+                }
+            }
+            charge(scratch, best, demand);
+            out.push(best);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "perp-distance"
+    }
+}
+
 /// The frozen pre-matrix scalar pickers, verbatim. These are **not**
 /// wired into the bus — they are the baseline the parity proptest
 /// checks the batched [`ArrivalPolicy::rank`] path against bit-for-bit,
@@ -498,10 +558,11 @@ pub enum Dispatcher {
     DotProduct,
     CosineSimilarity,
     NormBasedGreedy,
+    PerpDistance,
 }
 
 impl Dispatcher {
-    pub const ALL: [Dispatcher; 7] = [
+    pub const ALL: [Dispatcher; 8] = [
         Dispatcher::RoundRobin,
         Dispatcher::LeastLoaded,
         Dispatcher::LowestInterference,
@@ -509,6 +570,7 @@ impl Dispatcher {
         Dispatcher::DotProduct,
         Dispatcher::CosineSimilarity,
         Dispatcher::NormBasedGreedy,
+        Dispatcher::PerpDistance,
     ];
 
     pub fn name(self) -> &'static str {
@@ -520,6 +582,7 @@ impl Dispatcher {
             Dispatcher::DotProduct => "dot-product",
             Dispatcher::CosineSimilarity => "cosine",
             Dispatcher::NormBasedGreedy => "norm-greedy",
+            Dispatcher::PerpDistance => "perp-distance",
         }
     }
 
@@ -532,6 +595,7 @@ impl Dispatcher {
             "dot-product" | "dp" => Some(Dispatcher::DotProduct),
             "cosine" | "cos" => Some(Dispatcher::CosineSimilarity),
             "norm-greedy" | "ng" => Some(Dispatcher::NormBasedGreedy),
+            "perp-distance" | "pd" => Some(Dispatcher::PerpDistance),
             _ => None,
         }
     }
@@ -556,6 +620,7 @@ impl Dispatcher {
             Dispatcher::DotProduct => Box::new(DotProductPolicy),
             Dispatcher::CosineSimilarity => Box::new(CosineSimilarityPolicy),
             Dispatcher::NormBasedGreedy => Box::new(NormBasedGreedyPolicy),
+            Dispatcher::PerpDistance => Box::new(PerpDistancePolicy),
         }
     }
 }
@@ -781,6 +846,61 @@ mod tests {
     }
 
     #[test]
+    fn perp_distance_vs_cosine_head_to_head() {
+        // cap = [4,1,1,1]. Host 0 free [1,1,0,0]; host 1 free [4,1,0,0].
+        // Demand is pure CPU. Cosine rewards host 1's better *angle*
+        // (4/√17 ≈ 0.97 vs 1/√2 ≈ 0.71), but both hosts strand exactly
+        // one unit of non-CPU headroom (perp² = 1 each), so
+        // perp-distance ties and keeps the lowest index — the
+        // absolute-residue vs angle distinction in one matrix.
+        let m = matrix_with_loads(4, &[[3.0, 0.0, 1.0, 1.0], [0.0, 0.0, 1.0, 1.0]]);
+        let demand = [1.0, 0.0, 0.0, 0.0];
+        assert_eq!(rank_one(&mut CosineSimilarityPolicy, &m, demand), 1);
+        assert_eq!(rank_one(&mut PerpDistancePolicy, &m, demand), 0);
+        // Give host 1 *less* stranded non-CPU headroom and it wins
+        // outright (perp² = 0.25 vs host 0's 1.0).
+        let m = matrix_with_loads(4, &[[3.0, 0.0, 1.0, 1.0], [0.0, 0.5, 1.0, 1.0]]);
+        assert_eq!(rank_one(&mut PerpDistancePolicy, &m, demand), 1);
+    }
+
+    #[test]
+    fn perp_distance_tie_breaks_on_lowest_host_index() {
+        let m = matrix_with_loads(4, &[[1.0, 0.2, 0.1, 0.0]; 3]);
+        assert_eq!(rank_one(&mut PerpDistancePolicy, &m, [0.5, 0.1, 0.0, 0.0]), 0);
+        // Zero demand: every host scores a clean 0 — lowest index, no NaN.
+        assert_eq!(rank_one(&mut PerpDistancePolicy, &m, [0.0; 4]), 0);
+    }
+
+    #[test]
+    fn perp_distance_stacks_identical_arrivals_within_a_batch() {
+        // Charging moves f exactly along d̂, which leaves the orthogonal
+        // residue — the score — unchanged, so identical same-batch
+        // arrivals stack on the tie-break host (norm-greedy flavour, by
+        // design; documented on the policy).
+        let m = matrix_with_loads(4, &[[0.0; 4]; 2]);
+        let mut batch = ArrivalBatch::default();
+        batch.push([1.0, 0.2, 0.0, 0.0]);
+        batch.push([1.0, 0.2, 0.0, 0.0]);
+        let mut scratch = ScoreBuf::default();
+        let mut rng = Rng::new(7);
+        let mut out = Vec::new();
+        PerpDistancePolicy.rank(&m, &batch, &mut scratch, &mut rng, &mut out);
+        assert_eq!(out, vec![0, 0]);
+    }
+
+    #[test]
+    fn vector_policies_respect_per_host_caps() {
+        // Heterogeneous capacities (satellite: ClusterSpec/trace-fed
+        // caps): host 1 is a bigger box, so with equal loads it has the
+        // most demand-aligned headroom.
+        let mut m = matrix_with_loads(4, &[[1.0, 0.0, 0.0, 0.0]; 2]);
+        m.set_caps(vec![[4.0, 1.0, 1.0, 1.0], [16.0, 1.0, 1.0, 1.0]]);
+        assert_eq!(rank_one(&mut DotProductPolicy, &m, [1.0, 0.0, 0.0, 0.0]), 1);
+        // And the snug-fit family flips to the *smaller* box.
+        assert_eq!(rank_one(&mut NormBasedGreedyPolicy, &m, [1.0, 0.0, 0.0, 0.0]), 0);
+    }
+
+    #[test]
     fn cosine_zero_norm_scores_zero_not_nan() {
         // Host 0 fully saturated (free = 0 in every metric): its score
         // must be a clean 0, never NaN, so the empty host wins.
@@ -813,6 +933,7 @@ mod tests {
             Dispatcher::CosineSimilarity
         );
         assert_eq!(Dispatcher::parse("ng").unwrap(), Dispatcher::NormBasedGreedy);
+        assert_eq!(Dispatcher::parse("pd").unwrap(), Dispatcher::PerpDistance);
         let err = Dispatcher::parse("bogus").unwrap_err().to_string();
         assert!(err.contains("round-robin"), "{err}");
         assert!(err.contains("least-loaded"), "{err}");
@@ -821,6 +942,7 @@ mod tests {
         assert!(err.contains("dot-product"), "{err}");
         assert!(err.contains("cosine"), "{err}");
         assert!(err.contains("norm-greedy"), "{err}");
-        assert_eq!(Dispatcher::ALL.map(|d| d.name()).len(), 7);
+        assert!(err.contains("perp-distance"), "{err}");
+        assert_eq!(Dispatcher::ALL.map(|d| d.name()).len(), 8);
     }
 }

@@ -30,6 +30,15 @@
 //!     the VM for a downtime window and burns network on both ends.
 //!     Within a host it pins round-robin (the centralized schedulers the
 //!     paper contrasts with do not micro-manage pinning).
+//!
+//! On top of both sits [`trace`] — **trace-driven scale-out**: dataset
+//! readers (CSV vm-instances/vm-types files, dslab-style) and a seeded
+//! heavy-tailed [`SyntheticTraceGenerator`](trace::synth::SyntheticTraceGenerator)
+//! stream time-ordered [`TraceEvent`](trace::TraceEvent)s into a replay
+//! driver ([`trace::replay::replay`]) that publishes them through the
+//! event bus, so any dispatcher can be measured against 100k+ VM events
+//! across thousands of hosts (`vmcd cluster --trace`, the `trace_replay`
+//! bench).
 
 pub mod bus;
 pub mod dispatch;
@@ -37,10 +46,13 @@ pub mod host;
 pub mod migration;
 pub mod pool;
 pub mod sim;
+pub mod trace;
 
 pub use bus::{BusStats, ClusterEvent, EventBus, HostEvent, HostSummary, SummaryMatrix, TickReport};
 pub use dispatch::{ArrivalBatch, ArrivalPolicy, Dispatcher};
 pub use host::{ClusterHost, HostHandle, HostMetrics, NativeHost, SimHost};
 pub use migration::MigrationModel;
 pub use pool::{ShardPool, StepMode};
-pub use sim::{ClusterResult, ClusterSim, ClusterSpec, Strategy};
+pub use sim::{validate_shape, ClusterResult, ClusterSim, ClusterSpec, Strategy};
+pub use trace::replay::{replay, ReplayResult};
+pub use trace::{TraceEvent, TraceOp, TraceReader};

@@ -79,6 +79,14 @@ pub struct ClusterSpec {
     /// models real enforcement latency (pins land N ticks late, within
     /// a per-tick budget).
     pub actuation: ActuationSpec,
+    /// Per-host capacity vectors for the dispatch matrix
+    /// (`[cpu_cores, diskio, netio, membw]`, e.g. from a trace
+    /// host-classes file). `None` = every host advertises
+    /// [`crate::config::HostSpec::metric_caps`]; shorter vectors are
+    /// padded with that default. Dispatch-side only: the engine physics
+    /// keep the homogeneous `HostSpec`, so this models what the
+    /// *scheduler* believes about a heterogeneous fleet.
+    pub host_caps: Option<Vec<crate::workloads::MetricVec>>,
 }
 
 impl ClusterSpec {
@@ -94,8 +102,27 @@ impl ClusterSpec {
             max_migrations: 4,
             step_mode: StepMode::Single,
             actuation: ActuationSpec::Inline,
+            host_caps: None,
         }
     }
+}
+
+/// Reject zero/absurd cluster shapes before they build a silent empty
+/// run (0 hosts) or an OOM-sized fleet — the `vmcd cluster` argument
+/// validation satellite.
+pub fn validate_shape(hosts: usize, vms: usize) -> Result<()> {
+    anyhow::ensure!(hosts >= 1, "--hosts must be ≥ 1, got {hosts}");
+    anyhow::ensure!(
+        hosts <= 1 << 20,
+        "--hosts {hosts} is absurd (max {})",
+        1usize << 20
+    );
+    anyhow::ensure!(vms >= 1, "--vms must be ≥ 1, got {vms}");
+    anyhow::ensure!(
+        vms <= 10_000_000,
+        "--vms {vms} is absurd (max 10000000)"
+    );
+    Ok(())
 }
 
 /// Cluster run summary.
@@ -180,6 +207,10 @@ impl ClusterSim {
         let pool = ShardPool::new(hosts, spec.step_mode);
         let mut bus = EventBus::new(n, spec.migration.clone(), spec.cfg.host.cores);
         bus.prime(initial);
+        if let Some(mut caps) = spec.host_caps.clone() {
+            caps.resize(n, spec.cfg.host.metric_caps());
+            bus.set_host_caps(caps);
+        }
         let policy = spec.dispatcher.build();
         let pending = scenario
             .vms
@@ -219,6 +250,13 @@ impl ClusterSim {
     /// ticks, replayed traces); it is routed on the next [`Self::tick`].
     pub fn publish(&mut self, ev: ClusterEvent) {
         self.bus.publish(ev);
+    }
+
+    /// Drain the bus's placement log: where every arrival (and completed
+    /// migration) since the last drain landed. Trace replay reads this
+    /// to address later `Departure`/`Migrate` events at the right host.
+    pub fn take_moves(&mut self) -> Vec<(VmId, usize)> {
+        self.bus.take_moves()
     }
 
     /// Queue every due scenario arrival as a routed cluster event.
@@ -418,6 +456,42 @@ mod tests {
     fn cluster_scenario(hosts: usize, sr: f64, seed: u64) -> ScenarioSpec {
         // SR is per-host: hosts × cores × sr VMs cluster-wide.
         random::build(hosts * 12, sr, seed).unwrap()
+    }
+
+    #[test]
+    fn validate_shape_rejects_zero_and_absurd_sizes() {
+        assert!(validate_shape(4, 100).is_ok());
+        assert!(validate_shape(1, 1).is_ok());
+        for (hosts, vms, needle) in [
+            (0, 10, "--hosts must be ≥ 1"),
+            (usize::MAX, 10, "absurd"),
+            (4, 0, "--vms must be ≥ 1"),
+            (4, usize::MAX, "absurd"),
+        ] {
+            let err = validate_shape(hosts, vms).unwrap_err().to_string();
+            assert!(err.contains(needle), "{err}");
+        }
+    }
+
+    #[test]
+    fn spec_host_caps_reach_the_dispatch_matrix_padded_to_the_fleet() {
+        let bank = testkit::shared_bank();
+        let mut spec = ClusterSpec::new(3, Strategy::LocalVmcd);
+        spec.cfg = testkit::quiet_config();
+        // One explicit big box; the other two pad to the HostSpec default.
+        spec.host_caps = Some(vec![[32.0, 2.0, 2.0, 8.0]]);
+        let default_caps = spec.cfg.host.metric_caps();
+        let mut scen = cluster_scenario(3, 0.5, 1);
+        scen.vms.clear();
+        let sim = ClusterSim::new(spec, &scen, bank);
+        let m = sim.bus().matrix();
+        assert_eq!(m.cap(0, 0), 32.0);
+        assert_eq!(m.cap(0, 3), 8.0);
+        for h in 1..3 {
+            for metric in 0..crate::workloads::NUM_METRICS {
+                assert_eq!(m.cap(h, metric), default_caps[metric]);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,444 @@
+//! CSV dataset reader — the dslab `azure_dataset_reader` /
+//! `huawei_dataset_reader` shape mapped onto the profile bank. See the
+//! [module docs](super) for the file formats (vm-instances, vm-types,
+//! host-classes).
+//!
+//! The reader streams: one row of lookahead plus a departure heap over
+//! *live* VMs, never the whole file. Every rejection — malformed field,
+//! unknown type, out-of-order `start_time`, duplicate `vm_id` — is a
+//! line-numbered `anyhow` error naming the path.
+
+use super::{TraceEvent, TraceOp, TraceReader};
+use crate::profiling::ProfileBank;
+use crate::workloads::{MetricVec, WorkloadClass, ALL_CLASSES, NUM_METRICS};
+use anyhow::{bail, ensure, Context, Result};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+
+/// How a vm-types file row resolves `vm_type` strings to classes.
+fn parse_types_file(path: &str, bank: &ProfileBank) -> Result<HashMap<String, WorkloadClass>> {
+    let file = File::open(path).with_context(|| format!("opening vm-types file '{path}'"))?;
+    let mut map = HashMap::new();
+    for (idx, line) in BufReader::new(file).lines().enumerate() {
+        let n = idx + 1;
+        let line = line.with_context(|| format!("{path} line {n}: read failed"))?;
+        let line = line.trim();
+        if n == 1 || line.is_empty() {
+            continue; // header / blank
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let class = match fields.len() {
+            // type_id,class — explicit mapping.
+            2 => WorkloadClass::from_name(fields[1]).with_context(|| {
+                format!("{path} line {n}: unknown workload class '{}'", fields[1])
+            })?,
+            // type_id,cpu,diskio,netio,membw — nearest bank row by L2.
+            len if len == 1 + NUM_METRICS => {
+                let mut demand = [0.0f64; NUM_METRICS];
+                for (m, d) in fields[1..].iter().zip(demand.iter_mut()) {
+                    *d = m.parse().with_context(|| {
+                        format!("{path} line {n}: demand '{m}' is not a number")
+                    })?;
+                }
+                nearest_class(&demand, bank)
+            }
+            len => bail!(
+                "{path} line {n}: expected 2 (type_id,class) or {} \
+                 (type_id + demand vector) fields, got {len}",
+                1 + NUM_METRICS
+            ),
+        };
+        ensure!(
+            map.insert(fields[0].to_string(), class).is_none(),
+            "{path} line {n}: duplicate type_id '{}'",
+            fields[0]
+        );
+    }
+    Ok(map)
+}
+
+/// Nearest profile-bank class to a foreign demand vector (L2 over the
+/// normalized metric axes; lowest class index wins ties).
+fn nearest_class(demand: &MetricVec, bank: &ProfileBank) -> WorkloadClass {
+    let mut best = (f64::INFINITY, 0usize);
+    for (i, u) in bank.u.iter().enumerate() {
+        let d2: f64 = demand.iter().zip(u).map(|(a, b)| (a - b) * (a - b)).sum();
+        if d2 < best.0 {
+            best = (d2, i);
+        }
+    }
+    ALL_CLASSES[best.1]
+}
+
+/// A parsed vm-instances row, pre-split into its replay events.
+struct Row {
+    arrival: TraceEvent,
+    /// `(end_time bits, vm)` when the row has a finite end_time.
+    departure: Option<(u64, u32)>,
+}
+
+/// Streaming vm-instances reader. Construction validates the header is
+/// present; rows are validated lazily as the replay pulls events.
+pub struct CsvTraceReader {
+    path: String,
+    lines: std::io::Lines<BufReader<File>>,
+    /// 1-based line number of the *next* line `lines` will yield.
+    line_no: usize,
+    types: HashMap<String, WorkloadClass>,
+    /// One-row lookahead so departures can be merged in time order.
+    pending: Option<Row>,
+    /// Departure heap over rows already consumed: `(end bits, vm)`.
+    departures: BinaryHeap<Reverse<(u64, u32)>>,
+    seen: HashSet<u32>,
+    last_start: f64,
+    exhausted: bool,
+}
+
+impl CsvTraceReader {
+    /// Open `path` (vm-instances CSV), optionally resolving `vm_type`
+    /// through a vm-types file; types not found there (or with no types
+    /// file at all) must be workload-class names.
+    pub fn open(
+        path: &str,
+        types_path: Option<&str>,
+        bank: &ProfileBank,
+    ) -> Result<CsvTraceReader> {
+        let types = match types_path {
+            Some(tp) => parse_types_file(tp, bank)?,
+            None => HashMap::new(),
+        };
+        let file = File::open(path).with_context(|| format!("opening trace file '{path}'"))?;
+        let mut lines = BufReader::new(file).lines();
+        // Consume the mandatory header line.
+        lines
+            .next()
+            .transpose()
+            .with_context(|| format!("{path} line 1: read failed"))?
+            .with_context(|| format!("{path}: empty file (expected a header line)"))?;
+        Ok(CsvTraceReader {
+            path: path.to_string(),
+            lines,
+            line_no: 2,
+            types,
+            pending: None,
+            departures: BinaryHeap::new(),
+            seen: HashSet::new(),
+            last_start: 0.0,
+            exhausted: false,
+        })
+    }
+
+    /// Parse rows until one yields events (blank lines skip), filling
+    /// the lookahead. `Ok(false)` = file exhausted.
+    fn fill_lookahead(&mut self) -> Result<bool> {
+        if self.pending.is_some() {
+            return Ok(true);
+        }
+        while !self.exhausted {
+            let n = self.line_no;
+            let Some(line) = self
+                .lines
+                .next()
+                .transpose()
+                .with_context(|| format!("{} line {n}: read failed", self.path))?
+            else {
+                self.exhausted = true;
+                break;
+            };
+            self.line_no += 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            self.pending = Some(self.parse_row(line.trim(), n)?);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn parse_row(&mut self, line: &str, n: usize) -> Result<Row> {
+        let path = &self.path;
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        ensure!(
+            fields.len() == 4,
+            "{path} line {n}: expected 4 fields (vm_id,vm_type,start_time,end_time), got {}",
+            fields.len()
+        );
+        let vm: u32 = fields[0]
+            .parse()
+            .with_context(|| format!("{path} line {n}: vm_id '{}' is not a u32", fields[0]))?;
+        ensure!(self.seen.insert(vm), "{path} line {n}: duplicate vm_id {vm}");
+        let class = match self.types.get(fields[1]) {
+            Some(&c) => c,
+            None => WorkloadClass::from_name(fields[1]).with_context(|| {
+                format!(
+                    "{path} line {n}: vm_type '{}' is neither a vm-types id nor a workload class",
+                    fields[1]
+                )
+            })?,
+        };
+        let start: f64 = fields[2].parse().with_context(|| {
+            format!("{path} line {n}: start_time '{}' is not a number", fields[2])
+        })?;
+        ensure!(
+            start.is_finite() && start >= 0.0,
+            "{path} line {n}: start_time {start} must be finite and ≥ 0"
+        );
+        ensure!(
+            start >= self.last_start,
+            "{path} line {n}: start_time {start} regresses below {} (rows must be sorted)",
+            self.last_start
+        );
+        self.last_start = start;
+        // Empty or negative end_time = never departs.
+        let end: Option<f64> = match fields[3] {
+            "" => None,
+            s => {
+                let e: f64 = s.parse().with_context(|| {
+                    format!("{path} line {n}: end_time '{s}' is not a number")
+                })?;
+                if e < 0.0 {
+                    None
+                } else {
+                    ensure!(
+                        e.is_finite() && e >= start,
+                        "{path} line {n}: end_time {e} precedes start_time {start}"
+                    );
+                    Some(e)
+                }
+            }
+        };
+        Ok(Row {
+            arrival: TraceEvent {
+                at_tick: start,
+                vm,
+                op: TraceOp::Arrival {
+                    class,
+                    lifetime: end.map(|e| e - start),
+                },
+            },
+            departure: end.map(|e| (e.to_bits(), vm)),
+        })
+    }
+}
+
+impl TraceReader for CsvTraceReader {
+    fn next_event(&mut self) -> Result<Option<TraceEvent>> {
+        let has_row = self.fill_lookahead()?;
+        // Departures due before the next arrival go first (ties too, so
+        // a slot freed at t is visible to an arrival at t).
+        if let Some(&Reverse((bits, vm))) = self.departures.peek() {
+            let due = f64::from_bits(bits);
+            let next_arrival = self.pending.as_ref().map(|r| r.arrival.at_tick);
+            if !has_row || next_arrival.map_or(true, |a| due <= a) {
+                self.departures.pop();
+                return Ok(Some(TraceEvent {
+                    at_tick: due,
+                    vm,
+                    op: TraceOp::Departure,
+                }));
+            }
+        }
+        match self.pending.take() {
+            Some(row) => {
+                if let Some(dep) = row.departure {
+                    self.departures.push(Reverse(dep));
+                }
+                Ok(Some(row.arrival))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+/// Read a host-classes file for `--trace-hosts`: header, then
+/// `count,cpu_cores,diskio,netio,membw` rows expanded in order into one
+/// per-host capacity vector each. Row counts must sum to exactly
+/// `hosts` so a miscounted file fails loudly instead of silently
+/// defaulting part of the fleet.
+pub fn read_host_classes(path: &str, hosts: usize) -> Result<Vec<MetricVec>> {
+    let file = File::open(path).with_context(|| format!("opening host-classes file '{path}'"))?;
+    let mut caps: Vec<MetricVec> = Vec::with_capacity(hosts);
+    for (idx, line) in BufReader::new(file).lines().enumerate() {
+        let n = idx + 1;
+        let line = line.with_context(|| format!("{path} line {n}: read failed"))?;
+        let line = line.trim();
+        if n == 1 || line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        ensure!(
+            fields.len() == 1 + NUM_METRICS,
+            "{path} line {n}: expected {} fields (count,cpu_cores,diskio,netio,membw), got {}",
+            1 + NUM_METRICS,
+            fields.len()
+        );
+        let count: usize = fields[0]
+            .parse()
+            .with_context(|| format!("{path} line {n}: count '{}' is not a usize", fields[0]))?;
+        let mut cap = [0.0f64; NUM_METRICS];
+        for (m, c) in fields[1..].iter().zip(cap.iter_mut()) {
+            *c = m.parse().with_context(|| {
+                format!("{path} line {n}: capacity '{m}' is not a number")
+            })?;
+            ensure!(
+                c.is_finite() && *c > 0.0,
+                "{path} line {n}: capacity {c} must be finite and > 0"
+            );
+        }
+        ensure!(
+            caps.len() + count <= hosts,
+            "{path} line {n}: host-class counts exceed --hosts {hosts}"
+        );
+        caps.extend(std::iter::repeat(cap).take(count));
+    }
+    ensure!(
+        caps.len() == hosts,
+        "{path}: host-class counts sum to {}, expected --hosts {hosts}",
+        caps.len()
+    );
+    Ok(caps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::shared_bank;
+    use std::io::Write;
+
+    fn tmp(name: &str, contents: &str) -> String {
+        let path = std::env::temp_dir().join(format!("vmcd_trace_{name}_{}", std::process::id()));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(contents.as_bytes()).unwrap();
+        path.to_str().unwrap().to_string()
+    }
+
+    fn drain(mut r: CsvTraceReader) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        while let Some(ev) = r.next_event().unwrap() {
+            out.push(ev);
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrips_the_doc_example_in_time_order() {
+        let path = tmp(
+            "doc",
+            "vm_id,vm_type,start_time,end_time\n\
+             0,hadoop,0,340\n\
+             1,stream-low,2,\n\
+             2,blackscholes,2,97\n\
+             3,lamp-heavy,5,610\n\
+             4,jacobi,9,444\n",
+        );
+        let events = drain(CsvTraceReader::open(&path, None, shared_bank()).unwrap());
+        std::fs::remove_file(&path).unwrap();
+        // 5 arrivals + 4 departures (vm 1 never departs), non-decreasing.
+        assert_eq!(events.len(), 9);
+        let mut last = 0.0;
+        for ev in &events {
+            assert!(ev.at_tick >= last);
+            last = ev.at_tick;
+        }
+        let arrivals: Vec<u32> = events
+            .iter()
+            .filter(|e| matches!(e.op, TraceOp::Arrival { .. }))
+            .map(|e| e.vm)
+            .collect();
+        assert_eq!(arrivals, vec![0, 1, 2, 3, 4]);
+        let departures: Vec<u32> = events
+            .iter()
+            .filter(|e| e.op == TraceOp::Departure)
+            .map(|e| e.vm)
+            .collect();
+        assert_eq!(departures, vec![2, 0, 4, 3], "sorted by end_time");
+        match events[0].op {
+            TraceOp::Arrival { class, lifetime } => {
+                assert_eq!(class, WorkloadClass::Hadoop);
+                assert_eq!(lifetime, Some(340.0));
+            }
+            ref other => panic!("first event {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_rows_get_line_numbered_errors() {
+        for (name, body, needle) in [
+            ("badstart", "h\n0,hadoop,zero,\n", "line 2"),
+            ("badid", "h\n-1,hadoop,0,\n", "vm_id"),
+            ("badclass", "h\n0,no-such-type,0,\n", "line 2"),
+            ("fields", "h\n0,hadoop,0\n", "expected 4 fields"),
+            ("order", "h\n0,hadoop,5,\n1,hadoop,3,\n", "line 3"),
+            ("dup", "h\n0,hadoop,0,\n0,jacobi,1,\n", "duplicate vm_id 0"),
+            ("endlt", "h\n0,hadoop,5,2\n", "precedes start_time"),
+        ] {
+            let path = tmp(name, body);
+            let err = drain_err(&path);
+            std::fs::remove_file(&path).unwrap();
+            assert!(
+                err.contains(needle),
+                "'{name}' error should mention '{needle}', got: {err}"
+            );
+        }
+    }
+
+    fn drain_err(path: &str) -> String {
+        let mut r = match CsvTraceReader::open(path, None, shared_bank()) {
+            Ok(r) => r,
+            Err(e) => return format!("{e:#}"),
+        };
+        loop {
+            match r.next_event() {
+                Ok(Some(_)) => {}
+                Ok(None) => return "no error".into(),
+                Err(e) => return format!("{e:#}"),
+            }
+        }
+    }
+
+    #[test]
+    fn vm_types_map_by_name_and_by_nearest_demand() {
+        let bank = shared_bank();
+        // Type 7 maps explicitly; type 9's demand vector is exactly the
+        // hadoop bank row, so nearest-L2 must resolve to hadoop.
+        let h = bank.u[WorkloadClass::Hadoop.index()];
+        let types = tmp(
+            "types",
+            &format!(
+                "type_id,class\n7,jacobi\n9,{},{},{},{}\n",
+                h[0], h[1], h[2], h[3]
+            ),
+        );
+        let trace = tmp("typed", "h\n0,7,0,\n1,9,1,\n");
+        let events = drain(CsvTraceReader::open(&trace, Some(&types), bank).unwrap());
+        std::fs::remove_file(&types).unwrap();
+        std::fs::remove_file(&trace).unwrap();
+        let classes: Vec<WorkloadClass> = events
+            .iter()
+            .filter_map(|e| match e.op {
+                TraceOp::Arrival { class, .. } => Some(class),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(classes, vec![WorkloadClass::Jacobi, WorkloadClass::Hadoop]);
+    }
+
+    #[test]
+    fn host_classes_expand_counts_and_validate_totals() {
+        let path = tmp("hosts", "count,cpu,dio,nio,mbw\n2,16,1,1,4\n1,8,2,1,2\n");
+        let caps = read_host_classes(&path, 3).unwrap();
+        let want = vec![
+            [16.0, 1.0, 1.0, 4.0],
+            [16.0, 1.0, 1.0, 4.0],
+            [8.0, 2.0, 1.0, 2.0],
+        ];
+        assert_eq!(caps, want);
+        let err = format!("{:#}", read_host_classes(&path, 5).unwrap_err());
+        assert!(err.contains("sum to 3"), "{err}");
+        let err = format!("{:#}", read_host_classes(&path, 2).unwrap_err());
+        assert!(err.contains("exceed"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -75,6 +75,22 @@ impl HostSpec {
     pub fn socket_of(&self, core: usize) -> usize {
         core / self.cores_per_socket()
     }
+
+    /// This host's capacity on each profiled metric axis
+    /// (`[cpu_cores, diskio, netio, membw]`) — what the cluster
+    /// dispatch matrix advertises per host instead of assuming a fixed
+    /// 1.0 for the non-CPU metrics. CPU is in cores (load columns are
+    /// Σ per-core demands); disk and net are the host-wide capacities;
+    /// memory bandwidth is the whole box (`membw_per_socket × sockets`,
+    /// where a VM's membw demand is a fraction of one socket).
+    pub fn metric_caps(&self) -> crate::workloads::MetricVec {
+        [
+            self.cores as f64,
+            self.disk_capacity,
+            self.net_capacity,
+            self.membw_per_socket * self.sockets as f64,
+        ]
+    }
 }
 
 /// Scheduler parameters (§IV-B).

@@ -13,9 +13,14 @@
 //! * `daemon [--policy P] [--ticks N] [--ms-per-tick M]` — run the daemon
 //!   loop against a simulated host in paced wall-clock time, printing
 //!   monitor snapshots (a demo of the Alg. 1 loop).
-//! * `cluster [--hosts N] [--strategy S] [--dispatcher D] [--step-mode M]
-//!   [--workers W] [--actuation A]` — run a cluster-wide scenario through
-//!   the event bus and shard pool (local-vmcd vs global-migration).
+//! * `cluster [--hosts N] [--vms N] [--strategy S] [--dispatcher D]
+//!   [--step-mode M] [--workers W] [--actuation A]` — run a cluster-wide
+//!   scenario through the event bus and shard pool (local-vmcd vs
+//!   global-migration).
+//! * `cluster --trace <path|synth:spec> [--trace-types FILE]
+//!   [--trace-hosts FILE]` — replay a recorded or synthetic VM trace
+//!   through the same bus instead of a generated scenario (see
+//!   `vmcd::cluster::trace` for file formats and the `synth:` grammar).
 
 use anyhow::{Context, Result};
 use vmcd::config::Config;
@@ -89,12 +94,14 @@ USAGE:
   vmcd report    fig2|fig3|fig4|fig5|fig6|table1|all [--seeds N] [--out DIR]
   vmcd validate  [--cases N]
   vmcd daemon    [--policy P] [--ticks N] [--ms-per-tick M]
-  vmcd cluster   [--hosts N] [--strategy local-vmcd|global-migration]
+  vmcd cluster   [--hosts N] [--vms N] [--strategy local-vmcd|global-migration]
                  [--dispatcher round-robin|least-loaded|lowest-interference|random
-                               |dot-product|cosine|norm-greedy]
+                               |dot-product|cosine|norm-greedy|perp-distance]
                  [--policy P] [--sr X] [--seed N]
                  [--step-mode single|scoped|pool] [--workers W]
                  [--actuation inline|deferred:N|deferred:N:B]
+                 [--trace PATH|synth:k=v,...] [--trace-types FILE]
+                 [--trace-hosts FILE]
 ";
 
 fn cmd_profile(args: &Args) -> Result<()> {
@@ -457,8 +464,48 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     spec.local_policy = policy;
     spec.step_mode = step_mode;
     spec.actuation = actuation;
-    // Cluster-wide population: hosts × cores × sr.
-    let scen = scenarios::random::build(hosts * cfg.host.cores, sr, seed)?;
+    if let Some(path) = args.opt("trace-hosts") {
+        spec.host_caps = Some(vmcd::cluster::trace::csv::read_host_classes(path, hosts)?);
+    }
+
+    if let Some(trace_arg) = args.opt("trace") {
+        // Trace replay: the trace supplies the VM population, so only
+        // the fleet shape needs validating here.
+        vmcd::cluster::validate_shape(hosts, 1)?;
+        let mut reader =
+            vmcd::cluster::trace::open(trace_arg, args.opt("trace-types"), seed, &bank)?;
+        log::info!(
+            "cluster trace replay: {} hosts, {} dispatch, {} stepping, trace {}",
+            hosts,
+            dispatcher.name(),
+            step_mode.name(),
+            trace_arg
+        );
+        let r = scenarios::run_trace(&spec, reader.as_mut(), &bank)?;
+        println!("trace           : {trace_arg}");
+        println!("hosts           : {hosts}");
+        println!("dispatcher      : {}", dispatcher.name());
+        println!("arrivals        : {}", r.arrivals);
+        println!("departures      : {}", r.departures);
+        println!("migrates        : {}", r.migrates);
+        println!("dropped         : {}", r.dropped);
+        println!("peak live VMs   : {}", r.peak_live);
+        println!("final live VMs  : {}", r.final_live);
+        println!("events routed   : {}", r.events_routed);
+        println!("core-hours      : {:.3}", r.core_hours);
+        println!("sim time        : {:.0} s over {} ticks", r.completion_time, r.ticks);
+        if r.truncated {
+            println!("truncated       : yes (trace ran past sim.max_time)");
+        }
+        println!("wall time       : {} ms", r.wall.as_millis());
+        println!("events/sec      : {:.0}", r.events_per_sec());
+        return Ok(());
+    }
+
+    // Cluster-wide population: hosts × cores × sr by default.
+    let vms = args.opt_usize("vms", hosts * cfg.host.cores)?;
+    vmcd::cluster::validate_shape(hosts, vms)?;
+    let scen = scenarios::random::build(vms, sr, seed)?;
 
     log::info!(
         "cluster: {} hosts, {} strategy, {} dispatch, {} VMs, {} stepping",

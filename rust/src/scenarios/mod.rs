@@ -15,5 +15,5 @@ pub mod random;
 pub mod runner;
 pub mod spec;
 
-pub use runner::{run_cluster, run_scenario, run_scenario_with_actuation, ScenarioResult};
+pub use runner::{run_cluster, run_scenario, run_scenario_with_actuation, run_trace, ScenarioResult};
 pub use spec::{ScenarioKind, ScenarioSpec, VmTemplate};

@@ -106,6 +106,19 @@ pub fn run_cluster(
     ClusterSim::new(spec.clone(), scenario, bank).run(bank, scenario.min_duration)
 }
 
+/// Replay a pre-recorded (or synthetic) trace cluster-wide instead of a
+/// generated scenario: every [`TraceEvent`](crate::cluster::TraceEvent)
+/// is published through the event bus and routed by `spec.dispatcher`.
+/// The `vmcd cluster --trace` entry point; see
+/// [`crate::cluster::trace`] for formats and the replay contract.
+pub fn run_trace(
+    spec: &ClusterSpec,
+    reader: &mut dyn crate::cluster::TraceReader,
+    bank: &ProfileBank,
+) -> Result<crate::cluster::ReplayResult> {
+    crate::cluster::replay(spec, reader, bank)
+}
+
 fn run_scenario_with(
     cfg: &Config,
     spec: &ScenarioSpec,

@@ -772,3 +772,66 @@ fn prop_batched_rank_matches_scalar_picks() {
         }
     });
 }
+
+#[test]
+fn prop_synthetic_traces_are_well_formed() {
+    // The trace-generator contract, over randomized `synth:` specs: the
+    // stream is non-decreasing in time, arrival ids are unique, every
+    // departure and migrate names a currently-live VM, and exactly
+    // `vms` arrivals (each with a positive finite lifetime) are emitted.
+    use std::collections::HashSet;
+    use vmcd::cluster::trace::synth::SyntheticTraceGenerator;
+    use vmcd::cluster::{TraceOp, TraceReader};
+
+    check("synthetic-trace-well-formed", 12, |rng| {
+        let vms = 20 + rng.below(180);
+        let spec = format!(
+            "vms={vms},rate={:.3},burst={:.3},life={:.3},dist={},sigma={:.3},alpha={:.3},\
+             diurnal={:.3},period={:.1},migrates={}",
+            rng.range(0.5, 40.0),
+            rng.range(1.0, 6.0),
+            rng.range(5.0, 200.0),
+            if rng.chance(0.5) { "lognormal" } else { "pareto" },
+            rng.range(0.2, 1.5),
+            rng.range(0.8, 3.0),
+            rng.range(0.0, 0.9),
+            rng.range(60.0, 2000.0),
+            rng.below(10),
+        );
+        let mut reader = SyntheticTraceGenerator::parse(&spec, rng.next_u64()).unwrap();
+
+        let mut last_at = 0.0f64;
+        let mut live: HashSet<u32> = HashSet::new();
+        let mut seen: HashSet<u32> = HashSet::new();
+        let (mut arrivals, mut departures, mut migrates) = (0usize, 0usize, 0usize);
+        while let Some(ev) = reader.next_event().unwrap() {
+            assert!(
+                ev.at_tick.is_finite() && ev.at_tick >= last_at,
+                "timestamps regressed: {} after {last_at} ({spec})",
+                ev.at_tick
+            );
+            last_at = ev.at_tick;
+            match ev.op {
+                TraceOp::Arrival { lifetime, .. } => {
+                    assert!(seen.insert(ev.vm), "duplicate arrival id {} ({spec})", ev.vm);
+                    let l = lifetime.expect("synth arrivals carry lifetimes");
+                    assert!(l.is_finite() && l > 0.0, "lifetime {l} ({spec})");
+                    live.insert(ev.vm);
+                    arrivals += 1;
+                }
+                TraceOp::Departure => {
+                    assert!(live.remove(&ev.vm), "departure for dead vm {} ({spec})", ev.vm);
+                    departures += 1;
+                }
+                TraceOp::Migrate => {
+                    assert!(live.contains(&ev.vm), "migrate for dead vm {} ({spec})", ev.vm);
+                    migrates += 1;
+                }
+            }
+        }
+        assert_eq!(arrivals, vms, "{spec}");
+        assert_eq!(departures, vms, "every capped lifetime departs ({spec})");
+        assert!(live.is_empty());
+        assert!(migrates <= 10);
+    });
+}
