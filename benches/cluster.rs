@@ -17,8 +17,8 @@ fn main() -> anyhow::Result<()> {
     let hosts = 3;
 
     println!(
-        "{:<8} {:<18} {:>7} {:>12} {:>12} {:>11}",
-        "SR/host", "strategy", "perf", "core-hours", "host-hours", "migrations"
+        "{:<8} {:<18} {:>7} {:>12} {:>12} {:>10} {:>8} {:>11}",
+        "SR/host", "strategy", "perf", "core-hours", "host-hours", "energy Wh", "SLAV", "migrations"
     );
     for sr in [0.6, 1.2, 1.8, 2.4] {
         let scen = random::build(hosts * cfg.host.cores, sr, 42)?;
@@ -26,12 +26,14 @@ fn main() -> anyhow::Result<()> {
             let spec = ClusterSpec::new(hosts, strategy);
             let r = run_cluster(&spec, &scen, &bank)?;
             println!(
-                "{:<8} {:<18} {:>7.3} {:>12.3} {:>12.3} {:>5} ({} failed)",
+                "{:<8} {:<18} {:>7.3} {:>12.3} {:>12.3} {:>10.1} {:>8.4} {:>5} ({} failed)",
                 sr,
                 strategy.name(),
                 r.avg_perf,
                 r.core_hours,
                 r.host_hours,
+                r.energy_wh,
+                r.slav,
                 r.migrations_started,
                 r.migrations_failed
             );

@@ -1,0 +1,153 @@
+//! Continuous-migrator sweep: threshold pairs × concurrent-transfer
+//! budgets × actuation backends on a bursty decaying synthetic trace,
+//! against migrator-off baselines. Each cell replays the same seeded
+//! trace through `run_trace` with the migration manager consolidating
+//! the fleet as load drains, and reports the cluster-scope ledger —
+//! parked-aware energy (Wh), overload-time SLAV, active host-hours —
+//! plus the time-to-converge (powered-host peak to half-drain) and the
+//! usual sustained events/sec.
+//!
+//! Full mode runs 256 hosts with 40k trace events; `VMCD_BENCH_QUICK=1`
+//! shrinks to 32 hosts × 4k events for CI. Replays are measured once
+//! end-to-end (no iteration harness). Emits `BENCH_migrator.json`.
+
+mod common;
+
+use vmcd::cluster::trace::synth::SyntheticTraceGenerator;
+use vmcd::cluster::{ClusterSpec, StepMode, Strategy};
+use vmcd::config::MigratorParams;
+use vmcd::scenarios::run_trace;
+use vmcd::util::json::Json;
+use vmcd::vmcd::ActuationSpec;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config();
+    let bank = common::bank(&cfg);
+    let quick = std::env::var("VMCD_BENCH_QUICK").as_deref() == Ok("1");
+
+    // A burst-heavy trace whose working set decays as lifetimes expire:
+    // the regime where parking pays and convergence is measurable.
+    let (hosts, synth_spec): (usize, &str) = if quick {
+        (32, "vms=2000,rate=80,burst=8,life=40,lmax=200,seed=42")
+    } else {
+        (256, "vms=20000,rate=200,burst=16,life=60,lmax=400,seed=42")
+    };
+    let thresholds: &[(f64, f64)] = if quick {
+        &[(0.85, 0.35)]
+    } else {
+        &[(0.85, 0.35), (0.90, 0.25), (0.75, 0.45)]
+    };
+    let budgets: &[usize] = if quick { &[4] } else { &[2, 8] };
+    let actuations = [
+        ("inline", ActuationSpec::Inline),
+        (
+            "deferred4b32",
+            ActuationSpec::Deferred {
+                latency_ticks: 4,
+                budget_per_tick: 32,
+            },
+        ),
+    ];
+
+    // Every cell up front: per actuation, one migrator-off baseline plus
+    // the threshold × budget sweep.
+    let mut combos: Vec<(Option<MigratorParams>, &str, ActuationSpec)> = Vec::new();
+    for (act_name, actuation) in actuations {
+        combos.push((None, act_name, actuation));
+        for &(over, under) in thresholds {
+            for &budget in budgets {
+                let params = MigratorParams {
+                    over,
+                    under,
+                    budget,
+                    ..Default::default()
+                };
+                combos.push((Some(params), act_name, actuation));
+            }
+        }
+    }
+
+    println!(
+        "{:<12} {:>6} {:<12} {:>6} {:>10} {:>8} {:>9} {:>10} {:>12}",
+        "over/under",
+        "budget",
+        "actuation",
+        "moves",
+        "energy Wh",
+        "SLAV",
+        "converge",
+        "hosthours",
+        "events/sec"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for (migrator, act_name, actuation) in combos {
+        let mut spec = ClusterSpec::new(hosts, Strategy::LocalVmcd);
+        spec.cfg = cfg.clone();
+        spec.step_mode = StepMode::Pool(4);
+        spec.actuation = actuation;
+        spec.migrator = migrator.clone();
+        let mut reader = SyntheticTraceGenerator::parse(synth_spec, 42)?;
+        let r = run_trace(&spec, &mut reader, &bank)?;
+        anyhow::ensure!(!r.truncated, "migrator bench hit max_time");
+        let (label, over, under, budget) = match &migrator {
+            Some(m) => (format!("{:.2}/{:.2}", m.over, m.under), m.over, m.under, m.budget),
+            None => ("off".to_string(), 0.0, 0.0, 0),
+        };
+        let converge = match r.converge_ticks {
+            Some(t) => t.to_string(),
+            None => "-".to_string(),
+        };
+        println!(
+            "{:<12} {:>6} {:<12} {:>6} {:>10.1} {:>8.4} {:>9} {:>10.2} {:>12.0}",
+            label,
+            budget,
+            act_name,
+            r.migrator_moves,
+            r.energy_wh,
+            r.slav,
+            converge,
+            r.active_host_hours,
+            r.events_per_sec()
+        );
+        rows.push(Json::from_pairs(vec![
+            ("migrator", Json::Bool(migrator.is_some())),
+            ("over", Json::Num(over)),
+            ("under", Json::Num(under)),
+            ("budget", Json::Num(budget as f64)),
+            ("actuation", Json::Str(act_name.into())),
+            ("hosts", Json::Num(hosts as f64)),
+            ("events", Json::Num((r.arrivals + r.departures + r.migrates) as f64)),
+            ("ticks", Json::Num(r.ticks as f64)),
+            ("migrator_moves", Json::Num(r.migrator_moves as f64)),
+            ("migrations_started", Json::Num(r.migrations_started as f64)),
+            ("migrations_completed", Json::Num(r.migrations_completed as f64)),
+            ("migrations_failed", Json::Num(r.migrations_failed as f64)),
+            ("core_hours", Json::Num(r.core_hours)),
+            ("energy_wh", Json::Num(r.energy_wh)),
+            ("plugged_energy_wh", Json::Num(r.plugged_energy_wh)),
+            ("slav", Json::Num(r.slav)),
+            ("overload_seconds", Json::Num(r.overload_seconds)),
+            ("active_host_hours", Json::Num(r.active_host_hours)),
+            (
+                "converge_ticks",
+                r.converge_ticks.map_or(Json::Null, |t| Json::Num(t as f64)),
+            ),
+            ("wall_ms", Json::Num(r.wall.as_secs_f64() * 1e3)),
+            ("events_per_sec", Json::Num(r.events_per_sec())),
+        ]));
+    }
+
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("migrator".into())),
+        ("synth_spec", Json::Str(synth_spec.into())),
+        ("hosts", Json::Num(hosts as f64)),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_migrator.json", doc.pretty() + "\n")?;
+    println!(
+        "\nwrote BENCH_migrator.json ({} rows)",
+        doc.field("rows")?.as_arr().unwrap().len()
+    );
+    Ok(())
+}

@@ -81,6 +81,11 @@ fn main() -> anyhow::Result<()> {
                 ("peak_live", Json::Num(r.peak_live as f64)),
                 ("events_routed", Json::Num(r.events_routed as f64)),
                 ("core_hours", Json::Num(r.core_hours)),
+                ("energy_wh", Json::Num(r.energy_wh)),
+                ("plugged_energy_wh", Json::Num(r.plugged_energy_wh)),
+                ("slav", Json::Num(r.slav)),
+                ("active_host_hours", Json::Num(r.active_host_hours)),
+                ("migrations_completed", Json::Num(r.migrations_completed as f64)),
                 ("wall_ms", Json::Num(r.wall.as_secs_f64() * 1e3)),
                 ("events_per_sec", Json::Num(r.events_per_sec())),
             ]));

@@ -395,6 +395,12 @@ impl EventBus {
         self.inflight.len()
     }
 
+    /// The VMs whose transfers are currently in flight — what the
+    /// migration planner must never select again while they travel.
+    pub fn in_flight_vms(&self) -> impl Iterator<Item = VmId> + '_ {
+        self.inflight.iter().map(|m| m.vm)
+    }
+
     /// Enqueue one cluster event for the next [`Self::route`] pass.
     pub fn publish(&mut self, ev: ClusterEvent) {
         self.queue.push_back(ev);
@@ -844,6 +850,77 @@ mod tests {
         }
         assert!(doomed_seen, "0.9 abort probability never fired in 64 draws");
         assert_eq!(bus.stats.migrations_failed, 1);
+    }
+
+    #[test]
+    fn forced_abort_keeps_placement_but_charges_the_transfer_window() {
+        // An aborted live migration end to end: the VM never leaves the
+        // source daemon's placement, the destination never counts a
+        // migrant in — but both ends still paid the transfer-window
+        // network load while the doomed copy ran.
+        let model = MigrationModel {
+            downtime: 3.0,
+            transfer_secs: 1.0,
+            transfer_net: 0.25,
+            failure_prob: 1.0,
+        };
+        let bank = testkit::shared_bank();
+        let mut bus = EventBus::new(2, model.clone(), 12);
+        let mut policy = Dispatcher::RoundRobin.build();
+        // Seed 2 dooms the very first abort draw against a saturated
+        // destination — the same deterministic stream the
+        // doomed-transfer test above documents.
+        let mut rng = Rng::new(2);
+
+        let mut src = native_host(Policy::Ias);
+        let mut dst = native_host(Policy::Ias);
+        src.inject_arrival(running_vm(5, WorkloadClass::Blackscholes)).unwrap();
+        for _ in 0..12 {
+            src.step_host().unwrap();
+        }
+        let placed_before = src.daemon.as_ref().unwrap().placement_state().unwrap().placed();
+
+        bus.summaries[1].est_cpu_load = 12.0; // saturated destination
+        bus.publish(ClusterEvent::Migrate {
+            vm: VmId(5),
+            src: 0,
+            dst: 1,
+        });
+        bus.route(policy.as_mut(), bank, &mut rng).unwrap();
+        let mut inboxes = bus.take_inboxes();
+        for (host, inbox) in [(&mut src, inboxes.remove(0)), (&mut dst, inboxes.remove(0))] {
+            for ev in inbox {
+                apply_host_event(host, ev).unwrap();
+            }
+        }
+        // Transfer window open: the copy's network load lands both ends.
+        assert_eq!(src.engine().external_net_load, model.transfer_net);
+        assert_eq!(dst.engine().external_net_load, model.transfer_net);
+
+        let matured = bus.advance(1.0);
+        assert_eq!(matured.len(), 1);
+        assert!(matured[0].doomed, "seed 2 must doom the first draw at p=0.9");
+        assert!(EventBus::extraction_requests(&matured).is_empty());
+        bus.deliver(matured, Vec::new(), 1.0);
+        let mut inboxes = bus.take_inboxes();
+        for (host, inbox) in [(&mut src, inboxes.remove(0)), (&mut dst, inboxes.remove(0))] {
+            for ev in inbox {
+                apply_host_event(host, ev).unwrap();
+            }
+        }
+        // Window released on the abort; placement exactly as before.
+        assert_eq!(src.engine().external_net_load, 0.0);
+        assert_eq!(dst.engine().external_net_load, 0.0);
+        assert_eq!(src.engine().vms.len(), 1);
+        assert_eq!(src.engine().vms[0].id, VmId(5));
+        assert_eq!(
+            src.daemon.as_ref().unwrap().placement_state().unwrap().placed(),
+            placed_before
+        );
+        assert_eq!(dst.engine().vms.len(), 0);
+        assert_eq!(dst.metrics().migrants_in, 0, "aborts never land");
+        assert_eq!(bus.stats.migrations_failed, 1);
+        assert_eq!(bus.stats.migrations_completed, 0);
     }
 
     #[test]

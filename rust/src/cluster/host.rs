@@ -40,6 +40,10 @@ pub struct HostMetrics {
     /// Pins decided but not yet enforced by the daemon's actuation
     /// backend (always 0 for daemon-less hosts and Inline actuation).
     pub actuation_in_flight: usize,
+    /// VMs that completed a live migration *onto* this host. Aborted
+    /// transfers never land, so the source keeps the VM and this stays
+    /// flat — the bus's `migrations_failed` counts those.
+    pub migrants_in: u64,
 }
 
 /// One steppable host, as the cluster layer sees it. The default
@@ -172,6 +176,8 @@ pub struct SimHost<S: ?Sized + Scheduler = dyn Scheduler> {
     pub daemon: Option<Daemon<S>>,
     /// Round-robin cursor for daemon-less in-host pinning.
     pub rr_core: usize,
+    /// Completed live migrations onto this host.
+    pub migrants_in: u64,
 }
 
 /// The shardable host: natively-scored scheduler, so the whole host is
@@ -191,6 +197,7 @@ impl<S: ?Sized + Scheduler> SimHost<S> {
             engine,
             daemon,
             rr_core: 0,
+            migrants_in: 0,
         }
     }
 
@@ -241,6 +248,7 @@ impl<S: ?Sized + Scheduler> HostHandle for SimHost<S> {
             let core = self.next_rr_core();
             vm.pinned = Some(core);
         }
+        self.migrants_in += 1;
         self.engine.insert_vm(vm);
     }
 
@@ -261,6 +269,7 @@ impl<S: ?Sized + Scheduler> HostHandle for SimHost<S> {
             cycles: self.daemon.as_ref().map_or(0, |d| d.cycles),
             pin_failures: self.daemon.as_ref().map_or(0, |d| d.pin_failures),
             actuation_in_flight: self.daemon.as_ref().map_or(0, |d| d.in_flight()),
+            migrants_in: self.migrants_in,
         }
     }
 
@@ -402,6 +411,7 @@ mod tests {
         }
         host.accept_migrant(vm, Some(42.0)).unwrap();
         assert_eq!(host.engine().vms[0].paused_until, 42.0);
+        assert_eq!(host.metrics().migrants_in, 1);
         // Adoption keeps the carried pin and books the member into the
         // long-lived placement state right away.
         assert_eq!(host.engine().vms[0].pinned, Some(5));

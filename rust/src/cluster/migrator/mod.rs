@@ -1,0 +1,325 @@
+//! Continuous migration manager: the steady-state watcher that turns
+//! bus-published [`HostSummary`]s into live
+//! [`ClusterEvent::Migrate`](super::bus::ClusterEvent) traffic (dslab's
+//! `vm_migrator` shape).
+//!
+//! The paper's consolidation claim (§III, Figures 4–6: up to ~50% CPU
+//! time saved while workload performance holds) needs something to
+//! *generate* migrations in steady state — arrivals alone only ever
+//! grow placements. Following Jin et al. (arXiv:1404.2842), cost and
+//! interference are optimized jointly rather than in sequence:
+//!
+//! | Condition (per host)                      | Classification | Action |
+//! |-------------------------------------------|----------------|--------|
+//! | est-CPU fraction > `over` or `max_wi` > `wi_threshold` | Overloaded | **Spread**: shed largest VMs to the least-interfering destination that stays under `over` |
+//! | est-CPU fraction < `under`, non-empty     | Underloaded    | **Park**: evacuate *fully* onto packed destinations with WI headroom; emptied hosts draw 0 W |
+//! | otherwise                                 | Normal         | candidate destination |
+//!
+//! Spreading runs first — §III's performance floor beats the energy
+//! objective when they conflict; parking only consumes whatever budget
+//! overload relief left over. The planner itself is pure and
+//! deterministic (see [`planner`]): all state that varies tick-to-tick
+//! (in-flight transfers, per-VM cooldowns) is resolved *before*
+//! planning, and a disabled migrator publishes nothing and draws no
+//! RNG, so migrator-off runs are bit-identical to a build without the
+//! subsystem.
+//!
+//! ## CLI grammar (`vmcd cluster --migrator <spec>`)
+//!
+//! `over:under:budget[:interval]`, empty fields keep defaults:
+//!
+//! | Field      | Meaning                                    | Default |
+//! |------------|--------------------------------------------|---------|
+//! | `over`     | overload threshold, est-CPU / CPU capacity | 0.85    |
+//! | `under`    | underload (parking) threshold, same units  | 0.35    |
+//! | `budget`   | max concurrent transfers (incl. in-flight) | 4       |
+//! | `interval` | seconds between planning passes            | 30      |
+//!
+//! `wi_threshold` (default 1.5, the paper's IAS landing point) and the
+//! per-VM `cooldown` (default 120 s) ride along via config JSON
+//! (`"migrator": {...}`, [`crate::config::MigratorParams`]).
+//!
+//! Respecting [`MigrationModel`](super::migration::MigrationModel)
+//! outcomes: the budget counts the bus's in-flight transfers, aborted
+//! transfers leave the VM on its source (where the next pass may pick
+//! it again once its cooldown lapses), and completed transfers move the
+//! summary load so the next pass plans from the post-move fleet.
+
+pub mod planner;
+
+use crate::config::MigratorParams;
+use crate::hostsim::VmId;
+use crate::profiling::ProfileBank;
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+use super::bus::{EventBus, HostSummary};
+pub use planner::{classify, plan, HostClass, PlannedMove};
+
+/// Lifetime counters of one migrator instance.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MigratorStats {
+    /// Planning passes that actually ran (interval-due ticks).
+    pub plans: u64,
+    /// Moves published across all passes.
+    pub planned_moves: u64,
+    /// Host-passes observed overloaded at planning time.
+    pub overloaded_seen: u64,
+    /// Full evacuations committed (hosts sent toward parking).
+    pub parked_hosts_planned: u64,
+}
+
+/// The continuous migration manager. Owned by
+/// [`ClusterSim`](super::ClusterSim) when
+/// [`ClusterSpec::migrator`](super::ClusterSpec) is set; consulted once
+/// per tick before routing.
+#[derive(Debug, Clone)]
+pub struct VmMigrator {
+    params: MigratorParams,
+    /// Virtual time of the last planning pass.
+    last_plan: f64,
+    /// vm → virtual time it was last planned (cooldown bookkeeping).
+    cooldowns: HashMap<VmId, f64>,
+    pub stats: MigratorStats,
+}
+
+impl VmMigrator {
+    pub fn new(params: MigratorParams) -> VmMigrator {
+        VmMigrator {
+            params,
+            last_plan: f64::NEG_INFINITY,
+            cooldowns: HashMap::new(),
+            stats: MigratorStats::default(),
+        }
+    }
+
+    pub fn params(&self) -> &MigratorParams {
+        &self.params
+    }
+
+    /// Run a planning pass if the interval is due; returns the moves to
+    /// publish (empty off-interval or when the budget is exhausted).
+    pub fn maybe_plan(
+        &mut self,
+        now: f64,
+        bus: &EventBus,
+        bank: &ProfileBank,
+    ) -> Vec<PlannedMove> {
+        if now - self.last_plan < self.params.interval {
+            return Vec::new();
+        }
+        self.last_plan = now;
+        self.stats.plans += 1;
+        self.cooldowns
+            .retain(|_, &mut at| now - at < self.params.cooldown);
+        let budget_left = self.params.budget.saturating_sub(bus.in_flight());
+        if budget_left == 0 {
+            return Vec::new();
+        }
+        let mut blocked: HashSet<VmId> = self.cooldowns.keys().copied().collect();
+        blocked.extend(bus.in_flight_vms());
+        let summaries = bus.summaries();
+        let matrix = bus.matrix();
+        self.stats.overloaded_seen += planner::classify(&self.params, summaries, matrix)
+            .iter()
+            .filter(|&&c| c == HostClass::Overloaded)
+            .count() as u64;
+        let moves = planner::plan(&self.params, summaries, matrix, bank, &blocked, budget_left);
+        let mut parked: HashSet<usize> = HashSet::new();
+        for m in &moves {
+            self.cooldowns.insert(m.vm, now);
+            if summaries[m.src].est_cpu_load < self.params.under * matrix.cap(m.src, 0) {
+                parked.insert(m.src);
+            }
+        }
+        self.stats.planned_moves += moves.len() as u64;
+        self.stats.parked_hosts_planned += parked.len() as u64;
+        moves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::bus::SummaryMatrix;
+    use super::*;
+    use crate::testkit;
+    use crate::workloads::WorkloadClass;
+
+    fn summary(running: Vec<(VmId, WorkloadClass)>, est: f64, wi: f64) -> HostSummary {
+        HostSummary {
+            resident: running.len(),
+            busy_cores: running.len(),
+            running,
+            max_wi: wi,
+            est_cpu_load: est,
+        }
+    }
+
+    fn vmid(n: u32) -> VmId {
+        VmId(n)
+    }
+
+    fn fleet(summaries: &[HostSummary]) -> SummaryMatrix {
+        SummaryMatrix::from_summaries(summaries, 12)
+    }
+
+    #[test]
+    fn classify_maps_thresholds() {
+        let p = MigratorParams::default(); // over 0.85, under 0.35, wi 1.5
+        let cls = WorkloadClass::Blackscholes;
+        let summaries = vec![
+            summary(vec![(vmid(0), cls)], 11.0, 1.0), // 11/12 > 0.85
+            summary(vec![(vmid(1), cls)], 6.0, 2.0),  // wi-hot
+            summary(vec![(vmid(2), cls)], 2.0, 1.0),  // 2/12 < 0.35
+            summary(vec![], 0.0, 0.0),                // empty: normal, not parkable
+            summary(vec![(vmid(3), cls)], 6.0, 1.0),  // mid
+        ];
+        let m = fleet(&summaries);
+        let got = classify(&p, &summaries, &m);
+        assert_eq!(
+            got,
+            vec![
+                HostClass::Overloaded,
+                HostClass::Overloaded,
+                HostClass::Underloaded,
+                HostClass::Normal,
+                HostClass::Normal,
+            ]
+        );
+    }
+
+    #[test]
+    fn spread_moves_biggest_vm_off_the_hottest_host() {
+        let p = MigratorParams::default();
+        let bank = testkit::shared_bank();
+        // CpuBound demand dwarfs Idle demand in the profile bank.
+        let big = WorkloadClass::Blackscholes;
+        let small = WorkloadClass::StreamLow;
+        let summaries = vec![
+            summary(vec![(vmid(0), big), (vmid(1), small)], 11.5, 1.0),
+            summary(vec![(vmid(2), small)], 5.0, 1.0),
+            summary(vec![(vmid(3), small)], 6.0, 1.2),
+        ];
+        let m = fleet(&summaries);
+        let moves = plan(&p, &summaries, &m, &bank, &HashSet::new(), 4);
+        assert!(!moves.is_empty());
+        let first = moves[0];
+        assert_eq!(first.src, 0);
+        assert_eq!(first.vm, vmid(0), "largest VM moves first");
+        assert_eq!(first.dst, 1, "least-loaded of the WI-equal destinations");
+    }
+
+    #[test]
+    fn wi_hot_host_sheds_exactly_one_vm() {
+        let p = MigratorParams::default();
+        let bank = testkit::shared_bank();
+        let cls = WorkloadClass::Blackscholes;
+        let summaries = vec![
+            summary(
+                vec![(vmid(0), cls), (vmid(1), cls), (vmid(2), cls)],
+                6.0, // load fine — interference is the problem
+                2.5,
+            ),
+            summary(vec![], 0.0, 0.0),
+            summary(vec![], 0.0, 0.0),
+        ];
+        let m = fleet(&summaries);
+        let moves = plan(&p, &summaries, &m, &bank, &HashSet::new(), 8);
+        assert_eq!(moves.len(), 1, "stale WI reading sheds one VM per pass");
+        assert_eq!(moves[0].src, 0);
+    }
+
+    #[test]
+    fn park_evacuates_fully_or_not_at_all() {
+        let p = MigratorParams::default();
+        let bank = testkit::shared_bank();
+        let small = WorkloadClass::StreamLow;
+        let summaries = vec![
+            summary(vec![(vmid(0), small), (vmid(1), small)], 1.0, 1.0),
+            summary(vec![(vmid(2), small)], 6.0, 1.0),
+        ];
+        let m = fleet(&summaries);
+        // Budget 2 covers the full evacuation of host 0 → both VMs move.
+        let moves = plan(&p, &summaries, &m, &bank, &HashSet::new(), 2);
+        assert_eq!(moves.len(), 2);
+        assert!(moves.iter().all(|mv| mv.src == 0 && mv.dst == 1));
+        // Budget 1 cannot: no partial evacuation.
+        let moves = plan(&p, &summaries, &m, &bank, &HashSet::new(), 1);
+        assert!(moves.is_empty(), "partial evacuation wastes the budget");
+    }
+
+    #[test]
+    fn park_merges_underloaded_hosts_without_cycles() {
+        let p = MigratorParams::default();
+        let bank = testkit::shared_bank();
+        let small = WorkloadClass::StreamLow;
+        // Two parkable hosts; the emptier one must evacuate onto the
+        // other, and the receiver must then NOT park itself.
+        let summaries = vec![
+            summary(vec![(vmid(0), small)], 0.5, 1.0),
+            summary(vec![(vmid(1), small), (vmid(2), small)], 1.0, 1.0),
+            summary(vec![], 0.0, 0.0),
+        ];
+        let m = fleet(&summaries);
+        let moves = plan(&p, &summaries, &m, &bank, &HashSet::new(), 8);
+        let sources: HashSet<usize> = moves.iter().map(|mv| mv.src).collect();
+        let dests: HashSet<usize> = moves.iter().map(|mv| mv.dst).collect();
+        assert!(!moves.is_empty());
+        assert!(
+            sources.is_disjoint(&dests),
+            "an evacuation target must not itself evacuate: {moves:?}"
+        );
+    }
+
+    #[test]
+    fn blocked_vms_and_budget_are_respected() {
+        let p = MigratorParams::default();
+        let bank = testkit::shared_bank();
+        let cls = WorkloadClass::Blackscholes;
+        let summaries = vec![
+            summary(
+                (0..6).map(|i| (vmid(i), cls)).collect(),
+                12.0,
+                1.0,
+            ),
+            summary(vec![], 0.0, 0.0),
+            summary(vec![], 0.0, 0.0),
+        ];
+        let m = fleet(&summaries);
+        let blocked: HashSet<VmId> = [vmid(0), vmid(1)].into_iter().collect();
+        let moves = plan(&p, &summaries, &m, &bank, &blocked, 2);
+        assert!(moves.len() <= 2);
+        assert!(moves.iter().all(|mv| !blocked.contains(&mv.vm)));
+    }
+
+    #[test]
+    fn empty_and_single_host_fleets_plan_nothing() {
+        let p = MigratorParams::default();
+        let bank = testkit::shared_bank();
+        let summaries = vec![summary(
+            vec![(vmid(0), WorkloadClass::Blackscholes)],
+            12.0,
+            3.0,
+        )];
+        let m = fleet(&summaries);
+        assert!(plan(&p, &summaries, &m, &bank, &HashSet::new(), 4).is_empty());
+        assert!(plan(&p, &[], &SummaryMatrix::from_summaries(&[], 12), &bank, &HashSet::new(), 4)
+            .is_empty());
+    }
+
+    #[test]
+    fn cooldown_blocks_replanning_the_same_vm() {
+        let params = MigratorParams {
+            interval: 1.0,
+            cooldown: 100.0,
+            ..MigratorParams::default()
+        };
+        let mut mig = VmMigrator::new(params);
+        mig.cooldowns.insert(vmid(7), 0.0);
+        // At t=50 the cooldown (100 s) still holds; at t=150 it lapsed.
+        mig.cooldowns.retain(|_, &mut at| 50.0 - at < 100.0);
+        assert!(mig.cooldowns.contains_key(&vmid(7)));
+        mig.cooldowns.retain(|_, &mut at| 150.0 - at < 100.0);
+        assert!(!mig.cooldowns.contains_key(&vmid(7)));
+    }
+}

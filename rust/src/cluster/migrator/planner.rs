@@ -1,0 +1,245 @@
+//! The pure planning pass: classify hosts from the published summaries
+//! and produce a bounded list of moves. No RNG, no simulation state —
+//! given the same summaries, matrix, blocked set, and budget the plan is
+//! byte-identical, which is what keeps migrator-enabled replays
+//! bit-identical across `Single`/`Scoped`/`Pool` step modes.
+//!
+//! Two passes, in priority order (Jin et al., arXiv:1404.2842: optimize
+//! energy and interference *jointly* — spread when interference or
+//! overload demands it, consolidate and park when headroom allows):
+//!
+//! 1. **Spread** — hosts whose estimated CPU fraction exceeds `over` or
+//!    whose `max_wi` exceeds `wi_threshold` shed their largest movable
+//!    VMs onto the least-interfering destination that stays under the
+//!    `over` line (working loads are tracked so one pass never stacks a
+//!    destination past the threshold it is relieving).
+//! 2. **Park** — hosts under the `under` fraction are evacuated *fully*
+//!    (emptied hosts draw 0 W in the cluster ledger) onto the
+//!    most-loaded destinations whose WI headroom absorbs the load;
+//!    a host that cannot be fully emptied within the remaining budget
+//!    is left untouched (a half-evacuation spends migrations without
+//!    saving a host).
+
+use crate::config::MigratorParams;
+use crate::hostsim::VmId;
+use crate::profiling::ProfileBank;
+use std::collections::HashSet;
+
+use super::super::bus::{HostSummary, SummaryMatrix};
+
+/// One planned live migration, ready to publish as
+/// [`crate::cluster::ClusterEvent::Migrate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedMove {
+    pub vm: VmId,
+    pub src: usize,
+    pub dst: usize,
+}
+
+/// Migrator's view of one host, derived from the published summaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostClass {
+    /// Estimated CPU fraction above `over`, or `max_wi` above
+    /// `wi_threshold`: shed load.
+    Overloaded,
+    /// Non-empty but below the `under` fraction: evacuate and park.
+    Underloaded,
+    Normal,
+}
+
+/// CPU-load fraction of one host: estimated CPU load over the host's
+/// CPU capacity column (cap metric 0 — cores for homogeneous fleets,
+/// the host-class capacity otherwise).
+fn frac(load: f64, matrix: &SummaryMatrix, host: usize) -> f64 {
+    let cap = matrix.cap(host, 0);
+    if cap <= 0.0 {
+        f64::INFINITY
+    } else {
+        load / cap
+    }
+}
+
+/// Classify every host against the thresholds.
+pub fn classify(
+    params: &MigratorParams,
+    summaries: &[HostSummary],
+    matrix: &SummaryMatrix,
+) -> Vec<HostClass> {
+    summaries
+        .iter()
+        .enumerate()
+        .map(|(h, s)| {
+            let f = frac(s.est_cpu_load, matrix, h);
+            if f > params.over || s.max_wi > params.wi_threshold {
+                HostClass::Overloaded
+            } else if f < params.under && s.resident > 0 {
+                HostClass::Underloaded
+            } else {
+                HostClass::Normal
+            }
+        })
+        .collect()
+}
+
+/// Plan at most `budget_left` moves. `blocked` holds VMs that must not
+/// be selected (in-flight transfers and cooling-down recent movers).
+pub fn plan(
+    params: &MigratorParams,
+    summaries: &[HostSummary],
+    matrix: &SummaryMatrix,
+    bank: &ProfileBank,
+    blocked: &HashSet<VmId>,
+    mut budget_left: usize,
+) -> Vec<PlannedMove> {
+    let n = summaries.len();
+    let mut moves = Vec::new();
+    if n < 2 || budget_left == 0 {
+        return moves;
+    }
+    let classes = classify(params, summaries, matrix);
+    // Working copies the passes mutate as they commit moves, so one plan
+    // never stacks a destination past the line it is policing.
+    let mut loads: Vec<f64> = summaries.iter().map(|s| s.est_cpu_load).collect();
+    let mut taken: HashSet<VmId> = HashSet::new();
+    let demand = |class: crate::workloads::WorkloadClass| bank.u[class.index()][0];
+    let movable = |vm: VmId, taken: &HashSet<VmId>| !blocked.contains(&vm) && !taken.contains(&vm);
+
+    // --- Pass 1: spread off overloaded hosts ---------------------------
+    let mut over_hosts: Vec<usize> = (0..n)
+        .filter(|&h| classes[h] == HostClass::Overloaded)
+        .collect();
+    over_hosts.sort_by(|&a, &b| {
+        frac(loads[b], matrix, b)
+            .partial_cmp(&frac(loads[a], matrix, a))
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let mut received: HashSet<usize> = HashSet::new();
+    for src in over_hosts {
+        // An interference-driven (not load-driven) overload sheds one VM
+        // per pass: WI is recomputed by the daemons next tick, so
+        // draining further on a stale reading would overshoot.
+        let wi_hot = summaries[src].max_wi > params.wi_threshold;
+        let mut shed = 0usize;
+        // Largest movable VMs first: fewest migrations per shed core.
+        let mut vms: Vec<(VmId, f64)> = summaries[src]
+            .running
+            .iter()
+            .map(|&(id, class)| (id, demand(class)))
+            .collect();
+        vms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        for (vm, load) in vms {
+            if budget_left == 0 {
+                return moves;
+            }
+            let load_hot = frac(loads[src], matrix, src) > params.over;
+            if !load_hot && (!wi_hot || shed > 0) {
+                break; // relieved
+            }
+            if !movable(vm, &taken) {
+                continue;
+            }
+            // Destination: lowest interference, then most headroom,
+            // then lowest index — and never another hot host.
+            let dst = (0..n)
+                .filter(|&h| h != src && classes[h] != HostClass::Overloaded)
+                .filter(|&h| frac(loads[h] + load, matrix, h) <= params.over)
+                .filter(|&h| summaries[h].max_wi <= params.wi_threshold)
+                .min_by(|&a, &b| {
+                    summaries[a]
+                        .max_wi
+                        .partial_cmp(&summaries[b].max_wi)
+                        .unwrap()
+                        .then(
+                            frac(loads[a], matrix, a)
+                                .partial_cmp(&frac(loads[b], matrix, b))
+                                .unwrap(),
+                        )
+                        .then(a.cmp(&b))
+                });
+            // No room for this VM anywhere — a smaller one may still fit.
+            let Some(dst) = dst else { continue };
+            loads[src] -= load;
+            loads[dst] += load;
+            taken.insert(vm);
+            received.insert(dst);
+            moves.push(PlannedMove { vm, src, dst });
+            budget_left -= 1;
+            shed += 1;
+        }
+    }
+
+    // --- Pass 2: evacuate and park underloaded hosts -------------------
+    let mut park_hosts: Vec<usize> = (0..n)
+        .filter(|&h| classes[h] == HostClass::Underloaded)
+        .collect();
+    // Emptiest first: cheapest full evacuations save hosts soonest.
+    park_hosts.sort_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap().then(a.cmp(&b)));
+    let mut parking: HashSet<usize> = HashSet::new();
+    for src in park_hosts {
+        // A host the spread pass (or an earlier evacuation) already
+        // routed VMs onto is staying powered — parking it would strand
+        // the incoming transfers on a host this plan meant to empty.
+        if received.contains(&src) {
+            continue;
+        }
+        let mut vms: Vec<(VmId, f64)> = summaries[src]
+            .running
+            .iter()
+            .map(|&(id, class)| (id, demand(class)))
+            .collect();
+        // Parking is all-or-nothing: every resident must be movable and
+        // within budget, or the host stays up and the budget is saved.
+        if vms.is_empty()
+            || vms.len() != summaries[src].resident
+            || vms.len() > budget_left
+            || vms.iter().any(|&(vm, _)| !movable(vm, &taken))
+        {
+            continue;
+        }
+        vms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        let mut tentative: Vec<PlannedMove> = Vec::with_capacity(vms.len());
+        let mut tentative_loads = loads.clone();
+        let feasible = vms.iter().all(|&(vm, load)| {
+            // Pack: the most-loaded destination that stays under `over`
+            // with WI headroom — merging underloaded hosts is allowed,
+            // but never onto a host this plan is itself evacuating.
+            let dst = (0..n)
+                .filter(|&h| {
+                    h != src && classes[h] != HostClass::Overloaded && !parking.contains(&h)
+                })
+                .filter(|&h| frac(tentative_loads[h] + load, matrix, h) <= params.over)
+                .filter(|&h| summaries[h].max_wi <= params.wi_threshold)
+                .max_by(|&a, &b| {
+                    frac(tentative_loads[a], matrix, a)
+                        .partial_cmp(&frac(tentative_loads[b], matrix, b))
+                        .unwrap()
+                        .then(b.cmp(&a)) // ties: lowest index
+                });
+            match dst {
+                Some(dst) => {
+                    tentative_loads[dst] += load;
+                    tentative.push(PlannedMove { vm, src, dst });
+                    true
+                }
+                None => false,
+            }
+        });
+        if !feasible {
+            continue;
+        }
+        budget_left -= tentative.len();
+        loads = tentative_loads;
+        loads[src] = 0.0;
+        parking.insert(src);
+        for m in &tentative {
+            taken.insert(m.vm);
+            received.insert(m.dst);
+        }
+        moves.extend(tentative);
+        if budget_left == 0 {
+            break;
+        }
+    }
+    moves
+}

@@ -31,6 +31,16 @@
 //!     Within a host it pins round-robin (the centralized schedulers the
 //!     paper contrasts with do not micro-manage pinning).
 //!
+//! Steady-state consolidation lives in [`migrator`] — the **continuous
+//! migration manager**: a [`VmMigrator`](migrator::VmMigrator) that
+//! watches the bus-published summaries each tick, classifies hosts as
+//! overloaded (spread) or underloaded (evacuate and park), and
+//! publishes live [`ClusterEvent::Migrate`](bus::ClusterEvent)s under a
+//! concurrent-transfer budget with per-VM cooldowns (Jin et al.,
+//! arXiv:1404.2842: joint energy/interference objective). Its effect is
+//! measured by the cluster-scope [`ClusterLedger`](crate::metrics::ClusterLedger):
+//! parked-aware energy (Wh), core-hours, and overload-time SLAV.
+//!
 //! On top of both sits [`trace`] — **trace-driven scale-out**: dataset
 //! readers (CSV vm-instances/vm-types files, dslab-style) and a seeded
 //! heavy-tailed [`SyntheticTraceGenerator`](trace::synth::SyntheticTraceGenerator)
@@ -44,6 +54,7 @@ pub mod bus;
 pub mod dispatch;
 pub mod host;
 pub mod migration;
+pub mod migrator;
 pub mod pool;
 pub mod sim;
 pub mod trace;
@@ -52,6 +63,7 @@ pub use bus::{BusStats, ClusterEvent, EventBus, HostEvent, HostSummary, SummaryM
 pub use dispatch::{ArrivalBatch, ArrivalPolicy, Dispatcher};
 pub use host::{ClusterHost, HostHandle, HostMetrics, NativeHost, SimHost};
 pub use migration::MigrationModel;
+pub use migrator::{MigratorStats, PlannedMove, VmMigrator};
 pub use pool::{ShardPool, StepMode};
 pub use sim::{validate_shape, ClusterResult, ClusterSim, ClusterSpec, Strategy};
 pub use trace::replay::{replay, ReplayResult};

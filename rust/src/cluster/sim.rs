@@ -20,8 +20,10 @@ use super::bus::{ClusterEvent, EventBus, HostSummary};
 use super::dispatch::{ArrivalPolicy, Dispatcher};
 use super::host::{ClusterHost, HostHandle, SimHost};
 use super::migration::MigrationModel;
+use super::migrator::{MigratorStats, VmMigrator};
 use super::pool::{ShardPool, StepMode};
-use crate::config::Config;
+use crate::config::{Config, MigratorParams};
+use crate::metrics::ClusterLedger;
 use crate::hostsim::{Vm, VmId, VmState};
 use crate::profiling::ProfileBank;
 use crate::scenarios::ScenarioSpec;
@@ -87,6 +89,10 @@ pub struct ClusterSpec {
     /// keep the homogeneous `HostSpec`, so this models what the
     /// *scheduler* believes about a heterogeneous fleet.
     pub host_caps: Option<Vec<crate::workloads::MetricVec>>,
+    /// Continuous migration manager ([`super::migrator`]): `None`
+    /// disables it — the sim then publishes nothing extra and draws no
+    /// extra RNG, so runs are bit-identical to a build without it.
+    pub migrator: Option<MigratorParams>,
 }
 
 impl ClusterSpec {
@@ -103,6 +109,7 @@ impl ClusterSpec {
             step_mode: StepMode::Single,
             actuation: ActuationSpec::Inline,
             host_caps: None,
+            migrator: None,
         }
     }
 }
@@ -136,10 +143,23 @@ pub struct ClusterResult {
     /// consolidation optimises by draining hosts.
     pub host_hours: f64,
     pub migrations_started: u64,
+    pub migrations_completed: u64,
     pub migrations_failed: u64,
     /// Cluster events routed through the bus over the whole run.
     pub events_routed: u64,
     pub completion_time: f64,
+    /// Parked-aware cluster energy in Wh (empty hosts draw 0 W).
+    pub energy_wh: f64,
+    /// Always-plugged cluster energy in Wh (Σ per-host ledgers) — the
+    /// gap to `energy_wh` is what parking saved.
+    pub plugged_energy_wh: f64,
+    /// dslab-style SLATAH: overload host-time over powered host-time.
+    pub slav: f64,
+    pub overload_seconds: f64,
+    /// Hours of powered (non-empty) host time.
+    pub active_host_hours: f64,
+    /// Moves the continuous migrator published (0 when disabled).
+    pub migrator_moves: u64,
 }
 
 /// One pending (not yet arrived) VM.
@@ -160,6 +180,10 @@ pub struct ClusterSim {
     powered_seconds: Vec<f64>,
     /// All batch work finished as of the last tick.
     batch_done: bool,
+    /// Continuous migration manager (None = disabled).
+    migrator: Option<VmMigrator>,
+    /// Cluster-scope accounting, fed once per tick from the reports.
+    ledger: ClusterLedger,
 }
 
 impl ClusterSim {
@@ -221,6 +245,7 @@ impl ClusterSim {
             })
             .collect();
         let rng = Rng::new(spec.cfg.sim.seed ^ 0xC1_05_7E_12);
+        let migrator = spec.migrator.clone().map(VmMigrator::new);
         ClusterSim {
             spec,
             pool,
@@ -232,6 +257,8 @@ impl ClusterSim {
             t: 0.0,
             powered_seconds: vec![0.0; n],
             batch_done: false,
+            migrator,
+            ledger: ClusterLedger::new(),
         }
     }
 
@@ -346,6 +373,19 @@ impl ClusterSim {
             self.plan_reshuffle(bank);
         }
 
+        // The continuous migrator plans from the same refreshed
+        // summaries the arrival policies read, before routing — its
+        // moves enter this tick's routing window like any other event.
+        if let Some(mig) = self.migrator.as_mut() {
+            for m in mig.maybe_plan(self.t, &self.bus, bank) {
+                self.bus.publish(ClusterEvent::Migrate {
+                    vm: m.vm,
+                    src: m.src,
+                    dst: m.dst,
+                });
+            }
+        }
+
         self.bus.route(self.policy.as_mut(), bank, &mut self.rng)?;
 
         let matured = self.bus.advance(dt);
@@ -357,16 +397,36 @@ impl ClusterSim {
 
         let inboxes = self.bus.take_inboxes();
         let reports = self.pool.step(inboxes)?;
+        let mut powered = 0usize;
         for (h, report) in reports.iter().enumerate() {
             if report.busy_now {
                 self.powered_seconds[h] += dt;
             }
+            let s = &report.summary;
+            if s.resident > 0 || s.busy_cores > 0 {
+                powered += 1;
+            }
+            self.ledger
+                .record_host_tick(s.busy_cores, s.resident, dt, &self.spec.cfg.host);
         }
+        self.ledger.note_tick(self.t, powered);
         self.batch_done =
             reports.iter().all(|r| r.batch_done) && self.pending.is_empty();
         self.bus.refresh(&reports, bank);
         self.t += dt;
         Ok(())
+    }
+
+    /// Cluster-scope accounting as of now (energy, overload time,
+    /// powered-host series). Per-host ledgers are folded in by
+    /// [`Self::run`] / replay at the end of the run.
+    pub fn ledger(&self) -> &ClusterLedger {
+        &self.ledger
+    }
+
+    /// Continuous-migrator counters, when one is enabled.
+    pub fn migrator_stats(&self) -> Option<MigratorStats> {
+        self.migrator.as_ref().map(|m| m.stats)
     }
 
     /// Tear down the pool and hand back every host (tests, inspection).
@@ -390,6 +450,8 @@ impl ClusterSim {
             bus,
             powered_seconds,
             t,
+            migrator,
+            mut ledger,
             ..
         } = self;
         let hosts = pool.into_hosts()?;
@@ -399,6 +461,7 @@ impl ClusterSim {
         let mut host_hours = 0.0;
         for (h, host) in hosts.iter().enumerate() {
             let engine = host.handle().engine();
+            ledger.absorb(&engine.ledger);
             core_hours += engine.ledger.core_hours();
             host_hours += powered_seconds[h] / 3600.0;
             for vm in &engine.vms {
@@ -431,9 +494,16 @@ impl ClusterSim {
             core_hours,
             host_hours,
             migrations_started: bus.stats.migrations_started,
+            migrations_completed: bus.stats.migrations_completed,
             migrations_failed: bus.stats.migrations_failed,
             events_routed: bus.stats.events_routed,
             completion_time: t,
+            energy_wh: ledger.energy_wh(),
+            plugged_energy_wh: ledger.plugged_energy_wh(),
+            slav: ledger.slav(),
+            overload_seconds: ledger.overload_seconds,
+            active_host_hours: ledger.active_host_hours(),
+            migrator_moves: migrator.map(|m| m.stats.planned_moves).unwrap_or(0),
         })
     }
 }

@@ -57,6 +57,23 @@ pub struct ReplayResult {
     pub core_hours: f64,
     /// Final resident count per host, in host order.
     pub final_residents: Vec<usize>,
+    /// Migrations the bus completed / aborted over the replay.
+    pub migrations_completed: u64,
+    pub migrations_failed: u64,
+    /// Moves the continuous migrator published (0 when disabled).
+    pub migrator_moves: u64,
+    /// Parked-aware cluster energy in Wh (empty hosts draw 0 W).
+    pub energy_wh: f64,
+    /// Always-plugged cluster energy in Wh (Σ per-host ledgers).
+    pub plugged_energy_wh: f64,
+    /// dslab-style SLATAH: overload host-time over powered host-time.
+    pub slav: f64,
+    pub overload_seconds: f64,
+    /// Hours of powered (non-empty) host time.
+    pub active_host_hours: f64,
+    /// Ticks from the powered-host peak to half-drain (`None` when the
+    /// fleet never drains that far) — time-to-converge after the spike.
+    pub converge_ticks: Option<u64>,
     /// End-to-end wall time of the replay loop.
     pub wall: Duration,
 }
@@ -67,6 +84,11 @@ impl ReplayResult {
     pub fn events_per_sec(&self) -> f64 {
         let events = self.arrivals + self.departures + self.migrates;
         events as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Hosts still holding residents when the replay stopped.
+    pub fn final_active_hosts(&self) -> usize {
+        self.final_residents.iter().filter(|&&r| r > 0).count()
     }
 }
 
@@ -319,6 +341,36 @@ pub fn replay(
             break;
         }
     }
+
+    // Migrator settle window: the trace is drained, but in-flight
+    // transfers are still travelling and the planner may still be
+    // consolidating the never-departing survivors — keep ticking until
+    // a full planning interval passes with no transfers in flight and
+    // no new moves, so converge time and parked energy are measurable.
+    // Migrator-off replays skip this entirely and stay bit-identical to
+    // the pre-migrator driver.
+    if let Some(params) = &spec.migrator {
+        let mut quiet = 0.0;
+        while sim.now() < max_time {
+            let before = sim.migrator_stats().map_or(0, |s| s.planned_moves);
+            sim.tick(bank)?;
+            ticks += 1;
+            for (VmId(id), host) in sim.take_moves() {
+                if d.live.contains(&id) {
+                    d.vm_host.insert(id, host);
+                }
+            }
+            let after = sim.migrator_stats().map_or(0, |s| s.planned_moves);
+            if sim.bus().in_flight() == 0 && after == before {
+                quiet += spec.cfg.sim.dt;
+                if quiet > params.interval {
+                    break;
+                }
+            } else {
+                quiet = 0.0;
+            }
+        }
+    }
     let wall = started.elapsed();
 
     if d.arrivals == 0 && !truncated {
@@ -328,11 +380,16 @@ pub fn replay(
     let stats = sim.bus().stats;
     let final_residents: Vec<usize> = sim.summaries().iter().map(|s| s.resident).collect();
     let completion_time = sim.now();
+    let migrator_moves = sim.migrator_stats().map_or(0, |s| s.planned_moves);
+    let mut ledger = sim.ledger().clone();
+    let dt = spec.cfg.sim.dt;
     let hosts = sim.finish()?;
     let mut core_hours = 0.0;
     for host in &hosts {
+        ledger.absorb(&host.handle().engine().ledger);
         core_hours += host.handle().engine().ledger.core_hours();
     }
+    let converge_ticks = ledger.converge_time().map(|t| (t / dt).round() as u64);
 
     Ok(ReplayResult {
         arrivals: d.arrivals,
@@ -348,6 +405,15 @@ pub fn replay(
         ticks,
         core_hours,
         final_residents,
+        migrations_completed: stats.migrations_completed,
+        migrations_failed: stats.migrations_failed,
+        migrator_moves,
+        energy_wh: ledger.energy_wh(),
+        plugged_energy_wh: ledger.plugged_energy_wh(),
+        slav: ledger.slav(),
+        overload_seconds: ledger.overload_seconds,
+        active_host_hours: ledger.active_host_hours(),
+        converge_ticks,
         wall,
     })
 }
@@ -453,6 +519,179 @@ mod tests {
                 lifetime,
             },
         }
+    }
+
+    fn classed_arrival(
+        at: f64,
+        vm: u32,
+        class: WorkloadClass,
+        lifetime: Option<f64>,
+    ) -> TraceEvent {
+        TraceEvent {
+            at_tick: at,
+            vm,
+            op: TraceOp::Arrival { class, lifetime },
+        }
+    }
+
+    /// A load spike that decays: 48 CPU-heavy VMs burst in over 8 ticks;
+    /// 40 of them depart staggered (t≈60..255), 8 streaming survivors
+    /// never depart. A far-out sentinel arrival pins both the migrator
+    /// and baseline replays to the same ~600 s window so their energy
+    /// integrals are comparable.
+    fn spike_trace() -> Vec<TraceEvent> {
+        let mut events = Vec::new();
+        for i in 0..8u32 {
+            events.push(classed_arrival(i as f64, i, WorkloadClass::StreamHigh, None));
+        }
+        for i in 8..48u32 {
+            events.push(classed_arrival(
+                (i % 8) as f64,
+                i,
+                WorkloadClass::Blackscholes,
+                Some(60.0 + (i - 8) as f64 * 5.0),
+            ));
+        }
+        events.sort_by(|a, b| a.at_tick.partial_cmp(&b.at_tick).unwrap().then(a.vm.cmp(&b.vm)));
+        events.push(classed_arrival(600.0, 100, WorkloadClass::StreamLow, None));
+        events
+    }
+
+    fn migrator_params(spec_str: &str) -> crate::config::MigratorParams {
+        crate::config::MigratorParams::parse(spec_str).unwrap()
+    }
+
+    #[test]
+    fn migrator_converges_the_spike_to_fewer_hosts_and_less_energy() {
+        // The PR's acceptance gate: the same decaying load spike with
+        // the continuous migrator converges to fewer active hosts and
+        // lower parked-aware cluster energy than without it, at equal
+        // or lower SLAV.
+        let bank = testkit::shared_bank();
+        let run = |migrator: Option<crate::config::MigratorParams>| {
+            let mut s = spec(8);
+            s.migration.failure_prob = 0.0; // deterministic outcome
+            s.migrator = migrator;
+            let mut reader = SliceReader::new(spike_trace()).emitting_departures(false);
+            replay(&s, &mut reader, bank).unwrap()
+        };
+        let without = run(None);
+        let with = run(Some(migrator_params("0.85:0.35:6:15")));
+
+        assert_eq!(without.migrator_moves, 0);
+        assert_eq!(without.migrations_completed, 0);
+        assert!(with.migrations_completed > 0, "migrator must move VMs");
+        assert!(
+            with.final_active_hosts() < without.final_active_hosts(),
+            "consolidation must drain hosts: {} vs {}",
+            with.final_active_hosts(),
+            without.final_active_hosts()
+        );
+        assert!(
+            with.energy_wh < without.energy_wh * 0.95,
+            "parking must save energy: {:.2} Wh vs {:.2} Wh",
+            with.energy_wh,
+            without.energy_wh
+        );
+        assert!(
+            with.slav <= without.slav + 1e-9,
+            "consolidation must not add overload: {} vs {}",
+            with.slav,
+            without.slav
+        );
+        assert!(
+            with.converge_ticks.is_some(),
+            "the powered-host series must show the fleet half-draining"
+        );
+        // Residents are conserved either way: 8 survivors + sentinel.
+        assert_eq!(with.final_residents.iter().sum::<usize>(), 9);
+        assert_eq!(without.final_residents.iter().sum::<usize>(), 9);
+    }
+
+    #[test]
+    fn migrator_replay_is_bit_identical_across_step_modes() {
+        let bank = testkit::shared_bank();
+        let run = |mode: StepMode| {
+            let mut s = spec(4);
+            s.step_mode = mode;
+            s.migrator = Some(migrator_params("0.85:0.35:4:10"));
+            let mut reader = synth(SYNTH_SMALL);
+            replay(&s, &mut reader, bank).unwrap()
+        };
+        let single = run(StepMode::Single);
+        for other in [run(StepMode::Scoped(3)), run(StepMode::Pool(3))] {
+            assert_eq!(single.core_hours.to_bits(), other.core_hours.to_bits());
+            assert_eq!(
+                single.completion_time.to_bits(),
+                other.completion_time.to_bits()
+            );
+            assert_eq!(single.energy_wh.to_bits(), other.energy_wh.to_bits());
+            assert_eq!(single.slav.to_bits(), other.slav.to_bits());
+            assert_eq!(single.final_residents, other.final_residents);
+            assert_eq!(single.events_routed, other.events_routed);
+            assert_eq!(single.ticks, other.ticks);
+            assert_eq!(single.migrator_moves, other.migrator_moves);
+            assert_eq!(single.migrations_started, other.migrations_started);
+            assert_eq!(single.migrations_completed, other.migrations_completed);
+            assert_eq!(single.migrations_failed, other.migrations_failed);
+        }
+    }
+
+    #[test]
+    fn migrator_replay_is_bit_identical_across_inline_and_zero_lag_deferred() {
+        let bank = testkit::shared_bank();
+        let run = |actuation: ActuationSpec| {
+            let mut s = spec(3);
+            s.actuation = actuation;
+            s.migrator = Some(migrator_params("0.85:0.35:4:10"));
+            let mut reader = synth("vms=40,rate=4,life=25,seed=5");
+            replay(&s, &mut reader, bank).unwrap()
+        };
+        let inline = run(ActuationSpec::Inline);
+        let deferred = run(ActuationSpec::Deferred {
+            latency_ticks: 0,
+            budget_per_tick: 0,
+        });
+        assert_eq!(inline.core_hours.to_bits(), deferred.core_hours.to_bits());
+        assert_eq!(
+            inline.completion_time.to_bits(),
+            deferred.completion_time.to_bits()
+        );
+        assert_eq!(inline.energy_wh.to_bits(), deferred.energy_wh.to_bits());
+        assert_eq!(inline.final_residents, deferred.final_residents);
+        assert_eq!(inline.events_routed, deferred.events_routed);
+        assert_eq!(inline.migrator_moves, deferred.migrator_moves);
+    }
+
+    #[test]
+    fn never_firing_migrator_only_adds_the_settle_window() {
+        // A migrator whose thresholds can never trip publishes nothing
+        // and draws no RNG, so everything the placement computed —
+        // core-hours, residents, routing — is bit-identical to the
+        // migrator-off (PR 7) driver; only the settle-window ticks (and
+        // their idle-time accounting) are extra.
+        let bank = testkit::shared_bank();
+        let run = |migrator: Option<crate::config::MigratorParams>| {
+            let mut s = spec(4);
+            s.migrator = migrator;
+            let mut reader = synth(SYNTH_SMALL);
+            replay(&s, &mut reader, bank).unwrap()
+        };
+        let off = run(None);
+        let inert = run(Some(crate::config::MigratorParams {
+            over: 1.5,
+            under: 0.0,
+            wi_threshold: 1e9,
+            ..Default::default()
+        }));
+        assert_eq!(inert.migrator_moves, 0);
+        assert_eq!(off.core_hours.to_bits(), inert.core_hours.to_bits());
+        assert_eq!(off.final_residents, inert.final_residents);
+        assert_eq!(off.events_routed, inert.events_routed);
+        assert_eq!(off.migrations_started, inert.migrations_started);
+        assert_eq!(off.arrivals, inert.arrivals);
+        assert_eq!(off.departures, inert.departures);
+        assert!(inert.ticks > off.ticks, "settle window ticks are extra");
     }
 
     #[test]

@@ -122,6 +122,101 @@ impl Default for SchedParams {
     }
 }
 
+/// Continuous migration-manager parameters (see `cluster::migrator` for
+/// the planner that consumes them and the full grammar table).
+///
+/// CLI grammar: `over:under:budget[:interval]` — e.g. `0.85:0.35:4` or
+/// `0.9:0.3:8:60`. Empty fields keep their defaults (`::8` overrides
+/// only the budget).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigratorParams {
+    /// Overload threshold on estimated CPU load as a fraction of host
+    /// CPU capacity: a host above it sheds VMs (spread).
+    pub over: f64,
+    /// Underload threshold on the same fraction: a host below it is a
+    /// candidate for full evacuation and parking.
+    pub under: f64,
+    /// Max concurrent live migrations, counting in-flight transfers.
+    pub budget: usize,
+    /// Seconds between planning passes.
+    pub interval: f64,
+    /// Worst-interference threshold: a host whose `max_wi` exceeds it is
+    /// treated as overloaded, and it caps destination WI headroom.
+    pub wi_threshold: f64,
+    /// Per-VM cooldown in seconds — a VM the planner just moved is not
+    /// eligible again until this much virtual time has passed.
+    pub cooldown: f64,
+}
+
+impl Default for MigratorParams {
+    fn default() -> Self {
+        MigratorParams {
+            over: 0.85,
+            under: 0.35,
+            budget: 4,
+            interval: 30.0,
+            wi_threshold: 1.5,
+            cooldown: 120.0,
+        }
+    }
+}
+
+impl MigratorParams {
+    /// Parse the CLI grammar `over:under:budget[:interval]`. An empty
+    /// string (bare `--migrator`) and empty fields keep the defaults.
+    pub fn parse(spec: &str) -> Result<MigratorParams> {
+        let mut p = MigratorParams::default();
+        if spec.is_empty() {
+            return Ok(p);
+        }
+        let fields: Vec<&str> = spec.split(':').collect();
+        anyhow::ensure!(
+            fields.len() <= 4,
+            "migrator spec '{spec}': expected over:under:budget[:interval]"
+        );
+        let num = |field: &str, name: &str| -> Result<f64> {
+            field
+                .parse::<f64>()
+                .with_context(|| format!("migrator {name} '{field}' in '{spec}'"))
+        };
+        if let Some(f) = fields.first().filter(|f| !f.is_empty()) {
+            p.over = num(f, "over")?;
+        }
+        if let Some(f) = fields.get(1).filter(|f| !f.is_empty()) {
+            p.under = num(f, "under")?;
+        }
+        if let Some(f) = fields.get(2).filter(|f| !f.is_empty()) {
+            p.budget = f
+                .parse::<usize>()
+                .with_context(|| format!("migrator budget '{f}' in '{spec}'"))?;
+        }
+        if let Some(f) = fields.get(3).filter(|f| !f.is_empty()) {
+            p.interval = num(f, "interval")?;
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.over > 0.0 && self.over <= 1.5,
+            "migrator over threshold {} out of (0, 1.5]",
+            self.over
+        );
+        anyhow::ensure!(
+            self.under >= 0.0 && self.under < self.over,
+            "migrator under threshold {} must sit in [0, over={})",
+            self.under,
+            self.over
+        );
+        anyhow::ensure!(self.budget >= 1, "migrator budget must be >= 1");
+        anyhow::ensure!(self.interval > 0.0, "migrator interval must be > 0");
+        anyhow::ensure!(self.wi_threshold > 0.0, "migrator wi_threshold must be > 0");
+        anyhow::ensure!(self.cooldown >= 0.0, "migrator cooldown must be >= 0");
+        Ok(())
+    }
+}
+
 /// Simulation parameters.
 #[derive(Debug, Clone)]
 pub struct SimParams {
@@ -152,6 +247,9 @@ pub struct Config {
     pub host: HostSpec,
     pub sched: SchedParams,
     pub sim: SimParams,
+    /// Continuous migration manager; `None` leaves it disabled (the
+    /// cluster then behaves exactly as it did without the subsystem).
+    pub migrator: Option<MigratorParams>,
 }
 
 impl Config {
@@ -196,6 +294,16 @@ impl Config {
             }
             read_f64(s, "demand_noise", &mut cfg.sim.demand_noise);
         }
+        if let Some(m) = json.get("migrator").filter(|m| !matches!(m, Json::Null)) {
+            let mut p = MigratorParams::default();
+            read_f64(m, "over", &mut p.over);
+            read_f64(m, "under", &mut p.under);
+            read_usize(m, "budget", &mut p.budget);
+            read_f64(m, "interval", &mut p.interval);
+            read_f64(m, "wi_threshold", &mut p.wi_threshold);
+            read_f64(m, "cooldown", &mut p.cooldown);
+            cfg.migrator = Some(p);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -219,6 +327,9 @@ impl Config {
             self.sched.interval >= self.sim.dt,
             "scheduler interval below simulation tick"
         );
+        if let Some(m) = &self.migrator {
+            m.validate()?;
+        }
         Ok(())
     }
 
@@ -266,6 +377,20 @@ impl Config {
                     ("seed", Json::Num(self.sim.seed as f64)),
                     ("demand_noise", Json::Num(self.sim.demand_noise)),
                 ]),
+            ),
+            (
+                "migrator",
+                match &self.migrator {
+                    Some(m) => Json::from_pairs(vec![
+                        ("over", Json::Num(m.over)),
+                        ("under", Json::Num(m.under)),
+                        ("budget", Json::Num(m.budget as f64)),
+                        ("interval", Json::Num(m.interval)),
+                        ("wi_threshold", Json::Num(m.wi_threshold)),
+                        ("cooldown", Json::Num(m.cooldown)),
+                    ]),
+                    None => Json::Null,
+                },
             ),
         ])
     }
@@ -328,6 +453,38 @@ mod tests {
         let c = Config::from_json(&j).unwrap();
         assert_eq!(c.sched.ras_threshold, 1.4);
         assert_eq!(c.host.cores, 12);
+    }
+
+    #[test]
+    fn migrator_grammar_parses_fields_and_defaults() {
+        let d = MigratorParams::default();
+        assert_eq!(MigratorParams::parse("").unwrap(), d);
+        let p = MigratorParams::parse("0.9:0.3:8:60").unwrap();
+        assert_eq!(p.over, 0.9);
+        assert_eq!(p.under, 0.3);
+        assert_eq!(p.budget, 8);
+        assert_eq!(p.interval, 60.0);
+        assert_eq!(p.wi_threshold, d.wi_threshold);
+        // Empty fields keep defaults: override only the budget.
+        let p = MigratorParams::parse("::8").unwrap();
+        assert_eq!(p.over, d.over);
+        assert_eq!(p.under, d.under);
+        assert_eq!(p.budget, 8);
+        assert!(MigratorParams::parse("0.2:0.8:4").is_err()); // under >= over
+        assert!(MigratorParams::parse("0.9:0.3:0").is_err()); // zero budget
+        assert!(MigratorParams::parse("a:b").is_err());
+        assert!(MigratorParams::parse("1:2:3:4:5").is_err());
+    }
+
+    #[test]
+    fn migrator_json_roundtrip() {
+        let mut c = Config::default();
+        assert!(c.migrator.is_none());
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert!(back.migrator.is_none(), "null migrator must stay disabled");
+        c.migrator = Some(MigratorParams::parse("0.8:0.25:6:45").unwrap());
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.migrator, c.migrator);
     }
 
     #[test]

@@ -14,9 +14,12 @@
 //!   loop against a simulated host in paced wall-clock time, printing
 //!   monitor snapshots (a demo of the Alg. 1 loop).
 //! * `cluster [--hosts N] [--vms N] [--strategy S] [--dispatcher D]
-//!   [--step-mode M] [--workers W] [--actuation A]` — run a cluster-wide
+//!   [--step-mode M] [--workers W] [--actuation A]
+//!   [--migrator [over:under:budget[:interval]]]` — run a cluster-wide
 //!   scenario through the event bus and shard pool (local-vmcd vs
-//!   global-migration).
+//!   global-migration), optionally with the continuous migration
+//!   manager consolidating the fleet; summaries include the
+//!   cluster-scope energy/SLAV ledger.
 //! * `cluster --trace <path|synth:spec> [--trace-types FILE]
 //!   [--trace-hosts FILE]` — replay a recorded or synthetic VM trace
 //!   through the same bus instead of a generated scenario (see
@@ -102,6 +105,10 @@ USAGE:
                  [--actuation inline|deferred:N|deferred:N:B]
                  [--trace PATH|synth:k=v,...] [--trace-types FILE]
                  [--trace-hosts FILE]
+                 [--migrator [over:under:budget[:interval]]]
+
+  --migrator enables the continuous migration manager; bare --migrator
+  uses the config-file thresholds (or the defaults 0.85:0.35:4:30).
 ";
 
 fn cmd_profile(args: &Args) -> Result<()> {
@@ -456,6 +463,16 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown step mode '{other}' (valid: single, scoped, pool)"),
     };
     let actuation = ActuationSpec::parse(&args.opt_or("actuation", "inline"))?;
+    // `--migrator over:under:budget[:interval]` overrides the config
+    // file's `migrator` section; bare `--migrator` enables it with the
+    // config (or default) thresholds; absent, the config file decides.
+    let migrator = match args.opt("migrator") {
+        Some(grammar) => Some(
+            vmcd::config::MigratorParams::parse(grammar).context("--migrator")?,
+        ),
+        None if args.flag("migrator") => Some(cfg.migrator.clone().unwrap_or_default()),
+        None => cfg.migrator.clone(),
+    };
     let bank = bank_for(&cfg, args);
 
     let mut spec = ClusterSpec::new(hosts, strategy);
@@ -464,6 +481,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     spec.local_policy = policy;
     spec.step_mode = step_mode;
     spec.actuation = actuation;
+    spec.migrator = migrator.clone();
     if let Some(path) = args.opt("trace-hosts") {
         spec.host_caps = Some(vmcd::cluster::trace::csv::read_host_classes(path, hosts)?);
     }
@@ -485,14 +503,37 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         println!("trace           : {trace_arg}");
         println!("hosts           : {hosts}");
         println!("dispatcher      : {}", dispatcher.name());
+        if let Some(m) = &migrator {
+            println!(
+                "migrator        : over {:.2} / under {:.2}, budget {}, every {:.0} s",
+                m.over, m.under, m.budget, m.interval
+            );
+        }
         println!("arrivals        : {}", r.arrivals);
         println!("departures      : {}", r.departures);
         println!("migrates        : {}", r.migrates);
         println!("dropped         : {}", r.dropped);
         println!("peak live VMs   : {}", r.peak_live);
         println!("final live VMs  : {}", r.final_live);
+        println!("active hosts    : {}", r.final_active_hosts());
         println!("events routed   : {}", r.events_routed);
+        println!(
+            "migrations      : {} started, {} completed, {} aborted",
+            r.migrations_started, r.migrations_completed, r.migrations_failed
+        );
+        println!("migrator moves  : {}", r.migrator_moves);
         println!("core-hours      : {:.3}", r.core_hours);
+        println!(
+            "energy          : {:.1} Wh parked-aware ({:.1} Wh always-plugged)",
+            r.energy_wh, r.plugged_energy_wh
+        );
+        println!(
+            "SLAV            : {:.4} ({:.0} s overloaded over {:.2} active host-hours)",
+            r.slav, r.overload_seconds, r.active_host_hours
+        );
+        if let Some(ticks) = r.converge_ticks {
+            println!("converge        : {ticks} ticks from powered peak to half-drain");
+        }
         println!("sim time        : {:.0} s over {} ticks", r.completion_time, r.ticks);
         if r.truncated {
             println!("truncated       : yes (trace ran past sim.max_time)");
@@ -526,10 +567,19 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     println!("core-hours      : {:.3}", r.core_hours);
     println!("host-hours      : {:.3}", r.host_hours);
     println!(
-        "migrations      : {} started, {} failed",
-        r.migrations_started, r.migrations_failed
+        "migrations      : {} started, {} completed, {} failed",
+        r.migrations_started, r.migrations_completed, r.migrations_failed
     );
+    println!("migrator moves  : {}", r.migrator_moves);
     println!("events routed   : {}", r.events_routed);
+    println!(
+        "energy          : {:.1} Wh parked-aware ({:.1} Wh always-plugged)",
+        r.energy_wh, r.plugged_energy_wh
+    );
+    println!(
+        "SLAV            : {:.4} ({:.0} s overloaded over {:.2} active host-hours)",
+        r.slav, r.overload_seconds, r.active_host_hours
+    );
     println!("completed at    : {:.0} s", r.completion_time);
     println!("wall time       : {} ms", wall.elapsed().as_millis());
     Ok(())

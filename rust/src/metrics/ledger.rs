@@ -44,6 +44,126 @@ impl Ledger {
     }
 }
 
+/// Cluster-scope accounting aggregated across hosts (dslab's
+/// `energy_meter` + `slav_model` shape): parked-aware energy, the
+/// busy-core integral, and the overload-time SLAV metric.
+///
+/// Two energy integrals are kept. `plugged_energy_joules` charges every
+/// host the per-host power model for the whole run (the sum of the
+/// per-host [`Ledger`]s, via [`ClusterLedger::absorb`]). `energy_joules`
+/// is accumulated per tick by [`ClusterLedger::record_host_tick`] and
+/// treats an *empty* host (no resident VMs, no busy cores) as parked at
+/// 0 W — the §IV-B "lowest power state". The gap between the two is the
+/// energy a consolidation/parking policy actually saves.
+///
+/// SLAV follows dslab's overload-time model (SLATAH): a powered host
+/// spending a tick with every core busy cannot absorb more demand, so
+/// that tick counts toward `overload_seconds`; `slav()` normalizes by
+/// powered host time.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterLedger {
+    /// Σ over hosts of ∫ busy_cores dt — core-seconds (absorbed).
+    pub core_busy_seconds: f64,
+    /// Σ of per-host ledger energy — every host billed full-run (joules).
+    pub plugged_energy_joules: f64,
+    /// Parked-aware cluster energy: empty hosts draw 0 W (joules).
+    pub energy_joules: f64,
+    /// Host-seconds spent with all cores busy (SLAV numerator).
+    pub overload_seconds: f64,
+    /// Host-seconds powered (non-empty) — SLAV denominator.
+    pub active_host_seconds: f64,
+    /// (t, powered hosts) sampled once per cluster tick.
+    pub powered_series: TimeSeries,
+}
+
+impl ClusterLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Account one host for one tick. A host with no residents and no
+    /// busy cores is parked: it draws nothing and accrues no active
+    /// time. `busy >= cores` marks the tick as overloaded.
+    pub fn record_host_tick(
+        &mut self,
+        busy: usize,
+        resident: usize,
+        dt: f64,
+        host: &HostSpec,
+    ) {
+        if resident == 0 && busy == 0 {
+            return;
+        }
+        let power = host.sockets as f64 * host.watts_socket_idle
+            + busy as f64 * host.watts_per_core;
+        self.energy_joules += power * dt;
+        self.active_host_seconds += dt;
+        if busy >= host.cores {
+            self.overload_seconds += dt;
+        }
+    }
+
+    /// Close a cluster tick: sample the powered-host count at `t`.
+    pub fn note_tick(&mut self, t: f64, powered: usize) {
+        self.powered_series.push(t, powered as f64);
+    }
+
+    /// Fold one finished per-host [`Ledger`] into the cluster totals.
+    pub fn absorb(&mut self, host: &Ledger) {
+        self.core_busy_seconds += host.core_busy_seconds;
+        self.plugged_energy_joules += host.energy_joules;
+    }
+
+    pub fn core_hours(&self) -> f64 {
+        self.core_busy_seconds / 3600.0
+    }
+
+    /// Parked-aware cluster energy in Wh.
+    pub fn energy_wh(&self) -> f64 {
+        self.energy_joules / 3600.0
+    }
+
+    /// Always-plugged cluster energy in Wh (sum of per-host ledgers).
+    pub fn plugged_energy_wh(&self) -> f64 {
+        self.plugged_energy_joules / 3600.0
+    }
+
+    /// Powered host time in hours.
+    pub fn active_host_hours(&self) -> f64 {
+        self.active_host_seconds / 3600.0
+    }
+
+    /// dslab-style SLATAH: overload time over powered host time.
+    pub fn slav(&self) -> f64 {
+        if self.active_host_seconds <= 0.0 {
+            0.0
+        } else {
+            self.overload_seconds / self.active_host_seconds
+        }
+    }
+
+    /// Time-to-converge after a load spike: seconds from the powered-host
+    /// peak to the first later sample at or below half the peak. `None`
+    /// when the fleet never drains that far (or never powers up).
+    pub fn converge_time(&self) -> Option<f64> {
+        let samples = &self.powered_series.points;
+        let (peak_at, peak) = samples
+            .iter()
+            .fold(None, |best: Option<(f64, f64)>, &(t, v)| match best {
+                Some((_, bv)) if v <= bv => best,
+                _ => Some((t, v)),
+            })?;
+        if peak <= 0.0 {
+            return None;
+        }
+        let target = (peak / 2.0).ceil();
+        samples
+            .iter()
+            .find(|&&(t, v)| t > peak_at && v <= target)
+            .map(|&(t, _)| t - peak_at)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -60,6 +180,54 @@ mod tests {
         let expect = (40.0 + 90.0) + (40.0 + 60.0);
         assert!(close(led.energy_joules, expect, 1e-9));
         assert_eq!(led.busy_series.len(), 2);
+    }
+
+    #[test]
+    fn cluster_ledger_parks_empty_hosts() {
+        let host = HostSpec::default(); // 12 cores, 2*20 W idle + 15 W/core
+        let mut led = ClusterLedger::new();
+        // Tick 1: one busy host, one empty (parked) host.
+        led.record_host_tick(6, 3, 1.0, &host);
+        led.record_host_tick(0, 0, 1.0, &host);
+        led.note_tick(0.0, 1);
+        // Tick 2: the busy host saturates; an idle-but-resident host hums.
+        led.record_host_tick(12, 3, 1.0, &host);
+        led.record_host_tick(0, 1, 1.0, &host);
+        led.note_tick(1.0, 2);
+        // Energy: (40+90) + (40+180) + (40+0); the empty host free.
+        assert!(close(led.energy_joules, 130.0 + 220.0 + 40.0, 1e-9));
+        assert!(close(led.active_host_seconds, 3.0, 1e-12));
+        assert!(close(led.overload_seconds, 1.0, 1e-12));
+        assert!(close(led.slav(), 1.0 / 3.0, 1e-12));
+    }
+
+    #[test]
+    fn cluster_ledger_absorbs_host_ledgers() {
+        let host = HostSpec::default();
+        let mut a = Ledger::new();
+        let mut b = Ledger::new();
+        a.record_tick(0.0, 6, 1.0, &host);
+        b.record_tick(0.0, 4, 1.0, &host);
+        let mut led = ClusterLedger::new();
+        led.absorb(&a);
+        led.absorb(&b);
+        assert!(close(led.core_busy_seconds, 10.0, 1e-12));
+        assert!(close(led.plugged_energy_joules, 130.0 + 100.0, 1e-9));
+    }
+
+    #[test]
+    fn converge_time_measures_peak_to_half_drain() {
+        let mut led = ClusterLedger::new();
+        for (t, powered) in [(0.0, 2), (1.0, 8), (2.0, 8), (3.0, 5), (4.0, 4)] {
+            led.note_tick(t, powered);
+        }
+        // Peak 8 at t=1; half target 4 first reached at t=4.
+        assert_eq!(led.converge_time(), Some(3.0));
+
+        let mut flat = ClusterLedger::new();
+        flat.note_tick(0.0, 4);
+        flat.note_tick(1.0, 4);
+        assert_eq!(flat.converge_time(), None);
     }
 
     #[test]

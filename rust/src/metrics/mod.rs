@@ -13,5 +13,5 @@ pub mod export;
 pub mod ledger;
 pub mod timeseries;
 
-pub use ledger::Ledger;
+pub use ledger::{ClusterLedger, Ledger};
 pub use timeseries::TimeSeries;

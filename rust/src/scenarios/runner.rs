@@ -96,8 +96,13 @@ pub fn run_scenario_with_backend(
 
 /// Run one scenario cluster-wide: `scenario.vms` arrive on the bus, an
 /// arrival policy dispatches them, hosts step under `spec.step_mode`,
-/// and all migration churn flows through `ClusterEvent` routing. The
-/// one-stop entry the CLI, examples, and benches share.
+/// and all migration churn flows through `ClusterEvent` routing. When
+/// `spec.migrator` is set, the continuous migration manager
+/// ([`crate::cluster::VmMigrator`]) consolidates the fleet as it runs.
+/// The returned [`ClusterResult`] carries the cluster-scope ledger —
+/// parked-aware energy (Wh), plugged energy, overload-time SLAV, and
+/// active host-hours — alongside the placement counters. The one-stop
+/// entry the CLI, examples, and benches share.
 pub fn run_cluster(
     spec: &ClusterSpec,
     scenario: &ScenarioSpec,
@@ -109,8 +114,13 @@ pub fn run_cluster(
 /// Replay a pre-recorded (or synthetic) trace cluster-wide instead of a
 /// generated scenario: every [`TraceEvent`](crate::cluster::TraceEvent)
 /// is published through the event bus and routed by `spec.dispatcher`.
-/// The `vmcd cluster --trace` entry point; see
-/// [`crate::cluster::trace`] for formats and the replay contract.
+/// With `spec.migrator` set, the replay keeps ticking after the trace
+/// drains (a settle window) so consolidation can finish, and the
+/// [`ReplayResult`](crate::cluster::ReplayResult) reports the
+/// cluster-scope energy/SLAV ledger plus `converge_ticks` — time from
+/// the powered-host peak to half-drain. The `vmcd cluster --trace`
+/// entry point; see [`crate::cluster::trace`] for formats and the
+/// replay contract.
 pub fn run_trace(
     spec: &ClusterSpec,
     reader: &mut dyn crate::cluster::TraceReader,

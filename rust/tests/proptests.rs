@@ -774,6 +774,101 @@ fn prop_batched_rank_matches_scalar_picks() {
 }
 
 #[test]
+fn prop_migrator_plan_respects_budget_blocked_set_and_topology() {
+    // The continuous-migrator planning contract, over random fleets: a
+    // plan never exceeds the remaining budget, never selects a blocked
+    // (in-flight or cooling-down) VM, never names a VM twice, only
+    // moves VMs that are actually running on their source, never
+    // targets the source itself, an out-of-range host, or an
+    // overloaded destination — and only overloaded or underloaded
+    // hosts ever shed VMs.
+    use std::collections::HashSet;
+    use vmcd::cluster::migrator::{classify, plan, HostClass};
+    use vmcd::cluster::{HostSummary, SummaryMatrix};
+    use vmcd::config::MigratorParams;
+    use vmcd::hostsim::VmId;
+
+    let bank = testkit::shared_bank();
+    check("migrator-plan-invariants", default_cases(), |rng| {
+        let hosts = 1 + rng.below(10);
+        let host_cores = 4 + rng.below(13);
+        let mut next_id = 0u32;
+        let summaries: Vec<HostSummary> = (0..hosts)
+            .map(|_| {
+                let mut running = Vec::new();
+                let mut est = 0.0;
+                for _ in 0..rng.below(6) {
+                    let class = *rng.pick(&ALL_CLASSES);
+                    running.push((VmId(next_id), class));
+                    est += bank.u[class.index()][0];
+                    next_id += 1;
+                }
+                // Sometimes resident > running (idle VMs — exercises the
+                // all-or-nothing park guard) and sometimes the estimated
+                // load is inflated past what the running set explains.
+                let resident = running.len() + if rng.chance(0.3) { rng.below(3) } else { 0 };
+                if rng.chance(0.3) {
+                    est += rng.range(0.0, host_cores as f64);
+                }
+                HostSummary {
+                    resident,
+                    running,
+                    busy_cores: rng.below(host_cores + 1),
+                    max_wi: rng.range(0.0, 3.0),
+                    est_cpu_load: est,
+                    ..HostSummary::default()
+                }
+            })
+            .collect();
+        let matrix = SummaryMatrix::from_summaries(&summaries, host_cores);
+        let over = rng.range(0.3, 1.5);
+        let params = MigratorParams {
+            over,
+            under: rng.range(0.0, over),
+            wi_threshold: rng.range(0.5, 2.5),
+            budget: 1 + rng.below(8),
+            ..MigratorParams::default()
+        };
+        let budget_left = rng.below(9);
+        // Block a random subset of the fleet's VMs.
+        let blocked: HashSet<VmId> = (0..next_id)
+            .filter(|_| rng.chance(0.25))
+            .map(VmId)
+            .collect();
+
+        let classes = classify(&params, &summaries, &matrix);
+        let moves = plan(&params, &summaries, &matrix, bank, &blocked, budget_left);
+
+        assert!(
+            moves.len() <= budget_left,
+            "planned {} moves with budget {budget_left}",
+            moves.len()
+        );
+        let mut seen: HashSet<VmId> = HashSet::new();
+        for m in &moves {
+            assert!(m.src < hosts && m.dst < hosts, "out of range: {m:?}");
+            assert_ne!(m.src, m.dst, "self-migration: {m:?}");
+            assert!(!blocked.contains(&m.vm), "blocked VM selected: {m:?}");
+            assert!(seen.insert(m.vm), "VM planned twice: {m:?}");
+            assert!(
+                summaries[m.src].running.iter().any(|&(id, _)| id == m.vm),
+                "VM not running on its source: {m:?}"
+            );
+            assert_ne!(
+                classes[m.src],
+                HostClass::Normal,
+                "a normal host shed a VM: {m:?}"
+            );
+            assert_ne!(
+                classes[m.dst],
+                HostClass::Overloaded,
+                "an overloaded destination: {m:?}"
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_synthetic_traces_are_well_formed() {
     // The trace-generator contract, over randomized `synth:` specs: the
     // stream is non-decreasing in time, arrival ids are unique, every
