@@ -78,6 +78,7 @@ fn main() -> anyhow::Result<()> {
         spec.dispatcher = dispatcher;
         spec.actuation = actuation;
         spec.step_mode = mode;
+        #[allow(clippy::disallowed_methods)] // process edge: examples report wall time
         let wall = std::time::Instant::now();
         let r = run_cluster(&spec, &scen, &bank)?;
         println!(

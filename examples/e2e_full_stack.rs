@@ -91,6 +91,7 @@ fn main() -> anyhow::Result<()> {
     let mut engine = SimEngine::new(cfg.clone(), vms);
     let mut daemon = Daemon::new(cfg.sched.clone(), sched);
 
+    #[allow(clippy::disallowed_methods)] // process edge: examples report wall time
     let wall_start = std::time::Instant::now();
     let mut kernel_batches = 0u64;
     let mut residual_log: Vec<(f64, f64)> = Vec::new();

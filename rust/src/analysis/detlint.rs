@@ -1,0 +1,683 @@
+//! `detlint` — the determinism-contract lint over `rust/src`.
+//!
+//! Every headline gate in this repo (Eq. 2–5 parity, `Single`/`Scoped`/
+//! `Pool` bit-identity, Inline-vs-Deferred{0,0} actuation equivalence,
+//! the migrator-off replay freeze, the two-process digest audit) assumes
+//! the scheduler core is *deterministic*. This pass enforces that by
+//! construction instead of by example: it walks the source tree,
+//! classifies each module into a [`Tier`], and checks per-tier rules.
+//!
+//! | Rule | Name | Applies to | Flags |
+//! |------|-------------|------------|-------|
+//! | R1 | `hash-iter`  | [`Tier::Core`] | `std` `HashMap`/`HashSet` (randomized iteration order) |
+//! | R2 | `wall-clock` | [`Tier::Core`] | `Instant::now`, `SystemTime`, `env::var` (OS entropy) |
+//! | R3 | `panic`      | Core + Lib | `.unwrap()`, `.expect(`, `panic!`, `todo!`, `unimplemented!` |
+//! | R4 | `thread`     | Core + Lib | `std::thread` / `mpsc` outside the two sanctioned seams |
+//!
+//! The lint is **lexical**, not semantic: it scrubs comments and string
+//! literals, skips `#[cfg(test)]` items, and then matches tokens. That
+//! means it cannot prove a `HashSet` is used membership-only — which is
+//! deliberate: in the deterministic core, even membership-only hash
+//! collections are one refactor away from an iteration-order bug, so
+//! they must either be converted to `BTreeMap`/`BTreeSet` or carry an
+//! inline justification:
+//!
+//! ```text
+//! // detlint: allow(hash-iter): membership-only; keys never iterated
+//! ```
+//!
+//! Legacy `panic` sites are tracked in the burn-down allowlist at
+//! `rust/detlint.allow` (`file:line: rule` per line); entries that stop
+//! matching a live violation are *stale* and fail the self-check, so the
+//! list can only shrink. See `DETERMINISM.md` for the full contract and
+//! how the dynamic gates (digest audit, ThreadSanitizer) relate.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One determinism rule. Names double as the annotation / allowlist
+/// grammar (`// detlint: allow(<name>): <why>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// R1: iteration-order-sensitive std hash collections in the core.
+    HashIter,
+    /// R2: wall-clock / OS-entropy reads in the core.
+    WallClock,
+    /// R3: panicking shortcuts in non-test library code.
+    Panic,
+    /// R4: thread spawning or channels outside the sanctioned seams.
+    Thread,
+}
+
+pub const ALL_RULES: [Rule; 4] = [Rule::HashIter, Rule::WallClock, Rule::Panic, Rule::Thread];
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::HashIter => "hash-iter",
+            Rule::WallClock => "wall-clock",
+            Rule::Panic => "panic",
+            Rule::Thread => "thread",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rule> {
+        ALL_RULES.into_iter().find(|r| r.name() == s)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Determinism tier of one source file (see `DETERMINISM.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Decision paths whose outputs are bit-compared run-to-run:
+    /// all four rules apply.
+    Core,
+    /// Everything else in the library: R3 + R4 apply (panics and stray
+    /// threads hurt embedders even off the decision paths).
+    Lib,
+    /// Process edges (CLI, bench harness, logger): exempt — timing and
+    /// env reads are their job.
+    Edge,
+}
+
+/// Files that ARE the process edge.
+const EDGE_FILES: &[&str] = &["main.rs", "bench.rs", "util/logger.rs"];
+
+/// Deterministic-core files (single files).
+const CORE_FILES: &[&str] = &[
+    "vmcd/daemon.rs",
+    "cluster/bus.rs",
+    "cluster/dispatch.rs",
+    "cluster/pool.rs",
+    "cluster/sim.rs",
+    "metrics/ledger.rs",
+];
+
+/// Deterministic-core directories (every file below them).
+const CORE_DIRS: &[&str] = &["vmcd/scheduler/", "cluster/migrator/", "cluster/trace/", "hostsim/"];
+
+/// The two sanctioned thread/channel seams (R4 does not apply there;
+/// the ThreadSanitizer CI job covers them dynamically instead).
+const THREAD_SEAMS: &[&str] = &["cluster/pool.rs", "vmcd/actuator.rs"];
+
+/// Classify a file by its path relative to `rust/src` (forward slashes).
+pub fn tier_of(rel: &str) -> Tier {
+    if EDGE_FILES.contains(&rel) {
+        Tier::Edge
+    } else if CORE_FILES.contains(&rel) || CORE_DIRS.iter().any(|d| rel.starts_with(d)) {
+        Tier::Core
+    } else {
+        Tier::Lib
+    }
+}
+
+pub fn is_thread_seam(rel: &str) -> bool {
+    THREAD_SEAMS.contains(&rel)
+}
+
+/// One rule violation at a source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Path relative to `rust/src`, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    /// The offending line, trimmed, for the failure message.
+    pub snippet: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "rust/src/{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.snippet
+        )
+    }
+}
+
+/// One `rust/detlint.allow` entry: suppresses exactly one (file, line,
+/// rule) triple. Line-exact on purpose — edits shift the line and
+/// surface the entry as stale, which is the burn-down pressure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowEntry {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+}
+
+impl fmt::Display for AllowEntry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}", self.file, self.line, self.rule)
+    }
+}
+
+/// Parse the allowlist format: one `file:line: rule` per line, `#`
+/// comments and blank lines ignored.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>> {
+    let mut entries = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let n = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.rsplitn(3, ':').map(str::trim);
+        let (rule_s, line_s, file) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(r), Some(l), Some(f)) if !f.is_empty() => (r, l, f),
+            _ => bail!("detlint.allow line {n}: expected 'file:line: rule', got '{raw}'"),
+        };
+        let rule = match Rule::parse(rule_s) {
+            Some(r) => r,
+            None => bail!("detlint.allow line {n}: unknown rule '{rule_s}'"),
+        };
+        let lineno: usize = line_s
+            .parse()
+            .with_context(|| format!("detlint.allow line {n}: bad line number '{line_s}'"))?;
+        entries.push(AllowEntry {
+            file: file.to_string(),
+            line: lineno,
+            rule,
+        });
+    }
+    Ok(entries)
+}
+
+/// Render violations back in allowlist format — printed on failure so a
+/// deliberate carry-over is one copy-paste, never hand-typed.
+pub fn render_allowlist(violations: &[Violation]) -> String {
+    let mut out = String::new();
+    for v in violations {
+        out.push_str(&format!("{}:{}: {}\n", v.file, v.line, v.rule));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Lexical scanner
+// ---------------------------------------------------------------------
+
+/// Lexical state carried across lines: block comments AND string
+/// literals, because both legally span lines in Rust — a multi-line
+/// `r#"…"#` fixture whose braces leaked into `code` once corrupted the
+/// `#[cfg(test)]` brace tracking badly enough to un-skip test code.
+#[derive(Clone, Copy)]
+enum ScrubMode {
+    Code,
+    BlockComment,
+    /// Ordinary `"…"` string (escapes honoured).
+    Str,
+    /// Raw string `r##"…"##`; payload = number of `#`s in the fence.
+    RawStr(usize),
+}
+
+struct Scrubber {
+    mode: ScrubMode,
+}
+
+impl Scrubber {
+    fn new() -> Scrubber {
+        Scrubber {
+            mode: ScrubMode::Code,
+        }
+    }
+
+    /// Split one line into (code, comment): string/char literal contents
+    /// are blanked out of `code` (the delimiting quotes stay), comment
+    /// text (line and block) goes to `comment`.
+    fn scrub(&mut self, line: &str) -> (String, String) {
+        let mut code = String::with_capacity(line.len());
+        let mut comment = String::new();
+        let chars: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            let next = chars.get(i + 1).copied();
+            match self.mode {
+                ScrubMode::BlockComment => {
+                    if c == '*' && next == Some('/') {
+                        self.mode = ScrubMode::Code;
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                    continue;
+                }
+                ScrubMode::Str => {
+                    if c == '\\' {
+                        i += 2; // skip the escaped char
+                    } else {
+                        if c == '"' {
+                            self.mode = ScrubMode::Code;
+                            code.push('"');
+                        }
+                        i += 1;
+                    }
+                    continue;
+                }
+                ScrubMode::RawStr(hashes) => {
+                    // Close only on `"` followed by the full `#` fence.
+                    if c == '"' && (1..=hashes).all(|k| chars.get(i + k) == Some(&'#')) {
+                        self.mode = ScrubMode::Code;
+                        code.push('"');
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                    continue;
+                }
+                ScrubMode::Code => {}
+            }
+            match c {
+                '/' if next == Some('/') => {
+                    // Line comment: the rest is comment text.
+                    comment.extend(&chars[i..]);
+                    break;
+                }
+                '/' if next == Some('*') => {
+                    self.mode = ScrubMode::BlockComment;
+                    i += 2;
+                }
+                'r' | 'b' => {
+                    // `r"…"`, `r#"…"#`, `br"…"` raw-string openers — but
+                    // only where a literal can start (the previous code
+                    // char is not part of an identifier).
+                    let ident_prev = code
+                        .chars()
+                        .last()
+                        .map(|p| p.is_alphanumeric() || p == '_')
+                        .unwrap_or(false);
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0;
+                    while chars.get(j + hashes) == Some(&'#') {
+                        hashes += 1;
+                    }
+                    let has_r = c == 'r' || j > i + 1;
+                    if !ident_prev && has_r && chars.get(j + hashes) == Some(&'"') {
+                        self.mode = ScrubMode::RawStr(hashes);
+                        code.push('"');
+                        i = j + hashes + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                '"' => {
+                    self.mode = ScrubMode::Str;
+                    code.push('"');
+                    i += 1;
+                }
+                '\'' => {
+                    // Char literal vs lifetime: 'x' / '\n' are literals,
+                    // 'a in generics is a lifetime.
+                    if next == Some('\\') {
+                        // Escaped char literal: skip to the closing quote.
+                        let mut j = i + 2;
+                        while j < chars.len() && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        i = j + 1;
+                    } else if chars.get(i + 2).copied() == Some('\'') {
+                        i += 3; // 'x'
+                    } else {
+                        code.push(c); // lifetime
+                        i += 1;
+                    }
+                }
+                _ => {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        (code, comment)
+    }
+}
+
+/// `// detlint: allow(<rule>): <why>` — the why is mandatory.
+fn parse_annotation(comment: &str) -> Option<Rule> {
+    let start = comment.find("detlint: allow(")?;
+    let rest = &comment[start + "detlint: allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = Rule::parse(rest[..close].trim())?;
+    let tail = rest[close + 1..].trim_start();
+    let why = tail.strip_prefix(':')?.trim();
+    if why.is_empty() {
+        return None;
+    }
+    Some(rule)
+}
+
+fn token_hit(code: &str, tokens: &[&str]) -> bool {
+    tokens.iter().any(|t| code.contains(t))
+}
+
+const HASH_TOKENS: &[&str] = &["HashMap", "HashSet"];
+const CLOCK_TOKENS: &[&str] = &["Instant::now", "SystemTime", "env::var", "RandomState"];
+const PANIC_TOKENS: &[&str] = &[".unwrap()", ".expect(", "panic!", "todo!", "unimplemented!"];
+const THREAD_TOKENS: &[&str] = &["std::thread", "mpsc"];
+
+/// Which rules a line in (`tier`, seam?) must satisfy.
+fn applicable(tier: Tier, seam: bool) -> Vec<Rule> {
+    let mut rules = Vec::new();
+    match tier {
+        Tier::Edge => {}
+        Tier::Core => {
+            rules.extend([Rule::HashIter, Rule::WallClock, Rule::Panic]);
+            if !seam {
+                rules.push(Rule::Thread);
+            }
+        }
+        Tier::Lib => {
+            rules.push(Rule::Panic);
+            if !seam {
+                rules.push(Rule::Thread);
+            }
+        }
+    }
+    rules
+}
+
+fn rule_tokens(rule: Rule) -> &'static [&'static str] {
+    match rule {
+        Rule::HashIter => HASH_TOKENS,
+        Rule::WallClock => CLOCK_TOKENS,
+        Rule::Panic => PANIC_TOKENS,
+        Rule::Thread => THREAD_TOKENS,
+    }
+}
+
+/// Lint one file's source with an explicit tier/seam (fixture entry
+/// point). Annotations are honoured; the allowlist is applied by
+/// [`run`], not here.
+pub fn lint_with_tier(rel: &str, src: &str, tier: Tier, seam: bool) -> Vec<Violation> {
+    let rules = applicable(tier, seam);
+    if rules.is_empty() {
+        return Vec::new();
+    }
+    let mut scrubber = Scrubber::new();
+    let mut violations = Vec::new();
+    // cfg(test) tracking: `pending` after the attribute, `skip_depth`
+    // while inside the test item's braces.
+    let mut pending_test_attr = false;
+    let mut skip_depth: i64 = 0;
+    let mut in_test_item = false;
+    // Annotation from an own-line comment, covering the next code line.
+    let mut carried: Vec<Rule> = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let (code, comment) = scrubber.scrub(raw);
+        let opens = code.matches('{').count() as i64;
+        let closes = code.matches('}').count() as i64;
+
+        if in_test_item {
+            skip_depth += opens - closes;
+            if skip_depth <= 0 {
+                in_test_item = false;
+            }
+            continue;
+        }
+        if code.contains("#[cfg(test)]") {
+            if opens > 0 {
+                skip_depth = opens - closes;
+                in_test_item = skip_depth > 0;
+            } else {
+                pending_test_attr = true;
+            }
+            continue;
+        }
+        if pending_test_attr {
+            if opens > 0 {
+                skip_depth = opens - closes;
+                in_test_item = skip_depth > 0;
+                pending_test_attr = false;
+            } else if code.contains(';') {
+                pending_test_attr = false; // attribute on a use/statement
+            }
+            continue;
+        }
+
+        let annotation = parse_annotation(&comment);
+        if code.trim().is_empty() {
+            // Comment-only line: its annotation covers the next code line.
+            if let Some(rule) = annotation {
+                carried.push(rule);
+            }
+            continue;
+        }
+        let mut allowed = std::mem::take(&mut carried);
+        allowed.extend(annotation);
+
+        for &rule in &rules {
+            if token_hit(&code, rule_tokens(rule)) && !allowed.contains(&rule) {
+                violations.push(Violation {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule,
+                    snippet: raw.trim().to_string(),
+                });
+            }
+        }
+    }
+    violations
+}
+
+/// Lint one file, deriving tier and seam status from its path.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    lint_with_tier(rel, src, tier_of(rel), is_thread_seam(rel))
+}
+
+// ---------------------------------------------------------------------
+// Tree runner
+// ---------------------------------------------------------------------
+
+/// Outcome of a full-tree run.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Violations not covered by the allowlist — any entry fails tier-1.
+    pub violations: Vec<Violation>,
+    /// Allowlist entries that no longer match a live violation — stale
+    /// entries fail the self-check so the list only shrinks.
+    pub stale: Vec<AllowEntry>,
+    /// Violations the allowlist suppressed (the burn-down backlog).
+    pub suppressed: usize,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty() && self.stale.is_empty()
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("reading entry in {}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Walk `<repo_root>/rust/src`, lint every file, and apply the
+/// allowlist at `<repo_root>/rust/detlint.allow` (absent = empty).
+pub fn run(repo_root: &Path) -> Result<LintReport> {
+    let src_root = repo_root.join("rust").join("src");
+    ensure!(
+        src_root.is_dir(),
+        "detlint: {} is not a directory",
+        src_root.display()
+    );
+    let allow_path = repo_root.join("rust").join("detlint.allow");
+    let allow = if allow_path.is_file() {
+        let text = std::fs::read_to_string(&allow_path)
+            .with_context(|| format!("reading {}", allow_path.display()))?;
+        parse_allowlist(&text)?
+    } else {
+        Vec::new()
+    };
+
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    // Deterministic scan order whatever the directory iteration order.
+    files.sort();
+
+    let mut raw = Vec::new();
+    for path in &files {
+        let rel_os = path
+            .strip_prefix(&src_root)
+            .with_context(|| format!("{} outside {}", path.display(), src_root.display()))?;
+        let rel = rel_os
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        raw.extend(lint_source(&rel, &src));
+    }
+
+    let mut used = vec![false; allow.len()];
+    let mut violations = Vec::new();
+    let mut suppressed = 0usize;
+    for v in raw {
+        let hit = allow
+            .iter()
+            .position(|a| a.file == v.file && a.line == v.line && a.rule == v.rule);
+        match hit {
+            Some(i) => {
+                used[i] = true;
+                suppressed += 1;
+            }
+            None => violations.push(v),
+        }
+    }
+    let stale = allow
+        .into_iter()
+        .zip(used)
+        .filter(|(_, u)| !u)
+        .map(|(a, _)| a)
+        .collect();
+
+    Ok(LintReport {
+        violations,
+        stale,
+        suppressed,
+        files_scanned: files.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiers_match_the_contract_table() {
+        assert_eq!(tier_of("vmcd/scheduler/ias.rs"), Tier::Core);
+        assert_eq!(tier_of("vmcd/daemon.rs"), Tier::Core);
+        assert_eq!(tier_of("cluster/migrator/planner.rs"), Tier::Core);
+        assert_eq!(tier_of("cluster/trace/replay.rs"), Tier::Core);
+        assert_eq!(tier_of("hostsim/engine.rs"), Tier::Core);
+        assert_eq!(tier_of("metrics/ledger.rs"), Tier::Core);
+        assert_eq!(tier_of("cluster/pool.rs"), Tier::Core);
+        assert_eq!(tier_of("util/json.rs"), Tier::Lib);
+        assert_eq!(tier_of("vmcd/actuator.rs"), Tier::Lib);
+        assert_eq!(tier_of("main.rs"), Tier::Edge);
+        assert_eq!(tier_of("util/logger.rs"), Tier::Edge);
+        assert!(is_thread_seam("cluster/pool.rs"));
+        assert!(is_thread_seam("vmcd/actuator.rs"));
+        assert!(!is_thread_seam("cluster/sim.rs"));
+    }
+
+    #[test]
+    fn scrubber_blanks_strings_and_comments() {
+        let mut s = Scrubber::new();
+        let (code, comment) = s.scrub(r#"let x = "HashMap::new()"; // HashSet here"#);
+        assert!(!code.contains("HashMap"));
+        assert!(comment.contains("HashSet"));
+        let (code, _) = s.scrub(r#"let c = 'x'; let l: Vec<&'static str> = vec![];"#);
+        assert!(code.contains("'static"));
+        let mut s = Scrubber::new();
+        let (code, _) = s.scrub("let a = 1; /* HashMap");
+        assert!(!code.contains("HashMap"));
+        assert!(matches!(s.mode, ScrubMode::BlockComment));
+        let (code, _) = s.scrub("HashSet */ let b = 2;");
+        assert!(!code.contains("HashSet"));
+        assert!(code.contains("let b"));
+    }
+
+    #[test]
+    fn scrubber_tracks_multiline_and_raw_strings() {
+        // Multi-line ordinary string: the continuation line is string,
+        // not code.
+        let mut s = Scrubber::new();
+        let (_, _) = s.scrub(r#"let x = "start of a"#);
+        let (code, _) = s.scrub(r#"HashMap } } continuation"; let y = 1;"#);
+        assert!(!code.contains("HashMap"));
+        assert!(!code.contains('}'), "string braces must not leak: {code}");
+        assert!(code.contains("let y"));
+
+        // Raw string with a hash fence: embedded quotes and braces stay
+        // inside until the full `"#` fence.
+        let mut s = Scrubber::new();
+        let (code, _) = s.scrub(r##"let j = r#"{"a": {"b": 1}}"#;"##);
+        assert!(!code.contains('{'), "raw-string braces leaked: {code}");
+        let mut s = Scrubber::new();
+        let (_, _) = s.scrub(r##"let j = r#"{"multi": ["#);
+        let (code, _) = s.scrub(r##"  {"HashMap": 1}]}"#; let z = 2;"##);
+        assert!(!code.contains("HashMap"));
+        assert!(code.contains("let z"));
+
+        // `r` as an ordinary identifier char is not a raw-string opener.
+        let mut s = Scrubber::new();
+        let (code, _) = s.scrub(r#"for x in iter { body(x) }"#);
+        assert!(code.contains("for x in iter"));
+    }
+
+    #[test]
+    fn annotation_grammar_requires_a_reason() {
+        assert_eq!(
+            parse_annotation("// detlint: allow(hash-iter): membership only"),
+            Some(Rule::HashIter)
+        );
+        assert_eq!(parse_annotation("// detlint: allow(hash-iter):"), None);
+        assert_eq!(parse_annotation("// detlint: allow(hash-iter)"), None);
+        assert_eq!(parse_annotation("// detlint: allow(nonsense): x"), None);
+        assert_eq!(
+            parse_annotation("// detlint: allow(wall-clock): events/sec only"),
+            Some(Rule::WallClock)
+        );
+    }
+
+    #[test]
+    fn allowlist_parses_and_rejects() {
+        let entries =
+            parse_allowlist("# comment\n\nvmcd/daemon.rs:10: panic\nutil/json.rs:5: panic # why\n")
+                .expect("well-formed allowlist parses");
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].file, "vmcd/daemon.rs");
+        assert_eq!(entries[0].line, 10);
+        assert_eq!(entries[0].rule, Rule::Panic);
+        assert!(parse_allowlist("vmcd/daemon.rs:ten: panic").is_err());
+        assert!(parse_allowlist("vmcd/daemon.rs:10: frobnicate").is_err());
+        assert!(parse_allowlist("just-words").is_err());
+    }
+}

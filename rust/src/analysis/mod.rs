@@ -1,0 +1,10 @@
+//! Static analysis over this repo's own sources.
+//!
+//! The only pass today is [`detlint`]: the determinism-contract lint
+//! that tier-1 runs over `rust/src` (see `DETERMINISM.md` at the repo
+//! root for the contract it enforces). It lives in the library — not a
+//! build script or an external tool — so the `[[test]]` target that
+//! drives it needs nothing beyond `cargo test`, and fixture tests can
+//! exercise the rule engine directly.
+
+pub mod detlint;

@@ -88,9 +88,11 @@ impl Bench {
             f();
         }
         let mut secs = Summary::new();
+        #[allow(clippy::disallowed_methods)] // process edge: benches time wall clock
         let started = Instant::now();
         let mut iters = 0;
         for _ in 0..self.opts.measure_iters {
+            #[allow(clippy::disallowed_methods)] // process edge: benches time wall clock
             let t0 = Instant::now();
             f();
             secs.push(t0.elapsed().as_secs_f64());

@@ -50,8 +50,7 @@ pub mod planner;
 use crate::config::MigratorParams;
 use crate::hostsim::VmId;
 use crate::profiling::ProfileBank;
-use std::collections::HashMap;
-use std::collections::HashSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::bus::{EventBus, HostSummary};
 pub use planner::{classify, plan, HostClass, PlannedMove};
@@ -79,7 +78,10 @@ pub struct VmMigrator {
     /// Virtual time of the last planning pass.
     last_plan: f64,
     /// vm → virtual time it was last planned (cooldown bookkeeping).
-    cooldowns: HashMap<VmId, f64>,
+    /// Ordered so every traversal (retain, key collection) is
+    /// deterministic — a `HashMap` here made plans depend on the
+    /// process's hash seed (see DETERMINISM.md R1).
+    cooldowns: BTreeMap<VmId, f64>,
     pub stats: MigratorStats,
 }
 
@@ -88,7 +90,7 @@ impl VmMigrator {
         VmMigrator {
             params,
             last_plan: f64::NEG_INFINITY,
-            cooldowns: HashMap::new(),
+            cooldowns: BTreeMap::new(),
             stats: MigratorStats::default(),
         }
     }
@@ -116,7 +118,7 @@ impl VmMigrator {
         if budget_left == 0 {
             return Vec::new();
         }
-        let mut blocked: HashSet<VmId> = self.cooldowns.keys().copied().collect();
+        let mut blocked: BTreeSet<VmId> = self.cooldowns.keys().copied().collect();
         blocked.extend(bus.in_flight_vms());
         let summaries = bus.summaries();
         let matrix = bus.matrix();
@@ -125,7 +127,7 @@ impl VmMigrator {
             .filter(|&&c| c == HostClass::Overloaded)
             .count() as u64;
         let moves = planner::plan(&self.params, summaries, matrix, bank, &blocked, budget_left);
-        let mut parked: HashSet<usize> = HashSet::new();
+        let mut parked: BTreeSet<usize> = BTreeSet::new();
         for m in &moves {
             self.cooldowns.insert(m.vm, now);
             if summaries[m.src].est_cpu_load < self.params.under * matrix.cap(m.src, 0) {
@@ -201,7 +203,7 @@ mod tests {
             summary(vec![(vmid(3), small)], 6.0, 1.2),
         ];
         let m = fleet(&summaries);
-        let moves = plan(&p, &summaries, &m, &bank, &HashSet::new(), 4);
+        let moves = plan(&p, &summaries, &m, &bank, &BTreeSet::new(), 4);
         assert!(!moves.is_empty());
         let first = moves[0];
         assert_eq!(first.src, 0);
@@ -224,7 +226,7 @@ mod tests {
             summary(vec![], 0.0, 0.0),
         ];
         let m = fleet(&summaries);
-        let moves = plan(&p, &summaries, &m, &bank, &HashSet::new(), 8);
+        let moves = plan(&p, &summaries, &m, &bank, &BTreeSet::new(), 8);
         assert_eq!(moves.len(), 1, "stale WI reading sheds one VM per pass");
         assert_eq!(moves[0].src, 0);
     }
@@ -240,11 +242,11 @@ mod tests {
         ];
         let m = fleet(&summaries);
         // Budget 2 covers the full evacuation of host 0 → both VMs move.
-        let moves = plan(&p, &summaries, &m, &bank, &HashSet::new(), 2);
+        let moves = plan(&p, &summaries, &m, &bank, &BTreeSet::new(), 2);
         assert_eq!(moves.len(), 2);
         assert!(moves.iter().all(|mv| mv.src == 0 && mv.dst == 1));
         // Budget 1 cannot: no partial evacuation.
-        let moves = plan(&p, &summaries, &m, &bank, &HashSet::new(), 1);
+        let moves = plan(&p, &summaries, &m, &bank, &BTreeSet::new(), 1);
         assert!(moves.is_empty(), "partial evacuation wastes the budget");
     }
 
@@ -261,9 +263,9 @@ mod tests {
             summary(vec![], 0.0, 0.0),
         ];
         let m = fleet(&summaries);
-        let moves = plan(&p, &summaries, &m, &bank, &HashSet::new(), 8);
-        let sources: HashSet<usize> = moves.iter().map(|mv| mv.src).collect();
-        let dests: HashSet<usize> = moves.iter().map(|mv| mv.dst).collect();
+        let moves = plan(&p, &summaries, &m, &bank, &BTreeSet::new(), 8);
+        let sources: BTreeSet<usize> = moves.iter().map(|mv| mv.src).collect();
+        let dests: BTreeSet<usize> = moves.iter().map(|mv| mv.dst).collect();
         assert!(!moves.is_empty());
         assert!(
             sources.is_disjoint(&dests),
@@ -286,7 +288,7 @@ mod tests {
             summary(vec![], 0.0, 0.0),
         ];
         let m = fleet(&summaries);
-        let blocked: HashSet<VmId> = [vmid(0), vmid(1)].into_iter().collect();
+        let blocked: BTreeSet<VmId> = [vmid(0), vmid(1)].into_iter().collect();
         let moves = plan(&p, &summaries, &m, &bank, &blocked, 2);
         assert!(moves.len() <= 2);
         assert!(moves.iter().all(|mv| !blocked.contains(&mv.vm)));
@@ -302,8 +304,8 @@ mod tests {
             3.0,
         )];
         let m = fleet(&summaries);
-        assert!(plan(&p, &summaries, &m, &bank, &HashSet::new(), 4).is_empty());
-        assert!(plan(&p, &[], &SummaryMatrix::from_summaries(&[], 12), &bank, &HashSet::new(), 4)
+        assert!(plan(&p, &summaries, &m, &bank, &BTreeSet::new(), 4).is_empty());
+        assert!(plan(&p, &[], &SummaryMatrix::from_summaries(&[], 12), &bank, &BTreeSet::new(), 4)
             .is_empty());
     }
 

@@ -23,7 +23,7 @@
 use crate::config::MigratorParams;
 use crate::hostsim::VmId;
 use crate::profiling::ProfileBank;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use super::super::bus::{HostSummary, SummaryMatrix};
 
@@ -88,7 +88,7 @@ pub fn plan(
     summaries: &[HostSummary],
     matrix: &SummaryMatrix,
     bank: &ProfileBank,
-    blocked: &HashSet<VmId>,
+    blocked: &BTreeSet<VmId>,
     mut budget_left: usize,
 ) -> Vec<PlannedMove> {
     let n = summaries.len();
@@ -100,9 +100,9 @@ pub fn plan(
     // Working copies the passes mutate as they commit moves, so one plan
     // never stacks a destination past the line it is policing.
     let mut loads: Vec<f64> = summaries.iter().map(|s| s.est_cpu_load).collect();
-    let mut taken: HashSet<VmId> = HashSet::new();
+    let mut taken: BTreeSet<VmId> = BTreeSet::new();
     let demand = |class: crate::workloads::WorkloadClass| bank.u[class.index()][0];
-    let movable = |vm: VmId, taken: &HashSet<VmId>| !blocked.contains(&vm) && !taken.contains(&vm);
+    let movable = |vm: VmId, taken: &BTreeSet<VmId>| !blocked.contains(&vm) && !taken.contains(&vm);
 
     // --- Pass 1: spread off overloaded hosts ---------------------------
     let mut over_hosts: Vec<usize> = (0..n)
@@ -110,11 +110,10 @@ pub fn plan(
         .collect();
     over_hosts.sort_by(|&a, &b| {
         frac(loads[b], matrix, b)
-            .partial_cmp(&frac(loads[a], matrix, a))
-            .unwrap()
+            .total_cmp(&frac(loads[a], matrix, a))
             .then(a.cmp(&b))
     });
-    let mut received: HashSet<usize> = HashSet::new();
+    let mut received: BTreeSet<usize> = BTreeSet::new();
     for src in over_hosts {
         // An interference-driven (not load-driven) overload sheds one VM
         // per pass: WI is recomputed by the daemons next tick, so
@@ -127,7 +126,7 @@ pub fn plan(
             .iter()
             .map(|&(id, class)| (id, demand(class)))
             .collect();
-        vms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        vms.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
         for (vm, load) in vms {
             if budget_left == 0 {
                 return moves;
@@ -148,13 +147,8 @@ pub fn plan(
                 .min_by(|&a, &b| {
                     summaries[a]
                         .max_wi
-                        .partial_cmp(&summaries[b].max_wi)
-                        .unwrap()
-                        .then(
-                            frac(loads[a], matrix, a)
-                                .partial_cmp(&frac(loads[b], matrix, b))
-                                .unwrap(),
-                        )
+                        .total_cmp(&summaries[b].max_wi)
+                        .then(frac(loads[a], matrix, a).total_cmp(&frac(loads[b], matrix, b)))
                         .then(a.cmp(&b))
                 });
             // No room for this VM anywhere — a smaller one may still fit.
@@ -174,8 +168,8 @@ pub fn plan(
         .filter(|&h| classes[h] == HostClass::Underloaded)
         .collect();
     // Emptiest first: cheapest full evacuations save hosts soonest.
-    park_hosts.sort_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap().then(a.cmp(&b)));
-    let mut parking: HashSet<usize> = HashSet::new();
+    park_hosts.sort_by(|&a, &b| loads[a].total_cmp(&loads[b]).then(a.cmp(&b)));
+    let mut parking: BTreeSet<usize> = BTreeSet::new();
     for src in park_hosts {
         // A host the spread pass (or an earlier evacuation) already
         // routed VMs onto is staying powered — parking it would strand
@@ -197,7 +191,7 @@ pub fn plan(
         {
             continue;
         }
-        vms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        vms.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
         let mut tentative: Vec<PlannedMove> = Vec::with_capacity(vms.len());
         let mut tentative_loads = loads.clone();
         let feasible = vms.iter().all(|&(vm, load)| {
@@ -212,8 +206,7 @@ pub fn plan(
                 .filter(|&h| summaries[h].max_wi <= params.wi_threshold)
                 .max_by(|&a, &b| {
                     frac(tentative_loads[a], matrix, a)
-                        .partial_cmp(&frac(tentative_loads[b], matrix, b))
-                        .unwrap()
+                        .total_cmp(&frac(tentative_loads[b], matrix, b))
                         .then(b.cmp(&a)) // ties: lowest index
                 });
             match dst {

@@ -162,6 +162,31 @@ pub struct ClusterResult {
     pub migrator_moves: u64,
 }
 
+impl ClusterResult {
+    /// Fold every field (declaration order) into one FNV-1a digest —
+    /// what `vmcd cluster … --digest` prints so two processes with the
+    /// same seed can be compared for bit-identity (see DETERMINISM.md).
+    pub fn bit_digest(&self) -> u64 {
+        let mut h = crate::util::digest::Fnv64::new();
+        h.write_bytes(self.strategy.name().as_bytes())
+            .write_f64(self.avg_perf)
+            .write_f64(self.core_hours)
+            .write_f64(self.host_hours)
+            .write_u64(self.migrations_started)
+            .write_u64(self.migrations_completed)
+            .write_u64(self.migrations_failed)
+            .write_u64(self.events_routed)
+            .write_f64(self.completion_time)
+            .write_f64(self.energy_wh)
+            .write_f64(self.plugged_energy_wh)
+            .write_f64(self.slav)
+            .write_f64(self.overload_seconds)
+            .write_f64(self.active_host_hours)
+            .write_u64(self.migrator_moves);
+        h.finish()
+    }
+}
+
 /// One pending (not yet arrived) VM.
 struct Pending {
     vm: Vm,
@@ -190,7 +215,12 @@ impl ClusterSim {
     /// Build from a scenario spec: `scenario.vms` arrive cluster-wide and
     /// are dispatched to hosts on arrival. Hosts are native (shardable);
     /// use [`Self::from_hosts`] to mix in caller-thread-pinned hosts.
-    pub fn new(spec: ClusterSpec, scenario: &ScenarioSpec, bank: &ProfileBank) -> ClusterSim {
+    /// Errors if the shard pool cannot spawn its workers.
+    pub fn new(
+        spec: ClusterSpec,
+        scenario: &ScenarioSpec,
+        bank: &ProfileBank,
+    ) -> Result<ClusterSim> {
         let mut hosts = Vec::with_capacity(spec.hosts);
         for _ in 0..spec.hosts {
             let engine = crate::hostsim::SimEngine::new(spec.cfg.clone(), Vec::new());
@@ -216,19 +246,20 @@ impl ClusterSim {
     }
 
     /// Build over explicit hosts (native and/or pinned). `spec.hosts` is
-    /// overridden by `hosts.len()`.
+    /// overridden by `hosts.len()`. Errors if the shard pool cannot
+    /// spawn its workers.
     pub fn from_hosts(
         mut spec: ClusterSpec,
         scenario: &ScenarioSpec,
         hosts: Vec<ClusterHost>,
-    ) -> ClusterSim {
+    ) -> Result<ClusterSim> {
         spec.hosts = hosts.len();
         let n = hosts.len();
         // Capture each host's starting occupancy before the pool takes
         // ownership, so arrival policies see pre-existing residents even
         // on the first tick (the load estimate fills in at first refresh).
         let initial: Vec<HostSummary> = hosts.iter().map(|h| h.handle().summary()).collect();
-        let pool = ShardPool::new(hosts, spec.step_mode);
+        let pool = ShardPool::new(hosts, spec.step_mode)?;
         let mut bus = EventBus::new(n, spec.migration.clone(), spec.cfg.host.cores);
         bus.prime(initial);
         if let Some(mut caps) = spec.host_caps.clone() {
@@ -246,7 +277,7 @@ impl ClusterSim {
             .collect();
         let rng = Rng::new(spec.cfg.sim.seed ^ 0xC1_05_7E_12);
         let migrator = spec.migrator.clone().map(VmMigrator::new);
-        ClusterSim {
+        Ok(ClusterSim {
             spec,
             pool,
             bus,
@@ -259,7 +290,7 @@ impl ClusterSim {
             batch_done: false,
             migrator,
             ledger: ClusterLedger::new(),
-        }
+        })
     }
 
     /// Current virtual time.
@@ -321,7 +352,7 @@ impl ClusterSim {
         // Drain candidate: the least-loaded host with any running VMs.
         let Some(src) = (0..n)
             .filter(|&h| counts[h] > 0)
-            .min_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+            .min_by(|&a, &b| loads[a].total_cmp(&loads[b]))
         else {
             return;
         };
@@ -350,7 +381,7 @@ impl ClusterSim {
             let Some(dst) = (0..n)
                 .filter(|&h| h != src)
                 .filter(|&h| loads[h] + vm_load <= cap)
-                .max_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+                .max_by(|&a, &b| loads[a].total_cmp(&loads[b]))
             else {
                 continue;
             };
@@ -553,7 +584,7 @@ mod tests {
         let default_caps = spec.cfg.host.metric_caps();
         let mut scen = cluster_scenario(3, 0.5, 1);
         scen.vms.clear();
-        let sim = ClusterSim::new(spec, &scen, bank);
+        let sim = ClusterSim::new(spec, &scen, bank).unwrap();
         let m = sim.bus().matrix();
         assert_eq!(m.cap(0, 0), 32.0);
         assert_eq!(m.cap(0, 3), 8.0);
@@ -570,7 +601,7 @@ mod tests {
         let mut spec = ClusterSpec::new(3, Strategy::LocalVmcd);
         spec.cfg = testkit::quiet_config();
         let scen = cluster_scenario(3, 0.75, 42);
-        let sim = ClusterSim::new(spec, &scen, bank);
+        let sim = ClusterSim::new(spec, &scen, bank).unwrap();
         let r = sim.run(bank, scen.min_duration).unwrap();
         assert_eq!(r.migrations_started, 0, "local strategy never migrates");
         assert!(r.avg_perf > 0.6, "perf {}", r.avg_perf);
@@ -590,7 +621,7 @@ mod tests {
         let mut spec = ClusterSpec::new(3, Strategy::GlobalMigration);
         spec.cfg = testkit::quiet_config();
         let scen = cluster_scenario(3, 0.75, 42);
-        let sim = ClusterSim::new(spec, &scen, bank);
+        let sim = ClusterSim::new(spec, &scen, bank).unwrap();
         let r = sim.run(bank, scen.min_duration).unwrap();
         assert!(r.migrations_started > 0, "global strategy must migrate");
     }
@@ -606,12 +637,14 @@ mod tests {
         let mut lspec = ClusterSpec::new(3, Strategy::LocalVmcd);
         lspec.cfg = testkit::quiet_config();
         let local = ClusterSim::new(lspec, &scen, bank)
+            .unwrap()
             .run(bank, scen.min_duration)
             .unwrap();
 
         let mut gspec = ClusterSpec::new(3, Strategy::GlobalMigration);
         gspec.cfg = testkit::quiet_config();
         let global = ClusterSim::new(gspec, &scen, bank)
+            .unwrap()
             .run(bank, scen.min_duration)
             .unwrap();
 
@@ -630,7 +663,7 @@ mod tests {
         spec.cfg = testkit::quiet_config();
         let scen = cluster_scenario(4, 0.5, 7);
         let total = scen.vms.len();
-        let mut sim = ClusterSim::new(spec, &scen, bank);
+        let mut sim = ClusterSim::new(spec, &scen, bank).unwrap();
         // Tick past all arrivals; the bus's published summaries are the
         // dispatcher's own view, so assert balance on exactly those.
         for _ in 0..(30 * total + 10) {
@@ -656,6 +689,7 @@ mod tests {
             spec.cfg = testkit::quiet_config();
             spec.step_mode = mode;
             ClusterSim::new(spec, &scen, bank)
+                .unwrap()
                 .run(bank, scen.min_duration)
                 .unwrap()
         };
@@ -686,6 +720,7 @@ mod tests {
             spec.cfg = testkit::quiet_config();
             spec.actuation = actuation;
             ClusterSim::new(spec, &scen, bank)
+                .unwrap()
                 .run(bank, scen.min_duration)
                 .unwrap()
         };
@@ -717,6 +752,7 @@ mod tests {
             budget_per_tick: 8,
         };
         let r = ClusterSim::new(spec, &scen, bank)
+            .unwrap()
             .run(bank, scen.min_duration)
             .unwrap();
         assert!(r.avg_perf > 0.3, "perf {}", r.avg_perf);
@@ -734,6 +770,7 @@ mod tests {
             spec.cfg = testkit::quiet_config();
             spec.step_mode = mode;
             ClusterSim::new(spec, &scen, bank)
+                .unwrap()
                 .run(bank, scen.min_duration)
                 .unwrap()
         };
@@ -756,6 +793,7 @@ mod tests {
         let mut nspec = ClusterSpec::new(3, Strategy::LocalVmcd);
         nspec.cfg = cfg.clone();
         let all_native = ClusterSim::new(nspec, &scen, bank)
+            .unwrap()
             .run(bank, scen.min_duration)
             .unwrap();
 
@@ -785,6 +823,7 @@ mod tests {
             }
         }
         let mixed = ClusterSim::from_hosts(mspec, &scen, hosts)
+            .unwrap()
             .run(bank, scen.min_duration)
             .unwrap();
         assert_eq!(all_native.avg_perf.to_bits(), mixed.avg_perf.to_bits());
@@ -813,7 +852,7 @@ mod tests {
         scen.vms[0].arrival = 0.0;
         scen.vms[0].class = crate::workloads::WorkloadClass::Blackscholes;
         scen.vms[0].activity = crate::hostsim::ActivityModel::AlwaysOn;
-        let mut sim = ClusterSim::new(spec, &scen, bank);
+        let mut sim = ClusterSim::new(spec, &scen, bank).unwrap();
         let dt = cfg.sim.dt;
         // Let it settle so the monitor window warms.
         for _ in 0..15 {
@@ -872,7 +911,7 @@ mod tests {
         spec.cfg = cfg;
         let mut scen = cluster_scenario(2, 0.5, 3);
         scen.vms.clear();
-        let mut sim = ClusterSim::new(spec, &scen, bank);
+        let mut sim = ClusterSim::new(spec, &scen, bank).unwrap();
         // First tick: both daemons run their own due cycle.
         sim.tick(bank).unwrap();
         // An injected Tick gives host 1 one extra cycle (and resets its

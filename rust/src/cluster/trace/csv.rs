@@ -13,14 +13,14 @@ use crate::profiling::ProfileBank;
 use crate::workloads::{MetricVec, WorkloadClass, ALL_CLASSES, NUM_METRICS};
 use anyhow::{bail, ensure, Context, Result};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::fs::File;
 use std::io::{BufRead, BufReader};
 
 /// How a vm-types file row resolves `vm_type` strings to classes.
-fn parse_types_file(path: &str, bank: &ProfileBank) -> Result<HashMap<String, WorkloadClass>> {
+fn parse_types_file(path: &str, bank: &ProfileBank) -> Result<BTreeMap<String, WorkloadClass>> {
     let file = File::open(path).with_context(|| format!("opening vm-types file '{path}'"))?;
-    let mut map = HashMap::new();
+    let mut map = BTreeMap::new();
     for (idx, line) in BufReader::new(file).lines().enumerate() {
         let n = idx + 1;
         let line = line.with_context(|| format!("{path} line {n}: read failed"))?;
@@ -86,12 +86,12 @@ pub struct CsvTraceReader {
     lines: std::io::Lines<BufReader<File>>,
     /// 1-based line number of the *next* line `lines` will yield.
     line_no: usize,
-    types: HashMap<String, WorkloadClass>,
+    types: BTreeMap<String, WorkloadClass>,
     /// One-row lookahead so departures can be merged in time order.
     pending: Option<Row>,
     /// Departure heap over rows already consumed: `(end bits, vm)`.
     departures: BinaryHeap<Reverse<(u64, u32)>>,
-    seen: HashSet<u32>,
+    seen: BTreeSet<u32>,
     last_start: f64,
     exhausted: bool,
 }
@@ -107,7 +107,7 @@ impl CsvTraceReader {
     ) -> Result<CsvTraceReader> {
         let types = match types_path {
             Some(tp) => parse_types_file(tp, bank)?,
-            None => HashMap::new(),
+            None => BTreeMap::new(),
         };
         let file = File::open(path).with_context(|| format!("opening trace file '{path}'"))?;
         let mut lines = BufReader::new(file).lines();
@@ -124,7 +124,7 @@ impl CsvTraceReader {
             types,
             pending: None,
             departures: BinaryHeap::new(),
-            seen: HashSet::new(),
+            seen: BTreeSet::new(),
             last_start: 0.0,
             exhausted: false,
         })

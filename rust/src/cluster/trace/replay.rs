@@ -24,7 +24,7 @@ use crate::profiling::ProfileBank;
 use crate::scenarios::ScenarioSpec;
 use anyhow::{bail, ensure, Result};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::time::{Duration, Instant};
 
 /// What a finished replay reports — counters for correctness checks,
@@ -90,6 +90,41 @@ impl ReplayResult {
     pub fn final_active_hosts(&self) -> usize {
         self.final_residents.iter().filter(|&&r| r > 0).count()
     }
+
+    /// Fold every simulation-determined field (declaration order) into
+    /// one FNV-1a digest — the `--digest` output the two-process audit
+    /// compares. `wall` is deliberately excluded: it is the only field
+    /// the machine, not the seed, decides.
+    pub fn bit_digest(&self) -> u64 {
+        let mut h = crate::util::digest::Fnv64::new();
+        h.write_u64(self.arrivals)
+            .write_u64(self.departures)
+            .write_u64(self.migrates)
+            .write_u64(self.dropped)
+            .write_u64(self.events_routed)
+            .write_u64(self.migrations_started)
+            .write_usize(self.peak_live)
+            .write_usize(self.final_live)
+            .write_bool(self.truncated)
+            .write_f64(self.completion_time)
+            .write_u64(self.ticks)
+            .write_f64(self.core_hours);
+        h.write_usize(self.final_residents.len());
+        for &r in &self.final_residents {
+            h.write_usize(r);
+        }
+        h.write_u64(self.migrations_completed)
+            .write_u64(self.migrations_failed)
+            .write_u64(self.migrator_moves)
+            .write_f64(self.energy_wh)
+            .write_f64(self.plugged_energy_wh)
+            .write_f64(self.slav)
+            .write_f64(self.overload_seconds)
+            .write_f64(self.active_host_hours);
+        h.write_bool(self.converge_ticks.is_some());
+        h.write_u64(self.converge_ticks.unwrap_or(0));
+        h.finish()
+    }
 }
 
 /// Heap key for departure-due times (finite, non-negative f64s order
@@ -105,10 +140,10 @@ struct Driver<'a> {
     /// Monotonicity guard over the reader's stream.
     last_at: f64,
     /// Where the bus routed each live VM (filled from `take_moves`).
-    vm_host: HashMap<u32, usize>,
-    live: HashSet<u32>,
+    vm_host: BTreeMap<u32, usize>,
+    live: BTreeSet<u32>,
     /// Every arrival id ever seen (duplicate detection).
-    seen: HashSet<u32>,
+    seen: BTreeSet<u32>,
     /// Departures/Migrates whose VM is live but not yet routed (arrived
     /// this very tick); retried next tick, in order.
     deferred: Vec<TraceEvent>,
@@ -273,16 +308,16 @@ pub fn replay(
         vms: Vec::new(),
         min_duration: 0.0,
     };
-    let mut sim = ClusterSim::new(spec.clone(), &empty, bank);
+    let mut sim = ClusterSim::new(spec.clone(), &empty, bank)?;
     let max_time = spec.cfg.sim.max_time;
     let schedule_departures = !reader.emits_departures();
     let mut d = Driver {
         reader,
         lookahead: None,
         last_at: 0.0,
-        vm_host: HashMap::new(),
-        live: HashSet::new(),
-        seen: HashSet::new(),
+        vm_host: BTreeMap::new(),
+        live: BTreeSet::new(),
+        seen: BTreeSet::new(),
         deferred: Vec::new(),
         due: BinaryHeap::new(),
         schedule_departures,
@@ -293,6 +328,8 @@ pub fn replay(
         peak_live: 0,
     };
 
+    #[allow(clippy::disallowed_methods)]
+    // detlint: allow(wall-clock): measures reporting-only wall time; never feeds results
     let started = Instant::now();
     let mut truncated = false;
     let mut ticks = 0u64;
@@ -317,6 +354,7 @@ pub fn replay(
             if !due {
                 break;
             }
+            // detlint: allow(panic): `matches!` on the same Option one line up proves Some
             let ev = d.lookahead.take().expect("lookahead populated");
             d.apply(ev, &mut sim)?;
         }

@@ -17,7 +17,7 @@ use crate::util::rng::Rng;
 use crate::workloads::{WorkloadClass, ALL_CLASSES};
 use anyhow::{bail, ensure, Context, Result};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap};
 
 /// Lifetime distribution family.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -162,7 +162,7 @@ pub struct SyntheticTraceGenerator {
     /// swap-removal — only consulted for `migrates` sampling and the
     /// liveness invariant.
     live: Vec<u32>,
-    live_pos: HashMap<u32, usize>,
+    live_pos: BTreeMap<u32, usize>,
     migrates_left: u64,
     /// Instant of the next Migrate draw (spread over the arrival span).
     next_migrate_at: f64,
@@ -190,7 +190,7 @@ impl SyntheticTraceGenerator {
             emitted: 0,
             departures: BinaryHeap::new(),
             live: Vec::new(),
-            live_pos: HashMap::new(),
+            live_pos: BTreeMap::new(),
             migrates_left: 0,
             next_migrate_at: 0.0,
             migrate_gap,
@@ -274,8 +274,10 @@ impl SyntheticTraceGenerator {
     }
 
     fn emit_departure(&mut self) -> TraceEvent {
+        // detlint: allow(panic): caller gates on `!departures.is_empty()` (next_event)
         let Reverse((bits, id)) = self.departures.pop().expect("departure heap underflow");
         let at = f64::from_bits(bits).max(self.last_at);
+        // detlint: allow(panic): every heap entry was inserted into live_pos at arrival
         let pos = self.live_pos.remove(&id).expect("departing VM not live");
         self.live.swap_remove(pos);
         if let Some(&moved) = self.live.get(pos) {

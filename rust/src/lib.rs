@@ -33,11 +33,15 @@
 //!   time series, and the figure/table regeneration.
 //! * [`util`] — first-party RNG / JSON / stats / CLI (the build is offline;
 //!   see DESIGN.md §6).
+//! * [`analysis`] — static analysis over this repo's own sources: the
+//!   `detlint` determinism-contract lint tier-1 runs over `rust/src`
+//!   (see DETERMINISM.md).
 //! * [`bench`] — the benchmark harness used by `benches/` (criterion is not
 //!   available offline; this provides warmup/iteration/percentile logic).
 //! * [`testkit`] — seeded property-testing mini-framework used by unit and
 //!   integration tests (proptest substitute).
 
+pub mod analysis;
 pub mod bench;
 pub mod cluster;
 pub mod config;

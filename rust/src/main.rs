@@ -105,10 +105,12 @@ USAGE:
                  [--actuation inline|deferred:N|deferred:N:B]
                  [--trace PATH|synth:k=v,...] [--trace-types FILE]
                  [--trace-hosts FILE]
-                 [--migrator [over:under:budget[:interval]]]
+                 [--migrator [over:under:budget[:interval]]] [--digest]
 
   --migrator enables the continuous migration manager; bare --migrator
   uses the config-file thresholds (or the defaults 0.85:0.35:4:30).
+  --digest prints a 64-bit FNV-1a fingerprint of the run result —
+  identical seeds must print identical digests (see DETERMINISM.md).
 ";
 
 fn cmd_profile(args: &Args) -> Result<()> {
@@ -540,6 +542,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         }
         println!("wall time       : {} ms", r.wall.as_millis());
         println!("events/sec      : {:.0}", r.events_per_sec());
+        if args.flag("digest") {
+            // Bit-identity fingerprint (FNV-1a over every simulation
+            // field, wall time excluded) — the two-process audit in
+            // rust/tests/detlint.rs greps this line from two same-seed
+            // runs and asserts equality.
+            println!("digest          : {:016x}", r.bit_digest());
+        }
         return Ok(());
     }
 
@@ -556,6 +565,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         scen.vms.len(),
         step_mode.name()
     );
+    #[allow(clippy::disallowed_methods)] // process edge: CLI reports wall time
     let wall = std::time::Instant::now();
     let r = scenarios::run_cluster(&spec, &scen, &bank)?;
     println!("strategy        : {}", r.strategy.name());
@@ -582,5 +592,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     );
     println!("completed at    : {:.0} s", r.completion_time);
     println!("wall time       : {} ms", wall.elapsed().as_millis());
+    if args.flag("digest") {
+        println!("digest          : {:016x}", r.bit_digest());
+    }
     Ok(())
 }

@@ -72,6 +72,7 @@ fn pick_class(rng: &mut Rng) -> WorkloadClass {
             return class;
         }
     }
+    // detlint: allow(panic): ALL_CLASSES is a non-empty const table
     *ALL_CLASSES.last().unwrap()
 }
 

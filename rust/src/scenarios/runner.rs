@@ -108,7 +108,7 @@ pub fn run_cluster(
     scenario: &ScenarioSpec,
     bank: &ProfileBank,
 ) -> Result<ClusterResult> {
-    ClusterSim::new(spec.clone(), scenario, bank).run(bank, scenario.min_duration)
+    ClusterSim::new(spec.clone(), scenario, bank)?.run(bank, scenario.min_duration)
 }
 
 /// Replay a pre-recorded (or synthetic) trace cluster-wide instead of a

@@ -31,6 +31,7 @@ impl Args {
                     .map(|next| !next.starts_with("--"))
                     .unwrap_or(false)
                 {
+                    // detlint: allow(panic): peek() one line up proved Some
                     let v = iter.next().unwrap();
                     out.options.insert(body.to_string(), v);
                 } else {

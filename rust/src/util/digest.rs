@@ -1,0 +1,108 @@
+//! FNV-1a run digests for the determinism contract.
+//!
+//! The contract (`DETERMINISM.md`) promises *bit-identity*: the same
+//! seed and spec must produce the same result down to the last float
+//! bit, whatever the step mode, actuation backend, or process. A
+//! digest makes that promise checkable across process boundaries —
+//! `vmcd cluster … --digest` prints one hex line, and the two-process
+//! audit in `rust/tests/detlint.rs` compares it between runs.
+//!
+//! FNV-1a (64-bit) is used because it is tiny, dependency-free, and
+//! fully specified — this is a fingerprint for *equality testing of
+//! trusted outputs*, not a cryptographic commitment. Floats are folded
+//! via [`f64::to_bits`] so the digest inherits the repo-wide
+//! bit-identity convention instead of rounding anything away.
+
+/// Incremental 64-bit FNV-1a hasher over primitive fields.
+///
+/// Field order matters: `digest` is a fold, so callers must feed
+/// fields in one fixed, documented order (struct declaration order by
+/// convention) and never reorder them without noting the digest break.
+#[derive(Debug, Clone)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Default for Fnv64 {
+    fn default() -> Fnv64 {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64 { state: FNV_OFFSET }
+    }
+
+    /// Fold raw bytes into the state.
+    pub fn write_bytes(&mut self, bytes: &[u8]) -> &mut Fnv64 {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    /// Fold one `u64` (little-endian bytes).
+    pub fn write_u64(&mut self, v: u64) -> &mut Fnv64 {
+        self.write_bytes(&v.to_le_bytes())
+    }
+
+    /// Fold one `usize` (widened so 32- and 64-bit hosts agree).
+    pub fn write_usize(&mut self, v: usize) -> &mut Fnv64 {
+        self.write_u64(v as u64)
+    }
+
+    /// Fold one bool as a full byte.
+    pub fn write_bool(&mut self, v: bool) -> &mut Fnv64 {
+        self.write_bytes(&[v as u8])
+    }
+
+    /// Fold an `f64` by bit pattern — NaN payloads and signed zeros
+    /// included, matching the `to_bits` equality used by the
+    /// bit-identity tests.
+    pub fn write_f64(&mut self, v: f64) -> &mut Fnv64 {
+        self.write_u64(v.to_bits())
+    }
+
+    /// Finish: the current 64-bit digest.
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // Canonical FNV-1a test vectors (empty string, "a", "foobar").
+        assert_eq!(Fnv64::new().finish(), 0xcbf29ce484222325);
+        assert_eq!(Fnv64::new().write_bytes(b"a").finish(), 0xaf63dc4c8601ec8c);
+        assert_eq!(
+            Fnv64::new().write_bytes(b"foobar").finish(),
+            0x85944171f73967e8
+        );
+    }
+
+    #[test]
+    fn field_order_changes_the_digest() {
+        let ab = Fnv64::new().write_u64(1).write_u64(2).finish();
+        let ba = Fnv64::new().write_u64(2).write_u64(1).finish();
+        assert_ne!(ab, ba);
+    }
+
+    #[test]
+    fn floats_fold_by_bit_pattern() {
+        let pos = Fnv64::new().write_f64(0.0).finish();
+        let neg = Fnv64::new().write_f64(-0.0).finish();
+        assert_ne!(pos, neg, "signed zeros must be distinguishable");
+        let a = Fnv64::new().write_f64(1.5).finish();
+        let b = Fnv64::new().write_f64(1.5).finish();
+        assert_eq!(a, b);
+    }
+}

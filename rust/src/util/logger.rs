@@ -44,6 +44,7 @@ pub fn init() {
         Ok("off") => log::LevelFilter::Off,
         _ => log::LevelFilter::Info,
     };
+    #[allow(clippy::disallowed_methods)] // process edge: log timestamps are wall time
     let logger = LOGGER.get_or_init(|| StderrLogger {
         start: Instant::now(),
         level,

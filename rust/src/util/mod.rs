@@ -5,6 +5,7 @@
 //! normal project would pull from crates.io live here instead.
 
 pub mod cli;
+pub mod digest;
 pub mod json;
 pub mod logger;
 pub mod rng;

@@ -69,7 +69,7 @@ impl Summary {
     pub fn percentile(&self, p: f64) -> f64 {
         assert!(!self.samples.is_empty(), "percentile of empty summary");
         let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
         sorted[rank.min(sorted.len() - 1)]
     }

@@ -29,6 +29,14 @@
 //!
 //! [`Actuator`] survives as the low-level dedup applier backends share
 //! (skip no-op re-pins, count actuations); [`Actuate`] is the API.
+//!
+//! This module is one of the two sanctioned thread/channel seams of the
+//! determinism contract (see `DETERMINISM.md`, rule R4): `detlint`
+//! confines `std::thread`/`mpsc` to here and `cluster::pool`, and the
+//! ThreadSanitizer CI job audits both seams for races. [`Threaded`]
+//! stays deterministic from the daemon's point of view because
+//! completions are folded back at tick boundaries in submission order,
+//! never mid-decision.
 
 use crate::hostsim::{Hypervisor, VmId};
 use anyhow::Result;

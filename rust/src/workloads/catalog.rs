@@ -46,6 +46,7 @@ pub const ALL_CLASSES: [WorkloadClass; 8] = [
 impl WorkloadClass {
     /// Canonical index into the S / U matrices.
     pub fn index(self) -> usize {
+        // detlint: allow(panic): ALL_CLASSES enumerates every variant by definition
         ALL_CLASSES.iter().position(|&c| c == self).unwrap()
     }
 

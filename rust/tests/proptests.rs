@@ -459,7 +459,8 @@ fn prop_bus_routing_matches_direct_host_calls() {
         let mut pool = ShardPool::new(
             make_hosts(&cfg).into_iter().map(ClusterHost::Native).collect(),
             StepMode::Single,
-        );
+        )
+        .unwrap();
         let mut bus = EventBus::new(hosts_n, MigrationModel::default(), cfg.host.cores);
         let mut policy = Dispatcher::RoundRobin.build();
         let mut route_rng = vmcd::util::rng::Rng::new(7);
