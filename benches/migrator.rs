@@ -9,13 +9,16 @@
 //!
 //! Full mode runs 256 hosts with 40k trace events; `VMCD_BENCH_QUICK=1`
 //! shrinks to 32 hosts × 4k events for CI. Replays are measured once
-//! end-to-end (no iteration harness). Emits `BENCH_migrator.json`.
+//! end-to-end (no iteration harness). A second sweep replays a diurnal
+//! sawtooth trace under myopic vs forecast+payback planning × linear vs
+//! piecewise power, recording the churn and energy the predictive
+//! planner saves. Emits `BENCH_migrator.json`.
 
 mod common;
 
 use vmcd::cluster::trace::synth::SyntheticTraceGenerator;
 use vmcd::cluster::{ClusterSpec, StepMode, Strategy};
-use vmcd::config::MigratorParams;
+use vmcd::config::{MigratorParams, PowerModel};
 use vmcd::scenarios::run_trace;
 use vmcd::util::json::Json;
 use vmcd::vmcd::ActuationSpec;
@@ -137,9 +140,81 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // Sawtooth sweep: a diurnal trace whose load dips below the park
+    // line every period and climbs back out — the park/unpark thrash
+    // regime. Myopic vs forecast+payback planning, each under the
+    // linear power law and a convex SPECpower-style piecewise table,
+    // so the rows record how much migration churn and energy the
+    // predictive planner saves on the same event stream.
+    let (saw_hosts, saw_spec): (usize, &str) = if quick {
+        (32, "vms=2000,rate=80,burst=8,life=40,lmax=200,diurnal=0.9,period=120,seed=42")
+    } else {
+        (256, "vms=20000,rate=200,burst=16,life=60,lmax=400,diurnal=0.9,period=300,seed=42")
+    };
+    let planners = [
+        ("myopic", "0.7:0.3:8:15,cooldown=30"),
+        (
+            "forecast",
+            "0.7:0.3:8:15,cooldown=30,forecast=on,alpha=0.3,beta=0.05,horizon=20,k=3,payback=600",
+        ),
+    ];
+    let powers = [("linear", "linear"), ("piecewise", "piecewise:0=58,0.5=150,1=280")];
+    println!(
+        "\n{:<12} {:<12} {:>6} {:>10} {:>10} {:>8} {:>12}",
+        "planner", "power", "moves", "started", "energy Wh", "SLAV", "events/sec"
+    );
+    for (planner, migrator_spec) in planners {
+        for (power_name, power_spec) in powers {
+            let mut spec = ClusterSpec::new(saw_hosts, Strategy::LocalVmcd);
+            spec.cfg = cfg.clone();
+            spec.cfg.power = PowerModel::parse(power_spec)?;
+            spec.step_mode = StepMode::Pool(4);
+            spec.migrator = Some(MigratorParams::parse(migrator_spec)?);
+            let mut reader = SyntheticTraceGenerator::parse(saw_spec, 42)?;
+            let r = run_trace(&spec, &mut reader, &bank)?;
+            anyhow::ensure!(!r.truncated, "sawtooth bench hit max_time");
+            println!(
+                "{:<12} {:<12} {:>6} {:>10} {:>10.1} {:>8.4} {:>12.0}",
+                planner,
+                power_name,
+                r.migrator_moves,
+                r.migrations_started,
+                r.energy_wh,
+                r.slav,
+                r.events_per_sec()
+            );
+            rows.push(Json::from_pairs(vec![
+                ("scenario", Json::Str("sawtooth".into())),
+                ("planner", Json::Str(planner.into())),
+                ("power", Json::Str(power_name.into())),
+                ("migrator_spec", Json::Str(migrator_spec.into())),
+                ("hosts", Json::Num(saw_hosts as f64)),
+                ("events", Json::Num((r.arrivals + r.departures + r.migrates) as f64)),
+                ("ticks", Json::Num(r.ticks as f64)),
+                ("migrator_moves", Json::Num(r.migrator_moves as f64)),
+                ("migrations_started", Json::Num(r.migrations_started as f64)),
+                ("migrations_completed", Json::Num(r.migrations_completed as f64)),
+                ("migrations_failed", Json::Num(r.migrations_failed as f64)),
+                ("core_hours", Json::Num(r.core_hours)),
+                ("energy_wh", Json::Num(r.energy_wh)),
+                ("plugged_energy_wh", Json::Num(r.plugged_energy_wh)),
+                ("slav", Json::Num(r.slav)),
+                ("overload_seconds", Json::Num(r.overload_seconds)),
+                ("active_host_hours", Json::Num(r.active_host_hours)),
+                (
+                    "converge_ticks",
+                    r.converge_ticks.map_or(Json::Null, |t| Json::Num(t as f64)),
+                ),
+                ("wall_ms", Json::Num(r.wall.as_secs_f64() * 1e3)),
+                ("events_per_sec", Json::Num(r.events_per_sec())),
+            ]));
+        }
+    }
+
     let doc = Json::from_pairs(vec![
         ("bench", Json::Str("migrator".into())),
         ("synth_spec", Json::Str(synth_spec.into())),
+        ("sawtooth_spec", Json::Str(saw_spec.into())),
         ("hosts", Json::Num(hosts as f64)),
         ("quick", Json::Bool(quick)),
         ("rows", Json::Arr(rows)),

@@ -89,7 +89,7 @@ fn main() -> anyhow::Result<()> {
         xla_backend,
     );
     let mut engine = SimEngine::new(cfg.clone(), vms);
-    let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+    let mut daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
 
     #[allow(clippy::disallowed_methods)] // process edge: examples report wall time
     let wall_start = std::time::Instant::now();

@@ -640,7 +640,7 @@ mod tests {
         let cfg = testkit::quiet_config();
         let bank = testkit::shared_bank();
         let sched = scheduler::build_native(policy, bank, cfg.sched.ras_threshold, None);
-        let daemon = Daemon::new(cfg.sched.clone(), sched);
+        let daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
         SimHost::new(SimEngine::new(cfg, Vec::new()), Some(daemon))
     }
 
@@ -718,7 +718,7 @@ mod tests {
         for _ in 0..12 {
             src.step_host().unwrap();
         }
-        assert_eq!(src.daemon.as_ref().unwrap().placement_state().unwrap().placed(), 1);
+        assert_eq!(src.daemon.as_ref().unwrap().placement_state().placed(), 1);
 
         bus.publish(ClusterEvent::Migrate {
             vm: VmId(5),
@@ -750,7 +750,7 @@ mod tests {
         assert!(vm.is_some());
         // Departure bookkeeping: the source daemon's placement state
         // dropped the member immediately (no monitor-poll wait).
-        assert_eq!(src.daemon.as_ref().unwrap().placement_state().unwrap().placed(), 0);
+        assert_eq!(src.daemon.as_ref().unwrap().placement_state().placed(), 0);
 
         let now = 2.0;
         bus.deliver(matured, vec![vm], now);
@@ -768,7 +768,7 @@ mod tests {
         assert_eq!(dst.engine().vms.len(), 1);
         assert_eq!(dst.engine().vms[0].id, VmId(5));
         assert_eq!(dst.engine().vms[0].paused_until, now + model.downtime);
-        assert_eq!(dst.daemon.as_ref().unwrap().placement_state().unwrap().placed(), 1);
+        assert_eq!(dst.daemon.as_ref().unwrap().placement_state().placed(), 1);
         assert_eq!(bus.stats.migrations_completed, 1);
         assert_eq!(bus.stats.migrations_failed, 0);
     }
@@ -878,7 +878,7 @@ mod tests {
         for _ in 0..12 {
             src.step_host().unwrap();
         }
-        let placed_before = src.daemon.as_ref().unwrap().placement_state().unwrap().placed();
+        let placed_before = src.daemon.as_ref().unwrap().placement_state().placed();
 
         bus.summaries[1].est_cpu_load = 12.0; // saturated destination
         bus.publish(ClusterEvent::Migrate {
@@ -914,7 +914,7 @@ mod tests {
         assert_eq!(src.engine().vms.len(), 1);
         assert_eq!(src.engine().vms[0].id, VmId(5));
         assert_eq!(
-            src.daemon.as_ref().unwrap().placement_state().unwrap().placed(),
+            src.daemon.as_ref().unwrap().placement_state().placed(),
             placed_before
         );
         assert_eq!(dst.engine().vms.len(), 0);

@@ -276,8 +276,7 @@ impl<S: ?Sized + Scheduler> HostHandle for SimHost<S> {
     fn placement_wi(&self) -> f64 {
         self.daemon
             .as_ref()
-            .and_then(|d| d.placement_state())
-            .map_or(0.0, |state| state.max_core_wi())
+            .map_or(0.0, |d| d.placement_state().max_core_wi())
     }
 }
 
@@ -293,7 +292,7 @@ mod tests {
         let cfg = testkit::quiet_config();
         let bank = testkit::shared_bank();
         let sched = scheduler::build_native(policy, bank, cfg.sched.ras_threshold, None);
-        let daemon = Daemon::new(cfg.sched.clone(), sched);
+        let daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
         SimHost::new(SimEngine::new(cfg, Vec::new()), Some(daemon))
     }
 
@@ -378,14 +377,14 @@ mod tests {
         vm.started = Some(0.0);
         host.inject_arrival(vm).unwrap();
         assert_eq!(
-            host.daemon.as_ref().unwrap().placement_state().unwrap().placed(),
+            host.daemon.as_ref().unwrap().placement_state().placed(),
             1
         );
         let vm = host.remove_resident(VmId(4)).unwrap();
         assert_eq!(vm.map(|v| v.id), Some(VmId(4)));
         assert_eq!(host.engine().vms.len(), 0);
         assert_eq!(
-            host.daemon.as_ref().unwrap().placement_state().unwrap().placed(),
+            host.daemon.as_ref().unwrap().placement_state().placed(),
             0
         );
         // Removing a ghost is a tolerated no-op.
@@ -416,7 +415,7 @@ mod tests {
         // long-lived placement state right away.
         assert_eq!(host.engine().vms[0].pinned, Some(5));
         assert_eq!(
-            host.daemon.as_ref().unwrap().placement_state().unwrap().placed(),
+            host.daemon.as_ref().unwrap().placement_state().placed(),
             1
         );
     }
@@ -427,7 +426,7 @@ mod tests {
         let cfg = testkit::quiet_config();
         let bank = testkit::shared_bank();
         let sched = scheduler::build(Policy::Ias, bank, cfg.sched.ras_threshold, None);
-        let daemon = Daemon::new(cfg.sched.clone(), sched);
+        let daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
         let mut host: Box<dyn HostHandle> =
             Box::new(SimHost::new(SimEngine::new(cfg, Vec::new()), Some(daemon)));
         host.step_host().unwrap();

@@ -60,6 +60,16 @@ pub struct Migration {
 }
 
 impl MigrationModel {
+    /// Deterministic *planning* estimate of one transfer's duration:
+    /// the pre-copy window stretched by the extra network load the
+    /// copy itself adds, weighted by the VM's share of its host
+    /// (`vm_frac` = estimated VM demand / host CPU capacity). No RNG —
+    /// the payback gate in [`super::migrator::planner`] must not
+    /// perturb the simulation's random stream.
+    pub fn est_transfer_secs(&self, vm_frac: f64) -> f64 {
+        self.transfer_secs * (1.0 + self.transfer_net * vm_frac.clamp(0.0, 1.0))
+    }
+
     /// Start a migration; destination business decides the failure draw.
     pub fn start(
         &self,
@@ -106,6 +116,16 @@ mod tests {
             .count();
         // p = 0.30 at full business.
         assert!((200..400).contains(&doomed), "{doomed}");
+    }
+
+    #[test]
+    fn transfer_estimate_scales_with_vm_share_and_clamps() {
+        let m = MigrationModel::default(); // 20 s, 0.30 net
+        assert_eq!(m.est_transfer_secs(0.0), 20.0);
+        assert!((m.est_transfer_secs(0.5) - 23.0).abs() < 1e-12);
+        assert_eq!(m.est_transfer_secs(1.0), 26.0);
+        assert_eq!(m.est_transfer_secs(7.0), 26.0, "share clamps at 1");
+        assert_eq!(m.est_transfer_secs(-3.0), 20.0, "share clamps at 0");
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! Per-host load forecasting for the migration planner.
+//!
+//! The PR 8 migrator planned against the *current* tick's
+//! [`HostSummary`]s — exactly the myopia that park/unpark-thrashes when
+//! load oscillates across the `under` line (SAP production traces,
+//! arXiv:2510.23911, punish this hard). The forecaster keeps one
+//! Holt-linear (double-exponential) track per host, fed from the same
+//! summary stream the planner already reads, and extrapolates
+//! `horizon` seconds ahead so classification sees where the host is
+//! *going*, not where it happens to be this instant.
+//!
+//! * **est-CPU load** — Holt level + trend (`alpha` smooths the level,
+//!   `beta` the per-second trend), so a ramp is anticipated, not chased.
+//! * **`max_wi`** — plain EWMA (`alpha`); interference readings are too
+//!   noisy for a trend term to help.
+//!
+//! Everything here is O(1) per host per tick and a pure fold over
+//! simulation-published values in host order — no wall-clock, no RNG,
+//! no hashing — so forecast state is bit-deterministic across runs and
+//! step modes (DETERMINISM.md: forecast state is simulation-determined).
+
+use super::super::bus::HostSummary;
+
+/// One host's smoothing state. `level`/`trend` follow the estimated
+/// CPU load (cores); `wi` follows `max_wi`.
+#[derive(Debug, Clone, Copy, Default)]
+struct HostTrack {
+    level: f64,
+    /// Per-second slope of the level.
+    trend: f64,
+    wi: f64,
+    /// First observation seeds the track instead of smoothing toward it
+    /// from zero (which would fake a cold-start ramp).
+    seeded: bool,
+}
+
+/// Per-host EWMA/Holt-linear predictor over the published summary
+/// stream. Owned by [`super::VmMigrator`] when `forecast=on`; fed once
+/// per tick from [`crate::cluster::ClusterSim::tick`] after the bus
+/// refresh.
+#[derive(Debug, Clone)]
+pub struct LoadForecaster {
+    alpha: f64,
+    beta: f64,
+    hosts: Vec<HostTrack>,
+}
+
+impl LoadForecaster {
+    pub fn new(alpha: f64, beta: f64) -> LoadForecaster {
+        LoadForecaster {
+            alpha,
+            beta,
+            hosts: Vec::new(),
+        }
+    }
+
+    /// Fold one tick of summaries into the tracks. `dt` converts the
+    /// level delta into a per-second trend; non-positive `dt` is a
+    /// no-op (there is no interval to attribute the delta to).
+    pub fn observe(&mut self, summaries: &[HostSummary], dt: f64) {
+        if dt <= 0.0 {
+            return;
+        }
+        self.hosts.resize(summaries.len(), HostTrack::default());
+        for (track, s) in self.hosts.iter_mut().zip(summaries) {
+            if !track.seeded {
+                track.level = s.est_cpu_load;
+                track.trend = 0.0;
+                track.wi = s.max_wi;
+                track.seeded = true;
+                continue;
+            }
+            let prev = track.level;
+            track.level = self.alpha * s.est_cpu_load
+                + (1.0 - self.alpha) * (track.level + track.trend * dt);
+            track.trend =
+                self.beta * ((track.level - prev) / dt) + (1.0 - self.beta) * track.trend;
+            track.wi = self.alpha * s.max_wi + (1.0 - self.alpha) * track.wi;
+        }
+    }
+
+    /// Predicted est-CPU load per host, `horizon` seconds out, clamped
+    /// at zero (a downward trend never predicts negative work). Hosts
+    /// the forecaster has not observed yet fall back to the current
+    /// summary value — identical to what the myopic planner would use.
+    pub fn predict_load(&self, summaries: &[HostSummary], horizon: f64) -> Vec<f64> {
+        summaries
+            .iter()
+            .enumerate()
+            .map(|(h, s)| match self.hosts.get(h) {
+                Some(t) if t.seeded => (t.level + t.trend * horizon).max(0.0),
+                _ => s.est_cpu_load,
+            })
+            .collect()
+    }
+
+    /// Smoothed `max_wi` per host (EWMA holds no trend, so the horizon
+    /// does not enter). Unobserved hosts fall back to the summary.
+    pub fn predict_wi(&self, summaries: &[HostSummary]) -> Vec<f64> {
+        summaries
+            .iter()
+            .enumerate()
+            .map(|(h, s)| match self.hosts.get(h) {
+                Some(t) if t.seeded => t.wi,
+                _ => s.max_wi,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::WorkloadClass;
+
+    fn summary(est: f64, wi: f64) -> HostSummary {
+        HostSummary {
+            resident: 1,
+            running: vec![(crate::hostsim::VmId(0), WorkloadClass::Blackscholes)],
+            busy_cores: 1,
+            max_wi: wi,
+            est_cpu_load: est,
+        }
+    }
+
+    #[test]
+    fn first_observation_seeds_without_a_cold_start_ramp() {
+        let mut f = LoadForecaster::new(0.3, 0.1);
+        f.observe(&[summary(8.0, 1.2)], 5.0);
+        let pred = f.predict_load(&[summary(8.0, 1.2)], 100.0);
+        assert_eq!(pred, vec![8.0], "seed takes the value verbatim, zero trend");
+        assert_eq!(f.predict_wi(&[summary(8.0, 1.2)]), vec![1.2]);
+    }
+
+    #[test]
+    fn steady_ramp_is_extrapolated_ahead() {
+        let mut f = LoadForecaster::new(0.5, 0.5);
+        // Load climbs 1 core per 5 s tick; the trend should pick up a
+        // positive slope and predict beyond the last observation.
+        let mut last = 0.0;
+        for i in 0..40 {
+            last = i as f64;
+            f.observe(&[summary(last, 1.0)], 5.0);
+        }
+        let now = f.predict_load(&[summary(last, 1.0)], 0.0)[0];
+        let ahead = f.predict_load(&[summary(last, 1.0)], 60.0)[0];
+        assert!(ahead > now, "horizon must extrapolate the ramp: {ahead} vs {now}");
+        // 1 core / 5 s → 0.2 cores/s → +12 cores over 60 s, roughly.
+        assert!((ahead - now - 12.0).abs() < 3.0, "slope off: {}", ahead - now);
+    }
+
+    #[test]
+    fn downward_trend_clamps_at_zero() {
+        let mut f = LoadForecaster::new(0.5, 0.5);
+        for i in (0..10).rev() {
+            f.observe(&[summary(i as f64, 1.0)], 5.0);
+        }
+        let pred = f.predict_load(&[summary(0.0, 1.0)], 600.0)[0];
+        assert_eq!(pred, 0.0, "negative work is not a prediction");
+    }
+
+    #[test]
+    fn unobserved_and_grown_fleets_fall_back_to_the_summary() {
+        let f = LoadForecaster::new(0.3, 0.1);
+        let s = [summary(4.0, 1.1), summary(6.0, 0.9)];
+        assert_eq!(f.predict_load(&s, 90.0), vec![4.0, 6.0]);
+        assert_eq!(f.predict_wi(&s), vec![1.1, 0.9]);
+    }
+
+    #[test]
+    fn zero_dt_observation_is_a_no_op() {
+        let mut f = LoadForecaster::new(0.3, 0.1);
+        f.observe(&[summary(8.0, 1.0)], 5.0);
+        f.observe(&[summary(100.0, 9.0)], 0.0);
+        assert_eq!(f.predict_load(&[summary(100.0, 9.0)], 0.0), vec![8.0]);
+    }
+
+    #[test]
+    fn ewma_smooths_wi_spikes() {
+        let mut f = LoadForecaster::new(0.2, 0.1);
+        f.observe(&[summary(4.0, 1.0)], 5.0);
+        f.observe(&[summary(4.0, 5.0)], 5.0); // one-tick spike
+        let wi = f.predict_wi(&[summary(4.0, 5.0)])[0];
+        assert!((wi - 1.8).abs() < 1e-12, "0.2·5 + 0.8·1 = 1.8, got {wi}");
+    }
+}

@@ -26,7 +26,8 @@
 //!
 //! ## CLI grammar (`vmcd cluster --migrator <spec>`)
 //!
-//! `over:under:budget[:interval]`, empty fields keep defaults:
+//! `over:under:budget[:interval][,key=value...]` — positional fields
+//! first (empty fields keep defaults), then optional keyword fields:
 //!
 //! | Field      | Meaning                                    | Default |
 //! |------------|--------------------------------------------|---------|
@@ -35,9 +36,34 @@
 //! | `budget`   | max concurrent transfers (incl. in-flight) | 4       |
 //! | `interval` | seconds between planning passes            | 30      |
 //!
-//! `wi_threshold` (default 1.5, the paper's IAS landing point) and the
-//! per-VM `cooldown` (default 120 s) ride along via config JSON
-//! (`"migrator": {...}`, [`crate::config::MigratorParams`]).
+//! | Key        | Meaning                                             | Default |
+//! |------------|-----------------------------------------------------|---------|
+//! | `forecast` | `on`/`off`: plan on the Holt-linear [`forecast`]    | `off`   |
+//! | `alpha`    | level/EWMA smoothing factor, (0, 1]                 | 0.3     |
+//! | `beta`     | trend smoothing factor, [0, 1]                      | 0.1     |
+//! | `horizon`  | prediction horizon, seconds ahead                   | 90      |
+//! | `k`        | hysteresis: consecutive under-predicted passes      | 2       |
+//! | `payback`  | payback horizon, seconds (or `inf`: gate off)       | `inf`   |
+//! | `cooldown` | per-VM replan cooldown, seconds                     | 120     |
+//! | `wi`       | interference threshold (`wi_threshold`)             | 1.5     |
+//!
+//! e.g. `--migrator 0.85:0.35:4:30,forecast=on,horizon=120,payback=600`.
+//! All keys also ride along via config JSON (`"migrator": {...}`,
+//! [`crate::config::MigratorParams`]).
+//!
+//! With `forecast=on` the planner classifies hosts on the predicted
+//! load/WI at `horizon` seconds out ([`forecast::LoadForecaster`], fed
+//! each tick from the published summaries — simulation-determined
+//! state, no wall-clock), and a host must be *predicted* under the
+//! `under` line for `k` consecutive planning passes before the park
+//! pass may evacuate it. With a finite `payback`, each candidate
+//! consolidation is weighed by its copy cost — estimated transfer
+//! seconds ([`MigrationModel::est_transfer_secs`](super::migration::MigrationModel::est_transfer_secs),
+//! VM size × network load) at source+destination power draw
+//! ([`crate::config::PowerModel`]) — and skipped when the parked
+//! host's idle draw over the payback horizon cannot repay it. The
+//! defaults (`forecast=off`, `payback=inf`) are bit-identical to the
+//! myopic PR 8 planner — digest-gated by the planner tests.
 //!
 //! Respecting [`MigrationModel`](super::migration::MigrationModel)
 //! outcomes: the budget counts the bus's in-flight transfers, aborted
@@ -45,14 +71,17 @@
 //! it again once its cooldown lapses), and completed transfers move the
 //! summary load so the next pass plans from the post-move fleet.
 
+pub mod forecast;
 pub mod planner;
 
-use crate::config::MigratorParams;
+use crate::config::{HostSpec, MigratorParams, PowerModel};
 use crate::hostsim::VmId;
 use crate::profiling::ProfileBank;
 use std::collections::{BTreeMap, BTreeSet};
 
 use super::bus::{EventBus, HostSummary};
+use super::migration::MigrationModel;
+use forecast::LoadForecaster;
 pub use planner::{classify, plan, HostClass, PlannedMove};
 
 /// Lifetime counters of one migrator instance.
@@ -68,6 +97,27 @@ pub struct MigratorStats {
     pub parked_hosts_planned: u64,
 }
 
+/// What the payback gate knows about the cluster it plans for: the
+/// migration cost model, the power model the ledger bills with, and
+/// the (homogeneous) host spec. Cloned in at construction so
+/// [`VmMigrator::maybe_plan`]'s signature stays put.
+#[derive(Debug, Clone)]
+pub struct PlanEnv {
+    pub migration: MigrationModel,
+    pub power: PowerModel,
+    pub host: HostSpec,
+}
+
+impl Default for PlanEnv {
+    fn default() -> Self {
+        PlanEnv {
+            migration: MigrationModel::default(),
+            power: PowerModel::Linear,
+            host: HostSpec::default(),
+        }
+    }
+}
+
 /// The continuous migration manager. Owned by
 /// [`ClusterSim`](super::ClusterSim) when
 /// [`ClusterSpec::migrator`](super::ClusterSpec) is set; consulted once
@@ -75,6 +125,7 @@ pub struct MigratorStats {
 #[derive(Debug, Clone)]
 pub struct VmMigrator {
     params: MigratorParams,
+    env: PlanEnv,
     /// Virtual time of the last planning pass.
     last_plan: f64,
     /// vm → virtual time it was last planned (cooldown bookkeeping).
@@ -82,21 +133,50 @@ pub struct VmMigrator {
     /// deterministic — a `HashMap` here made plans depend on the
     /// process's hash seed (see DETERMINISM.md R1).
     cooldowns: BTreeMap<VmId, f64>,
+    /// Holt-linear predictor over the summary stream; built only when
+    /// `params.forecast` is set, so forecast-off runs hold no forecast
+    /// state and execute no forecast arithmetic (bit-identity).
+    forecast: Option<LoadForecaster>,
+    /// Hysteresis: per-host count of consecutive planning passes the
+    /// host was predicted under the `under` line.
+    under_streak: Vec<usize>,
     pub stats: MigratorStats,
 }
 
 impl VmMigrator {
     pub fn new(params: MigratorParams) -> VmMigrator {
+        VmMigrator::with_env(params, PlanEnv::default())
+    }
+
+    /// Build with the cluster's actual migration/power/host models so
+    /// the payback gate prices copies the way the ledger will bill
+    /// them. [`Self::new`] uses defaults (fine while `payback` is
+    /// infinite — the gate never runs).
+    pub fn with_env(params: MigratorParams, env: PlanEnv) -> VmMigrator {
+        let forecast = params
+            .forecast
+            .then(|| LoadForecaster::new(params.alpha, params.beta));
         VmMigrator {
             params,
+            env,
             last_plan: f64::NEG_INFINITY,
             cooldowns: BTreeMap::new(),
+            forecast,
+            under_streak: Vec::new(),
             stats: MigratorStats::default(),
         }
     }
 
     pub fn params(&self) -> &MigratorParams {
         &self.params
+    }
+
+    /// Feed one tick of published summaries into the forecaster.
+    /// No-op (no state, no arithmetic) when `forecast=off`.
+    pub fn observe(&mut self, summaries: &[HostSummary], dt: f64) {
+        if let Some(f) = self.forecast.as_mut() {
+            f.observe(summaries, dt);
+        }
     }
 
     /// Run a planning pass if the interval is due; returns the moves to
@@ -122,11 +202,57 @@ impl VmMigrator {
         blocked.extend(bus.in_flight_vms());
         let summaries = bus.summaries();
         let matrix = bus.matrix();
-        self.stats.overloaded_seen += planner::classify(&self.params, summaries, matrix)
-            .iter()
-            .filter(|&&c| c == HostClass::Overloaded)
-            .count() as u64;
-        let moves = planner::plan(&self.params, summaries, matrix, bank, &blocked, budget_left);
+        // Forecast inputs (None when forecast=off → myopic planning).
+        let predicted = self
+            .forecast
+            .as_ref()
+            .map(|f| f.predict_load(summaries, self.params.horizon));
+        let predicted_wi = self.forecast.as_ref().map(|f| f.predict_wi(summaries));
+        // Hysteresis streaks advance once per planning pass: a host is
+        // park-eligible only after K consecutive passes predicted below
+        // the `under` fraction.
+        let park_eligible: Option<Vec<bool>> = if let Some(pred) = predicted.as_deref() {
+            self.under_streak.resize(summaries.len(), 0);
+            let mut eligible = Vec::with_capacity(summaries.len());
+            for (h, s) in summaries.iter().enumerate() {
+                let cap = matrix.cap(h, 0);
+                let under_now = cap > 0.0 && pred[h] / cap < self.params.under && s.resident > 0;
+                self.under_streak[h] = if under_now {
+                    self.under_streak[h] + 1
+                } else {
+                    0
+                };
+                eligible.push(self.under_streak[h] >= self.params.hysteresis);
+            }
+            Some(eligible)
+        } else {
+            None
+        };
+        let ctx = planner::PlanContext {
+            predicted: predicted.as_deref(),
+            predicted_wi: predicted_wi.as_deref(),
+            park_eligible: park_eligible.as_deref(),
+            // Built only for finite payback: the default (∞) planner
+            // must execute zero cost arithmetic (bit-identity).
+            cost: self.params.payback.is_finite().then(|| planner::CostContext {
+                migration: &self.env.migration,
+                power: &self.env.power,
+                host: &self.env.host,
+                payback: self.params.payback,
+            }),
+        };
+        self.stats.overloaded_seen += planner::classify_with(
+            &self.params,
+            summaries,
+            matrix,
+            ctx.predicted,
+            ctx.predicted_wi,
+        )
+        .iter()
+        .filter(|&&c| c == HostClass::Overloaded)
+        .count() as u64;
+        let moves =
+            planner::plan_with(&self.params, summaries, matrix, bank, &blocked, budget_left, &ctx);
         let mut parked: BTreeSet<usize> = BTreeSet::new();
         for m in &moves {
             self.cooldowns.insert(m.vm, now);

@@ -20,12 +20,13 @@
 //!    is left untouched (a half-evacuation spends migrations without
 //!    saving a host).
 
-use crate::config::MigratorParams;
+use crate::config::{HostSpec, MigratorParams, PowerModel};
 use crate::hostsim::VmId;
 use crate::profiling::ProfileBank;
 use std::collections::BTreeSet;
 
 use super::super::bus::{HostSummary, SummaryMatrix};
+use super::super::migration::MigrationModel;
 
 /// One planned live migration, ready to publish as
 /// [`crate::cluster::ClusterEvent::Migrate`].
@@ -59,18 +60,76 @@ fn frac(load: f64, matrix: &SummaryMatrix, host: usize) -> f64 {
     }
 }
 
-/// Classify every host against the thresholds.
-pub fn classify(
+/// Migration-cost accounting for the park pass: skip consolidations
+/// whose energy saving over `payback` seconds never repays the copy.
+/// Only built when `payback` is finite, so the default (`payback=∞`)
+/// planner never touches these folds and stays bit-identical.
+#[derive(Debug, Clone, Copy)]
+pub struct CostContext<'a> {
+    pub migration: &'a MigrationModel,
+    pub power: &'a PowerModel,
+    pub host: &'a HostSpec,
+    /// Payback horizon, seconds (finite by construction).
+    pub payback: f64,
+}
+
+/// Optional forecast/hysteresis/cost inputs to [`plan_with`]. The
+/// all-`None` default reproduces the myopic PR 8 planner exactly —
+/// [`plan`] is that default, and the digest-identity tests gate it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanContext<'a> {
+    /// Predicted est-CPU load per host (forecast horizon); `None`
+    /// plans on the current summaries.
+    pub predicted: Option<&'a [f64]>,
+    /// Predicted (smoothed) `max_wi` per host.
+    pub predicted_wi: Option<&'a [f64]>,
+    /// Hysteresis gate: a host may only be evacuated for parking when
+    /// its flag is set (predicted under `under` for K consecutive
+    /// planning passes). `None` = every underloaded host is eligible.
+    pub park_eligible: Option<&'a [bool]>,
+    pub cost: Option<CostContext<'a>>,
+}
+
+/// Planning estimate of the energy (J) one migration burns: the
+/// model's transfer window, stretched by the VM's share of the network
+/// load, at the *current* source + destination power draw. Public so
+/// the payback proptest recomputes the same figure the gate used.
+pub fn move_cost_joules(
+    cost: &CostContext,
+    summaries: &[HostSummary],
+    matrix: &SummaryMatrix,
+    mv: &PlannedMove,
+    vm_load: f64,
+) -> f64 {
+    let src_cap = matrix.cap(mv.src, 0);
+    let vm_frac = if src_cap > 0.0 { vm_load / src_cap } else { 1.0 };
+    let secs = cost.migration.est_transfer_secs(vm_frac);
+    let w_src = cost
+        .power
+        .watts(summaries[mv.src].busy_cores, matrix.cap(mv.src, 0), cost.host);
+    let w_dst = cost
+        .power
+        .watts(summaries[mv.dst].busy_cores, matrix.cap(mv.dst, 0), cost.host);
+    secs * (w_src + w_dst)
+}
+
+/// Classify every host against the thresholds, on predicted values
+/// when a forecast is supplied (else the current summaries).
+pub fn classify_with(
     params: &MigratorParams,
     summaries: &[HostSummary],
     matrix: &SummaryMatrix,
+    predicted: Option<&[f64]>,
+    predicted_wi: Option<&[f64]>,
 ) -> Vec<HostClass> {
     summaries
         .iter()
         .enumerate()
         .map(|(h, s)| {
-            let f = frac(s.est_cpu_load, matrix, h);
-            if f > params.over || s.max_wi > params.wi_threshold {
+            let load = predicted.map_or(s.est_cpu_load, |p| p[h]);
+            let wi = predicted_wi.map_or(s.max_wi, |p| p[h]);
+            let f = frac(load, matrix, h);
+            if f > params.over || wi > params.wi_threshold {
                 HostClass::Overloaded
             } else if f < params.under && s.resident > 0 {
                 HostClass::Underloaded
@@ -81,25 +140,66 @@ pub fn classify(
         .collect()
 }
 
-/// Plan at most `budget_left` moves. `blocked` holds VMs that must not
-/// be selected (in-flight transfers and cooling-down recent movers).
+/// Classify every host against the thresholds (current summaries).
+pub fn classify(
+    params: &MigratorParams,
+    summaries: &[HostSummary],
+    matrix: &SummaryMatrix,
+) -> Vec<HostClass> {
+    classify_with(params, summaries, matrix, None, None)
+}
+
+/// The myopic planner: [`plan_with`] under the default (empty)
+/// [`PlanContext`] — current-tick loads, no hysteresis, no payback
+/// gate. This is the PR 8 behavior and must stay bit-identical to it.
 pub fn plan(
     params: &MigratorParams,
     summaries: &[HostSummary],
     matrix: &SummaryMatrix,
     bank: &ProfileBank,
     blocked: &BTreeSet<VmId>,
+    budget_left: usize,
+) -> Vec<PlannedMove> {
+    plan_with(
+        params,
+        summaries,
+        matrix,
+        bank,
+        blocked,
+        budget_left,
+        &PlanContext::default(),
+    )
+}
+
+/// Plan at most `budget_left` moves. `blocked` holds VMs that must not
+/// be selected (in-flight transfers and cooling-down recent movers);
+/// `ctx` carries the optional forecast/hysteresis/cost inputs.
+pub fn plan_with(
+    params: &MigratorParams,
+    summaries: &[HostSummary],
+    matrix: &SummaryMatrix,
+    bank: &ProfileBank,
+    blocked: &BTreeSet<VmId>,
     mut budget_left: usize,
+    ctx: &PlanContext,
 ) -> Vec<PlannedMove> {
     let n = summaries.len();
     let mut moves = Vec::new();
     if n < 2 || budget_left == 0 {
         return moves;
     }
-    let classes = classify(params, summaries, matrix);
+    let classes = classify_with(params, summaries, matrix, ctx.predicted, ctx.predicted_wi);
+    // Interference reading per host: the smoothed forecast when one is
+    // supplied, the raw summary otherwise (identical values then).
+    let wi = |h: usize| ctx.predicted_wi.map_or(summaries[h].max_wi, |p| p[h]);
     // Working copies the passes mutate as they commit moves, so one plan
-    // never stacks a destination past the line it is policing.
-    let mut loads: Vec<f64> = summaries.iter().map(|s| s.est_cpu_load).collect();
+    // never stacks a destination past the line it is policing. With a
+    // forecast these start from the predicted loads — the plan is
+    // feasible where the fleet is *going*.
+    let mut loads: Vec<f64> = match ctx.predicted {
+        Some(p) => p.to_vec(),
+        None => summaries.iter().map(|s| s.est_cpu_load).collect(),
+    };
     let mut taken: BTreeSet<VmId> = BTreeSet::new();
     let demand = |class: crate::workloads::WorkloadClass| bank.u[class.index()][0];
     let movable = |vm: VmId, taken: &BTreeSet<VmId>| !blocked.contains(&vm) && !taken.contains(&vm);
@@ -118,7 +218,7 @@ pub fn plan(
         // An interference-driven (not load-driven) overload sheds one VM
         // per pass: WI is recomputed by the daemons next tick, so
         // draining further on a stale reading would overshoot.
-        let wi_hot = summaries[src].max_wi > params.wi_threshold;
+        let wi_hot = wi(src) > params.wi_threshold;
         let mut shed = 0usize;
         // Largest movable VMs first: fewest migrations per shed core.
         let mut vms: Vec<(VmId, f64)> = summaries[src]
@@ -143,11 +243,10 @@ pub fn plan(
             let dst = (0..n)
                 .filter(|&h| h != src && classes[h] != HostClass::Overloaded)
                 .filter(|&h| frac(loads[h] + load, matrix, h) <= params.over)
-                .filter(|&h| summaries[h].max_wi <= params.wi_threshold)
+                .filter(|&h| wi(h) <= params.wi_threshold)
                 .min_by(|&a, &b| {
-                    summaries[a]
-                        .max_wi
-                        .total_cmp(&summaries[b].max_wi)
+                    wi(a)
+                        .total_cmp(&wi(b))
                         .then(frac(loads[a], matrix, a).total_cmp(&frac(loads[b], matrix, b)))
                         .then(a.cmp(&b))
                 });
@@ -177,6 +276,12 @@ pub fn plan(
         if received.contains(&src) {
             continue;
         }
+        // Hysteresis: under a forecast, a host must have been predicted
+        // below `under` for K consecutive planning passes before it is
+        // evacuated — one dip across the line is not a parking case.
+        if ctx.park_eligible.is_some_and(|pe| !pe[src]) {
+            continue;
+        }
         let mut vms: Vec<(VmId, f64)> = summaries[src]
             .running
             .iter()
@@ -203,7 +308,7 @@ pub fn plan(
                     h != src && classes[h] != HostClass::Overloaded && !parking.contains(&h)
                 })
                 .filter(|&h| frac(tentative_loads[h] + load, matrix, h) <= params.over)
-                .filter(|&h| summaries[h].max_wi <= params.wi_threshold)
+                .filter(|&h| wi(h) <= params.wi_threshold)
                 .max_by(|&a, &b| {
                     frac(tentative_loads[a], matrix, a)
                         .total_cmp(&frac(tentative_loads[b], matrix, b))
@@ -220,6 +325,21 @@ pub fn plan(
         });
         if !feasible {
             continue;
+        }
+        // Payback gate: parking `src` saves its idle floor draw; the
+        // evacuation burns transfer-seconds of source+destination power.
+        // If the copy cannot repay itself within the payback horizon,
+        // the consolidation is net-negative — keep the host up.
+        if let Some(cost) = &ctx.cost {
+            let copy_j: f64 = vms
+                .iter()
+                .zip(&tentative)
+                .map(|(&(_, load), mv)| move_cost_joules(cost, summaries, matrix, mv, load))
+                .sum();
+            let idle_w = cost.power.watts(0, matrix.cap(src, 0), cost.host);
+            if copy_j > idle_w * cost.payback {
+                continue;
+            }
         }
         budget_left -= tentative.len();
         loads = tentative_loads;

@@ -528,7 +528,7 @@ mod tests {
         let cfg = testkit::quiet_config();
         let bank = testkit::shared_bank();
         let sched = scheduler::build_native(Policy::Ias, bank, cfg.sched.ras_threshold, None);
-        let daemon = Daemon::new(cfg.sched.clone(), sched);
+        let daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
         SimHost::new(SimEngine::new(cfg, Vec::new()), Some(daemon))
     }
 

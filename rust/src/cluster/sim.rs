@@ -235,6 +235,7 @@ impl ClusterSim {
                     Some(Daemon::with_actuation(
                         spec.cfg.sched.clone(),
                         sched,
+                        spec.cfg.host.cores,
                         spec.actuation.build(),
                     ))
                 }
@@ -262,8 +263,13 @@ impl ClusterSim {
         let pool = ShardPool::new(hosts, spec.step_mode)?;
         let mut bus = EventBus::new(n, spec.migration.clone(), spec.cfg.host.cores);
         bus.prime(initial);
+        // Scheduler-side CPU capacities double as the power model's
+        // utilization denominators (empty = homogeneous fleet, core
+        // count per host).
+        let mut cpu_caps = Vec::new();
         if let Some(mut caps) = spec.host_caps.clone() {
             caps.resize(n, spec.cfg.host.metric_caps());
+            cpu_caps = caps.iter().map(|c| c[0]).collect();
             bus.set_host_caps(caps);
         }
         let policy = spec.dispatcher.build();
@@ -276,7 +282,17 @@ impl ClusterSim {
             })
             .collect();
         let rng = Rng::new(spec.cfg.sim.seed ^ 0xC1_05_7E_12);
-        let migrator = spec.migrator.clone().map(VmMigrator::new);
+        let migrator = spec.migrator.clone().map(|p| {
+            VmMigrator::with_env(
+                p,
+                super::migrator::PlanEnv {
+                    migration: spec.migration.clone(),
+                    power: spec.cfg.power.clone(),
+                    host: spec.cfg.host.clone(),
+                },
+            )
+        });
+        let ledger = ClusterLedger::with_power(spec.cfg.power.clone(), cpu_caps);
         Ok(ClusterSim {
             spec,
             pool,
@@ -289,7 +305,7 @@ impl ClusterSim {
             powered_seconds: vec![0.0; n],
             batch_done: false,
             migrator,
-            ledger: ClusterLedger::new(),
+            ledger,
         })
     }
 
@@ -438,12 +454,19 @@ impl ClusterSim {
                 powered += 1;
             }
             self.ledger
-                .record_host_tick(s.busy_cores, s.resident, dt, &self.spec.cfg.host);
+                .record_host_tick(h, s.busy_cores, s.resident, dt, &self.spec.cfg.host);
         }
         self.ledger.note_tick(self.t, powered);
         self.batch_done =
             reports.iter().all(|r| r.batch_done) && self.pending.is_empty();
         self.bus.refresh(&reports, bank);
+        // Feed the freshly refreshed summaries into the migrator's
+        // forecaster (no-op with forecast=off), so the next planning
+        // pass extrapolates from the very view it will plan over.
+        if let Some(mig) = self.migrator.as_mut() {
+            let summaries = self.bus.summaries();
+            mig.observe(summaries, dt);
+        }
         self.t += dt;
         Ok(())
     }
@@ -806,7 +829,7 @@ mod tests {
             if i == 2 {
                 let sched =
                     scheduler::build(Policy::Ias, bank, cfg.sched.ras_threshold, None);
-                let daemon = Daemon::new(cfg.sched.clone(), sched);
+                let daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
                 hosts.push(ClusterHost::Pinned(Box::new(SimHost::new(
                     engine,
                     Some(daemon),
@@ -818,7 +841,7 @@ mod tests {
                     cfg.sched.ras_threshold,
                     None,
                 );
-                let daemon = Daemon::new(cfg.sched.clone(), sched);
+                let daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
                 hosts.push(ClusterHost::Native(SimHost::new(engine, Some(daemon))));
             }
         }
@@ -883,7 +906,6 @@ mod tests {
                 .as_ref()
                 .unwrap()
                 .placement_state()
-                .unwrap()
                 .placed(),
             ClusterHost::Pinned(_) => unreachable!(),
         };

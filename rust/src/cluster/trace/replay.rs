@@ -852,4 +852,223 @@ mod tests {
         assert_eq!(r.arrivals, 1);
         assert!(r.completion_time <= 50.0 + s.cfg.sim.dt);
     }
+
+    /// Drive a sawtooth load straight through a [`ClusterSim`] —
+    /// arrivals and departures published by hand, `vm → host` tracked
+    /// via the placement log — so the test can read the powered-host
+    /// series, which [`ReplayResult`] deliberately does not carry.
+    ///
+    /// The shape: 8 streaming floor VMs (2 per host, never departing)
+    /// plus 4 waves of 16 Jacobi VMs that arrive at `t = 30 + 90·w` and
+    /// depart 60 s later. Every 30 s trough dips each floor host below
+    /// the `under` line (0.6 of 12 cores at `under=0.25`); every wave
+    /// lifts it back out (≥ 4.2 cores). The convex power table bills
+    /// packed hosts steeply, so needless consolidation shows up in the
+    /// energy integral, not just the migration counters.
+    fn run_sawtooth(migrator: &str) -> (crate::cluster::BusStats, crate::metrics::ClusterLedger) {
+        let bank = testkit::shared_bank();
+        let mut s = spec(4);
+        s.cfg.power =
+            crate::config::PowerModel::parse("piecewise:0=10,0.5=40,1=1000").unwrap();
+        s.migration.failure_prob = 0.0; // deterministic move outcomes
+        s.migration.downtime = 0.0; // moved VMs keep their cores busy
+        s.migrator = Some(migrator_params(migrator));
+        let empty = ScenarioSpec {
+            name: "sawtooth".to_string(),
+            sr: 0.0,
+            vms: Vec::new(),
+            min_duration: 0.0,
+        };
+        let mut sim = ClusterSim::new(s, &empty, bank).unwrap();
+
+        let mut arrivals: Vec<(f64, u32, WorkloadClass)> = (0..8)
+            .map(|i| (0.0, i, WorkloadClass::StreamHigh))
+            .collect();
+        let mut departures: Vec<(f64, u32)> = Vec::new();
+        let mut id = 8u32;
+        for wave in 0..4 {
+            let at = 30.0 + 90.0 * wave as f64;
+            for _ in 0..16 {
+                arrivals.push((at, id, WorkloadClass::Jacobi));
+                departures.push((at + 60.0, id));
+                id += 1;
+            }
+        }
+
+        let mut vm_host: BTreeMap<u32, usize> = BTreeMap::new();
+        let mut next_arrival = 0;
+        let mut next_departure = 0;
+        while sim.now() < 420.0 {
+            let now = sim.now();
+            while next_arrival < arrivals.len() && arrivals[next_arrival].0 <= now {
+                let (_, vm, class) = arrivals[next_arrival];
+                let mut vm = Vm::new(VmId(vm), class, now, ActivityModel::AlwaysOn);
+                vm.state = VmState::Running;
+                vm.started = Some(now);
+                sim.publish(ClusterEvent::Arrival { vm, host: None });
+                next_arrival += 1;
+            }
+            while next_departure < departures.len() && departures[next_departure].0 <= now {
+                let (_, vm) = departures[next_departure];
+                // Jacobi arrive tens of ticks before they depart, so the
+                // placement log always knows their host by now.
+                let host = vm_host[&vm];
+                sim.publish(ClusterEvent::Departure { host, vm: VmId(vm) });
+                next_departure += 1;
+            }
+            sim.tick(bank).unwrap();
+            for (VmId(v), host) in sim.take_moves() {
+                vm_host.insert(v, host);
+            }
+        }
+        (sim.bus().stats, sim.ledger().clone())
+    }
+
+    /// Σ of positive deltas in the powered-host series after `after` —
+    /// every unit is one host powering back up (an unpark). A planner
+    /// that never parks scores 0; park/unpark thrash scores one rise
+    /// per host per cycle.
+    fn unpark_rises(ledger: &crate::metrics::ClusterLedger, after: f64) -> f64 {
+        ledger
+            .powered_series
+            .points
+            .windows(2)
+            .filter(|w| w[1].0 > after && w[1].1 > w[0].1)
+            .map(|w| w[1].1 - w[0].1)
+            .sum()
+    }
+
+    #[test]
+    fn forecaster_and_payback_suppress_sawtooth_park_unpark_thrash() {
+        // ISSUE 10 thrash regression gate. The myopic PR 8 planner
+        // consolidates the floor at the first trough and then re-parks
+        // (full 8-VM evacuations) at every later trough, while each
+        // wave powers the drained hosts straight back up — classic
+        // park/unpark thrash. With forecast=on, the k=3 hysteresis
+        // needs 45 s of consecutive under-predicted passes and every
+        // trough only lasts 30 s, so the forecaster never parks at all:
+        // strictly fewer cycles, ≥30% fewer migrations, and (under the
+        // convex power table) far less energy at no worse SLAV.
+        const MYOPIC: &str = "0.7:0.25:8:15,cooldown=30,wi=1000000";
+        const FORECAST: &str = "0.7:0.25:8:15,cooldown=30,wi=1000000,\
+                                forecast=on,alpha=0.3,beta=0.05,horizon=20,k=3,payback=600";
+        let (my_stats, my_ledger) = run_sawtooth(MYOPIC);
+        let (fc_stats, fc_ledger) = run_sawtooth(FORECAST);
+
+        // Load-bearing floor: the myopic planner must reproduce the
+        // thrash (initial 6-move consolidation + an 8-move blob hop per
+        // trough), or this test is vacuous.
+        assert!(
+            my_stats.migrations_started >= 12,
+            "myopic planner must thrash: only {} migrations",
+            my_stats.migrations_started
+        );
+        let my_cycles = unpark_rises(&my_ledger, 50.0);
+        let fc_cycles = unpark_rises(&fc_ledger, 50.0);
+        assert!(
+            my_cycles >= 3.0,
+            "myopic parks must be undone by the waves: {my_cycles} rises"
+        );
+        assert!(
+            fc_cycles < my_cycles,
+            "forecaster must produce strictly fewer park/unpark cycles: {fc_cycles} vs {my_cycles}"
+        );
+        assert_eq!(
+            fc_stats.migrations_started, 0,
+            "every dip is shorter than k·interval — the forecaster must not park"
+        );
+        assert!(
+            fc_stats.migrations_started * 10 <= my_stats.migrations_started * 7,
+            "forecaster must cut migration events by ≥30%: {} vs {}",
+            fc_stats.migrations_started,
+            my_stats.migrations_started
+        );
+        assert!(
+            fc_ledger.energy_wh() <= my_ledger.energy_wh(),
+            "forecaster must not burn more energy: {:.2} Wh vs {:.2} Wh",
+            fc_ledger.energy_wh(),
+            my_ledger.energy_wh()
+        );
+        assert!(
+            fc_ledger.slav() <= my_ledger.slav() + 1e-12,
+            "forecaster must not add overload: {} vs {}",
+            fc_ledger.slav(),
+            my_ledger.slav()
+        );
+    }
+
+    #[test]
+    fn keyword_defaults_replay_bit_identical_to_pr8_grammar() {
+        // ISSUE 10 digest gate: `forecast=off,payback=inf,power=linear`
+        // spelled out must be bit-identical to the bare PR 8 grammar —
+        // across Single/Scoped/Pool step modes and Inline vs zero-lag
+        // Deferred actuation.
+        let bank = testkit::shared_bank();
+        let run = |mode: StepMode, actuation: ActuationSpec, migrator: &str, power: &str| {
+            let mut s = spec(4);
+            s.step_mode = mode;
+            s.actuation = actuation;
+            s.cfg.power = crate::config::PowerModel::parse(power).unwrap();
+            s.migrator = Some(migrator_params(migrator));
+            let mut reader = synth(SYNTH_SMALL);
+            replay(&s, &mut reader, bank).unwrap()
+        };
+        const BARE: &str = "0.85:0.35:4:10";
+        const SPELLED: &str = "0.85:0.35:4:10,forecast=off,payback=inf,k=2,cooldown=120";
+        let baseline = run(StepMode::Single, ActuationSpec::Inline, BARE, "linear");
+        for (mode, actuation) in [
+            (StepMode::Single, ActuationSpec::Inline),
+            (
+                StepMode::Single,
+                ActuationSpec::Deferred {
+                    latency_ticks: 0,
+                    budget_per_tick: 0,
+                },
+            ),
+            (StepMode::Scoped(3), ActuationSpec::Inline),
+            (StepMode::Pool(3), ActuationSpec::Inline),
+        ] {
+            let spelled = run(mode, actuation, SPELLED, "linear");
+            assert_eq!(
+                baseline.bit_digest(),
+                spelled.bit_digest(),
+                "keyword defaults diverged from the PR 8 planner ({mode:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn linear_and_one_segment_piecewise_agree_on_the_spike_scenario() {
+        // ISSUE 10 power-model gate, cluster-scenario edition: a
+        // one-segment piecewise table tracing the exact linear law
+        // (idle 2×20 W, slope 15 W/core over 12 cores → 40 W at u=0,
+        // 220 W at u=1) must integrate to the same energy as `Linear`
+        // on the full spike scenario, within float rounding of the
+        // interpolation arithmetic.
+        let bank = testkit::shared_bank();
+        let run = |power: &str| {
+            let mut s = spec(8);
+            s.cfg.power = crate::config::PowerModel::parse(power).unwrap();
+            s.migration.failure_prob = 0.0;
+            s.migrator = Some(migrator_params("0.85:0.35:6:15"));
+            let mut reader = SliceReader::new(spike_trace()).emitting_departures(false);
+            replay(&s, &mut reader, bank).unwrap()
+        };
+        let lin = run("linear");
+        let pw = run("piecewise:0=40,1=220");
+        // Placement decisions never see the power model, so everything
+        // simulation-side is identical; only the energy integral may
+        // differ by interpolation rounding.
+        assert_eq!(lin.final_residents, pw.final_residents);
+        assert_eq!(lin.migrations_started, pw.migrations_started);
+        assert_eq!(lin.core_hours.to_bits(), pw.core_hours.to_bits());
+        let tol = 1e-9 * lin.energy_wh.abs().max(1.0);
+        assert!(
+            (lin.energy_wh - pw.energy_wh).abs() <= tol,
+            "one-segment piecewise must trace the linear law: {} vs {} Wh",
+            lin.energy_wh,
+            pw.energy_wh
+        );
+        assert!(lin.energy_wh > 0.0);
+    }
 }

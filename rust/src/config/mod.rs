@@ -125,9 +125,12 @@ impl Default for SchedParams {
 /// Continuous migration-manager parameters (see `cluster::migrator` for
 /// the planner that consumes them and the full grammar table).
 ///
-/// CLI grammar: `over:under:budget[:interval]` — e.g. `0.85:0.35:4` or
-/// `0.9:0.3:8:60`. Empty fields keep their defaults (`::8` overrides
-/// only the budget).
+/// CLI grammar: `over:under:budget[:interval][,key=value...]` — e.g.
+/// `0.85:0.35:4`, `0.9:0.3:8:60` or
+/// `0.85:0.35:4:30,forecast=on,payback=600`. Empty positional fields
+/// keep their defaults (`::8` overrides only the budget). Keyword
+/// options: `forecast=on|off`, `alpha=`, `beta=`, `horizon=`, `k=`
+/// (hysteresis intervals), `payback=<secs|inf>`, `cooldown=`, `wi=`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MigratorParams {
     /// Overload threshold on estimated CPU load as a fraction of host
@@ -146,6 +149,26 @@ pub struct MigratorParams {
     /// Per-VM cooldown in seconds — a VM the planner just moved is not
     /// eligible again until this much virtual time has passed.
     pub cooldown: f64,
+    /// Plan against Holt-linear forecast load instead of the current
+    /// tick's summaries. Off by default: the myopic PR 8 planner, kept
+    /// bit-identical (the digest gates compare against it).
+    pub forecast: bool,
+    /// Holt-linear level gain (EWMA smoothing factor), in (0, 1].
+    pub alpha: f64,
+    /// Holt-linear trend gain, in [0, 1]. 0 degrades to plain EWMA.
+    pub beta: f64,
+    /// Forecast horizon in seconds: classification evaluates the
+    /// predicted load this far ahead of the planning pass.
+    pub horizon: f64,
+    /// Hysteresis band: a host must be predicted under `under` for this
+    /// many consecutive planning intervals before it may be evacuated.
+    pub hysteresis: usize,
+    /// Payback horizon in seconds for cost-aware consolidation: a park
+    /// is skipped when the copy's energy cost (transfer seconds ×
+    /// source+destination draw) exceeds the parked host's saving over
+    /// this window. `INFINITY` (default) disables the gate — every
+    /// in-budget consolidation is treated as free, like PR 8.
+    pub payback: f64,
 }
 
 impl Default for MigratorParams {
@@ -157,41 +180,92 @@ impl Default for MigratorParams {
             interval: 30.0,
             wi_threshold: 1.5,
             cooldown: 120.0,
+            forecast: false,
+            alpha: 0.3,
+            beta: 0.1,
+            horizon: 90.0,
+            hysteresis: 2,
+            payback: f64::INFINITY,
         }
     }
 }
 
 impl MigratorParams {
-    /// Parse the CLI grammar `over:under:budget[:interval]`. An empty
-    /// string (bare `--migrator`) and empty fields keep the defaults.
+    /// Parse the CLI grammar `over:under:budget[:interval][,key=value...]`.
+    /// An empty string (bare `--migrator`) and empty positional fields
+    /// keep the defaults.
     pub fn parse(spec: &str) -> Result<MigratorParams> {
         let mut p = MigratorParams::default();
         if spec.is_empty() {
             return Ok(p);
         }
-        let fields: Vec<&str> = spec.split(':').collect();
-        anyhow::ensure!(
-            fields.len() <= 4,
-            "migrator spec '{spec}': expected over:under:budget[:interval]"
-        );
+        let (positional, keyed) = match spec.split_once(',') {
+            Some((head, rest)) => (head, Some(rest)),
+            None => (spec, None),
+        };
         let num = |field: &str, name: &str| -> Result<f64> {
             field
                 .parse::<f64>()
                 .with_context(|| format!("migrator {name} '{field}' in '{spec}'"))
         };
-        if let Some(f) = fields.first().filter(|f| !f.is_empty()) {
-            p.over = num(f, "over")?;
+        if !positional.is_empty() {
+            let fields: Vec<&str> = positional.split(':').collect();
+            anyhow::ensure!(
+                fields.len() <= 4,
+                "migrator spec '{spec}': expected over:under:budget[:interval]"
+            );
+            if let Some(f) = fields.first().filter(|f| !f.is_empty()) {
+                p.over = num(f, "over")?;
+            }
+            if let Some(f) = fields.get(1).filter(|f| !f.is_empty()) {
+                p.under = num(f, "under")?;
+            }
+            if let Some(f) = fields.get(2).filter(|f| !f.is_empty()) {
+                p.budget = f
+                    .parse::<usize>()
+                    .with_context(|| format!("migrator budget '{f}' in '{spec}'"))?;
+            }
+            if let Some(f) = fields.get(3).filter(|f| !f.is_empty()) {
+                p.interval = num(f, "interval")?;
+            }
         }
-        if let Some(f) = fields.get(1).filter(|f| !f.is_empty()) {
-            p.under = num(f, "under")?;
-        }
-        if let Some(f) = fields.get(2).filter(|f| !f.is_empty()) {
-            p.budget = f
-                .parse::<usize>()
-                .with_context(|| format!("migrator budget '{f}' in '{spec}'"))?;
-        }
-        if let Some(f) = fields.get(3).filter(|f| !f.is_empty()) {
-            p.interval = num(f, "interval")?;
+        for kv in keyed.map(|k| k.split(',')).into_iter().flatten() {
+            if kv.is_empty() {
+                continue;
+            }
+            let (key, val) = kv.split_once('=').with_context(|| {
+                format!("migrator option '{kv}' in '{spec}': expected key=value")
+            })?;
+            match key {
+                "forecast" => {
+                    p.forecast = match val {
+                        "on" | "true" | "1" => true,
+                        "off" | "false" | "0" => false,
+                        other => anyhow::bail!("migrator forecast '{other}': expected on|off"),
+                    }
+                }
+                "alpha" => p.alpha = num(val, "alpha")?,
+                "beta" => p.beta = num(val, "beta")?,
+                "horizon" => p.horizon = num(val, "horizon")?,
+                "k" => {
+                    p.hysteresis = val
+                        .parse::<usize>()
+                        .with_context(|| format!("migrator k '{val}' in '{spec}'"))?
+                }
+                "payback" => {
+                    p.payback = if val == "inf" {
+                        f64::INFINITY
+                    } else {
+                        num(val, "payback")?
+                    }
+                }
+                "cooldown" => p.cooldown = num(val, "cooldown")?,
+                "wi" => p.wi_threshold = num(val, "wi")?,
+                other => anyhow::bail!(
+                    "unknown migrator option '{other}' in '{spec}' \
+                     (valid: forecast, alpha, beta, horizon, k, payback, cooldown, wi)"
+                ),
+            }
         }
         p.validate()?;
         Ok(p)
@@ -213,7 +287,173 @@ impl MigratorParams {
         anyhow::ensure!(self.interval > 0.0, "migrator interval must be > 0");
         anyhow::ensure!(self.wi_threshold > 0.0, "migrator wi_threshold must be > 0");
         anyhow::ensure!(self.cooldown >= 0.0, "migrator cooldown must be >= 0");
+        anyhow::ensure!(
+            self.alpha > 0.0 && self.alpha <= 1.0,
+            "migrator alpha {} out of (0, 1]",
+            self.alpha
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.beta),
+            "migrator beta {} out of [0, 1]",
+            self.beta
+        );
+        anyhow::ensure!(
+            self.horizon >= 0.0 && self.horizon.is_finite(),
+            "migrator horizon must be finite and >= 0"
+        );
+        anyhow::ensure!(self.hysteresis >= 1, "migrator hysteresis k must be >= 1");
+        anyhow::ensure!(self.payback > 0.0, "migrator payback must be > 0 (or inf)");
         Ok(())
+    }
+}
+
+/// Host power-draw model behind the cluster ledger's energy integral
+/// (see `metrics::ledger::ClusterLedger`). `Linear` is the PR 8
+/// behavior, bit-identical by construction; `Piecewise` carries a
+/// SPECpower-style utilization→watts breakpoint table, evaluated
+/// against the host's CPU capacity (per-host `host_caps` vectors give
+/// heterogeneous host classes different absolute utilizations for the
+/// same busy-core count).
+///
+/// CLI grammar (`vmcd cluster --power …`): `linear` or
+/// `piecewise:u=w,u=w,...` with utilizations in [0, 1], e.g.
+/// `piecewise:0=40,0.5=120,1=210`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum PowerModel {
+    /// `sockets × idle_watts + busy_cores × watts_per_core` — the
+    /// original linear-in-busy-cores integral, kept expression-exact so
+    /// default runs stay digest-identical.
+    #[default]
+    Linear,
+    /// Utilization→watts breakpoints, linearly interpolated; clamped to
+    /// the first/last point outside the table's range.
+    Piecewise(PiecewiseTable),
+}
+
+/// A validated utilization→watts breakpoint table: ≥ 2 points, finite,
+/// strictly increasing utilization in [0, 1], non-negative watts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PiecewiseTable {
+    points: Vec<(f64, f64)>,
+}
+
+impl PiecewiseTable {
+    /// Validate and seal a breakpoint table. Degenerate tables — fewer
+    /// than two points, unsorted or duplicate utilizations, values out
+    /// of range — are configuration errors, never panics.
+    pub fn new(points: Vec<(f64, f64)>) -> Result<PiecewiseTable> {
+        anyhow::ensure!(
+            points.len() >= 2,
+            "piecewise power table needs >= 2 breakpoints, got {}",
+            points.len()
+        );
+        for &(u, w) in &points {
+            anyhow::ensure!(
+                u.is_finite() && (0.0..=1.0).contains(&u),
+                "piecewise utilization {u} out of [0, 1]"
+            );
+            anyhow::ensure!(
+                w.is_finite() && w >= 0.0,
+                "piecewise watts {w} must be finite and >= 0"
+            );
+        }
+        for pair in points.windows(2) {
+            anyhow::ensure!(
+                pair[0].0 < pair[1].0,
+                "piecewise utilizations must strictly increase ({} then {})",
+                pair[0].0,
+                pair[1].0
+            );
+        }
+        Ok(PiecewiseTable { points })
+    }
+
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    /// Watts at utilization `u`: linear interpolation between the
+    /// bracketing breakpoints, clamped to the table's ends.
+    pub fn watts_at(&self, u: f64) -> f64 {
+        // Validation guarantees >= 2 sorted points, but stay total.
+        let Some(&(u0, w0)) = self.points.first() else {
+            return 0.0;
+        };
+        let Some(&(un, wn)) = self.points.last() else {
+            return 0.0;
+        };
+        if u <= u0 {
+            return w0;
+        }
+        if u >= un {
+            return wn;
+        }
+        for pair in self.points.windows(2) {
+            let (ua, wa) = pair[0];
+            let (ub, wb) = pair[1];
+            if u <= ub {
+                return wa + (wb - wa) * ((u - ua) / (ub - ua));
+            }
+        }
+        wn
+    }
+}
+
+impl PowerModel {
+    /// Parse the CLI grammar: `linear` or `piecewise:u=w,u=w,...`.
+    pub fn parse(spec: &str) -> Result<PowerModel> {
+        if spec == "linear" || spec.is_empty() {
+            return Ok(PowerModel::Linear);
+        }
+        let Some(table) = spec.strip_prefix("piecewise:") else {
+            anyhow::bail!("power model '{spec}': expected linear or piecewise:u=w,...");
+        };
+        let mut points = Vec::new();
+        for kv in table.split(',') {
+            if kv.is_empty() {
+                continue;
+            }
+            let (u, w) = kv
+                .split_once('=')
+                .with_context(|| format!("power breakpoint '{kv}': expected u=w"))?;
+            let u: f64 = u
+                .parse()
+                .with_context(|| format!("power utilization '{u}' in '{spec}'"))?;
+            let w: f64 = w
+                .parse()
+                .with_context(|| format!("power watts '{w}' in '{spec}'"))?;
+            points.push((u, w));
+        }
+        Ok(PowerModel::Piecewise(PiecewiseTable::new(points)?))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PowerModel::Linear => "linear",
+            PowerModel::Piecewise(_) => "piecewise",
+        }
+    }
+
+    /// Instantaneous draw of a powered host with `busy` busy cores.
+    /// `cpu_cap` is the host's CPU capacity in cores (from `host_caps`
+    /// for heterogeneous fleets, `host.cores` otherwise) — the
+    /// utilization denominator for breakpoint tables. Parked hosts
+    /// (resident == 0, busy == 0) never reach this: the ledger charges
+    /// them 0 W before consulting the model.
+    pub fn watts(&self, busy: usize, cpu_cap: f64, host: &HostSpec) -> f64 {
+        match self {
+            PowerModel::Linear => {
+                host.sockets as f64 * host.watts_socket_idle + busy as f64 * host.watts_per_core
+            }
+            PowerModel::Piecewise(table) => {
+                let u = if cpu_cap > 0.0 {
+                    (busy as f64 / cpu_cap).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                };
+                table.watts_at(u)
+            }
+        }
     }
 }
 
@@ -250,6 +490,9 @@ pub struct Config {
     /// Continuous migration manager; `None` leaves it disabled (the
     /// cluster then behaves exactly as it did without the subsystem).
     pub migrator: Option<MigratorParams>,
+    /// Host power-draw model for the cluster-scope energy integral.
+    /// `Linear` (the default) is bit-identical to the PR 8 ledger.
+    pub power: PowerModel,
 }
 
 impl Config {
@@ -302,7 +545,39 @@ impl Config {
             read_f64(m, "interval", &mut p.interval);
             read_f64(m, "wi_threshold", &mut p.wi_threshold);
             read_f64(m, "cooldown", &mut p.cooldown);
+            if let Some(v) = m.get("forecast").and_then(Json::as_bool) {
+                p.forecast = v;
+            }
+            read_f64(m, "alpha", &mut p.alpha);
+            read_f64(m, "beta", &mut p.beta);
+            read_f64(m, "horizon", &mut p.horizon);
+            read_usize(m, "hysteresis", &mut p.hysteresis);
+            // Payback: absent or null keeps the infinite default.
+            if let Some(v) = m.get("payback").and_then(Json::as_f64) {
+                p.payback = v;
+            }
             cfg.migrator = Some(p);
+        }
+        if let Some(p) = json.get("power").filter(|p| !matches!(p, Json::Null)) {
+            cfg.power = match p {
+                Json::Str(name) => PowerModel::parse(name)?,
+                obj => {
+                    let arr = obj
+                        .get("points")
+                        .and_then(Json::as_arr)
+                        .context("power model object needs a 'points' array")?;
+                    let mut points = Vec::new();
+                    for pt in arr {
+                        let pair = pt.to_f64_vec().context("power breakpoint")?;
+                        anyhow::ensure!(
+                            pair.len() == 2,
+                            "power breakpoint must be [utilization, watts]"
+                        );
+                        points.push((pair[0], pair[1]));
+                    }
+                    PowerModel::Piecewise(PiecewiseTable::new(points)?)
+                }
+            };
         }
         cfg.validate()?;
         Ok(cfg)
@@ -388,8 +663,41 @@ impl Config {
                         ("interval", Json::Num(m.interval)),
                         ("wi_threshold", Json::Num(m.wi_threshold)),
                         ("cooldown", Json::Num(m.cooldown)),
+                        ("forecast", Json::Bool(m.forecast)),
+                        ("alpha", Json::Num(m.alpha)),
+                        ("beta", Json::Num(m.beta)),
+                        ("horizon", Json::Num(m.horizon)),
+                        ("hysteresis", Json::Num(m.hysteresis as f64)),
+                        (
+                            "payback",
+                            if m.payback.is_finite() {
+                                Json::Num(m.payback)
+                            } else {
+                                Json::Null
+                            },
+                        ),
                     ]),
                     None => Json::Null,
+                },
+            ),
+            (
+                "power",
+                match &self.power {
+                    PowerModel::Linear => Json::Str("linear".into()),
+                    PowerModel::Piecewise(t) => Json::from_pairs(vec![
+                        ("model", Json::Str("piecewise".into())),
+                        (
+                            "points",
+                            Json::Arr(
+                                t.points()
+                                    .iter()
+                                    .map(|&(u, w)| {
+                                        Json::Arr(vec![Json::Num(u), Json::Num(w)])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ]),
                 },
             ),
         ])
@@ -485,6 +793,101 @@ mod tests {
         c.migrator = Some(MigratorParams::parse("0.8:0.25:6:45").unwrap());
         let back = Config::from_json(&c.to_json()).unwrap();
         assert_eq!(back.migrator, c.migrator);
+        // Forecast/payback fields survive the roundtrip, infinite
+        // payback included (serialized as null).
+        c.migrator =
+            Some(MigratorParams::parse("0.8:0.25:6:45,forecast=on,alpha=0.5,k=3").unwrap());
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.migrator, c.migrator);
+        c.migrator = Some(MigratorParams::parse(",payback=600,horizon=120").unwrap());
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.migrator, c.migrator);
+    }
+
+    #[test]
+    fn migrator_keyword_grammar_parses_forecast_and_payback() {
+        let d = MigratorParams::default();
+        assert!(!d.forecast);
+        assert!(d.payback.is_infinite());
+        let p = MigratorParams::parse("0.85:0.35:4:30,forecast=on,payback=600,k=3").unwrap();
+        assert!(p.forecast);
+        assert_eq!(p.payback, 600.0);
+        assert_eq!(p.hysteresis, 3);
+        assert_eq!(p.over, 0.85);
+        // Keyword-only spec: positional defaults intact.
+        let p = MigratorParams::parse(",alpha=0.5,beta=0.2,horizon=45,payback=inf").unwrap();
+        assert_eq!(p.alpha, 0.5);
+        assert_eq!(p.beta, 0.2);
+        assert_eq!(p.horizon, 45.0);
+        assert!(p.payback.is_infinite());
+        assert_eq!(p.over, d.over);
+        assert!(MigratorParams::parse("0.85:0.35,forecast=maybe").is_err());
+        assert!(MigratorParams::parse("0.85:0.35,bogus=1").is_err());
+        assert!(MigratorParams::parse(",alpha=0").is_err()); // alpha in (0, 1]
+        assert!(MigratorParams::parse(",k=0").is_err()); // hysteresis >= 1
+        assert!(MigratorParams::parse(",payback=0").is_err());
+    }
+
+    #[test]
+    fn power_model_grammar_parses_linear_and_piecewise() {
+        assert_eq!(PowerModel::parse("linear").unwrap(), PowerModel::Linear);
+        assert_eq!(PowerModel::parse("").unwrap(), PowerModel::Linear);
+        let p = PowerModel::parse("piecewise:0=40,0.5=120,1=210").unwrap();
+        let PowerModel::Piecewise(t) = &p else {
+            panic!("expected piecewise")
+        };
+        assert_eq!(t.points(), &[(0.0, 40.0), (0.5, 120.0), (1.0, 210.0)]);
+        assert!(PowerModel::parse("quadratic").is_err());
+        assert!(PowerModel::parse("piecewise:0.5").is_err());
+    }
+
+    #[test]
+    fn degenerate_piecewise_tables_are_errors_not_panics() {
+        // Single point.
+        assert!(PiecewiseTable::new(vec![(0.0, 40.0)]).is_err());
+        // Unsorted utilizations.
+        assert!(PiecewiseTable::new(vec![(0.5, 120.0), (0.0, 40.0)]).is_err());
+        // Duplicate utilization.
+        assert!(PiecewiseTable::new(vec![(0.5, 120.0), (0.5, 130.0)]).is_err());
+        // Out-of-range utilization and negative watts.
+        assert!(PiecewiseTable::new(vec![(0.0, 40.0), (1.5, 200.0)]).is_err());
+        assert!(PiecewiseTable::new(vec![(0.0, -1.0), (1.0, 200.0)]).is_err());
+        assert!(PiecewiseTable::new(vec![(0.0, f64::NAN), (1.0, 200.0)]).is_err());
+    }
+
+    #[test]
+    fn piecewise_interpolates_and_clamps() {
+        let t = PiecewiseTable::new(vec![(0.0, 40.0), (0.5, 120.0), (1.0, 200.0)]).unwrap();
+        assert_eq!(t.watts_at(0.0), 40.0);
+        assert_eq!(t.watts_at(0.25), 80.0);
+        assert_eq!(t.watts_at(0.5), 120.0);
+        assert_eq!(t.watts_at(0.75), 160.0);
+        assert_eq!(t.watts_at(1.0), 200.0);
+        // Clamped outside the table.
+        assert_eq!(t.watts_at(-0.5), 40.0);
+        assert_eq!(t.watts_at(2.0), 200.0);
+    }
+
+    #[test]
+    fn linear_power_matches_the_ledger_expression() {
+        let host = HostSpec::default();
+        // 2 sockets × 20 W idle + busy × 15 W — the PR 8 integral.
+        assert_eq!(PowerModel::Linear.watts(0, 12.0, &host), 40.0);
+        assert_eq!(PowerModel::Linear.watts(6, 12.0, &host), 130.0);
+    }
+
+    #[test]
+    fn power_json_roundtrip() {
+        let mut c = Config::default();
+        assert_eq!(c.power, PowerModel::Linear);
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.power, PowerModel::Linear);
+        c.power = PowerModel::parse("piecewise:0=40,0.6=150,1=220").unwrap();
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.power, c.power);
+        // Degenerate tables are rejected at load time too.
+        let j = Json::parse(r#"{"power": {"points": [[0.5, 100], [0.5, 120]]}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
     }
 
     #[test]

@@ -105,7 +105,7 @@ mod tests {
         let cfg = testkit::quiet_config();
         let bank = testkit::shared_bank();
         let sched = scheduler::build(Policy::Ias, bank, cfg.sched.ras_threshold, None);
-        let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+        let mut daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
         let mut flaky = FlakyHypervisor::new(engine(8), 0.3, 11);
 
         for _ in 0..200 {

@@ -105,10 +105,17 @@ USAGE:
                  [--actuation inline|deferred:N|deferred:N:B]
                  [--trace PATH|synth:k=v,...] [--trace-types FILE]
                  [--trace-hosts FILE]
-                 [--migrator [over:under:budget[:interval]]] [--digest]
+                 [--migrator [over:under:budget[:interval][,key=value...]]]
+                 [--power linear|piecewise:u=w,...] [--digest]
 
   --migrator enables the continuous migration manager; bare --migrator
   uses the config-file thresholds (or the defaults 0.85:0.35:4:30).
+  Keyword fields ride behind the positional ones: forecast=on|off,
+  alpha=, beta=, horizon=, k= (hysteresis), payback=<secs|inf>,
+  cooldown=, wi= — e.g. 0.85:0.35:4:30,forecast=on,payback=600.
+  --power selects the cluster ledger's utilization→watts curve:
+  linear (default) or a piecewise breakpoint table such as
+  piecewise:0=80,0.5=240,1=400 (SPECpower-style).
   --digest prints a 64-bit FNV-1a fingerprint of the run result —
   identical seeds must print identical digests (see DETERMINISM.md).
 ";
@@ -370,7 +377,7 @@ fn cmd_daemon(args: &Args) -> Result<()> {
         cfg.sched.ias_threshold,
     );
     let mut engine = vmcd::hostsim::SimEngine::new(cfg.clone(), vms);
-    let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+    let mut daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
 
     // Optional HTTP status endpoint: `--listen 127.0.0.1:7070`.
     let status = std::sync::Arc::new(std::sync::Mutex::new(String::from("{}")));
@@ -444,7 +451,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     use vmcd::cluster::{ClusterSpec, Dispatcher, StepMode, Strategy};
     use vmcd::vmcd::ActuationSpec;
 
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    // `--power linear|piecewise:u=w,...` overrides the config file's
+    // `power` section (the cluster ledger's utilization→watts curve).
+    if let Some(spec) = args.opt("power") {
+        cfg.power = vmcd::config::PowerModel::parse(spec).context("--power")?;
+    }
     let hosts = args.opt_usize("hosts", 4)?;
     let strategy = match args.opt_or("strategy", "local-vmcd").as_str() {
         "local-vmcd" | "local" => Strategy::LocalVmcd,
@@ -510,7 +522,17 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                 "migrator        : over {:.2} / under {:.2}, budget {}, every {:.0} s",
                 m.over, m.under, m.budget, m.interval
             );
+            if m.forecast {
+                println!(
+                    "forecast        : on (alpha {:.2}, beta {:.2}, horizon {:.0} s, k {})",
+                    m.alpha, m.beta, m.horizon, m.hysteresis
+                );
+            }
+            if m.payback.is_finite() {
+                println!("payback horizon : {:.0} s", m.payback);
+            }
         }
+        println!("power model     : {}", cfg.power.name());
         println!("arrivals        : {}", r.arrivals);
         println!("departures      : {}", r.departures);
         println!("migrates        : {}", r.migrates);
@@ -572,6 +594,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     println!("hosts           : {hosts}");
     println!("dispatcher      : {}", dispatcher.name());
     println!("actuation       : {}", actuation.name());
+    println!("power model     : {}", cfg.power.name());
     println!("VMs             : {}", scen.vms.len());
     println!("avg performance : {:.3} (1.0 = isolated)", r.avg_perf);
     println!("core-hours      : {:.3}", r.core_hours);

@@ -1,7 +1,7 @@
 //! The accounting ledger the engine fills in as virtual time advances.
 
 use super::timeseries::TimeSeries;
-use crate::config::HostSpec;
+use crate::config::{HostSpec, PowerModel};
 
 /// Run-long accounting: busy-core integral (the paper's "CPU time
 /// consumed"), energy from the power model, and the busy-core time series
@@ -60,6 +60,16 @@ impl Ledger {
 /// spending a tick with every core busy cannot absorb more demand, so
 /// that tick counts toward `overload_seconds`; `slav()` normalizes by
 /// powered host time.
+///
+/// The powered draw comes from a pluggable [`PowerModel`]: `Linear`
+/// (the default) keeps the PR 8 `sockets·P_idle + busy·P_core`
+/// expression bit-exact; `Piecewise` evaluates a SPECpower-style
+/// breakpoint table against the host's CPU capacity, with per-host
+/// capacity overrides (`host_caps`) giving heterogeneous host classes
+/// their own effective curves. The always-plugged integral
+/// (`plugged_energy_joules`, absorbed from per-host [`Ledger`]s) stays
+/// on the linear reference model either way, so the parked/plugged gap
+/// reads against a fixed baseline.
 #[derive(Debug, Clone, Default)]
 pub struct ClusterLedger {
     /// Σ over hosts of ∫ busy_cores dt — core-seconds (absorbed).
@@ -74,6 +84,11 @@ pub struct ClusterLedger {
     pub active_host_seconds: f64,
     /// (t, powered hosts) sampled once per cluster tick.
     pub powered_series: TimeSeries,
+    /// Draw model for powered hosts (`Linear` by default).
+    power: PowerModel,
+    /// Per-host CPU capacity in cores (utilization denominator for
+    /// breakpoint tables). Empty = homogeneous `host.cores`.
+    cpu_caps: Vec<f64>,
 }
 
 impl ClusterLedger {
@@ -81,11 +96,35 @@ impl ClusterLedger {
         Self::default()
     }
 
+    /// A ledger drawing from `power`, with optional per-host CPU
+    /// capacities (`host_caps` CPU column) for heterogeneous fleets.
+    pub fn with_power(power: PowerModel, cpu_caps: Vec<f64>) -> Self {
+        ClusterLedger {
+            power,
+            cpu_caps,
+            ..Self::default()
+        }
+    }
+
+    pub fn power_model(&self) -> &PowerModel {
+        &self.power
+    }
+
+    /// CPU capacity of `host_idx` in cores — the utilization
+    /// denominator the power model sees for that host.
+    pub fn cpu_cap(&self, host_idx: usize, host: &HostSpec) -> f64 {
+        self.cpu_caps
+            .get(host_idx)
+            .copied()
+            .unwrap_or(host.cores as f64)
+    }
+
     /// Account one host for one tick. A host with no residents and no
     /// busy cores is parked: it draws nothing and accrues no active
     /// time. `busy >= cores` marks the tick as overloaded.
     pub fn record_host_tick(
         &mut self,
+        host_idx: usize,
         busy: usize,
         resident: usize,
         dt: f64,
@@ -94,8 +133,7 @@ impl ClusterLedger {
         if resident == 0 && busy == 0 {
             return;
         }
-        let power = host.sockets as f64 * host.watts_socket_idle
-            + busy as f64 * host.watts_per_core;
+        let power = self.power.watts(busy, self.cpu_cap(host_idx, host), host);
         self.energy_joules += power * dt;
         self.active_host_seconds += dt;
         if busy >= host.cores {
@@ -187,18 +225,85 @@ mod tests {
         let host = HostSpec::default(); // 12 cores, 2*20 W idle + 15 W/core
         let mut led = ClusterLedger::new();
         // Tick 1: one busy host, one empty (parked) host.
-        led.record_host_tick(6, 3, 1.0, &host);
-        led.record_host_tick(0, 0, 1.0, &host);
+        led.record_host_tick(0, 6, 3, 1.0, &host);
+        led.record_host_tick(1, 0, 0, 1.0, &host);
         led.note_tick(0.0, 1);
         // Tick 2: the busy host saturates; an idle-but-resident host hums.
-        led.record_host_tick(12, 3, 1.0, &host);
-        led.record_host_tick(0, 1, 1.0, &host);
+        led.record_host_tick(0, 12, 3, 1.0, &host);
+        led.record_host_tick(1, 0, 1, 1.0, &host);
         led.note_tick(1.0, 2);
         // Energy: (40+90) + (40+180) + (40+0); the empty host free.
         assert!(close(led.energy_joules, 130.0 + 220.0 + 40.0, 1e-9));
         assert!(close(led.active_host_seconds, 3.0, 1e-12));
         assert!(close(led.overload_seconds, 1.0, 1e-12));
         assert!(close(led.slav(), 1.0 / 3.0, 1e-12));
+    }
+
+    #[test]
+    fn piecewise_cluster_energy_matches_hand_computed_wh() {
+        // Satellite gate: a two-segment SPECpower-style table on a
+        // scripted load must integrate to the hand-computed joules.
+        let host = HostSpec::default(); // 12 cores
+        let table =
+            crate::config::PiecewiseTable::new(vec![(0.0, 40.0), (0.5, 120.0), (1.0, 200.0)])
+                .unwrap();
+        let mut led =
+            ClusterLedger::with_power(crate::config::PowerModel::Piecewise(table), Vec::new());
+        led.record_host_tick(0, 6, 6, 1.0, &host); // u = 0.5  -> 120 W
+        led.record_host_tick(0, 3, 3, 1.0, &host); // u = 0.25 -> 80 W
+        led.record_host_tick(0, 12, 12, 1.0, &host); // u = 1.0 -> 200 W
+        led.record_host_tick(1, 0, 0, 1.0, &host); // parked   -> 0 W
+        led.record_host_tick(1, 0, 2, 1.0, &host); // idle     -> 40 W
+        let joules = 120.0 + 80.0 + 200.0 + 0.0 + 40.0;
+        assert!(close(led.energy_joules, joules, 1e-9));
+        assert!(close(led.energy_wh(), joules / 3600.0, 1e-12));
+        // Overload accounting is model-independent.
+        assert!(close(led.overload_seconds, 1.0, 1e-12));
+    }
+
+    #[test]
+    fn per_host_cpu_caps_change_the_utilization_denominator() {
+        // A "big" host class (24-core cap) runs the same busy count at
+        // half the utilization of the default 12-core class.
+        let host = HostSpec::default();
+        let table =
+            crate::config::PiecewiseTable::new(vec![(0.0, 40.0), (1.0, 280.0)]).unwrap();
+        let mut led = ClusterLedger::with_power(
+            crate::config::PowerModel::Piecewise(table),
+            vec![12.0, 24.0],
+        );
+        assert_eq!(led.cpu_cap(0, &host), 12.0);
+        assert_eq!(led.cpu_cap(1, &host), 24.0);
+        assert_eq!(led.cpu_cap(7, &host), 12.0, "missing cap falls back to cores");
+        led.record_host_tick(0, 6, 6, 1.0, &host); // u = 0.5  -> 160 W
+        led.record_host_tick(1, 6, 6, 1.0, &host); // u = 0.25 -> 100 W
+        assert!(close(led.energy_joules, 260.0, 1e-9));
+    }
+
+    #[test]
+    fn linear_and_one_segment_piecewise_agree() {
+        // A one-segment table spanning idle→full-load draw is the same
+        // line the linear model draws; the integrals agree to ULP-scale
+        // rounding (the interpolation computes the same value via
+        // w0 + Δw·(busy/cap) instead of idle + busy·P_core).
+        let host = HostSpec::default();
+        let idle = host.sockets as f64 * host.watts_socket_idle;
+        let full = idle + host.cores as f64 * host.watts_per_core;
+        let table = crate::config::PiecewiseTable::new(vec![(0.0, idle), (1.0, full)]).unwrap();
+        let mut lin = ClusterLedger::new();
+        let mut pw =
+            ClusterLedger::with_power(crate::config::PowerModel::Piecewise(table), Vec::new());
+        for busy in 0..=host.cores {
+            lin.record_host_tick(0, busy, busy.max(1), 1.0, &host);
+            pw.record_host_tick(0, busy, busy.max(1), 1.0, &host);
+        }
+        let ulps = 8.0 * f64::EPSILON * lin.energy_joules.abs();
+        assert!(
+            (lin.energy_joules - pw.energy_joules).abs() <= ulps,
+            "linear {} vs one-segment piecewise {}",
+            lin.energy_joules,
+            pw.energy_joules
+        );
     }
 
     #[test]

@@ -143,7 +143,7 @@ fn run_scenario_with(
         .map(|(i, t)| Vm::new(VmId(i as u32), t.class, t.arrival, t.activity.clone()))
         .collect();
     let mut engine = SimEngine::new(cfg.clone(), vms);
-    let mut daemon = Daemon::with_actuation(cfg.sched.clone(), sched, actuation.build());
+    let mut daemon = Daemon::with_actuation(cfg.sched.clone(), sched, cfg.host.cores, actuation.build());
 
     loop {
         for id in engine.process_arrivals() {

@@ -39,7 +39,7 @@
 //! never mid-decision.
 
 use crate::hostsim::{Hypervisor, VmId};
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -404,7 +404,9 @@ pub struct Threaded {
 }
 
 impl Threaded {
-    pub fn new(mut sink: Box<dyn PinSink>) -> Threaded {
+    /// Spawn the worker; errors if the OS refuses the thread (resource
+    /// exhaustion) instead of panicking the daemon.
+    pub fn new(mut sink: Box<dyn PinSink>) -> Result<Threaded> {
         let (tx, rx_job) = channel::<(VmId, usize)>();
         let (tx_done, rx) = channel::<(VmId, usize, bool)>();
         let handle = std::thread::Builder::new()
@@ -417,15 +419,15 @@ impl Threaded {
                     }
                 }
             })
-            .expect("spawn actuation worker");
-        Threaded {
+            .context("spawn actuation worker")?;
+        Ok(Threaded {
             tx: Some(tx),
             rx,
             handle: Some(handle),
             sent: 0,
             done: 0,
             ok: 0,
-        }
+        })
     }
 
     fn book(&mut self, vm: VmId, core: usize, ok: bool, report: &mut ActuationReport) {
@@ -786,7 +788,8 @@ mod tests {
         let mut backend = Threaded::new(Box::new(move |vm: VmId, core: usize| -> Result<()> {
             sink_seen.lock().unwrap().push((vm, core));
             Ok(())
-        }));
+        }))
+        .unwrap();
         let mut eng = engine(1); // untouched: Threaded never uses hv
         let mut q = ActuationQueue::new();
         q.pin(VmId(0), 3);
@@ -808,7 +811,8 @@ mod tests {
         let mut backend = Threaded::new(Box::new(|vm: VmId, _core: usize| -> Result<()> {
             anyhow::ensure!(vm != VmId(1), "domain gone");
             Ok(())
-        }));
+        }))
+        .unwrap();
         let mut eng = engine(1);
         let mut q = ActuationQueue::new();
         q.pin(VmId(0), 1);

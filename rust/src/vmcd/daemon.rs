@@ -104,9 +104,10 @@ pub struct Daemon<S: ?Sized + Scheduler = dyn Scheduler> {
     pub events_handled: u64,
     /// Actuation completions booked (reporting).
     pub completions: u64,
-    /// The long-lived placement state, created on first hypervisor
-    /// contact (when the core count is known).
-    state: Option<PlacementState>,
+    /// The long-lived placement state, created by the constructor (the
+    /// core count is a construction input, so there is no `Option`
+    /// dance and no unwraps on every touch — the detlint burn-down).
+    state: PlacementState,
     /// Current idle-core reservation, so `sync_reservation` only touches
     /// the state's `allowed` set on actual flips.
     reserved: bool,
@@ -126,8 +127,12 @@ pub struct Daemon<S: ?Sized + Scheduler = dyn Scheduler> {
 }
 
 impl<S: ?Sized + Scheduler> Daemon<S> {
-    pub fn new(params: SchedParams, scheduler: Box<S>) -> Daemon<S> {
+    /// Build a daemon for a host with `cores` CPU cores. The placement
+    /// state is created here — init produces the state directly instead
+    /// of threading an `Option` through every handler.
+    pub fn new(params: SchedParams, scheduler: Box<S>, cores: usize) -> Daemon<S> {
         let monitor = Monitor::new(params.idle_cpu_threshold);
+        let state = scheduler.new_state(cores, false);
         Daemon {
             params,
             monitor,
@@ -136,7 +141,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
             pin_failures: 0,
             events_handled: 0,
             completions: 0,
-            state: None,
+            state,
             reserved: false,
             pending: VecDeque::new(),
             residents: BTreeMap::new(),
@@ -151,9 +156,10 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
     pub fn with_actuation(
         params: SchedParams,
         scheduler: Box<S>,
+        cores: usize,
         actuation: Box<dyn Actuate>,
     ) -> Daemon<S> {
-        let mut daemon = Daemon::new(params, scheduler);
+        let mut daemon = Daemon::new(params, scheduler, cores);
         daemon.actuation = actuation;
         daemon
     }
@@ -205,16 +211,9 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         self.residents.get(&id).map(|r| r.core)
     }
 
-    /// The long-lived placement state (None until first hypervisor
-    /// contact).
-    pub fn placement_state(&self) -> Option<&PlacementState> {
-        self.state.as_ref()
-    }
-
-    fn ensure_state(&mut self, hv: &dyn Hypervisor) {
-        if self.state.is_none() {
-            self.state = Some(self.scheduler.new_state(hv.host_spec().cores, false));
-        }
+    /// The long-lived placement state.
+    pub fn placement_state(&self) -> &PlacementState {
+        &self.state
     }
 
     fn has_idle(&self) -> bool {
@@ -229,9 +228,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
             return;
         }
         self.reserved = reserve;
-        if let Some(state) = self.state.as_mut() {
-            state.set_idle_reservation(reserve);
-        }
+        self.state.set_idle_reservation(reserve);
     }
 
     /// Queue an event for the next [`Self::step`] without touching the
@@ -351,7 +348,6 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         if !self.scheduler.dynamic() {
             return Ok(());
         }
-        self.ensure_state(hv);
         let snap = self.monitor.poll(hv);
         let live: BTreeSet<VmId> = snap.domains.iter().map(|d| d.id).collect();
         self.actuation.retain(&live);
@@ -411,7 +407,6 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
     /// hypervisor is read-only here, every pinning consequence is a
     /// typed command in [`Self::queue`] for the backend to enforce.
     fn apply_event(&mut self, hv: &dyn Hypervisor, ev: SchedEvent) -> Result<()> {
-        self.ensure_state(hv);
         if !matches!(ev, SchedEvent::Tick | SchedEvent::ActuationComplete { .. }) {
             self.events_handled += 1;
         }
@@ -474,9 +469,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         // the host's whole lifetime.
         if !self.scheduler.dynamic() {
             if stats.pinned.is_none() {
-                let core = self
-                    .scheduler
-                    .select_pinning(self.state.as_ref().unwrap(), class);
+                let core = self.scheduler.select_pinning(&self.state, class);
                 self.queue.pin(id, core);
             }
             return Ok(());
@@ -491,7 +484,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
             Some(core) => {
                 let idle = self.monitor.is_idle(stats.cpu_window_avg);
                 if !idle {
-                    self.state.as_mut().unwrap().place(core, class);
+                    self.state.place(core, class);
                 }
                 self.residents.insert(
                     id,
@@ -512,10 +505,8 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
             // stalls unpinned until enforcement lands (the actuation-lag
             // cost the Deferred backend measures).
             None => {
-                let core = self
-                    .scheduler
-                    .select_pinning(self.state.as_ref().unwrap(), class);
-                self.state.as_mut().unwrap().place(core, class);
+                let core = self.scheduler.select_pinning(&self.state, class);
+                self.state.place(core, class);
                 self.residents.insert(
                     id,
                     Resident {
@@ -537,7 +528,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         };
         self.observed.remove(&id);
         if !r.idle {
-            let removed = self.state.as_mut().unwrap().remove(r.core, r.class);
+            let removed = self.state.remove(r.core, r.class);
             debug_assert!(removed, "departing {id:?} missing from placement state");
         }
         self.sync_reservation();
@@ -556,7 +547,7 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         let (class, core) = (r.class, r.core);
         r.idle = true;
         r.core = IDLE_CORE;
-        let removed = self.state.as_mut().unwrap().remove(core, class);
+        let removed = self.state.remove(core, class);
         debug_assert!(removed, "idling {id:?} missing from placement state");
         self.sync_reservation();
         // Alg. 1 lines 6-7: the park is a command; the backend enforces.
@@ -578,11 +569,11 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
         // recomputed: if it was the last idle workload, core 0 reopens.
         r.idle = false;
         self.sync_reservation();
-        let core = self
-            .scheduler
-            .select_pinning(self.state.as_ref().unwrap(), class);
-        self.state.as_mut().unwrap().place(core, class);
-        self.residents.get_mut(&id).unwrap().core = core;
+        let core = self.scheduler.select_pinning(&self.state, class);
+        self.state.place(core, class);
+        if let Some(r) = self.residents.get_mut(&id) {
+            r.core = core;
+        }
         self.queue.pin(id, core);
     }
 
@@ -621,7 +612,9 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
             .map(|(&id, _)| id)
             .collect();
         for id in idle_ids {
-            self.residents.get_mut(&id).unwrap().core = IDLE_CORE;
+            if let Some(r) = self.residents.get_mut(&id) {
+                r.core = IDLE_CORE;
+            }
             self.queue.park(id);
         }
 
@@ -637,13 +630,13 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
                 let r = &self.residents[&id];
                 (r.class, r.core)
             };
-            let removed = self.state.as_mut().unwrap().remove(old_core, class);
+            let removed = self.state.remove(old_core, class);
             debug_assert!(removed, "running {id:?} missing from placement state");
-            let core = self
-                .scheduler
-                .select_pinning(self.state.as_ref().unwrap(), class);
-            self.state.as_mut().unwrap().place(core, class);
-            self.residents.get_mut(&id).unwrap().core = core;
+            let core = self.scheduler.select_pinning(&self.state, class);
+            self.state.place(core, class);
+            if let Some(r) = self.residents.get_mut(&id) {
+                r.core = core;
+            }
             plan.push((id, core));
         }
         if !plan.is_empty() {
@@ -658,25 +651,23 @@ impl<S: ?Sized + Scheduler> Daemon<S> {
 
     /// Rebuild a fresh placement state from the resident table — the old
     /// per-cycle path, demoted to a reconciliation reference.
-    pub fn rebuild_state(&self) -> Option<PlacementState> {
-        let state = self.state.as_ref()?;
+    pub fn rebuild_state(&self) -> PlacementState {
         let reserve = self.scheduler.dynamic() && self.has_idle();
-        let mut rebuilt = self.scheduler.new_state(state.cores.len(), reserve);
+        let mut rebuilt = self.scheduler.new_state(self.state.cores.len(), reserve);
         for r in self.residents.values() {
             if !r.idle {
                 rebuilt.place(r.core, r.class);
             }
         }
-        Some(rebuilt)
+        rebuilt
     }
 
     /// Does the long-lived state agree with a from-scratch rebuild — same
     /// `allowed` set, same per-core membership (as multisets), and cached
     /// aggregates within `tol` of a re-sum?
     pub fn state_matches_rebuild(&self, tol: f64) -> bool {
-        let (Some(state), Some(rebuilt)) = (self.state.as_ref(), self.rebuild_state()) else {
-            return true;
-        };
+        let state = &self.state;
+        let rebuilt = self.rebuild_state();
         if state.allowed != rebuilt.allowed {
             return false;
         }
@@ -708,7 +699,7 @@ mod tests {
         cfg.sim.demand_noise = 0.0;
         let bank = ProfileBank::generate(&cfg);
         let sched = scheduler::build(policy, &bank, cfg.sched.ras_threshold, None);
-        let daemon = Daemon::new(cfg.sched.clone(), sched);
+        let daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
         (SimEngine::new(cfg, vms), daemon)
     }
 
@@ -804,7 +795,7 @@ mod tests {
         cfg.host.cores = 1;
         let bank = ProfileBank::generate(&cfg);
         let sched = scheduler::build(Policy::Ias, &bank, cfg.sched.ras_threshold, None);
-        let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+        let mut daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
 
         let mut running = Vm::new(
             VmId(0),
@@ -863,11 +854,11 @@ mod tests {
             eng.step();
         }
         daemon.run_cycle(&mut eng).unwrap();
-        assert_eq!(daemon.placement_state().unwrap().placed(), 2);
+        assert_eq!(daemon.placement_state().placed(), 2);
         // Force-finish one VM: the next step must emit a Departure.
         eng.vms[0].state = VmState::Finished;
         daemon.step(&mut eng).unwrap();
-        assert_eq!(daemon.placement_state().unwrap().placed(), 1);
+        assert_eq!(daemon.placement_state().placed(), 1);
         assert!(daemon.state_matches_rebuild(1e-9));
     }
 
@@ -879,12 +870,12 @@ mod tests {
             eng.step();
         }
         daemon.run_cycle(&mut eng).unwrap();
-        assert_eq!(daemon.placement_state().unwrap().placed(), 1);
+        assert_eq!(daemon.placement_state().placed(), 1);
         // Queue a departure from outside the poll loop: nothing happens
         // until the next step, which drains it before the monitor diff.
         daemon.enqueue(SchedEvent::Departure(VmId(0)));
         assert_eq!(daemon.pending_events(), 1);
-        assert_eq!(daemon.placement_state().unwrap().placed(), 1);
+        assert_eq!(daemon.placement_state().placed(), 1);
         daemon.step(&mut eng).unwrap();
         assert_eq!(daemon.pending_events(), 0);
         // The member left via the queued event; the same step's poll then

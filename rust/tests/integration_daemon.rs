@@ -22,7 +22,7 @@ fn daemon_for(policy: Policy) -> Daemon {
     let cfg = testkit::quiet_config();
     let bank = testkit::shared_bank();
     let sched = scheduler::build(policy, bank, cfg.sched.ras_threshold, None);
-    Daemon::new(cfg.sched.clone(), sched)
+    Daemon::new(cfg.sched.clone(), sched, cfg.host.cores)
 }
 
 #[test]
@@ -170,7 +170,7 @@ fn long_lived_state_matches_rebuild_through_100_mixed_events() {
     let cfg = testkit::quiet_config();
     let bank = testkit::shared_bank();
     let sched = scheduler::build(Policy::Ias, bank, cfg.sched.ras_threshold, None);
-    let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+    let mut daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
 
     let mut vms = Vec::new();
     for i in 0..12u32 {
@@ -208,7 +208,7 @@ fn long_lived_state_matches_rebuild_through_100_mixed_events() {
     // The placement state tracks exactly the non-idle residents. (One
     // more daemon step so its view covers the final engine tick.)
     daemon.step(&mut engine).unwrap();
-    let placed = daemon.placement_state().unwrap().placed();
+    let placed = daemon.placement_state().placed();
     let running = daemon.monitor.poll(&engine).running_workloads().len();
     assert_eq!(placed, running, "state members must be the running set");
 }
@@ -221,7 +221,7 @@ fn monitor_polled_once_per_step_even_with_arrivals() {
     let cfg = testkit::quiet_config();
     let bank = testkit::shared_bank();
     let sched = scheduler::build(Policy::Ras, bank, cfg.sched.ras_threshold, None);
-    let mut daemon = Daemon::new(cfg.sched.clone(), sched);
+    let mut daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
     let mut vms = Vec::new();
     for i in 0..6u32 {
         vms.push(Vm::new(

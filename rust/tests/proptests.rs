@@ -385,7 +385,7 @@ fn prop_bus_routing_matches_direct_host_calls() {
             .map(|_| {
                 let sched =
                     scheduler::build_native(Policy::Ias, bank, cfg.sched.ras_threshold, None);
-                let daemon = Daemon::new(cfg.sched.clone(), sched);
+                let daemon = Daemon::new(cfg.sched.clone(), sched, cfg.host.cores);
                 SimHost::new(SimEngine::new(cfg.clone(), Vec::new()), Some(daemon))
             })
             .collect()
@@ -406,19 +406,15 @@ fn prop_bus_routing_matches_direct_host_calls() {
             .iter()
             .map(|v| (v.id, v.pinned))
             .collect();
-        match host.daemon.as_ref().unwrap().placement_state() {
-            Some(s) => {
-                let loads: Vec<Vec<u64>> = (0..s.cores.len())
-                    .map(|c| {
-                        s.cache()
-                            .map(|k| k.load(c).iter().map(|x| x.to_bits()).collect())
-                            .unwrap_or_default()
-                    })
-                    .collect();
-                (pins, s.cores.clone(), s.allowed.clone(), loads)
-            }
-            None => (pins, Vec::new(), Vec::new(), Vec::new()),
-        }
+        let s = host.daemon.as_ref().unwrap().placement_state();
+        let loads: Vec<Vec<u64>> = (0..s.cores.len())
+            .map(|c| {
+                s.cache()
+                    .map(|k| k.load(c).iter().map(|x| x.to_bits()).collect())
+                    .unwrap_or_default()
+            })
+            .collect();
+        (pins, s.cores.clone(), s.allowed.clone(), loads)
     };
 
     check("bus-vs-direct", 12, |rng| {
@@ -551,7 +547,7 @@ fn prop_inline_and_zero_lag_deferred_are_bit_identical() {
         }
         let build = |actuation: ActuationSpec| {
             let sched = scheduler::build(Policy::Ias, bank, cfg.sched.ras_threshold, None);
-            let daemon = Daemon::with_actuation(cfg.sched.clone(), sched, actuation.build());
+            let daemon = Daemon::with_actuation(cfg.sched.clone(), sched, cfg.host.cores, actuation.build());
             (SimEngine::new(cfg.clone(), vms.clone()), daemon)
         };
         let (mut eng_a, mut inline) = build(ActuationSpec::Inline);
@@ -581,10 +577,7 @@ fn prop_inline_and_zero_lag_deferred_are_bit_identical() {
             inline.events_handled
         );
         assert_eq!(inline.events_handled, deferred.events_handled);
-        let (a, b) = (
-            inline.placement_state().unwrap(),
-            deferred.placement_state().unwrap(),
-        );
+        let (a, b) = (inline.placement_state(), deferred.placement_state());
         assert_eq!(a.cores, b.cores);
         assert_eq!(a.allowed, b.allowed);
     });
@@ -619,6 +612,7 @@ fn prop_deferred_lag_reconciles_to_intent_once_drained() {
         let mut daemon = Daemon::with_actuation(
             cfg.sched.clone(),
             sched,
+            cfg.host.cores,
             Box::new(Deferred::new(lag, budget)),
         );
         let mut eng = SimEngine::new(cfg.clone(), vms);
@@ -783,7 +777,7 @@ fn prop_migrator_plan_respects_budget_blocked_set_and_topology() {
     // targets the source itself, an out-of-range host, or an
     // overloaded destination — and only overloaded or underloaded
     // hosts ever shed VMs.
-    use std::collections::HashSet;
+    use std::collections::{BTreeSet, HashSet};
     use vmcd::cluster::migrator::{classify, plan, HostClass};
     use vmcd::cluster::{HostSummary, SummaryMatrix};
     use vmcd::config::MigratorParams;
@@ -832,7 +826,7 @@ fn prop_migrator_plan_respects_budget_blocked_set_and_topology() {
         };
         let budget_left = rng.below(9);
         // Block a random subset of the fleet's VMs.
-        let blocked: HashSet<VmId> = (0..next_id)
+        let blocked: BTreeSet<VmId> = (0..next_id)
             .filter(|_| rng.chance(0.25))
             .map(VmId)
             .collect();
@@ -865,6 +859,191 @@ fn prop_migrator_plan_respects_budget_blocked_set_and_topology() {
                 HostClass::Overloaded,
                 "an overloaded destination: {m:?}"
             );
+        }
+    });
+}
+
+#[test]
+fn prop_cost_aware_plan_keeps_invariants_and_respects_payback() {
+    // The forecast/payback planning contract over random fleets and
+    // random `PlanContext`s: every PR 8 invariant still holds under
+    // predicted loads, hysteresis-ineligible hosts are never evacuated,
+    // the empty context reproduces `plan` exactly, and — recomputing
+    // with the same public `move_cost_joules` fold the gate used —
+    // every parked host's copy energy fits inside the idle-power
+    // payback window.
+    use std::collections::{BTreeSet, HashSet};
+    use vmcd::cluster::migrator::planner::{
+        classify_with, move_cost_joules, plan, plan_with, CostContext, PlanContext,
+    };
+    use vmcd::cluster::migrator::HostClass;
+    use vmcd::cluster::{HostSummary, MigrationModel, SummaryMatrix};
+    use vmcd::config::{HostSpec, MigratorParams, PowerModel};
+    use vmcd::hostsim::VmId;
+
+    let bank = testkit::shared_bank();
+    check("migrator-cost-aware-invariants", default_cases(), |rng| {
+        let hosts = 1 + rng.below(10);
+        let host_cores = 4 + rng.below(13);
+        let mut next_id = 0u32;
+        let summaries: Vec<HostSummary> = (0..hosts)
+            .map(|_| {
+                let mut running = Vec::new();
+                let mut est = 0.0;
+                for _ in 0..rng.below(6) {
+                    let class = *rng.pick(&ALL_CLASSES);
+                    running.push((VmId(next_id), class));
+                    est += bank.u[class.index()][0];
+                    next_id += 1;
+                }
+                let resident = running.len() + if rng.chance(0.3) { rng.below(3) } else { 0 };
+                if rng.chance(0.3) {
+                    est += rng.range(0.0, host_cores as f64);
+                }
+                HostSummary {
+                    resident,
+                    running,
+                    busy_cores: rng.below(host_cores + 1),
+                    max_wi: rng.range(0.0, 3.0),
+                    est_cpu_load: est,
+                    ..HostSummary::default()
+                }
+            })
+            .collect();
+        let matrix = SummaryMatrix::from_summaries(&summaries, host_cores);
+        let over = rng.range(0.3, 1.5);
+        let params = MigratorParams {
+            over,
+            under: rng.range(0.0, over),
+            wi_threshold: rng.range(0.5, 2.5),
+            budget: 1 + rng.below(8),
+            ..MigratorParams::default()
+        };
+        let budget_left = rng.below(9);
+        let blocked: BTreeSet<VmId> = (0..next_id)
+            .filter(|_| rng.chance(0.25))
+            .map(VmId)
+            .collect();
+
+        // Random forecast/hysteresis/cost inputs, each independently
+        // present — all-absent must collapse to the myopic planner.
+        let predicted: Option<Vec<f64>> = rng.chance(0.5).then(|| {
+            (0..hosts)
+                .map(|_| rng.range(0.0, host_cores as f64 * 1.5))
+                .collect()
+        });
+        let predicted_wi: Option<Vec<f64>> =
+            rng.chance(0.5).then(|| (0..hosts).map(|_| rng.range(0.0, 3.0)).collect());
+        let park_eligible: Option<Vec<bool>> =
+            rng.chance(0.5).then(|| (0..hosts).map(|_| rng.chance(0.5)).collect());
+        let migration = MigrationModel {
+            transfer_secs: rng.range(5.0, 40.0),
+            transfer_net: rng.range(0.0, 1.0),
+            ..MigrationModel::default()
+        };
+        let power = if rng.chance(0.5) {
+            PowerModel::Linear
+        } else {
+            let w0 = rng.range(5.0, 100.0);
+            let w1 = w0 + rng.range(1.0, 400.0);
+            PowerModel::parse(&format!("piecewise:0={w0},1={w1}")).unwrap()
+        };
+        let host = HostSpec::default();
+        let payback = rng.range(10.0, 2000.0);
+        let cost = rng.chance(0.5).then(|| CostContext {
+            migration: &migration,
+            power: &power,
+            host: &host,
+            payback,
+        });
+        let ctx = PlanContext {
+            predicted: predicted.as_deref(),
+            predicted_wi: predicted_wi.as_deref(),
+            park_eligible: park_eligible.as_deref(),
+            cost,
+        };
+
+        let classes =
+            classify_with(&params, &summaries, &matrix, ctx.predicted, ctx.predicted_wi);
+        let moves = plan_with(&params, &summaries, &matrix, bank, &blocked, budget_left, &ctx);
+
+        // The empty context IS the myopic planner.
+        let myopic = plan(&params, &summaries, &matrix, bank, &blocked, budget_left);
+        let empty = plan_with(
+            &params,
+            &summaries,
+            &matrix,
+            bank,
+            &blocked,
+            budget_left,
+            &PlanContext::default(),
+        );
+        assert_eq!(myopic, empty, "default PlanContext diverged from plan()");
+
+        assert!(
+            moves.len() <= budget_left,
+            "planned {} moves with budget {budget_left}",
+            moves.len()
+        );
+        let mut seen: HashSet<VmId> = HashSet::new();
+        for m in &moves {
+            assert!(m.src < hosts && m.dst < hosts, "out of range: {m:?}");
+            assert_ne!(m.src, m.dst, "self-migration: {m:?}");
+            assert!(!blocked.contains(&m.vm), "blocked VM selected: {m:?}");
+            assert!(seen.insert(m.vm), "VM planned twice: {m:?}");
+            assert!(
+                summaries[m.src].running.iter().any(|&(id, _)| id == m.vm),
+                "VM not running on its source: {m:?}"
+            );
+            assert_ne!(
+                classes[m.src],
+                HostClass::Normal,
+                "a normal host shed a VM: {m:?}"
+            );
+            assert_ne!(
+                classes[m.dst],
+                HostClass::Overloaded,
+                "an overloaded destination: {m:?}"
+            );
+            if classes[m.src] == HostClass::Underloaded {
+                if let Some(pe) = &park_eligible {
+                    assert!(pe[m.src], "hysteresis-ineligible host evacuated: {m:?}");
+                }
+            }
+        }
+
+        // Payback audit: group the emitted park moves by source (park
+        // sources are exactly the Underloaded ones) and recompute the
+        // copy-energy fold in emission order — the identical f64 sum
+        // the gate compared — then check it fits the idle-power window.
+        if let Some(cost) = &ctx.cost {
+            let demand = |vm: VmId, src: usize| {
+                summaries[src]
+                    .running
+                    .iter()
+                    .find(|&&(id, _)| id == vm)
+                    .map(|&(_, class)| bank.u[class.index()][0])
+                    .expect("planned VM runs on its source")
+            };
+            for src in 0..hosts {
+                if classes[src] != HostClass::Underloaded {
+                    continue;
+                }
+                let copy_j: f64 = moves
+                    .iter()
+                    .filter(|m| m.src == src)
+                    .map(|m| move_cost_joules(cost, &summaries, &matrix, m, demand(m.vm, src)))
+                    .sum();
+                if copy_j == 0.0 {
+                    continue; // host was not parked this plan
+                }
+                let idle_w = cost.power.watts(0, matrix.cap(src, 0), cost.host);
+                assert!(
+                    copy_j <= idle_w * cost.payback,
+                    "parked host {src} cannot repay its copy: {copy_j} J > {idle_w} W × {} s",
+                    cost.payback
+                );
+            }
         }
     });
 }
